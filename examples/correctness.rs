@@ -1,0 +1,68 @@
+//! Figure 13: training-loss equality between the baseline (SP=1, plain
+//! attention path) and full ALST (SP=4 with kv-head replication, tiled
+//! kernels, ckpt offload accounting) on IDENTICAL data and init.
+//!
+//! The paper trains Llama-8B both ways at 32K and overlays the curves;
+//! here both configurations run through the real PJRT pipeline and the
+//! losses must agree to float tolerance at every step.
+//!
+//!     cargo run --release --example correctness [-- --config tiny --steps 20]
+
+use alst::config::FeatureFlags;
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::runtime::Manifest;
+use alst::util::cli::Args;
+
+fn run(
+    config: &str,
+    sp: usize,
+    seq: usize,
+    steps: usize,
+    flags: FeatureFlags,
+    seed: u64,
+) -> anyhow::Result<Vec<f32>> {
+    let dir = Manifest::artifact_dir(std::path::Path::new("artifacts"), config, sp, seq);
+    let mut trainer =
+        Trainer::new(&dir, TrainerOptions { flags, seed, ..Default::default() })?;
+    // Same seed => same data stream regardless of sp (the loader shards
+    // the SAME full sequence; SP only changes who computes what).
+    let vocab = trainer.manifest.config.vocab;
+    let mut loader =
+        UlyssesDataLoader::new(MarkovSource::new(vocab, seq, 0.05, seed ^ 1), sp);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (ids, _) = loader.next();
+        losses.push(trainer.train_step(&ids)?.loss);
+    }
+    Ok(losses)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = args.get_or("config", "tiny");
+    let seq = args.usize("seq", 256);
+    let steps = args.usize("steps", 20);
+    let seed = 42;
+
+    println!("baseline: sp=1, no ALST features beyond ZeRO/ckpt");
+    let baseline = run(&config, 1, seq, steps, FeatureFlags::baseline(), seed)?;
+
+    println!("ALST: sp=4 (kv heads replicate), tiled kernels, ckpt offload");
+    let alst = run(&config, 4, seq, steps, FeatureFlags::alst(), seed)?;
+
+    println!("\n step | baseline  | ALST      | delta");
+    println!("------+-----------+-----------+----------");
+    let mut max_delta = 0f32;
+    for (i, (b, a)) in baseline.iter().zip(&alst).enumerate() {
+        let d = (b - a).abs();
+        max_delta = max_delta.max(d);
+        println!("{:>5} | {:>9.5} | {:>9.5} | {:.2e}", i + 1, b, a, d);
+    }
+    println!("\nmax |delta| = {max_delta:.3e}");
+    // f32 pipeline: the curves must overlap to numerical noise — the
+    // paper's "almost exact match" (fn.25), here actually exact-ish.
+    assert!(max_delta < 2e-3, "ALST diverged from baseline: {max_delta}");
+    println!("Figure 13 reproduced: ALST == baseline training quality");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: train the tiny GQA transformer with Ulysses SP=2 through
+//! the full three-layer stack (rust coordinator -> PJRT -> AOT'd jax/Pallas
+//! stages). Mirrors README's first example.
+//!
+//!     make artifacts
+//!     cargo run --release --example quickstart
+
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::artifact_dir(std::path::Path::new("artifacts"), "tiny", 2, 256);
+    if !dir.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let mut trainer = Trainer::new(&dir, TrainerOptions::default())?;
+    println!(
+        "tiny llama ({} params), sp={}, seq={}, kernels={}",
+        trainer.manifest.config.params_count,
+        trainer.sp(),
+        trainer.manifest.seq,
+        trainer.manifest.config.kernels
+    );
+
+    let vocab = trainer.manifest.config.vocab;
+    let mut loader =
+        UlyssesDataLoader::new(MarkovSource::new(vocab, 256, 0.05, 7), trainer.sp());
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=30 {
+        let (ids, _) = loader.next();
+        let m = trainer.train_step(&ids)?;
+        first.get_or_insert(m.loss);
+        last = m.loss;
+        if step % 5 == 0 {
+            println!(
+                "step {step:>3}  loss {:.4}  ({:.0}ms)",
+                m.loss,
+                m.step_time.as_secs_f64() * 1e3
+            );
+        }
+    }
+    let first = first.unwrap();
+    println!(
+        "\nloss {first:.3} -> {last:.3} over 30 steps (chance = ln({vocab}) = {:.3})",
+        (vocab as f32).ln()
+    );
+    assert!(last < first, "loss should decrease");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! End-to-end training driver (EXPERIMENTS.md §E2E): train a ~100M-param
+//! Llama-style transformer on synthetic Markov data for a few hundred
+//! steps through the complete stack — ZeRO-3 sharding, Ulysses SP=4,
+//! pre-shifted-label dataloader, checkpoint offload accounting, AdamW —
+//! and log the loss curve.
+//!
+//!     cargo run --release --example train_e2e -- \
+//!         --config e2e-100m --sp 4 --seq 1024 --steps 300 \
+//!         --csv results/e2e_100m_loss.csv
+//!
+//! `--config e2e-25m --seq 512` is the faster variant used while
+//! iterating (single CPU core: the 100M config costs ~40-90s/step).
+
+use alst::coordinator::dataloader::{BatchSource, CorpusSource, MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::metrics::RunLog;
+use alst::runtime::Manifest;
+use alst::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = args.get_or("config", "e2e-100m");
+    let sp = args.usize("sp", 4);
+    let seq = args.usize("seq", 1024);
+    let steps = args.usize("steps", 300);
+    let seed = args.usize("seed", 0) as u64;
+    let lr = args.f64("lr", 6e-4) as f32;
+
+    let dir = Manifest::artifact_dir(std::path::Path::new("artifacts"), &config, sp, seq);
+    let mut opts = TrainerOptions { seed, ..Default::default() };
+    opts.adamw.lr = lr;
+    // linear warmup + cosine decay (stabilizes the first optimizer steps
+    // at batch-size 1; without it gradient norms spike ~100x early on)
+    opts.lr_schedule = Some(alst::coordinator::pipeline::LrSchedule {
+        peak_lr: lr,
+        warmup_steps: args.usize("warmup", 20) as u64,
+        total_steps: steps as u64,
+        min_lr: lr * 0.1,
+    });
+    let mut trainer = Trainer::new(&dir, opts)?;
+    let vocab = trainer.manifest.config.vocab;
+    println!(
+        "e2e: {} ({:.1}M params)  sp={} seq={} steps={} lr={}",
+        config,
+        trainer.manifest.config.params_count as f64 / 1e6,
+        sp,
+        seq,
+        steps,
+        lr
+    );
+    println!("chance loss = ln({vocab}) = {:.3}", (vocab as f32).ln());
+
+    // --data FILE: byte-tokenized tiny corpus (vocab 256 subset); default
+    // is the synthetic Markov stream. The corpus path learns much faster
+    // per step (each byte transition is visited hundreds of times).
+    let source: Box<dyn BatchSource> = if let Some(path) = args.get("data") {
+        println!("corpus: {path} (byte-level)");
+        Box::new(CorpusSource::from_file(std::path::Path::new(path), seq, seed)?)
+    } else {
+        Box::new(MarkovSource::new(vocab, seq, 0.05, seed ^ 1))
+    };
+    let mut loader = UlyssesDataLoader::new(source, sp);
+    let mut log = RunLog::default();
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let (ids, _) = loader.next();
+        let m = trainer.train_step(&ids)?;
+        if step <= 5 || step % 10 == 0 {
+            println!(
+                "step {:>4}/{}  loss {:.4}  gnorm {:.2}  {:.1}s  (elapsed {:.0}s)",
+                step,
+                steps,
+                m.loss,
+                m.grad_norm,
+                m.step_time.as_secs_f64(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        log.push(m);
+    }
+
+    println!("\n{}", log.ascii_loss_curve(68, 14));
+    let head = log.mean_loss_head(10);
+    let tail = log.mean_loss_tail(10);
+    println!(
+        "mean loss: first 10 steps {head:.4} -> last 10 steps {tail:.4} \
+         ({} tokens total, {:.1}s/step)",
+        log.total_tokens(),
+        log.mean_step_time().as_secs_f64()
+    );
+
+    let csv = args.get_or("csv", "results/e2e_loss.csv");
+    if let Some(parent) = std::path::Path::new(&csv).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    log.write_csv(std::path::Path::new(&csv))?;
+    println!("loss curve written to {csv}");
+
+    anyhow::ensure!(tail < head, "loss did not decrease: {head} -> {tail}");
+    println!("train_e2e OK");
+    Ok(())
+}

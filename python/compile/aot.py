@@ -1,0 +1,229 @@
+"""AOT exporter: lower every Ulysses stage (fwd + vjp) to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+For a (config, seq, sp) triple this writes:
+
+    artifacts/<config>-sp<sp>-seq<seq>/
+        embed_fwd.hlo.txt ... loss_bwd.hlo.txt   (10 stage programs)
+        manifest.json                            (shapes + param layout)
+
+The manifest is the single source of truth the rust coordinator reads: it
+drives the flat-parameter layout for ZeRO sharding, artifact input order,
+and the Ulysses head-shard shapes.
+
+Usage:  python -m compile.aot --config tiny --seq 256 --sp 2 --out ../artifacts
+        python -m compile.aot --all --out ../artifacts      (default build set)
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def stage_specs(cfg: M.ModelConfig, seq: int, sp: int) -> dict:
+    """Input ShapeDtypeStructs for every stage, keyed by stage name.
+
+    Shapes follow the Ulysses layouts: `ssh = seq/sp` outside attention,
+    full `seq` with per-rank head shards inside it.
+    """
+    assert seq % sp == 0, (seq, sp)
+    ssh = seq // sp
+    h, v, d = cfg.hidden, cfg.vocab, cfg.head_dim
+    nq, nkv = cfg.n_q_heads, cfg.n_kv_heads
+    q_sh, kv_sh = cfg.head_shard(sp)
+    hq, hkv = nq * d, nkv * d
+
+    emb = [("embed", spec((v, h))), ("ids", spec((ssh,), I32))]
+    pre = [
+        ("ln1", spec((h,))), ("wq", spec((h, hq))),
+        ("wk", spec((h, hkv))), ("wv", spec((h, hkv))),
+        ("h", spec((ssh, h))), ("pos", spec((ssh,), I32)),
+    ]
+    attn = [
+        ("q", spec((seq, q_sh, d))),
+        ("k", spec((seq, kv_sh, d))),
+        ("v", spec((seq, kv_sh, d))),
+    ]
+    post = [
+        ("wo", spec((hq, h))), ("ln2", spec((h,))),
+        ("wg", spec((h, cfg.ffn))), ("wu", spec((h, cfg.ffn))),
+        ("wd", spec((cfg.ffn, h))),
+        ("h_in", spec((ssh, h))), ("attn", spec((ssh, nq, d))),
+    ]
+    loss = [
+        ("lnf", spec((h,))), ("unembed", spec((h, v))),
+        ("h", spec((ssh, h))), ("labels", spec((ssh,), I32)),
+    ]
+    return {
+        "embed_fwd": (M.embed_fwd, emb),
+        "embed_bwd": (M.embed_bwd, emb + [("d_h", spec((ssh, h)))]),
+        "pre_attn_fwd": (M.pre_attn_fwd, pre),
+        "pre_attn_bwd": (M.pre_attn_bwd, pre + [
+            ("d_q", spec((ssh, nq, d))),
+            ("d_k", spec((ssh, nkv, d))),
+            ("d_v", spec((ssh, nkv, d))),
+        ]),
+        "attn_fwd": (M.attn_core_fwd, attn),
+        "attn_bwd": (M.attn_core_bwd, attn + [("d_o", spec((seq, q_sh, d)))]),
+        "post_attn_fwd": (M.post_attn_fwd, post),
+        "post_attn_bwd": (M.post_attn_bwd, post + [("d_out", spec((ssh, h)))]),
+        "loss_fwd": (M.loss_fwd, loss),
+        "loss_bwd": (M.loss_bwd, loss + [("ct_sum", spec(()))]),
+    }
+
+
+# Parameter groups in flat-buffer order. Rust's ZeRO sharding flattens
+# [embed group][layer 0]...[layer L-1][final group] in exactly this order.
+def param_layout(cfg: M.ModelConfig) -> dict:
+    h, v, d = cfg.hidden, cfg.vocab, cfg.head_dim
+    hq, hkv = cfg.n_q_heads * d, cfg.n_kv_heads * d
+    return {
+        "embed": [("embed", [v, h], "normal")],
+        "layer": [
+            ("ln1", [h], "ones"),
+            ("wq", [h, hq], "normal"),
+            ("wk", [h, hkv], "normal"),
+            ("wv", [h, hkv], "normal"),
+            ("wo", [hq, h], "normal"),
+            ("ln2", [h], "ones"),
+            ("wg", [h, cfg.ffn], "normal"),
+            ("wu", [h, cfg.ffn], "normal"),
+            ("wd", [cfg.ffn, h], "zeros"),
+        ],
+        "final": [("lnf", [h], "ones"), ("unembed", [h, v], "normal")],
+    }
+
+
+def _shape_entry(name, s):
+    return {
+        "name": name,
+        "shape": list(s.shape),
+        "dtype": "i32" if s.dtype == jnp.int32 else "f32",
+    }
+
+
+def export(cfg: M.ModelConfig, seq: int, sp: int, out_root: pathlib.Path,
+           kernels: str | None = None) -> pathlib.Path:
+    if kernels and kernels != cfg.kernels:
+        # Kernel-swap variant gets its own artifact dir (attention-agnostic
+        # property: rust loads either with zero coordinator changes).
+        cfg = dataclasses_replace(cfg, name=f"{cfg.name}-{kernels}",
+                                  kernels=kernels)
+    out = out_root / f"{cfg.name}-sp{sp}-seq{seq}"
+    out.mkdir(parents=True, exist_ok=True)
+    specs = stage_specs(cfg, seq, sp)
+    stages = {}
+    for name, (fn, inputs) in specs.items():
+        bound = functools.partial(fn, cfg)
+        # keep_unused: the stage signature IS the rust-side contract; jit
+        # must not DCE arguments whose values a particular VJP ignores
+        # (e.g. embed_bwd only uses the embedding's shape).
+        lowered = jax.jit(bound, keep_unused=True).lower(*[s for _, s in inputs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out / fname).write_text(text)
+        out_avals = jax.eval_shape(bound, *[s for _, s in inputs])
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        stages[name] = {
+            "file": fname,
+            "inputs": [_shape_entry(n, s) for n, s in inputs],
+            "outputs": [_shape_entry(f"out{i}", s)
+                        for i, s in enumerate(out_avals)],
+        }
+        print(f"  {name}: {len(text)} chars")
+    q_sh, kv_sh = cfg.head_shard(sp)
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "hidden": cfg.hidden,
+            "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads, "ffn": cfg.ffn,
+            "head_dim": cfg.head_dim, "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps, "kernels": cfg.kernels,
+            "params_count": cfg.params_count(),
+        },
+        "seq": seq, "sp": sp, "seq_shard": seq // sp,
+        "q_heads_shard": q_sh, "kv_heads_shard": kv_sh,
+        "ignore_index": M.IGNORE_INDEX,
+        "stages": stages,
+        "param_layout": {
+            g: [{"name": n, "shape": sh, "init": init} for n, sh, init in tensors]
+            for g, tensors in param_layout(cfg).items()
+        },
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return out
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+# The default build set: everything the examples, tests and benches load.
+DEFAULT_BUILDS = [
+    ("tiny", 256, 1, None),
+    ("tiny", 256, 2, None),
+    ("tiny", 256, 4, None),      # exercises kv replication (kv=2 < sp=4)
+    ("tiny", 256, 2, "ref"),     # kernel-swap path (attention-agnostic test)
+    ("e2e-25m", 512, 1, None),
+    ("e2e-25m", 512, 4, None),
+    ("e2e-100m", 512, 4, None),   # single-core-friendly e2e driver default
+    ("e2e-100m", 1024, 4, None),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(M.CONFIGS), default=None)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--sp", type=int, default=1)
+    ap.add_argument("--kernels", choices=["pallas", "ref"], default=None)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--all", action="store_true",
+                    help="build the default artifact set")
+    args = ap.parse_args()
+    out_root = pathlib.Path(args.out)
+    if args.all or args.config is None:
+        builds = DEFAULT_BUILDS
+    else:
+        builds = [(args.config, args.seq, args.sp, args.kernels)]
+    for name, seq, sp, kern in builds:
+        cfg = M.CONFIGS[name]
+        tag = f"{name}-sp{sp}-seq{seq}" + (f" [{kern}]" if kern else "")
+        print(f"export {tag}")
+        export(cfg, seq, sp, out_root, kernels=kern)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

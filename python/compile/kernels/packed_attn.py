@@ -1,0 +1,133 @@
+"""Segment-aware blocked causal attention for PACKED samples (paper §3.4,
+§7.2).
+
+When many short samples are packed into one long sequence, plain causal
+attention lets tokens attend across sample boundaries. The paper's fix is
+position-id-aware FlashAttention-2 (a 4-D mask would need O(S^2) memory —
+29 GiB at 125K). This kernel is that fix for the ALST-RS stack: the same
+blocked online-softmax as `flash_attn`, with a per-token segment id; a
+`[TQ, TK]` boolean block `seg_q == seg_k & causal` replaces the O(S^2)
+mask at O(tile^2) memory.
+
+The paper also warns (§7.2) that SDPA *ignores* position ids and silently
+attends across packed samples — `ref.attention_naive` on packed input
+reproduces that wrong behaviour, and the tests assert the difference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, sq_ref, sk_ref, acc_ref, m_ref, l_ref,
+            o_ref, *, tile_q: int, tile_k: int, scale: float, n_k: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...][:, 0, :]
+    k = k_ref[...][:, 0, :]
+    v = v_ref[...][:, 0, :]
+    scores = (q @ k.T) * scale
+
+    q_ids = i * tile_q + jax.lax.iota(jnp.int32, tile_q)
+    k_ids = j * tile_k + jax.lax.iota(jnp.int32, tile_k)
+    causal = q_ids[:, None] >= k_ids[None, :]
+    same_seg = sq_ref[...][:, None] == sk_ref[...][None, :]
+    mask = causal & same_seg                      # O(tile^2), never O(S^2)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, scores.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        # every token attends at least to itself, so l > 0
+        o_ref[...] = (acc_ref[...] / l_ref[...][:, None])[:, None, :]
+
+
+def packed_flash_attention(q, k, v, seg_ids, *, tile_q: int = 128,
+                           tile_k: int = 128, interpret: bool = True):
+    """Causal attention restricted to same-segment tokens.
+
+    q: [S, Hq, D]; k, v: [S, Hkv, D]; seg_ids: [S] i32 sample index
+    (non-decreasing for packed batches, but any labelling works).
+    """
+    s, hq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    rep = hq // hkv
+    tile_q, tile_k = min(tile_q, s), min(tile_k, s)
+    assert s % tile_q == 0 and s % tile_k == 0
+    n_q, n_k = s // tile_q, s // tile_k
+    kernel = functools.partial(
+        _kernel, tile_q=tile_q, tile_k=tile_k, scale=1.0 / d**0.5, n_k=n_k
+    )
+    _, _, _, o = pl.pallas_call(
+        kernel,
+        grid=(hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((tile_q, 1, d), lambda h, i, j: (i, h, 0)),
+            pl.BlockSpec((tile_k, 1, d), lambda h, i, j: (j, h // rep, 0)),
+            pl.BlockSpec((tile_k, 1, d), lambda h, i, j: (j, h // rep, 0)),
+            pl.BlockSpec((tile_q,), lambda h, i, j: (i,)),
+            pl.BlockSpec((tile_k,), lambda h, i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, d), lambda h, i, j: (i, 0)),
+            pl.BlockSpec((tile_q,), lambda h, i, j: (i,)),
+            pl.BlockSpec((tile_q,), lambda h, i, j: (i,)),
+            pl.BlockSpec((tile_q, 1, d), lambda h, i, j: (i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, d), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s, hq, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, seg_ids, seg_ids)
+    return o
+
+
+def attention_naive_packed(q, k, v, seg_ids):
+    """Reference: full-mask segment-aware attention (materializes the
+    [S, S] mask the paper's §3.4 shows is infeasible at long S)."""
+    s, hq, d = q.shape
+    hkv = k.shape[1]
+    kr = jnp.repeat(k, hq // hkv, axis=1)
+    vr = jnp.repeat(v, hq // hkv, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, kr) * scale
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    same = seg_ids[:, None] == seg_ids[None, :]
+    scores = jnp.where((causal & same)[None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", probs, vr)
+
+
+def make_packed_segments(sample_lengths):
+    """seg_ids + position_ids for samples packed back to back. The
+    position ids reset per sample — the paper's [bs, seqlen] O(S)
+    replacement for the 4-D mask."""
+    seg, pos = [], []
+    for i, n in enumerate(sample_lengths):
+        seg.extend([i] * n)
+        pos.extend(range(n))
+    return jnp.asarray(seg, jnp.int32), jnp.asarray(pos, jnp.int32)

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the ALST kernels.
+
+Every Pallas kernel in this package has a reference implementation here that
+materializes the full intermediates (the memory-hungry way the paper's
+baseline does it). pytest asserts kernel == ref to tolerance; the memory
+benches use the naive variants as the "before" side of Figures 3 and 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE_INDEX = -100
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (logits fully materialized) — baseline for tiled_ce.
+# ---------------------------------------------------------------------------
+def ce_naive(hidden, unembed, labels):
+    """Full-materialization causal-LM cross entropy.
+
+    hidden:  [S, H] f32
+    unembed: [H, V] f32
+    labels:  [S] i32, pre-shifted; IGNORE_INDEX entries contribute 0 loss.
+    Returns (loss_sum, count) — sum over non-ignored tokens and their count.
+    """
+    logits = hidden @ unembed                      # [S, V] — the 8 GiB tensor
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    mask = labels != IGNORE_INDEX
+    safe = jnp.where(mask, labels, 0)
+    tgt = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    per_tok = jnp.where(mask, lse - tgt, 0.0)
+    return per_tok.sum(), mask.sum().astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (full sequence in one pass) — baseline for tiled_mlp.
+# ---------------------------------------------------------------------------
+def mlp_naive(x, wg, wu, wd):
+    """SwiGLU: (silu(x@wg) * (x@wu)) @ wd.
+
+    x: [S, H], wg/wu: [H, F], wd: [F, H].
+    """
+    g = x @ wg
+    u = x @ wu
+    return (jax.nn.silu(g) * u) @ wd
+
+
+# ---------------------------------------------------------------------------
+# Causal attention (full [S, S] score matrix) — baseline for flash_attn.
+# ---------------------------------------------------------------------------
+def attention_naive(q, k, v):
+    """Causal multi-head attention with GQA head repetition.
+
+    q: [S, Hq, D], k/v: [S, Hkv, D] with Hq % Hkv == 0.
+    Returns [S, Hq, D].
+    """
+    s, hq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale   # [Hq, S, S]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Tiled-jnp variants: same O(tile) schedule as the Pallas kernels but written
+# with lax.scan — used for kernel VJPs and as the `--kernels ref` artifact
+# path (compact HLO for the big e2e config on the single-core CPU runner).
+# ---------------------------------------------------------------------------
+def ce_tiled_jnp(hidden, unembed, labels, tile_s: int = 128):
+    """Sequence-tiled fused CE with the same reduction as ce_naive."""
+    s, h = hidden.shape
+    assert s % tile_s == 0, (s, tile_s)
+    n = s // tile_s
+
+    def body(carry, idx):
+        loss_sum, count = carry
+        hs = jax.lax.dynamic_slice_in_dim(hidden, idx * tile_s, tile_s, 0)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * tile_s, tile_s, 0)
+        tl, tc = ce_naive(hs, unembed, ls)
+        return (loss_sum + tl, count + tc), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(n)
+    )
+    return loss_sum, count
+
+
+def mlp_tiled_jnp(x, wg, wu, wd, tile_s: int = 128):
+    """Sequence-tiled SwiGLU: only one [tile_s, F] intermediate lives at once."""
+    s, h = x.shape
+    assert s % tile_s == 0, (s, tile_s)
+    n = s // tile_s
+
+    def body(_, idx):
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * tile_s, tile_s, 0)
+        return None, mlp_naive(xs, wg, wu, wd)
+
+    _, tiles = jax.lax.scan(body, None, jnp.arange(n))
+    return tiles.reshape(s, wd.shape[1])

@@ -1,0 +1,132 @@
+"""Fused tiled cross-entropy (paper §3.1, the Liger-style logits+loss fusion).
+
+The naive loss head materializes logits `[S, V]` — 7.65 GiB for Llama-8B at
+16K tokens (paper's worked example). This kernel never does: a 2-D Pallas
+grid walks (sequence tiles × vocab tiles) and keeps only a `[TS, TV]` score
+tile plus three `[TS]` accumulators (running max `m`, running sum-exp `l`,
+target logit `t`) in VMEM. The per-token loss is `(m + log l) - t`.
+
+Backward is a `custom_vjp` with the same tiling schedule written in jnp
+(`lax.scan` over sequence tiles; each step materializes only one
+`[TS, V]` probability block) — this mirrors the paper's TiledCompute
+autograd function, which re-runs each tile's forward during backward.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Triton
+(Liger) kernel streams logits chunks through SRAM; here the BlockSpec
+index maps express the same HBM↔VMEM schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+IGNORE_INDEX = ref.IGNORE_INDEX
+NEG_INF = -1e30
+
+
+def _ce_kernel(h_ref, w_ref, lab_ref, m_ref, l_ref, t_ref, *, tile_v: int):
+    """One (seq-tile i, vocab-tile j) grid step of the online-LSE reduction."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    scores = h_ref[...] @ w_ref[...]                        # [TS, TV] in VMEM
+    labels = lab_ref[...]                                   # [TS] global ids
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, scores.max(axis=-1))
+    # Rescale the old sum-exp to the new max, add this tile's contribution.
+    l_ref[...] = l_ref[...] * jnp.exp(m_old - m_new) + jnp.exp(
+        scores - m_new[:, None]
+    ).sum(axis=-1)
+    m_ref[...] = m_new
+
+    # Pick out the target logit if it falls inside this vocab tile.
+    local = labels - j * tile_v
+    in_tile = (local >= 0) & (local < tile_v)
+    safe = jnp.clip(local, 0, tile_v - 1)
+    picked = jnp.take_along_axis(scores, safe[:, None], axis=-1)[:, 0]
+    t_ref[...] = t_ref[...] + jnp.where(in_tile, picked, 0.0)
+
+
+def ce_forward_parts(hidden, unembed, labels, *, tile_s: int = 128,
+                     tile_v: int = 512, interpret: bool = True):
+    """Run the Pallas grid; return (m, l, t) accumulators, shape [S] each."""
+    s, h = hidden.shape
+    v = unembed.shape[1]
+    assert s % tile_s == 0 and v % tile_v == 0, (s, tile_s, v, tile_v)
+    grid = (s // tile_s, v // tile_v)
+    kernel = functools.partial(_ce_kernel, tile_v=tile_v)
+    m, l, t = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_s, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, tile_v), lambda i, j: (0, j)),
+            pl.BlockSpec((tile_s,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_s,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_s,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_s,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hidden, unembed, labels)
+    return m, l, t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def ce_tiled(hidden, unembed, labels, tile_s: int = 128, tile_v: int = 512):
+    """Fused tiled CE. Returns (loss_sum, count) like ref.ce_naive."""
+    return _ce_fwd(hidden, unembed, labels, tile_s, tile_v)[0]
+
+
+def _ce_fwd(hidden, unembed, labels, tile_s, tile_v):
+    m, l, t = ce_forward_parts(hidden, unembed, labels,
+                               tile_s=tile_s, tile_v=tile_v)
+    mask = labels != IGNORE_INDEX
+    per_tok = jnp.where(mask, (m + jnp.log(l)) - t, 0.0)
+    out = (per_tok.sum(), mask.sum().astype(jnp.float32))
+    return out, (hidden, unembed, labels)
+
+
+def _ce_bwd(tile_s, tile_v, res, cts):
+    """Tiled backward: per seq tile, d_logits = (softmax - onehot) masked."""
+    hidden, unembed, labels = res
+    g_sum, _ = cts                        # count is non-differentiable
+    s, h = hidden.shape
+    v = unembed.shape[1]
+    n = s // tile_s
+
+    def body(d_w, idx):
+        hs = jax.lax.dynamic_slice_in_dim(hidden, idx * tile_s, tile_s, 0)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * tile_s, tile_s, 0)
+        logits = hs @ unembed                                  # [TS, V] only
+        probs = jax.nn.softmax(logits, axis=-1)
+        mask = ls != IGNORE_INDEX
+        onehot = jax.nn.one_hot(jnp.where(mask, ls, 0), v, dtype=probs.dtype)
+        d_logits = (probs - onehot) * mask[:, None].astype(probs.dtype) * g_sum
+        d_hs = d_logits @ unembed.T
+        return d_w + hs.T @ d_logits, d_hs
+
+    d_w0 = jnp.zeros_like(unembed)
+    d_w, d_h_tiles = jax.lax.scan(body, d_w0, jnp.arange(n))
+    d_hidden = d_h_tiles.reshape(s, h)
+    return d_hidden, d_w, None
+
+
+ce_tiled.defvjp(_ce_fwd, _ce_bwd)

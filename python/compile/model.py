@@ -1,0 +1,292 @@
+"""L2: the Llama-style causal transformer, written as Ulysses stage functions.
+
+The model is cut exactly at the paper's sequence-parallel boundaries
+(§3.2): everything outside attention operates on a *sequence shard*
+`[S/sp, ...]` with no cross-token dependencies; attention operates on the
+*full sequence* for a *head shard* `[S, H/sp, D]`. The all-to-alls between
+those layouts live in the Rust coordinator — Python never runs at training
+time. Each stage has a forward and a VJP, both AOT-lowered by aot.py.
+
+Stage graph per layer (* = rust-side collective):
+
+    h --pre_attn--> q,k,v [Ssh, heads, D]
+          * all-to-all (seq->head)
+    q,k,v [S, heads/sp, D] --attn_core--> o [S, heads/sp, D]
+          * all-to-all (head->seq)
+    o [Ssh, heads, D] --post_attn_mlp(+TiledMLP)--> h' [Ssh, H]
+
+plus `embed` before the stack and `loss_head` (fused tiled CE with
+pre-shifted labels, §4.3) after it.
+
+Kernel selection (`pallas` | `ref`): the attention core and the tiled
+MLP/CE are swappable without touching stage signatures — this *is* the
+paper's "attention-agnostic" property, exercised in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attn, ref, tiled_ce, tiled_mlp
+
+IGNORE_INDEX = ref.IGNORE_INDEX
+
+KernelKind = Literal["pallas", "ref"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (Llama-style)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    n_layers: int
+    n_q_heads: int
+    n_kv_heads: int
+    ffn: int
+    head_dim: int = 0
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    kernels: KernelKind = "pallas"
+    # Pallas tile sizes (must divide the shard/sequence lengths used).
+    tile_s: int = 64
+    tile_v: int = 256
+    tile_q: int = 64
+    tile_k: int = 64
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.hidden // self.n_q_heads)
+        assert self.n_q_heads % self.n_kv_heads == 0
+
+    def params_count(self) -> int:
+        a = self.hidden * (self.n_q_heads + 2 * self.n_kv_heads + self.n_q_heads) * self.head_dim
+        m = 3 * self.hidden * self.ffn
+        per_layer = a + m + 2 * self.hidden
+        return (
+            2 * self.vocab * self.hidden
+            + self.n_layers * per_layer
+            + self.hidden
+        )
+
+    def head_shard(self, sp: int) -> tuple[int, int]:
+        """Per-rank (q_heads, kv_heads) under Ulysses SP (paper §3.2.1).
+
+        §7.1 limits: q_heads (and kv_heads, when >= sp) must divide
+        evenly; kv heads REPLICATE only when kv_heads < sp.
+        """
+        assert self.n_q_heads % sp == 0, (self.n_q_heads, sp)
+        q_sh = self.n_q_heads // sp
+        if self.n_kv_heads >= sp:
+            assert self.n_kv_heads % sp == 0, (self.n_kv_heads, sp)
+            kv_sh = self.n_kv_heads // sp
+        else:
+            kv_sh = 1
+        return q_sh, kv_sh
+
+
+# Runnable presets. The paper-scale models (Llama-8B/70B, Qwen3-32B) exist
+# as Rust-side simulator presets; these are the real-compute configs.
+CONFIGS = {
+    # 2-layer GQA toy: fast artifacts, exercises every code path incl.
+    # Pallas kernels and kv-head replication (kv=2 < sp=4).
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, hidden=64, n_layers=2,
+        n_q_heads=4, n_kv_heads=2, ffn=128, kernels="pallas",
+        tile_s=32, tile_v=128, tile_q=32, tile_k=32,
+    ),
+    # ~25M params: the quickstart/correctness scale.
+    "e2e-25m": ModelConfig(
+        name="e2e-25m", vocab=8192, hidden=512, n_layers=6,
+        n_q_heads=8, n_kv_heads=4, ffn=1280, kernels="ref",
+    ),
+    # ~100M params: the end-to-end training driver (EXPERIMENTS.md).
+    # kv=4 so sp=4 shards evenly (q 12->3/rank, kv 4->1/rank, §7.1).
+    "e2e-100m": ModelConfig(
+        name="e2e-100m", vocab=16384, hidden=768, n_layers=12,
+        n_q_heads=12, n_kv_heads=4, ffn=2048, kernels="ref",
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Primitive blocks
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta):
+    """Rotary embedding. x: [S, H, D] (D even), pos: [S] global positions."""
+    s, h, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]       # [S, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# ---------------------------------------------------------------------------
+# Stage forwards. All take flat tensor args and return tuples of tensors.
+# Positions are inputs (not derived) because a rank only sees its shard —
+# this is also what replaces the paper's 4-D mask (§3.4): position ids,
+# O(S) instead of O(S^2).
+# ---------------------------------------------------------------------------
+def embed_fwd(cfg: ModelConfig, embed, ids):
+    """embed: [V, H]; ids: [Ssh] i32 -> h [Ssh, H]."""
+    return (jnp.take(embed, ids, axis=0),)
+
+
+def pre_attn_fwd(cfg: ModelConfig, ln1, wq, wk, wv, h, pos):
+    """RMSNorm + QKV projection + RoPE on a sequence shard.
+
+    h: [Ssh, H] -> q [Ssh, nq, D], k/v [Ssh, nkv, D].
+    """
+    s = h.shape[0]
+    x = rms_norm(h, ln1, cfg.norm_eps)
+    q = (x @ wq).reshape(s, cfg.n_q_heads, cfg.head_dim)
+    k = (x @ wk).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ wv).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_core_fwd(cfg: ModelConfig, q, k, v):
+    """Full-sequence causal attention on a head shard (post all-to-all)."""
+    if cfg.kernels == "pallas":
+        o = flash_attn.attention(q, k, v, cfg.tile_q, cfg.tile_k)
+    else:
+        o = ref.attention_naive(q, k, v)
+    return (o,)
+
+
+def post_attn_fwd(cfg: ModelConfig, wo, ln2, wg, wu, wd, h_in, attn):
+    """Output projection + residual + TiledMLP block on a sequence shard.
+
+    h_in: [Ssh, H] (the layer input, i.e. the residual stream),
+    attn: [Ssh, nq, D] (attention output after the second all-to-all).
+    """
+    s = h_in.shape[0]
+    h1 = h_in + attn.reshape(s, cfg.n_q_heads * cfg.head_dim) @ wo
+    x = rms_norm(h1, ln2, cfg.norm_eps)
+    if cfg.kernels == "pallas":
+        y = tiled_mlp.mlp_tiled(x, wg, wu, wd, cfg.tile_s)
+    else:
+        y = ref.mlp_tiled_jnp(x, wg, wu, wd, tile_s=min(cfg.tile_s, s))
+    return (h1 + y,)
+
+
+def loss_fwd(cfg: ModelConfig, lnf, unembed, h, labels):
+    """Final norm + fused tiled logits+CE over pre-shifted labels.
+
+    Returns (loss_sum, count); the coordinator all-reduces both and
+    divides — that is the cross-shard mean the paper's §4.3 makes exact.
+    """
+    x = rms_norm(h, lnf, cfg.norm_eps)
+    if cfg.kernels == "pallas":
+        loss_sum, count = tiled_ce.ce_tiled(x, unembed, labels,
+                                            cfg.tile_s, cfg.tile_v)
+    else:
+        loss_sum, count = ref.ce_tiled_jnp(x, unembed, labels,
+                                           tile_s=min(cfg.tile_s, h.shape[0]))
+    return loss_sum, count
+
+
+# ---------------------------------------------------------------------------
+# Stage VJPs. Each is a standalone jax function (diff args, nondiff args,
+# cotangents) -> gradient tuple, lowered as its own artifact. jax.vjp
+# recomputes the stage forward internally, which *is* the paper's
+# activation-checkpoint recompute: the coordinator stores only layer-input
+# shards (offloadable to host) and replays stages backward.
+# ---------------------------------------------------------------------------
+def embed_bwd(cfg, embed, ids, d_h):
+    _, pull = jax.vjp(lambda e: embed_fwd(cfg, e, ids), embed)
+    (d_embed,) = pull((d_h,))
+    return (d_embed,)
+
+
+def pre_attn_bwd(cfg, ln1, wq, wk, wv, h, pos, d_q, d_k, d_v):
+    _, pull = jax.vjp(
+        lambda *a: pre_attn_fwd(cfg, *a, pos), ln1, wq, wk, wv, h
+    )
+    return pull((d_q, d_k, d_v))          # (d_ln1, d_wq, d_wk, d_wv, d_h)
+
+
+def attn_core_bwd(cfg, q, k, v, d_o):
+    _, pull = jax.vjp(lambda *a: attn_core_fwd(cfg, *a), q, k, v)
+    return pull((d_o,))                   # (d_q, d_k, d_v)
+
+
+def post_attn_bwd(cfg, wo, ln2, wg, wu, wd, h_in, attn, d_out):
+    _, pull = jax.vjp(
+        lambda *a: post_attn_fwd(cfg, *a), wo, ln2, wg, wu, wd, h_in, attn
+    )
+    return pull((d_out,))   # (d_wo, d_ln2, d_wg, d_wu, d_wd, d_h_in, d_attn)
+
+
+def loss_bwd(cfg, lnf, unembed, h, labels, ct_sum):
+    """ct_sum is the scalar cotangent on loss_sum (1 / global token count)."""
+    _, pull = jax.vjp(
+        lambda *a: loss_fwd(cfg, *a, labels)[0], lnf, unembed, h
+    )
+    return pull(ct_sum)                   # (d_lnf, d_unembed, d_h)
+
+
+# ---------------------------------------------------------------------------
+# Full-graph reference (pytest ground truth; never exported to Rust).
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Deterministic init. Rust does its own init; loss-equality tests
+    always compare two rust runs sharing one init, so the RNGs need not
+    match across languages."""
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    std = 0.02
+    p = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.hidden)) * std,
+        "lnf": jnp.ones((cfg.hidden,)),
+        "unembed": jax.random.normal(keys[1], (cfg.hidden, cfg.vocab)) * std,
+        "layers": [],
+    }
+    hq = cfg.n_q_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[3 + i], 6)
+        p["layers"].append({
+            "ln1": jnp.ones((cfg.hidden,)),
+            "wq": jax.random.normal(ks[0], (cfg.hidden, hq)) * std,
+            "wk": jax.random.normal(ks[1], (cfg.hidden, hkv)) * std,
+            "wv": jax.random.normal(ks[2], (cfg.hidden, hkv)) * std,
+            "wo": jax.random.normal(ks[3], (hq, cfg.hidden)) * std,
+            "ln2": jnp.ones((cfg.hidden,)),
+            "wg": jax.random.normal(ks[4], (cfg.hidden, cfg.ffn)) * std,
+            "wu": jax.random.normal(ks[5], (cfg.hidden, cfg.ffn)) * std,
+            "wd": jnp.zeros((cfg.ffn, cfg.hidden)),
+        })
+    return p
+
+
+def full_loss(cfg: ModelConfig, params, ids, labels):
+    """Whole model on the whole sequence (sp=1 path), mean loss."""
+    pos = jnp.arange(ids.shape[0], dtype=jnp.int32)
+    (h,) = embed_fwd(cfg, params["embed"], ids)
+    for lp in params["layers"]:
+        q, k, v = pre_attn_fwd(cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], h, pos)
+        (o,) = attn_core_fwd(cfg, q, k, v)
+        (h,) = post_attn_fwd(cfg, lp["wo"], lp["ln2"], lp["wg"], lp["wu"],
+                             lp["wd"], h, o)
+    loss_sum, count = loss_fwd(cfg, params["lnf"], params["unembed"], h, labels)
+    return loss_sum / count
+
+
+def shift_labels(ids):
+    """Paper §4.3: pre-shift once on the *full* sequence, then shard."""
+    return jnp.concatenate(
+        [ids[1:], jnp.full((1,), IGNORE_INDEX, ids.dtype)]
+    )

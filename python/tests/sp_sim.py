@@ -1,0 +1,213 @@
+"""A pure-python Ulysses SP coordinator — the executable spec for rust/.
+
+This mirrors, stage for stage and collective for collective, what
+`rust/src/coordinator/pipeline.rs` does at training time: shard the
+sequence, run the AOT stage functions per rank, perform the seq<->head
+all-to-alls (with GQA kv replication), checkpoint layer inputs, replay
+stages backward with transposed all-to-alls, and reduce gradients.
+
+test_model.py asserts that this pipeline's loss and gradients equal
+`jax.grad(full_loss)` — which is exactly the paper's Figure 13 claim
+(ALST == baseline), proven at the algorithm level. The rust integration
+tests then assert the same property through the PJRT artifacts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def kv_head_start(rank: int, n_kv: int, sp: int) -> int:
+    """First (global) kv head owned by `rank` after the all-to-all.
+
+    Covers both GQA cases of paper §3.2.1: if `n_kv >= sp` heads are split
+    contiguously; otherwise each rank gets the single kv head its q-head
+    group reuses (replication).
+    """
+    return (rank * n_kv) // sp
+
+
+def a2a_seq_to_head(shards, n_heads_out, sp):
+    """Forward all-to-all: [Ssh, H, D] per rank -> [S, H/sp(.), D] per rank.
+
+    `shards[r]` holds rank r's sequence shard with ALL heads. Returns, for
+    each destination rank, the FULL sequence restricted to its head shard.
+    `n_heads_out` is the per-rank head count (q_sh, or kv_sh incl.
+    replication).
+    """
+    n_heads_in = shards[0].shape[1]
+    out = []
+    for dst in range(sp):
+        if n_heads_in >= sp:                      # split heads contiguously
+            h0 = dst * n_heads_out
+        else:                                     # replicate (kv < sp)
+            h0 = kv_head_start(dst, n_heads_in, sp)
+        full = np.concatenate(
+            [np.asarray(s[:, h0:h0 + n_heads_out, :]) for s in shards], axis=0
+        )
+        out.append(full)
+    return out
+
+
+def a2a_head_to_seq(shards, n_heads_total, sp, sum_replicas=False):
+    """Inverse all-to-all: [S, h_sh, D] per rank -> [Ssh, n_heads_total, D].
+
+    With `sum_replicas` (the backward of kv replication) multiple source
+    ranks contribute gradients to the same head, which are summed.
+    """
+    s_full, h_sh, d = shards[0].shape
+    ssh = s_full // sp
+    out = []
+    for dst in range(sp):
+        acc = np.zeros((ssh, n_heads_total, d), np.float32)
+        for src in range(sp):
+            if n_heads_total >= sp:
+                h0 = src * h_sh
+            else:
+                h0 = kv_head_start(src, n_heads_total, sp)
+            piece = np.asarray(shards[src][dst * ssh:(dst + 1) * ssh, :, :])
+            if sum_replicas:
+                acc[:, h0:h0 + h_sh, :] += piece
+            else:
+                acc[:, h0:h0 + h_sh, :] = piece
+        out.append(acc)
+    return out
+
+
+def shift_and_shard_labels(ids: np.ndarray, sp: int):
+    """Paper §4.3: pre-shift on the full sequence, then shard."""
+    shifted = np.concatenate(
+        [ids[1:], np.full((1,), M.IGNORE_INDEX, ids.dtype)]
+    )
+    return np.split(shifted, sp)
+
+
+def run_step(cfg: M.ModelConfig, params: dict, ids: np.ndarray, sp: int):
+    """One fwd+bwd step through the staged Ulysses pipeline.
+
+    Returns (mean_loss, grads) where grads mirrors the params dict. All
+    collectives are explicit; everything else calls the same stage
+    functions aot.py lowers.
+    """
+    seq = ids.shape[0]
+    assert seq % sp == 0
+    ssh = seq // sp
+    q_sh, kv_sh = cfg.head_shard(sp)
+    ids_shards = np.split(ids, sp)
+    pos_shards = np.split(np.arange(seq, dtype=np.int32), sp)
+    label_shards = shift_and_shard_labels(ids, sp)
+
+    # ---- forward ----------------------------------------------------------
+    h = [M.embed_fwd(cfg, params["embed"], jnp.asarray(i))[0]
+         for i in ids_shards]
+    checkpoints = []                      # layer-input shards (offloadable)
+    for lp in params["layers"]:
+        checkpoints.append([np.asarray(x) for x in h])
+        qkv = [M.pre_attn_fwd(cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                              h[r], jnp.asarray(pos_shards[r]))
+               for r in range(sp)]
+        q_full = a2a_seq_to_head([x[0] for x in qkv], q_sh, sp)
+        k_full = a2a_seq_to_head([x[1] for x in qkv], kv_sh, sp)
+        v_full = a2a_seq_to_head([x[2] for x in qkv], kv_sh, sp)
+        o_full = [M.attn_core_fwd(cfg, jnp.asarray(q_full[r]),
+                                  jnp.asarray(k_full[r]),
+                                  jnp.asarray(v_full[r]))[0]
+                  for r in range(sp)]
+        o_sh = a2a_head_to_seq(o_full, cfg.n_q_heads, sp)
+        h = [M.post_attn_fwd(cfg, lp["wo"], lp["ln2"], lp["wg"], lp["wu"],
+                             lp["wd"], h[r], jnp.asarray(o_sh[r]))[0]
+             for r in range(sp)]
+    final_h = [np.asarray(x) for x in h]
+    parts = [M.loss_fwd(cfg, params["lnf"], params["unembed"], h[r],
+                        jnp.asarray(label_shards[r])) for r in range(sp)]
+    loss_sum = sum(float(p[0]) for p in parts)    # all-reduce
+    count = sum(float(p[1]) for p in parts)
+    mean_loss = loss_sum / count
+
+    # ---- backward (recompute from layer-input checkpoints) ----------------
+    ct = jnp.float32(1.0 / count)
+    grads = {
+        "embed": np.zeros_like(np.asarray(params["embed"])),
+        "lnf": np.zeros_like(np.asarray(params["lnf"])),
+        "unembed": np.zeros_like(np.asarray(params["unembed"])),
+        "layers": [
+            {k: np.zeros_like(np.asarray(v)) for k, v in lp.items()}
+            for lp in params["layers"]
+        ],
+    }
+    d_h = []
+    for r in range(sp):
+        d_lnf, d_unembed, d_hr = M.loss_bwd(
+            cfg, params["lnf"], params["unembed"], jnp.asarray(final_h[r]),
+            jnp.asarray(label_shards[r]), ct)
+        grads["lnf"] += np.asarray(d_lnf)          # grad all-reduce
+        grads["unembed"] += np.asarray(d_unembed)
+        d_h.append(np.asarray(d_hr))
+
+    for li in reversed(range(cfg.n_layers)):
+        lp, g = params["layers"][li], grads["layers"][li]
+        h_in = checkpoints[li]
+        # Recompute forward to the attention output (checkpoint replay,
+        # including the forward all-to-alls — paper §3.3 cost model).
+        qkv = [M.pre_attn_fwd(cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                              jnp.asarray(h_in[r]), jnp.asarray(pos_shards[r]))
+               for r in range(sp)]
+        q_full = a2a_seq_to_head([x[0] for x in qkv], q_sh, sp)
+        k_full = a2a_seq_to_head([x[1] for x in qkv], kv_sh, sp)
+        v_full = a2a_seq_to_head([x[2] for x in qkv], kv_sh, sp)
+        o_full = [M.attn_core_fwd(cfg, jnp.asarray(q_full[r]),
+                                  jnp.asarray(k_full[r]),
+                                  jnp.asarray(v_full[r]))[0]
+                  for r in range(sp)]
+        o_sh = a2a_head_to_seq(o_full, cfg.n_q_heads, sp)
+
+        # post_attn bwd
+        d_h_resid, d_attn = [], []
+        for r in range(sp):
+            d_wo, d_ln2, d_wg, d_wu, d_wd, d_hin, d_att = M.post_attn_bwd(
+                cfg, lp["wo"], lp["ln2"], lp["wg"], lp["wu"], lp["wd"],
+                jnp.asarray(h_in[r]), jnp.asarray(o_sh[r]),
+                jnp.asarray(d_h[r]))
+            for name, val in [("wo", d_wo), ("ln2", d_ln2), ("wg", d_wg),
+                              ("wu", d_wu), ("wd", d_wd)]:
+                g[name] += np.asarray(val)
+            d_h_resid.append(np.asarray(d_hin))
+            d_attn.append(np.asarray(d_att))
+
+        # transposed all-to-all: d_attn seq-shard -> head-shard
+        d_o_full = a2a_seq_to_head(d_attn, q_sh, sp)
+        d_qkv_full = [M.attn_core_bwd(cfg, jnp.asarray(q_full[r]),
+                                      jnp.asarray(k_full[r]),
+                                      jnp.asarray(v_full[r]),
+                                      jnp.asarray(d_o_full[r]))
+                      for r in range(sp)]
+        d_q = a2a_head_to_seq([np.asarray(x[0]) for x in d_qkv_full],
+                              cfg.n_q_heads, sp)
+        d_k = a2a_head_to_seq([np.asarray(x[1]) for x in d_qkv_full],
+                              cfg.n_kv_heads, sp, sum_replicas=True)
+        d_v = a2a_head_to_seq([np.asarray(x[2]) for x in d_qkv_full],
+                              cfg.n_kv_heads, sp, sum_replicas=True)
+
+        # pre_attn bwd; total d_h = residual path + qkv path
+        new_d_h = []
+        for r in range(sp):
+            d_ln1, d_wq, d_wk, d_wv, d_hr = M.pre_attn_bwd(
+                cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                jnp.asarray(h_in[r]), jnp.asarray(pos_shards[r]),
+                jnp.asarray(d_q[r]), jnp.asarray(d_k[r]),
+                jnp.asarray(d_v[r]))
+            for name, val in [("ln1", d_ln1), ("wq", d_wq), ("wk", d_wk),
+                              ("wv", d_wv)]:
+                g[name] += np.asarray(val)
+            new_d_h.append(np.asarray(d_hr) + d_h_resid[r])
+        d_h = new_d_h
+
+    for r in range(sp):
+        (d_emb,) = M.embed_bwd(cfg, params["embed"],
+                               jnp.asarray(ids_shards[r]),
+                               jnp.asarray(d_h[r]))
+        grads["embed"] += np.asarray(d_emb)
+
+    return mean_loss, grads

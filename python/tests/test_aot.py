@@ -1,0 +1,75 @@
+"""AOT export sanity: manifests are consistent, HLO text is loadable."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    path = aot.export(M.CONFIGS["tiny"], seq=64, sp=2, out_root=out)
+    return path, json.loads((path / "manifest.json").read_text())
+
+
+def test_all_stage_files_exist(exported):
+    path, manifest = exported
+    assert set(manifest["stages"]) == {
+        "embed_fwd", "embed_bwd", "pre_attn_fwd", "pre_attn_bwd",
+        "attn_fwd", "attn_bwd", "post_attn_fwd", "post_attn_bwd",
+        "loss_fwd", "loss_bwd",
+    }
+    for st in manifest["stages"].values():
+        text = (path / st["file"]).read_text()
+        assert text.startswith("HloModule"), st["file"]
+
+
+def test_manifest_shapes_consistent(exported):
+    _, m = exported
+    cfg, ssh = m["config"], m["seq_shard"]
+    assert ssh == m["seq"] // m["sp"]
+    st = m["stages"]
+    # pre_attn: h input is a sequence shard; q output has ALL q heads.
+    h_in = next(e for e in st["pre_attn_fwd"]["inputs"] if e["name"] == "h")
+    assert h_in["shape"] == [ssh, cfg["hidden"]]
+    q_out = st["pre_attn_fwd"]["outputs"][0]
+    assert q_out["shape"] == [ssh, cfg["n_q_heads"], cfg["head_dim"]]
+    # attn core: full sequence, head shard only.
+    q_in = next(e for e in st["attn_fwd"]["inputs"] if e["name"] == "q")
+    assert q_in["shape"] == [m["seq"], m["q_heads_shard"], cfg["head_dim"]]
+    k_in = next(e for e in st["attn_fwd"]["inputs"] if e["name"] == "k")
+    assert k_in["shape"] == [m["seq"], m["kv_heads_shard"], cfg["head_dim"]]
+    # loss: scalar outputs.
+    assert all(e["shape"] == [] for e in st["loss_fwd"]["outputs"])
+
+
+def test_kv_replication_in_manifest(exported):
+    """tiny has kv=2 < sp when sp=4: kv_heads_shard must clamp to 1."""
+    _, m2 = exported
+    assert m2["kv_heads_shard"] == 1        # sp=2, kv=2 -> 1 (divisible)
+    cfg = M.CONFIGS["tiny"]
+    assert cfg.head_shard(4) == (1, 1)      # sp=4 > kv=2 -> replicate
+
+
+def test_param_layout_covers_model(exported):
+    _, m = exported
+    layout = m["param_layout"]
+    def group_size(g):
+        return sum(
+            int(pathlib_prod(t["shape"])) for t in layout[g]
+        )
+    total = (group_size("embed") + m["config"]["n_layers"] * group_size("layer")
+             + group_size("final"))
+    assert total == m["config"]["params_count"]
+
+
+def pathlib_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out

@@ -1,0 +1,218 @@
+"""Kernel vs pure-jnp oracle — the core correctness signal (L1).
+
+hypothesis sweeps shapes (and the GQA/MQA head ratios) for each kernel and
+asserts allclose against ref.py, forward and backward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attn, ref, tiled_ce, tiled_mlp
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# tiled_ce
+# ---------------------------------------------------------------------------
+class TestTiledCE:
+    @settings(**SETTINGS)
+    @given(
+        s_tiles=st.integers(1, 4),
+        v_tiles=st.integers(1, 4),
+        tile_s=st.sampled_from([16, 32, 64]),
+        tile_v=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_forward_matches_naive(self, s_tiles, v_tiles, tile_s, tile_v, seed):
+        s, v, h = s_tiles * tile_s, v_tiles * tile_v, 48
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        hid = jax.random.normal(k1, (s, h))
+        w = jax.random.normal(k2, (h, v)) * 0.05
+        lab = jax.random.randint(k3, (s,), 0, v).astype(jnp.int32)
+        want = ref.ce_naive(hid, w, lab)
+        got = tiled_ce.ce_tiled(hid, w, lab, tile_s, tile_v)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5)
+        np.testing.assert_allclose(got[1], want[1])
+
+    def test_ignore_index_tokens_contribute_zero(self):
+        s, h, v = 64, 32, 128
+        hid, w = rnd(0, (s, h)), rnd(1, (h, v), 0.05)
+        lab = jnp.full((s,), ref.IGNORE_INDEX, jnp.int32)
+        loss, count = tiled_ce.ce_tiled(hid, w, lab, 32, 64)
+        assert float(loss) == 0.0 and float(count) == 0.0
+
+    def test_partial_ignore_matches_naive(self):
+        s, h, v = 64, 32, 128
+        hid, w = rnd(0, (s, h)), rnd(1, (h, v), 0.05)
+        lab = jax.random.randint(jax.random.PRNGKey(2), (s,), 0, v)
+        lab = lab.at[::3].set(ref.IGNORE_INDEX).astype(jnp.int32)
+        want = ref.ce_naive(hid, w, lab)
+        got = tiled_ce.ce_tiled(hid, w, lab, 32, 64)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5)
+        np.testing.assert_allclose(got[1], want[1])
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**16), tile_s=st.sampled_from([16, 32]))
+    def test_backward_matches_naive(self, seed, tile_s):
+        s, h, v = 64, 32, 128
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        hid = jax.random.normal(k1, (s, h))
+        w = jax.random.normal(k2, (h, v)) * 0.05
+        lab = jax.random.randint(k3, (s,), 0, v).astype(jnp.int32)
+        lab = lab.at[7].set(ref.IGNORE_INDEX)
+        g_ref = jax.grad(lambda a, b: ref.ce_naive(a, b, lab)[0], (0, 1))(hid, w)
+        g_k = jax.grad(lambda a, b: tiled_ce.ce_tiled(a, b, lab, tile_s, 64)[0],
+                       (0, 1))(hid, w)
+        np.testing.assert_allclose(g_k[0], g_ref[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(g_k[1], g_ref[1], rtol=1e-4, atol=1e-5)
+
+    def test_large_logit_stability(self):
+        """Online LSE must survive logits far outside exp() range."""
+        s, h, v = 32, 16, 64
+        hid = rnd(0, (s, h), 30.0)            # logits ~ O(1000)
+        w = rnd(1, (h, v), 3.0)
+        lab = jax.random.randint(jax.random.PRNGKey(2), (s,), 0, v).astype(jnp.int32)
+        want = ref.ce_naive(hid, w, lab)
+        got = tiled_ce.ce_tiled(hid, w, lab, 16, 32)
+        assert np.isfinite(float(got[0]))
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiled_mlp
+# ---------------------------------------------------------------------------
+class TestTiledMLP:
+    @settings(**SETTINGS)
+    @given(
+        n_tiles=st.integers(1, 6),
+        tile_s=st.sampled_from([16, 32, 64]),
+        h=st.sampled_from([16, 48]),
+        f=st.sampled_from([32, 96]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_forward_matches_naive(self, n_tiles, tile_s, h, f, seed):
+        s = n_tiles * tile_s
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (s, h))
+        wg = jax.random.normal(ks[1], (h, f)) * 0.1
+        wu = jax.random.normal(ks[2], (h, f)) * 0.1
+        wd = jax.random.normal(ks[3], (f, h)) * 0.1
+        np.testing.assert_allclose(
+            tiled_mlp.mlp_tiled(x, wg, wu, wd, tile_s),
+            ref.mlp_naive(x, wg, wu, wd),
+            rtol=1e-4, atol=1e-6,
+        )
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**16))
+    def test_backward_matches_naive(self, seed):
+        s, h, f = 64, 24, 48
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        x = jax.random.normal(ks[0], (s, h))
+        wg, wu = (jax.random.normal(k, (h, f)) * 0.1 for k in ks[1:3])
+        wd = jax.random.normal(ks[3], (f, h)) * 0.1
+        loss_r = lambda *a: (ref.mlp_naive(*a) ** 2).sum()
+        loss_k = lambda *a: (tiled_mlp.mlp_tiled(*a, 16) ** 2).sum()
+        g_r = jax.grad(loss_r, (0, 1, 2, 3))(x, wg, wu, wd)
+        g_k = jax.grad(loss_k, (0, 1, 2, 3))(x, wg, wu, wd)
+        for a, b in zip(g_k, g_r):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+    def test_auto_shards_matches_paper_example(self):
+        """Paper §3.1.1: ceil(256_000 / 4096) = 63 shards."""
+        assert tiled_mlp.auto_shards(256_000, 4096) == 63
+        assert tiled_mlp.auto_shards(1, 4096) == 1
+        assert tiled_mlp.auto_shards(4096, 4096) == 1
+        assert tiled_mlp.auto_shards(4097, 4096) == 2
+
+    def test_tiled_jnp_variant_matches(self):
+        s, h, f = 128, 16, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = jax.random.normal(ks[0], (s, h))
+        wg, wu = (jax.random.normal(k, (h, f)) * 0.1 for k in ks[1:3])
+        wd = jax.random.normal(ks[3], (f, h)) * 0.1
+        np.testing.assert_allclose(
+            ref.mlp_tiled_jnp(x, wg, wu, wd, tile_s=32),
+            ref.mlp_naive(x, wg, wu, wd), rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn
+# ---------------------------------------------------------------------------
+class TestFlashAttention:
+    @settings(**SETTINGS)
+    @given(
+        s=st.sampled_from([64, 128, 256]),
+        heads=st.sampled_from([(4, 4), (4, 2), (4, 1), (2, 1), (6, 3)]),
+        d=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_forward_matches_naive_mha_gqa_mqa(self, s, heads, d, seed):
+        hq, hkv = heads
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (s, hq, d))
+        k = jax.random.normal(ks[1], (s, hkv, d))
+        v = jax.random.normal(ks[2], (s, hkv, d))
+        np.testing.assert_allclose(
+            flash_attn.attention(q, k, v),
+            ref.attention_naive(q, k, v),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    @settings(**SETTINGS)
+    @given(tiles=st.sampled_from([(32, 32), (64, 32), (32, 64), (128, 128)]))
+    def test_tile_shape_invariance(self, tiles):
+        tq, tk = tiles
+        s, hq, hkv, d = 128, 2, 1, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (s, hq, d))
+        k = jax.random.normal(ks[1], (s, hkv, d))
+        v = jax.random.normal(ks[2], (s, hkv, d))
+        np.testing.assert_allclose(
+            flash_attn.flash_attention(q, k, v, tile_q=tq, tile_k=tk),
+            ref.attention_naive(q, k, v),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_causality(self):
+        """Perturbing future keys must not change earlier outputs."""
+        s, hq, hkv, d = 64, 2, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (s, hq, d))
+        k = jax.random.normal(ks[1], (s, hkv, d))
+        v = jax.random.normal(ks[2], (s, hkv, d))
+        o1 = flash_attn.attention(q, k, v)
+        k2 = k.at[40:].add(100.0)
+        v2 = v.at[40:].add(-50.0)
+        o2 = flash_attn.attention(q, k2, v2)
+        np.testing.assert_allclose(o1[:40], o2[:40], rtol=1e-5, atol=1e-6)
+        assert not np.allclose(o1[41:], o2[41:], atol=1e-3)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**16))
+    def test_backward_matches_naive(self, seed):
+        s, hq, hkv, d = 64, 4, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (s, hq, d))
+        k = jax.random.normal(ks[1], (s, hkv, d))
+        v = jax.random.normal(ks[2], (s, hkv, d))
+        loss_r = lambda *a: (ref.attention_naive(*a) ** 2).sum()
+        loss_k = lambda *a: (flash_attn.attention(*a) ** 2).sum()
+        g_r = jax.grad(loss_r, (0, 1, 2))(q, k, v)
+        g_k = jax.grad(loss_k, (0, 1, 2))(q, k, v)
+        for a, b in zip(g_k, g_r):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,216 @@
+"""L2 model tests: the staged Ulysses pipeline equals the monolithic graph.
+
+The headline assertion (paper Figure 13 at the algorithm level): for any SP
+degree, the sharded stage pipeline — with its all-to-alls, kv replication,
+checkpoint recompute, and pre-shifted labels — produces the same loss and
+the same gradients as `jax.grad` of the unsharded model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from tests import sp_sim
+
+TINY = M.CONFIGS["tiny"]
+SEQ = 128
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # non-zero wd so MLP gradients flow
+    for lp in params["layers"]:
+        lp["wd"] = jax.random.normal(jax.random.PRNGKey(7), lp["wd"].shape) * 0.02
+    ids = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (SEQ,), 0, cfg.vocab),
+        np.int32)
+    labels = np.concatenate([ids[1:], [M.IGNORE_INDEX]]).astype(np.int32)
+    ref_loss, ref_grads = jax.value_and_grad(
+        lambda p: M.full_loss(cfg, p, jnp.asarray(ids), jnp.asarray(labels))
+    )(params)
+    return cfg, params, ids, float(ref_loss), ref_grads
+
+
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_pipeline_loss_matches_full_graph(setup, sp):
+    cfg, params, ids, ref_loss, _ = setup
+    loss, _ = sp_sim.run_step(cfg, params, ids, sp)
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+
+
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_pipeline_grads_match_full_graph(setup, sp):
+    cfg, params, ids, _, ref_grads = setup
+    _, grads = sp_sim.run_step(cfg, params, ids, sp)
+    np.testing.assert_allclose(
+        grads["embed"], np.asarray(ref_grads["embed"]), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        grads["unembed"], np.asarray(ref_grads["unembed"]), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        grads["lnf"], np.asarray(ref_grads["lnf"]), rtol=1e-4, atol=1e-6)
+    for li in range(cfg.n_layers):
+        for name in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"):
+            np.testing.assert_allclose(
+                grads["layers"][li][name],
+                np.asarray(ref_grads["layers"][li][name]),
+                rtol=1e-3, atol=1e-5,
+                err_msg=f"layer {li} {name} sp mismatch")
+
+
+def test_kernel_swap_is_transparent(setup):
+    """Paper's attention-agnostic claim: pallas vs ref kernels, same loss."""
+    cfg, params, ids, ref_loss, _ = setup
+    cfg_ref = dataclasses.replace(cfg, kernels="ref")
+    loss, _ = sp_sim.run_step(cfg_ref, params, ids, 2)
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+
+
+def test_shift_labels_paper_example():
+    """§4.3 worked example: [1..8], sp=2 -> [2 3 4 5] [6 7 8 -100]."""
+    ids = np.arange(1, 9, dtype=np.int32)
+    shards = sp_sim.shift_and_shard_labels(ids, 2)
+    np.testing.assert_array_equal(shards[0], [2, 3, 4, 5])
+    np.testing.assert_array_equal(shards[1], [6, 7, 8, M.IGNORE_INDEX])
+
+
+def test_naive_shard_then_shift_would_drop_tokens():
+    """The failure mode §4.3 fixes: shifting per-shard loses a label."""
+    ids = np.arange(1, 9, dtype=np.int32)
+    naive = [np.concatenate([s[1:], [M.IGNORE_INDEX]])
+             for s in np.split(ids, 2)]
+    assert 5 not in np.concatenate(naive)          # token 5 dropped
+    good = np.concatenate(sp_sim.shift_and_shard_labels(ids, 2))
+    assert 5 in good
+
+
+def test_kv_head_start_paper_examples():
+    """§3.2.1: 32q/8kv sp=8 -> 1 kv each; sp=32 -> replicated; 32q/4kv sp=8."""
+    # 32 q, 8 kv, sp=8: ranks own kv heads 0..7
+    assert [sp_sim.kv_head_start(r, 8, 8) for r in range(8)] == list(range(8))
+    # 32 q, 8 kv, sp=32: 4 ranks share each kv head
+    starts = [sp_sim.kv_head_start(r, 8, 32) for r in range(32)]
+    assert starts == [r // 4 for r in range(32)]
+    # 32 q, 4 kv, sp=8: 2 ranks share each kv head
+    starts = [sp_sim.kv_head_start(r, 4, 8) for r in range(8)]
+    assert starts == [r // 2 for r in range(8)]
+
+
+def test_head_shard_divisibility_limits():
+    """§7.1: q_heads must be divisible by sp."""
+    cfg = TINY  # 4 q heads
+    assert cfg.head_shard(2) == (2, 1)
+    assert cfg.head_shard(4) == (1, 1)
+    with pytest.raises(AssertionError):
+        cfg.head_shard(3)
+
+
+def test_a2a_round_trip_identity():
+    rng = np.random.default_rng(0)
+    sp, ssh, heads, d = 4, 16, 8, 4
+    shards = [rng.normal(size=(ssh, heads, d)).astype(np.float32)
+              for _ in range(sp)]
+    full = sp_sim.a2a_seq_to_head(shards, heads // sp, sp)
+    back = sp_sim.a2a_head_to_seq(full, heads, sp)
+    for a, b in zip(shards, back):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_a2a_replication_backward_sums():
+    """kv grads from replicated heads must sum across consumer ranks."""
+    sp, ssh, n_kv, d = 4, 8, 2, 4
+    full_shards = [np.ones((sp * ssh, 1, d), np.float32) * (r + 1)
+                   for r in range(sp)]
+    back = sp_sim.a2a_head_to_seq(full_shards, n_kv, sp, sum_replicas=True)
+    # kv head 0 receives from ranks 0,1 (1+2=3); head 1 from ranks 2,3 (3+4=7)
+    for dst in range(sp):
+        np.testing.assert_allclose(back[dst][:, 0, :], 3.0)
+        np.testing.assert_allclose(back[dst][:, 1, :], 7.0)
+
+
+def test_rope_depends_on_global_positions():
+    """A shard must use its global offset — pos 0-base would be wrong."""
+    cfg = TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    h = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.hidden))
+    lp = params["layers"][0]
+    q1, _, _ = M.pre_attn_fwd(cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                              h, jnp.arange(32, dtype=jnp.int32))
+    q2, _, _ = M.pre_attn_fwd(cfg, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                              h, jnp.arange(32, 64, dtype=jnp.int32))
+    assert not np.allclose(np.asarray(q1), np.asarray(q2), atol=1e-4)
+
+
+def test_params_count_tracks_config():
+    cfg = M.CONFIGS["e2e-100m"]
+    assert 90e6 < cfg.params_count() < 115e6
+    assert 20e6 < M.CONFIGS["e2e-25m"].params_count() < 32e6
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on RELATIVE positions: shifting
+    all positions by a constant must not change q.k scores — this is what
+    makes per-shard global positions compose correctly across ranks."""
+    cfg = TINY
+    d = cfg.head_dim
+    q = jax.random.normal(jax.random.PRNGKey(0), (8, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (8, 1, d))
+    def scores(shift):
+        pos = jnp.arange(8, dtype=jnp.int32) + shift
+        qr = M.rope(q, pos, cfg.rope_theta)
+        kr = M.rope(k, pos, cfg.rope_theta)
+        return jnp.einsum("qhd,khd->qk", qr, kr)
+    np.testing.assert_allclose(scores(0), scores(1000), rtol=1e-4, atol=1e-4)
+
+
+def test_rope_preserves_norm():
+    """Rotations are isometries: token vectors keep their length."""
+    cfg = TINY
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 2, cfg.head_dim))
+    pos = jnp.arange(16, dtype=jnp.int32) * 37
+    y = M.rope(x, pos, cfg.rope_theta)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_loss_normalization_with_uneven_ignore_across_shards():
+    """The cross-shard mean must weight shards by their VALID token count,
+    not per-shard means — §4.3's reduction done right."""
+    cfg = TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    h = jax.random.normal(jax.random.PRNGKey(6), (64, cfg.hidden))
+    labels = jax.random.randint(jax.random.PRNGKey(7), (64,), 0, cfg.vocab)
+    # ignore a big asymmetric chunk in the second half
+    labels = labels.at[40:].set(M.IGNORE_INDEX).astype(jnp.int32)
+    full = M.loss_fwd(cfg, params["lnf"], params["unembed"], h, labels)
+    want = float(full[0]) / float(full[1])
+    # shard into 2, reduce like the coordinator does
+    parts = [
+        M.loss_fwd(cfg, params["lnf"], params["unembed"], h[:32], labels[:32]),
+        M.loss_fwd(cfg, params["lnf"], params["unembed"], h[32:], labels[32:]),
+    ]
+    got = sum(float(p[0]) for p in parts) / sum(float(p[1]) for p in parts)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # and per-shard-mean averaging would be WRONG here (8 vs 32 valid)
+    naive = float(np.mean([float(p[0]) / max(float(p[1]), 1) for p in parts]))
+    assert abs(naive - want) > 1e-4
+
+
+def test_embed_bwd_scatters_only_used_rows():
+    cfg = TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(8))
+    ids = jnp.asarray([3, 3, 7], jnp.int32)
+    d_h = jnp.ones((3, cfg.hidden))
+    (d_embed,) = M.embed_bwd(cfg, params["embed"], ids, d_h)
+    d = np.asarray(d_embed)
+    assert np.allclose(d[3], 2.0)       # row used twice accumulates
+    assert np.allclose(d[7], 1.0)
+    mask = np.ones(cfg.vocab, bool); mask[[3, 7]] = False
+    assert np.allclose(d[mask], 0.0)

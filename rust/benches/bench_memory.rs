@@ -1,0 +1,56 @@
+//! Bench: estimator + max-seqlen search throughput (these run inside every
+//! table regeneration, so they must stay cheap), plus memory-tracker and
+//! host-pool hot paths.
+
+use alst::config::{preset, ClusterConfig, FeatureFlags};
+use alst::memory::{max_seqlen_search, Estimator, HostPool, MemoryTracker};
+use alst::util::bench::quick;
+
+fn main() {
+    println!("bench_memory\n");
+
+    let model = preset("llama3-8b").unwrap();
+    let est = Estimator::new(model, ClusterConfig::h100(4), FeatureFlags::alst());
+
+    quick("estimator breakdown (1 call)", || {
+        let b = est.breakdown(3_700_000, 32);
+        std::hint::black_box(&b);
+    });
+
+    quick("max_seqlen_search (llama8b, 32 gpus)", || {
+        let out = max_seqlen_search(&est, 32);
+        std::hint::black_box(&out);
+    });
+
+    let est70 = Estimator::new(
+        preset("llama3-70b").unwrap(),
+        ClusterConfig::h100(8),
+        FeatureFlags::alst(),
+    );
+    quick("max_seqlen_search (llama70b, 64 gpus)", || {
+        let out = max_seqlen_search(&est70, 64);
+        std::hint::black_box(&out);
+    });
+
+    quick("tracker alloc/free x1000", || {
+        let mut t = MemoryTracker::new(1 << 40);
+        for i in 0..1000u64 {
+            t.alloc(i % 4096 + 1, "x").unwrap();
+        }
+        for i in 0..1000u64 {
+            t.free(i % 4096 + 1, "x");
+        }
+        std::hint::black_box(t.peak());
+    });
+
+    quick("host pool alloc/free x1000", || {
+        let mut p = HostPool::new(1 << 40);
+        for i in 0..1000u64 {
+            p.alloc(i % 4096 + 1).unwrap();
+        }
+        for i in 0..1000u64 {
+            p.free(i % 4096 + 1);
+        }
+        std::hint::black_box(p.peak());
+    });
+}

@@ -1,0 +1,67 @@
+//! End-to-end step latency through the real PJRT pipeline (tiny config),
+//! plus the L3-overhead split the §Perf log tracks: how much of a step is
+//! PJRT execution vs coordinator marshaling/relayout.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use std::path::Path;
+
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::runtime::Manifest;
+use alst::util::bench::bench;
+
+fn main() {
+    let dir = Manifest::artifact_dir(Path::new("artifacts"), "tiny", 2, 256);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_pipeline: run `make artifacts` first");
+        return;
+    }
+    println!("bench_pipeline: tiny config, sp=2, seq=256 (PJRT CPU)\n");
+
+    let mut trainer = Trainer::new(&dir, TrainerOptions::default()).unwrap();
+    let mut loader = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 1), 2);
+    let (ids, _) = loader.next();
+
+    // eval (forward only)
+    let ids_c = ids.clone();
+    trainer.eval_loss(&ids_c).unwrap(); // warm the executable cache
+    trainer.engine.reset_stats();
+    let r = bench(
+        "eval_loss (fwd only)",
+        1,
+        10,
+        std::time::Duration::from_secs(2),
+        || {
+            trainer.eval_loss(&ids_c).unwrap();
+        },
+    );
+    let st = trainer.engine.stats();
+    let exec_frac = st.exec_time.as_secs_f64()
+        / (r.mean.as_secs_f64() * r.iters as f64);
+    println!(
+        "    -> {} PJRT executions; exec {:.0}% / marshal {:.0}% of step",
+        st.executions as usize / r.iters,
+        100.0 * exec_frac,
+        100.0 * st.marshal_time.as_secs_f64() / (r.mean.as_secs_f64() * r.iters as f64),
+    );
+
+    // full train step (fwd + recompute + bwd + optimizer)
+    trainer.engine.reset_stats();
+    let r = bench(
+        "train_step (fwd+bwd+adamw)",
+        1,
+        10,
+        std::time::Duration::from_secs(3),
+        || {
+            trainer.train_step(&ids).unwrap();
+        },
+    );
+    let st = trainer.engine.stats();
+    println!(
+        "    -> {} PJRT executions/step; exec {:.1}ms marshal {:.1}ms per step",
+        st.executions as usize / r.iters,
+        st.exec_time.as_secs_f64() * 1e3 / r.iters as f64,
+        st.marshal_time.as_secs_f64() * 1e3 / r.iters as f64,
+    );
+}

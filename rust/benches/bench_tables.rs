@@ -1,0 +1,95 @@
+//! Regenerates every paper table/figure dataset (DESIGN.md §4 experiment
+//! index) and asserts the qualitative shapes the paper reports. This is
+//! the `cargo bench` face of `alst tables`.
+
+use alst::config::{preset, FeatureFlags};
+use alst::paper;
+use alst::util::bench::quick;
+
+fn parse_seqlen(s: &str) -> f64 {
+    if let Some(m) = s.strip_suffix('M') {
+        m.parse::<f64>().unwrap() * 1e6
+    } else if let Some(k) = s.strip_suffix('K') {
+        k.parse::<f64>().unwrap() * 1e3
+    } else {
+        s.parse().unwrap_or(0.0)
+    }
+}
+
+fn main() {
+    println!("bench_tables: paper table/figure regeneration\n");
+
+    for (name, table) in paper::all_tables() {
+        table.print();
+        std::fs::create_dir_all("results").ok();
+        std::fs::write(format!("results/{name}.csv"), table.to_csv()).unwrap();
+    }
+
+    // ---- shape assertions (the reproduction criteria) ----------------------
+    let m8 = preset("llama3-8b").unwrap();
+
+    // Table 1: ladder monotone, baseline logits-bound, full-ALST largest.
+    let t1 = paper::table1_ablations(m8, 8);
+    let seqs: Vec<f64> = t1.rows.iter().map(|r| parse_seqlen(&r[1])).collect();
+    assert!(seqs.windows(2).all(|w| w[1] >= w[0]), "ladder not monotone: {seqs:?}");
+    assert!(seqs[5] / seqs[0] > 50.0, "full ALST must be >>50x baseline");
+    assert_eq!(t1.rows[0][4], "logits", "baseline must be logits-bound");
+
+    // Tables 2-4: improvements grow with GPU count, >=8x everywhere.
+    let t234 = paper::tables_2_3_4(m8);
+    let imp: Vec<f64> = t234
+        .rows
+        .iter()
+        .filter(|r| r[1] == "ALST")
+        .map(|r| r[5].trim_end_matches('x').parse().unwrap())
+        .collect();
+    assert!(imp.iter().all(|&x| x >= 8.0), "{imp:?}");
+    assert!(imp[2] > imp[1] && imp[1] > imp[0], "{imp:?}");
+
+    // Figure 8: near-linear scaling 1 -> 32 GPUs.
+    let f8 = paper::fig_8_9_10("llama3-8b", &[1, 2, 4, 8, 16, 32]);
+    let s: Vec<f64> = f8.rows.iter().map(|r| parse_seqlen(&r[2])).collect();
+    // each doubling of GPUs buys >=1.4x seqlen (the 1-GPU point benefits
+    // from grad offload, so 1->2 is sub-2x; paper's own 1->8 is 7.4x).
+    assert!(s.windows(2).all(|w| w[1] > w[0] * 1.4), "sub-linear scaling: {s:?}");
+
+    // Figure 9: 70B is host-RAM bound (the paper's 1.9 TiB wall).
+    let f9 = paper::fig_8_9_10("llama3-70b", &[16, 32, 64]);
+    assert!(
+        f9.rows.iter().any(|r| r[3] == "host-ram"),
+        "70B should hit the host-RAM wall"
+    );
+
+    // Figure 4 shape: TiledMLP saving ~= shard count, O(1) tile memory.
+    let f4 = paper::fig4_tiled_mlp();
+    let tile_gib: Vec<f64> = f4.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+    let spread = tile_gib.iter().cloned().fold(f64::MIN, f64::max)
+        / tile_gib.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 1.2, "tile memory must be ~seq-independent: {tile_gib:?}");
+
+    // Comm-sensitivity ablation: a2a time falls as inter-node BW rises;
+    // offload time falls as PCIe BW rises (rows ordered per paper.rs).
+    let cs = paper::comm_sensitivity_table();
+    let a2a: Vec<f64> = cs.rows[..3].iter().map(|r| r[3].parse().unwrap()).collect();
+    assert!(a2a[0] > a2a[1] && a2a[1] > a2a[2], "a2a not BW-monotone: {a2a:?}");
+    let off25: f64 = cs.rows[3][4].parse().unwrap();
+    let off100: f64 = cs.rows[4][4].parse().unwrap();
+    assert!(off25 > off100, "offload not PCIe-monotone");
+
+    // Timing: table generation itself is fast enough to live in CI.
+    quick("all_tables() generation", || {
+        let t = paper::all_tables();
+        std::hint::black_box(&t);
+    });
+
+    // Feature-ladder sanity at a different GPU count (32): same shape.
+    let t1_32 = paper::table1_ablations(m8, 32);
+    let seqs32: Vec<f64> = t1_32.rows.iter().map(|r| parse_seqlen(&r[1])).collect();
+    assert!(seqs32[5] > seqs[5], "more GPUs must allow longer sequences");
+
+    // Baseline flags describe() round-trips the feature names.
+    assert!(FeatureFlags::alst().describe().contains("ulysses"));
+
+    println!("\nbench_tables: all paper-shape assertions PASSED");
+    println!("CSV written to results/");
+}

@@ -1,0 +1,50 @@
+//! Hot-path bench: the Ulysses all-to-all relayout (L3's per-layer cost).
+//! Reports throughput at several (sp, seq, heads) points including the
+//! paper's head-sharding regimes (MHA split, GQA split, kv replication).
+
+use alst::collectives::Group;
+use alst::coordinator::ulysses::{a2a_head_to_seq, a2a_seq_to_head};
+use alst::runtime::HostTensor;
+use alst::util::bench::quick;
+use alst::util::rng::Rng;
+
+fn shards(rng: &mut Rng, sp: usize, ssh: usize, heads: usize, d: usize) -> Vec<HostTensor> {
+    (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, heads, d], rng.normal_vec(ssh * heads * d, 1.0)))
+        .collect()
+}
+
+fn main() {
+    println!("bench_ulysses: all-to-all relayout throughput\n");
+    let mut rng = Rng::new(0);
+    for (sp, seq, heads, d, label) in [
+        (2usize, 4096usize, 8usize, 64usize, "sp=2 mha-split"),
+        (4, 4096, 8, 64, "sp=4 gqa-split"),
+        (8, 4096, 4, 64, "sp=8 kv-replicated"),
+        (8, 16384, 32, 128, "sp=8 llama-shaped"),
+    ] {
+        let ssh = seq / sp;
+        let input = shards(&mut rng, sp, ssh, heads, d);
+        let bytes = (sp * ssh * heads * d * 4) as f64;
+        let g = Group::new(sp);
+
+        let r = quick(&format!("a2a seq->head {label}"), || {
+            let out = a2a_seq_to_head(&g, &input);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "    -> {:.2} GiB/s",
+            bytes / r.median.as_secs_f64() / (1u64 << 30) as f64
+        );
+
+        let full = a2a_seq_to_head(&g, &input);
+        let r = quick(&format!("a2a head->seq {label}"), || {
+            let out = a2a_head_to_seq(&g, &full, heads, false);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "    -> {:.2} GiB/s",
+            bytes / r.median.as_secs_f64() / (1u64 << 30) as f64
+        );
+    }
+}

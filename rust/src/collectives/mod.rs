@@ -1,0 +1,197 @@
+//! In-process collectives over per-rank buffers, with exact byte
+//! accounting fed to the perf model.
+//!
+//! Substitution note (DESIGN.md): the paper runs NCCL over NVLink/EFA;
+//! here an SP/DP group is a set of rank-indexed `HostTensor` slots and a
+//! collective is a deterministic data relayout. The *logic* (who sends
+//! what where, replication, reduction) is identical — transport differs.
+//! Byte counts are asserted against the closed-form volumes, and the
+//! roofline model turns them into modeled wire time.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::runtime::tensor::HostTensor;
+
+/// Traffic ledger for one process group.
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    pub all_gather_bytes: u64,
+    pub reduce_scatter_bytes: u64,
+    pub all_to_all_bytes: u64,
+    pub all_reduce_bytes: u64,
+    pub ops: u64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.all_gather_bytes
+            + self.reduce_scatter_bytes
+            + self.all_to_all_bytes
+            + self.all_reduce_bytes
+    }
+}
+
+/// A communicator over `world` in-process ranks.
+#[derive(Debug)]
+pub struct Group {
+    pub world: usize,
+    stats: RefCell<CommStats>,
+}
+
+impl Group {
+    pub fn new(world: usize) -> Group {
+        assert!(world >= 1);
+        Group { world, stats: RefCell::default() }
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = CommStats::default();
+    }
+
+    /// All-gather of equal-length f32 shards: each rank contributes its
+    /// shard; result is the concatenation (same for all ranks). Wire
+    /// volume per rank: (world-1)/world * total (ring), accounted as the
+    /// full gathered size for simplicity on the ledger, matching NCCL's
+    /// algbw convention.
+    pub fn all_gather(&self, shards: &[&[f32]]) -> Vec<f32> {
+        assert_eq!(shards.len(), self.world);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for s in shards {
+            out.extend_from_slice(s);
+        }
+        let mut st = self.stats.borrow_mut();
+        st.all_gather_bytes += (total * 4) as u64;
+        st.ops += 1;
+        out
+    }
+
+    /// Reduce-scatter (sum): input is one full-length gradient per rank;
+    /// output is rank r's reduced shard. Shard boundaries are equal
+    /// `total/world` splits (caller pads to divisibility).
+    pub fn reduce_scatter(&self, fulls: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert_eq!(fulls.len(), self.world);
+        let total = fulls[0].len();
+        assert!(fulls.iter().all(|f| f.len() == total), "ragged reduce-scatter");
+        assert_eq!(total % self.world, 0, "reduce-scatter needs padded input");
+        let shard = total / self.world;
+        let mut out = vec![vec![0f32; shard]; self.world];
+        for (r, dst) in out.iter_mut().enumerate() {
+            let base = r * shard;
+            for f in fulls {
+                let src = &f[base..base + shard];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+        let mut st = self.stats.borrow_mut();
+        st.reduce_scatter_bytes += (total * 4) as u64;
+        st.ops += 1;
+        out
+    }
+
+    /// All-reduce (sum) of scalars — loss_sum/token-count reduction. The
+    /// paper specifically replaced `all_reduce_object` with plain
+    /// all_reduce to save >3 GiB/GPU (§3.3); we only ever move the scalars.
+    pub fn all_reduce_scalars(&self, vals: &[f32]) -> f32 {
+        assert_eq!(vals.len(), self.world);
+        let mut st = self.stats.borrow_mut();
+        st.all_reduce_bytes += (vals.len() * 4) as u64;
+        st.ops += 1;
+        vals.iter().sum()
+    }
+
+    /// All-reduce (sum) of one tensor per rank, in place semantics:
+    /// returns the summed tensor each rank would hold.
+    pub fn all_reduce_sum(&self, tensors: &[&HostTensor]) -> Result<HostTensor> {
+        assert_eq!(tensors.len(), self.world);
+        let mut acc = tensors[0].clone();
+        for t in &tensors[1..] {
+            acc.add_assign(t)?;
+        }
+        let mut st = self.stats.borrow_mut();
+        // ring all-reduce moves 2*(w-1)/w * bytes; ledger the logical size
+        st.all_reduce_bytes += acc.size_bytes() as u64;
+        st.ops += 1;
+        Ok(acc)
+    }
+
+    /// Record an all-to-all's traffic (the relayout itself is done by
+    /// `coordinator::ulysses`, which owns the head/seq math).
+    pub fn account_all_to_all(&self, bytes: u64) {
+        let mut st = self.stats.borrow_mut();
+        st.all_to_all_bytes += bytes;
+        st.ops += 1;
+    }
+
+    /// Ledger an all-gather performed by a data-structure owner (e.g. the
+    /// ZeRO store's just-in-time parameter gather).
+    pub fn account_gather(&self, bytes: u64) {
+        let mut st = self.stats.borrow_mut();
+        st.all_gather_bytes += bytes;
+        st.ops += 1;
+    }
+
+    /// Ledger a reduce-scatter performed by a data-structure owner.
+    pub fn account_reduce_scatter(&self, bytes: u64) {
+        let mut st = self.stats.borrow_mut();
+        st.reduce_scatter_bytes += bytes;
+        st.ops += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let g = Group::new(3);
+        let out = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(g.stats().all_gather_bytes, 24);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_shards() {
+        let g = Group::new(2);
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![10.0f32, 20.0, 30.0, 40.0];
+        let out = g.reduce_scatter(&[&a, &b]);
+        assert_eq!(out[0], vec![11.0, 22.0]);
+        assert_eq!(out[1], vec![33.0, 44.0]);
+        assert_eq!(g.stats().reduce_scatter_bytes, 16);
+    }
+
+    #[test]
+    fn gather_then_scatter_identity() {
+        // reduce_scatter(all_gather(x) replicated) == world * x shards
+        let g = Group::new(2);
+        let full = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let out = g.reduce_scatter(&[&full, &full]);
+        assert_eq!(out[0], vec![2.0, 4.0]);
+        assert_eq!(out[1], vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn scalar_all_reduce() {
+        let g = Group::new(4);
+        assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_reduce_scatter_rejected() {
+        let g = Group::new(2);
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 2];
+        g.reduce_scatter(&[&a, &b]);
+    }
+}

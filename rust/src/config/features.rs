@@ -1,0 +1,146 @@
+//! The ALST feature ladder (paper Table 1) as a flag set.
+
+/// Numeric precision used for byte-size arithmetic in the memory model.
+/// The real CPU-PJRT pipeline runs f32 (see DESIGN.md substitutions); the
+/// simulator models the paper's bf16 mixed-precision recipe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Bf16Mixed,
+    F32,
+}
+
+impl Precision {
+    pub fn activation_bytes(&self) -> u64 {
+        match self {
+            Precision::Bf16Mixed => 2,
+            Precision::F32 => 4,
+        }
+    }
+}
+
+/// Every toggle in the paper's ablation ladder (§5.4) plus the baseline
+/// features that are always on in evaluation (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureFlags {
+    // --- baseline features (on in every row of Table 1) ---
+    /// DeepSpeed ZeRO Stage 3 weight/grad/optimizer sharding.
+    pub zero3: bool,
+    /// Gradient/activation checkpointing (recompute in backward).
+    pub activation_checkpointing: bool,
+    /// Optimizer states offloaded to host memory.
+    pub optimizer_offload: bool,
+    /// PYTORCH_CUDA_ALLOC_CONF=expandable_segments:True analogue: reduces
+    /// the fragmentation headroom the allocator model reserves.
+    pub expandable_segments: bool,
+    // --- the ALST ladder (Table 1 columns) ---
+    /// Fused tiled logits+loss (Liger-style / our tiled_ce kernel).
+    pub tiled_loss: bool,
+    /// Ulysses sequence parallelism across the SP group.
+    pub ulysses_sp: bool,
+    /// TiledMLP (sequence-tiled MLP compute).
+    pub tiled_mlp: bool,
+    /// Activation-checkpoint hidden_states offload to CPU.
+    pub ckpt_offload: bool,
+    /// Model weights offload to CPU (single-GPU configs, §5.2).
+    pub weights_offload: bool,
+}
+
+impl FeatureFlags {
+    /// The paper's baseline (§5.4): ZeRO-3 + ckpt + optim offload +
+    /// expandable segments + FA2, nothing else.
+    pub fn baseline() -> Self {
+        FeatureFlags {
+            zero3: true,
+            activation_checkpointing: true,
+            optimizer_offload: true,
+            expandable_segments: true,
+            tiled_loss: false,
+            ulysses_sp: false,
+            tiled_mlp: false,
+            ckpt_offload: false,
+            weights_offload: false,
+        }
+    }
+
+    /// Full ALST (last row of Table 1).
+    pub fn alst() -> Self {
+        FeatureFlags {
+            tiled_loss: true,
+            ulysses_sp: true,
+            tiled_mlp: true,
+            ckpt_offload: true,
+            ..Self::baseline()
+        }
+    }
+
+    /// The ablation ladder exactly as Table 1 lists it (top to bottom).
+    pub fn table1_ladder() -> Vec<(&'static str, Self)> {
+        let b = Self::baseline();
+        vec![
+            ("baseline", b),
+            ("+tiled logits&loss", FeatureFlags { tiled_loss: true, ..b }),
+            ("+ulysses sp", FeatureFlags { tiled_loss: true, ulysses_sp: true, ..b }),
+            (
+                "+tiled mlp",
+                FeatureFlags {
+                    tiled_loss: true,
+                    ulysses_sp: true,
+                    tiled_mlp: true,
+                    ..b
+                },
+            ),
+            (
+                "+ckpt offload (no tiled mlp)",
+                FeatureFlags {
+                    tiled_loss: true,
+                    ulysses_sp: true,
+                    ckpt_offload: true,
+                    ..b
+                },
+            ),
+            ("full alst", Self::alst()),
+        ]
+    }
+
+    pub fn describe(&self) -> String {
+        let mut on = Vec::new();
+        for (name, v) in [
+            ("zero3", self.zero3),
+            ("ckpt", self.activation_checkpointing),
+            ("opt-offload", self.optimizer_offload),
+            ("expandable", self.expandable_segments),
+            ("tiled-loss", self.tiled_loss),
+            ("ulysses", self.ulysses_sp),
+            ("tiled-mlp", self.tiled_mlp),
+            ("ckpt-offload", self.ckpt_offload),
+            ("weights-offload", self.weights_offload),
+        ] {
+            if v {
+                on.push(name);
+            }
+        }
+        on.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_matches_table1_shape() {
+        let ladder = FeatureFlags::table1_ladder();
+        assert_eq!(ladder.len(), 6);
+        assert_eq!(ladder[0].1, FeatureFlags::baseline());
+        assert_eq!(ladder[5].1, FeatureFlags::alst());
+        // Row 5 (ckpt offload without tiled mlp) per Table 1 row 5
+        assert!(ladder[4].1.ckpt_offload && !ladder[4].1.tiled_mlp);
+    }
+
+    #[test]
+    fn baseline_has_no_alst_features() {
+        let b = FeatureFlags::baseline();
+        assert!(!b.tiled_loss && !b.ulysses_sp && !b.tiled_mlp && !b.ckpt_offload);
+        assert!(b.zero3 && b.activation_checkpointing && b.optimizer_offload);
+    }
+}

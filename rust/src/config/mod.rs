@@ -1,0 +1,18 @@
+//! Model / parallelism / feature / cluster configuration.
+//!
+//! Two families of model configs exist:
+//! * **simulator presets** (`llama3-8b`, `llama3-70b`, `qwen3-32b`) — the
+//!   paper's evaluation models, used by the memory simulator and perf model
+//!   to regenerate every table and figure;
+//! * **runnable manifests** — configs exported by `python/compile/aot.py`
+//!   whose artifacts actually execute on the PJRT CPU client (`tiny`,
+//!   `e2e-25m`, `e2e-100m`). Those are loaded from `artifacts/*/manifest.json`
+//!   by `runtime::manifest`.
+
+pub mod features;
+pub mod model;
+pub mod parallel;
+
+pub use features::{FeatureFlags, Precision};
+pub use model::{preset, ModelPreset, PRESETS};
+pub use parallel::{ClusterConfig, ParallelConfig, GIB};

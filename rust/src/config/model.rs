@@ -1,0 +1,131 @@
+//! Paper-scale model presets (the three evaluation models of §5.3).
+
+/// Architecture description sufficient for the memory estimator, the flos
+/// formula, and Ulysses shard math. Matches the published configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub params: u64,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl ModelPreset {
+    /// Per-rank (q_heads, kv_heads) under Ulysses SP (paper §3.2.1).
+    /// kv heads replicate when `n_kv_heads < sp`.
+    pub fn head_shard(&self, sp: usize) -> Option<(usize, usize)> {
+        if sp == 0 || self.n_q_heads % sp != 0 {
+            return None; // §7.1: q_heads must be divisible by SP degree
+        }
+        let q = self.n_q_heads / sp;
+        let kv = if self.n_kv_heads >= sp {
+            // contiguous split requires divisibility too
+            if self.n_kv_heads % sp != 0 {
+                return None;
+            }
+            self.n_kv_heads / sp
+        } else {
+            1
+        };
+        Some((q, kv))
+    }
+
+    /// Max usable SP degree (paper §7.1: bounded by q-head count).
+    pub fn max_sp(&self) -> usize {
+        self.n_q_heads
+    }
+
+    /// All SP degrees valid for this model up to `limit`.
+    pub fn valid_sp_degrees(&self, limit: usize) -> Vec<usize> {
+        (1..=limit.min(self.max_sp()))
+            .filter(|sp| self.head_shard(*sp).is_some())
+            .collect()
+    }
+}
+
+/// The paper's evaluation models (§5.3.1–§5.3.3) plus the runnable configs'
+/// architectural mirrors (so the simulator can also be asked about them).
+pub const PRESETS: &[ModelPreset] = &[
+    // meta-llama/Llama-3.1-8B-Instruct: 32 q, 8 kv (§5.3.1)
+    ModelPreset {
+        name: "llama3-8b",
+        params: 8_030_000_000,
+        hidden: 4096,
+        n_layers: 32,
+        n_q_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 128,
+        ffn: 14336,
+        vocab: 128_256,
+    },
+    // meta-llama/Llama-3.1-70B-Instruct: 64 q, 8 kv (§5.3.2)
+    ModelPreset {
+        name: "llama3-70b",
+        params: 70_550_000_000,
+        hidden: 8192,
+        n_layers: 80,
+        n_q_heads: 64,
+        n_kv_heads: 8,
+        head_dim: 128,
+        ffn: 28672,
+        vocab: 128_256,
+    },
+    // Qwen/Qwen3-32B: 64 q, 8 kv (§5.3.3)
+    ModelPreset {
+        name: "qwen3-32b",
+        params: 32_760_000_000,
+        hidden: 5120,
+        n_layers: 64,
+        n_q_heads: 64,
+        n_kv_heads: 8,
+        head_dim: 128,
+        ffn: 25600,
+        vocab: 151_936,
+    },
+];
+
+pub fn preset(name: &str) -> Option<&'static ModelPreset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_head_shard_examples() {
+        let m8 = preset("llama3-8b").unwrap();
+        // "32 q_heads, 8 kv_heads, sp=8 => 4 q, 1 kv"
+        assert_eq!(m8.head_shard(8), Some((4, 1)));
+        // "32 q_heads, 8 kv_heads, sp=32 => 1 q, 1 kv (replicated)"
+        assert_eq!(m8.head_shard(32), Some((1, 1)));
+        // "32 q_heads, 4 kv_heads, sp=8 => 4 q, 1 kv (replicated)"
+        let hypothetical = ModelPreset { n_kv_heads: 4, ..m8.clone() };
+        assert_eq!(hypothetical.head_shard(8), Some((4, 1)));
+    }
+
+    #[test]
+    fn sp_divisibility_limit() {
+        let m8 = preset("llama3-8b").unwrap();
+        assert!(m8.head_shard(3).is_none());   // 32 % 3 != 0 (§7.1)
+        assert!(m8.head_shard(64).is_none());  // beyond q-head count
+        assert_eq!(m8.max_sp(), 32);
+        // Llama-70B trains on 16..64 GPUs (§5.3.2): sp=64 valid (64 q heads)
+        let m70 = preset("llama3-70b").unwrap();
+        assert_eq!(m70.head_shard(64), Some((1, 1)));
+        assert_eq!(m70.valid_sp_degrees(64), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn kv_replication_boundary() {
+        let m = preset("qwen3-32b").unwrap(); // 64 q, 8 kv
+        assert_eq!(m.head_shard(8), Some((8, 1)));
+        assert_eq!(m.head_shard(16), Some((4, 1))); // kv replicated 16/8=2x
+        assert_eq!(m.head_shard(4), Some((16, 2)));
+    }
+}

@@ -1,0 +1,132 @@
+//! Process-grid and cluster descriptions.
+
+/// DP x SP process grid (paper §7.1: scale beyond the SP head-limit with
+/// more DP replicas — "1024 GPUs = 16 replicas of SP=64").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub dp: usize,
+    pub sp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(dp: usize, sp: usize) -> Self {
+        assert!(dp >= 1 && sp >= 1);
+        ParallelConfig { dp, sp }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.sp
+    }
+
+    /// rank -> (dp_index, sp_index); SP groups are contiguous ranks, which
+    /// keeps the latency-critical all-to-all intra-node whenever sp <= 8.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.world_size());
+        (rank / self.sp, rank % self.sp)
+    }
+
+    pub fn rank_of(&self, dp: usize, sp: usize) -> usize {
+        assert!(dp < self.dp && sp < self.sp);
+        dp * self.sp + sp
+    }
+
+    /// Ranks in the same SP group as `rank`.
+    pub fn sp_group(&self, rank: usize) -> Vec<usize> {
+        let (dp, _) = self.coords(rank);
+        (0..self.sp).map(|s| self.rank_of(dp, s)).collect()
+    }
+
+    /// Ranks in the same DP group (same sp index across replicas).
+    pub fn dp_group(&self, rank: usize) -> Vec<usize> {
+        let (_, sp) = self.coords(rank);
+        (0..self.dp).map(|d| self.rank_of(d, sp)).collect()
+    }
+}
+
+/// Hardware description for the memory simulator + perf model.
+/// Defaults mirror the paper's testbed (§5.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub gpus_per_node: usize,
+    pub n_nodes: usize,
+    /// Per-GPU device memory (H100 80GB: 80 GiB).
+    pub gpu_mem_bytes: u64,
+    /// Host memory per node usable for offload (paper: 1.9 TiB).
+    pub host_mem_bytes: u64,
+    /// Intra-node interconnect (NVLink-4: 450 GB/s per the paper).
+    pub intra_bw_bytes_per_s: f64,
+    /// Inter-node fabric (EFA v2: ~200 GB/s all-reduce throughput).
+    pub inter_bw_bytes_per_s: f64,
+    /// Host<->device bandwidth for offload traffic (PCIe gen5 ~50 GB/s
+    /// effective per direction).
+    pub pcie_bw_bytes_per_s: f64,
+    /// Peak bf16 compute per GPU (H100 SXM dense: 989 TFLOPS).
+    pub peak_flops: f64,
+}
+
+pub const GIB: u64 = 1 << 30;
+
+impl ClusterConfig {
+    /// The paper's testbed: N nodes of 8x H100-80GB, 1.9 TiB host RAM,
+    /// NVLink-4 + EFA v2.
+    pub fn h100(n_nodes: usize) -> Self {
+        ClusterConfig {
+            gpus_per_node: 8,
+            n_nodes,
+            gpu_mem_bytes: 80 * GIB,
+            host_mem_bytes: (1.9 * (1u64 << 40) as f64) as u64,
+            intra_bw_bytes_per_s: 450e9,
+            inter_bw_bytes_per_s: 200e9,
+            pcie_bw_bytes_per_s: 50e9,
+            peak_flops: 989e12,
+        }
+    }
+
+    /// Single-GPU development box (1 GPU, same part).
+    pub fn h100_single() -> Self {
+        ClusterConfig { gpus_per_node: 1, ..Self::h100(1) }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_node * self.n_nodes
+    }
+
+    /// Bandwidth seen by a collective spanning `ranks` GPUs.
+    pub fn collective_bw(&self, ranks: usize) -> f64 {
+        if ranks <= self.gpus_per_node {
+            self.intra_bw_bytes_per_s
+        } else {
+            self.inter_bw_bytes_per_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_round_trips() {
+        let p = ParallelConfig::new(4, 8);
+        assert_eq!(p.world_size(), 32);
+        for r in 0..32 {
+            let (d, s) = p.coords(r);
+            assert_eq!(p.rank_of(d, s), r);
+        }
+    }
+
+    #[test]
+    fn sp_groups_are_contiguous() {
+        let p = ParallelConfig::new(2, 4);
+        assert_eq!(p.sp_group(5), vec![4, 5, 6, 7]);
+        assert_eq!(p.dp_group(5), vec![1, 5]);
+    }
+
+    #[test]
+    fn h100_cluster_matches_paper() {
+        let c = ClusterConfig::h100(4);
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.gpu_mem_bytes, 80 * GIB);
+        assert!(c.collective_bw(8) > c.collective_bw(16));
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's L3 contribution: the Ulysses SP training coordinator.
+//!
+//! * `ulysses` — head-shard math + the seq<->head all-to-all relayouts
+//!   (paper §3.2, §3.2.1), including GQA/MQA kv replication.
+//! * `zero` — ZeRO-3 flat parameter/gradient sharding (§5.2 baseline).
+//! * `optimizer` — AdamW on the owned shard (optionally host-offloaded).
+//! * `tape` — activation-checkpoint store with CPU offload (§3.3).
+//! * `dataloader` — the UlyssesSPDataLoaderAdapter equivalent (§4.2) with
+//!   pre-shifted labels (§4.3).
+//! * `pipeline` — the distributed fwd/bwd orchestration over PJRT stages.
+
+pub mod dataloader;
+pub mod optimizer;
+pub mod pipeline;
+pub mod snapshot;
+pub mod tape;
+pub mod ulysses;
+pub mod zero;

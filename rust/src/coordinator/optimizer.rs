@@ -1,0 +1,179 @@
+//! AdamW over ZeRO-sharded flat parameters.
+//!
+//! Each rank updates only its owned shard (ZeRO-3), so the optimizer is
+//! embarrassingly local; states can be "offloaded" to the host pool (the
+//! paper's DeepSpeed optimizer-state CPU offload, on in every evaluated
+//! config) — in the simulator that moves 12 bytes/param off the device.
+
+use crate::coordinator::zero::ShardedStore;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Global gradient-norm clip (0 = off).
+    pub grad_clip: f32,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        AdamWConfig {
+            lr: 3e-4,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// Sharded AdamW state (m, v mirror the parameter sharding).
+pub struct AdamW {
+    pub cfg: AdamWConfig,
+    pub step: u64,
+    pub m: ShardedStore,
+    pub v: ShardedStore,
+}
+
+impl AdamW {
+    pub fn new(cfg: AdamWConfig, total: usize, world: usize) -> AdamW {
+        AdamW {
+            cfg,
+            step: 0,
+            m: ShardedStore::zeros(total, world),
+            v: ShardedStore::zeros(total, world),
+        }
+    }
+
+    /// Global grad L2 norm across all shards (the all-reduce every rank
+    /// would do before clipping).
+    pub fn global_grad_norm(grads: &ShardedStore) -> f64 {
+        grads
+            .shards
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|&g| (g as f64) * (g as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// One decoupled-weight-decay Adam step over every owned shard.
+    /// Returns the (pre-clip) global gradient norm.
+    pub fn step(&mut self, params: &mut ShardedStore, grads: &ShardedStore) -> f64 {
+        assert_eq!(params.total, grads.total);
+        self.step += 1;
+        let t = self.step as i32;
+        let c = self.cfg;
+        let norm = Self::global_grad_norm(grads);
+        let clip_scale = if c.grad_clip > 0.0 && norm > c.grad_clip as f64 {
+            (c.grad_clip as f64 / norm) as f32
+        } else {
+            1.0
+        };
+        let bc1 = 1.0 - c.beta1.powi(t);
+        let bc2 = 1.0 - c.beta2.powi(t);
+
+        for r in 0..params.world() {
+            let p = &mut params.shards[r];
+            let g = &grads.shards[r];
+            let m = &mut self.m.shards[r];
+            let v = &mut self.v.shards[r];
+            // Tail padding of the last shard has zero grads; harmless, but
+            // avoid decaying padding values (they are already 0).
+            for i in 0..p.len() {
+                let gi = g[i] * clip_scale;
+                m[i] = c.beta1 * m[i] + (1.0 - c.beta1) * gi;
+                v[i] = c.beta2 * v[i] + (1.0 - c.beta2) * gi * gi;
+                let m_hat = m[i] / bc1;
+                let v_hat = v[i] / bc2;
+                p[i] -= c.lr * (m_hat / (v_hat.sqrt() + c.eps) + c.weight_decay * p[i]);
+            }
+        }
+        norm
+    }
+
+    /// Optimizer-state bytes per rank (device or host depending on the
+    /// offload flag): fp32 m + v = 8 bytes/param-shard element.
+    pub fn state_bytes_per_rank(&self) -> u64 {
+        2 * self.m.shard_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_setup(world: usize) -> (ShardedStore, AdamW) {
+        let params = ShardedStore::from_flat(&[5.0, -3.0, 2.0, 8.0], world);
+        let opt = AdamW::new(
+            AdamWConfig { lr: 0.1, weight_decay: 0.0, grad_clip: 0.0, ..Default::default() },
+            4,
+            world,
+        );
+        (params, opt)
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize sum(x^2)/2; grad = x
+        let (mut params, mut opt) = quadratic_setup(2);
+        for _ in 0..300 {
+            let grads = ShardedStore::from_flat(&params.to_flat(), 2);
+            opt.step(&mut params, &grads);
+        }
+        for x in params.to_flat() {
+            assert!(x.abs() < 1e-2, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sharding_invariance() {
+        // Same trajectory whether sharded over 1 or 4 ranks.
+        let (mut p1, mut o1) = quadratic_setup(1);
+        let (mut p4, mut o4) = quadratic_setup(4);
+        for _ in 0..10 {
+            let g1 = ShardedStore::from_flat(&p1.to_flat(), 1);
+            let g4 = ShardedStore::from_flat(&p4.to_flat(), 4);
+            o1.step(&mut p1, &g1);
+            o4.step(&mut p4, &g4);
+        }
+        let (a, b) = (p1.to_flat(), p4.to_flat());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn grad_clip_bounds_update() {
+        let mut params = ShardedStore::from_flat(&[0.0; 4], 1);
+        let mut opt = AdamW::new(
+            AdamWConfig { lr: 1.0, grad_clip: 1.0, weight_decay: 0.0, ..Default::default() },
+            4,
+            1,
+        );
+        let grads = ShardedStore::from_flat(&[1e6, -1e6, 1e6, -1e6], 1);
+        let norm = opt.step(&mut params, &grads);
+        assert!(norm > 1e6);
+        for x in params.to_flat() {
+            assert!(x.abs() < 1.1); // clipped step is bounded by lr
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut params = ShardedStore::from_flat(&[10.0], 1);
+        let mut opt = AdamW::new(
+            AdamWConfig { lr: 0.1, weight_decay: 0.5, grad_clip: 0.0, ..Default::default() },
+            1,
+            1,
+        );
+        let grads = ShardedStore::zeros(1, 1);
+        opt.step(&mut params, &grads);
+        let x = params.to_flat()[0];
+        assert!(x < 10.0 && x > 9.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Training-state snapshots: save/restore flat parameters + AdamW state +
+//! step counter, so post-training runs can resume (a framework necessity
+//! the paper's ArcticTraining recipes rely on).
+//!
+//! Format (little-endian): magic "ALST", u32 version, u64 step,
+//! u64 total_numel, then three f32 arrays (params, adam m, adam v).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::optimizer::AdamW;
+use crate::coordinator::zero::ShardedStore;
+
+const MAGIC: &[u8; 4] = b"ALST";
+const VERSION: u32 = 1;
+
+pub struct Snapshot {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    // one pass, 64KiB chunks to avoid a full byte-copy of the array
+    let mut buf = Vec::with_capacity(64 * 1024);
+    for chunk in xs.chunks(16 * 1024) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Save (params, optimizer, step) to `path`.
+pub fn save(path: &Path, step: u64, params: &ShardedStore, opt: &AdamW) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    f.write_all(&(params.total as u64).to_le_bytes())?;
+    write_f32s(&mut f, &params.to_flat())?;
+    write_f32s(&mut f, &opt.m.to_flat())?;
+    write_f32s(&mut f, &opt.v.to_flat())?;
+    Ok(())
+}
+
+/// Load a snapshot; caller re-shards it for the current world size (the
+/// snapshot is world-agnostic — resume on a different SP degree works).
+pub fn load(path: &Path) -> Result<Snapshot> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an ALST snapshot (bad magic)");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u64b)?;
+    let step = u64::from_le_bytes(u64b);
+    f.read_exact(&mut u64b)?;
+    let total = u64::from_le_bytes(u64b) as usize;
+    let params = read_f32s(&mut f, total)?;
+    let m = read_f32s(&mut f, total)?;
+    let v = read_f32s(&mut f, total)?;
+    Ok(Snapshot { step, params, m, v })
+}
+
+/// Restore a snapshot into live training state (re-sharding to `world`).
+pub fn restore(
+    snap: &Snapshot,
+    params: &mut ShardedStore,
+    opt: &mut AdamW,
+) -> Result<()> {
+    if snap.params.len() != params.total {
+        bail!(
+            "snapshot has {} params, model needs {}",
+            snap.params.len(),
+            params.total
+        );
+    }
+    let world = params.world();
+    *params = ShardedStore::from_flat(&snap.params, world);
+    opt.m = ShardedStore::from_flat(&snap.m, world);
+    opt.v = ShardedStore::from_flat(&snap.v, world);
+    opt.step = snap.step;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::AdamWConfig;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alst-snapshot-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let flat: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let params = ShardedStore::from_flat(&flat, 4);
+        let mut opt = AdamW::new(AdamWConfig::default(), 1000, 4);
+        opt.step = 42;
+        opt.m = ShardedStore::from_flat(&vec![0.25; 1000], 4);
+        opt.v = ShardedStore::from_flat(&vec![0.125; 1000], 4);
+
+        let path = tmpfile("roundtrip.alst");
+        save(&path, 42, &params, &opt).unwrap();
+        let snap = load(&path).unwrap();
+        assert_eq!(snap.step, 42);
+        assert_eq!(snap.params, flat);
+        assert_eq!(snap.m, vec![0.25; 1000]);
+
+        // resume on a DIFFERENT world size
+        let mut p2 = ShardedStore::zeros(1000, 8);
+        let mut o2 = AdamW::new(AdamWConfig::default(), 1000, 8);
+        restore(&snap, &mut p2, &mut o2).unwrap();
+        assert_eq!(p2.to_flat(), flat);
+        assert_eq!(o2.step, 42);
+        assert_eq!(p2.world(), 8);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_size() {
+        let path = tmpfile("bad.alst");
+        std::fs::write(&path, b"NOPEnope").unwrap();
+        assert!(load(&path).is_err());
+
+        let params = ShardedStore::from_flat(&[1.0; 10], 2);
+        let opt = AdamW::new(AdamWConfig::default(), 10, 2);
+        let path = tmpfile("small.alst");
+        save(&path, 1, &params, &opt).unwrap();
+        let snap = load(&path).unwrap();
+        let mut wrong = ShardedStore::zeros(20, 2);
+        let mut o = AdamW::new(AdamWConfig::default(), 20, 2);
+        assert!(restore(&snap, &mut wrong, &mut o).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Activation-checkpoint tape with CPU offload (paper §3.3).
+//!
+//! Forward stores ONE tensor per (layer, rank): the layer-input hidden
+//! shard `[S/sp, hidden]`. Backward pops them in reverse and replays the
+//! layer (the stage VJPs recompute internals — §3.3's activation
+//! checkpointing). With `offload` enabled the checkpoint is accounted
+//! against the *host* pool instead of the device tracker, which is what
+//! flattens the paper's Figure-7 memory "hill": peak device usage stops
+//! depending on layer count.
+
+use anyhow::Result;
+
+use crate::memory::{HostPool, MemoryTracker};
+use crate::runtime::tensor::HostTensor;
+
+/// Where a checkpoint currently resides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residence {
+    Device,
+    Host,
+}
+
+struct Slot {
+    tensor: HostTensor,
+    residence: Residence,
+    bytes: u64,
+}
+
+/// Per-rank checkpoint tape for one step.
+pub struct CheckpointTape {
+    pub offload: bool,
+    slots: Vec<Vec<Option<Slot>>>, // [layer][rank]
+    /// Cumulative device<->host transfer volume this step (both ways).
+    pub transfer_bytes: u64,
+}
+
+impl CheckpointTape {
+    pub fn new(n_layers: usize, world: usize, offload: bool) -> CheckpointTape {
+        CheckpointTape {
+            offload,
+            slots: (0..n_layers)
+                .map(|_| (0..world).map(|_| None).collect())
+                .collect(),
+            transfer_bytes: 0,
+        }
+    }
+
+    /// Store layer `li`'s input for `rank`. Device tracker sees the
+    /// checkpoint only while it's device-resident.
+    pub fn store(
+        &mut self,
+        li: usize,
+        rank: usize,
+        tensor: HostTensor,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+    ) -> Result<()> {
+        let bytes = tensor.size_bytes() as u64;
+        let residence = if self.offload {
+            host.alloc(bytes)?;            // may fail: host RAM is finite
+            self.transfer_bytes += bytes;  // device -> host copy
+            Residence::Host
+        } else {
+            device.alloc(bytes, "ckpt")?;
+            Residence::Device
+        };
+        self.slots[li][rank] = Some(Slot { tensor, residence, bytes });
+        Ok(())
+    }
+
+    /// Fetch layer `li`'s input back for recompute; restores to device
+    /// (backward needs it on-GPU — the paper notes this copy cannot
+    /// overlap much in backward).
+    pub fn fetch(
+        &mut self,
+        li: usize,
+        rank: usize,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+    ) -> Result<HostTensor> {
+        let slot = self.slots[li][rank]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint ({li},{rank}) missing"))?;
+        match slot.residence {
+            Residence::Host => {
+                host.free(slot.bytes);
+                self.transfer_bytes += slot.bytes; // host -> device copy
+            }
+            Residence::Device => device.free(slot.bytes, "ckpt"),
+        }
+        Ok(slot.tensor)
+    }
+
+    /// Device-resident checkpoint bytes right now (Figure 7's "hill").
+    pub fn device_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .flatten()
+            .flatten()
+            .filter(|s| s.residence == Residence::Device)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    pub fn host_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .flatten()
+            .flatten()
+            .filter(|s| s.residence == Residence::Host)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    pub fn stored(&self) -> usize {
+        self.slots.iter().flatten().flatten().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::{HostPool, MemoryTracker};
+
+    fn t(n: usize) -> HostTensor {
+        HostTensor::zeros(&[n])
+    }
+
+    #[test]
+    fn device_tape_grows_then_shrinks() {
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(3, 1, false);
+        for li in 0..3 {
+            tape.store(li, 0, t(256), &mut dev, &mut host).unwrap();
+        }
+        assert_eq!(tape.device_bytes(), 3 * 1024);
+        assert_eq!(dev.current(), 3 * 1024);
+        for li in (0..3).rev() {
+            tape.fetch(li, 0, &mut dev, &mut host).unwrap();
+        }
+        assert_eq!(dev.current(), 0);
+        assert_eq!(tape.stored(), 0);
+    }
+
+    #[test]
+    fn offload_keeps_device_flat() {
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(4, 2, true);
+        for li in 0..4 {
+            for r in 0..2 {
+                tape.store(li, r, t(100), &mut dev, &mut host).unwrap();
+            }
+        }
+        assert_eq!(tape.device_bytes(), 0);        // Figure 7: hill is gone
+        assert_eq!(dev.current(), 0);
+        assert_eq!(host.current(), 8 * 400);
+        assert_eq!(tape.transfer_bytes, 8 * 400);  // device->host copies
+    }
+
+    #[test]
+    fn host_pool_exhaustion_surfaces() {
+        // The paper §5.3.2: 1.9TiB host RAM capped Llama-70B seqlen.
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(500);
+        let mut tape = CheckpointTape::new(2, 1, true);
+        tape.store(0, 0, t(100), &mut dev, &mut host).unwrap();
+        let err = tape.store(1, 0, t(100), &mut dev, &mut host);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn double_fetch_is_an_error() {
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(1, 1, false);
+        tape.store(0, 0, t(4), &mut dev, &mut host).unwrap();
+        tape.fetch(0, 0, &mut dev, &mut host).unwrap();
+        assert!(tape.fetch(0, 0, &mut dev, &mut host).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Ulysses all-to-all relayout (paper §3.2) and head-shard math (§3.2.1).
+//!
+//! Forward, at each attention boundary:
+//!   every rank holds `[S/sp, n_heads, D]` (its sequence shard, ALL heads)
+//!   -> all-to-all ->
+//!   every rank holds `[S, n_heads/sp, D]` (FULL sequence, its head shard)
+//! and the inverse after attention. kv tensors replicate when
+//! `n_kv_heads < sp`; the backward of that replication SUMS the gradient
+//! contributions from every consumer rank.
+
+use crate::collectives::Group;
+use crate::runtime::tensor::HostTensor;
+
+/// First global head owned by `rank` when `n_heads` are distributed over
+/// `sp` ranks. Handles both the contiguous-split (n_heads >= sp) and the
+/// replicated (n_heads < sp) regimes; in the latter, consumer ranks of the
+/// same head group share a source head — exactly the paper's kv
+/// replication rule.
+pub fn head_start(rank: usize, n_heads: usize, sp: usize) -> usize {
+    (rank * n_heads) / sp
+}
+
+/// Per-rank head count after sharding (q: n/sp; kv: max(n/sp, 1)).
+pub fn heads_per_rank(n_heads: usize, sp: usize) -> usize {
+    if n_heads >= sp {
+        assert_eq!(n_heads % sp, 0, "head count not divisible by sp");
+        n_heads / sp
+    } else {
+        1
+    }
+}
+
+/// Validity of an SP degree for a (q, kv) head pair — §7.1 limits.
+pub fn sp_is_valid(n_q: usize, n_kv: usize, sp: usize) -> bool {
+    sp >= 1
+        && sp <= n_q
+        && n_q % sp == 0
+        && (n_kv >= sp && n_kv % sp == 0 || n_kv < sp)
+}
+
+/// seq->head all-to-all.
+///
+/// `shards[r]`: rank r's `[ssh, n_heads, d]` tensor. Returns per dst rank
+/// the `[ssh*sp, h_out, d]` full-sequence head shard, where
+/// `h_out = heads_per_rank(n_heads, sp)`. Copies are contiguous per
+/// (src, seq-row): heads are the middle axis.
+pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Vec<HostTensor> {
+    let sp = shards.len();
+    assert_eq!(sp, group.world);
+    let dims = shards[0].shape();
+    assert_eq!(dims.len(), 3, "expected [ssh, heads, d]");
+    let (ssh, n_heads, d) = (dims[0], dims[1], dims[2]);
+    let h_out = heads_per_rank(n_heads, sp);
+    let seq = ssh * sp;
+
+    let mut out = Vec::with_capacity(sp);
+    for dst in 0..sp {
+        let h0 = if n_heads >= sp { dst * h_out } else { head_start(dst, n_heads, sp) };
+        let mut data = vec![0f32; seq * h_out * d];
+        for (src, shard) in shards.iter().enumerate() {
+            let src_data = shard.as_f32().expect("f32 relayout");
+            for s in 0..ssh {
+                let from = (s * n_heads + h0) * d;
+                let to = ((src * ssh + s) * h_out) * d;
+                data[to..to + h_out * d]
+                    .copy_from_slice(&src_data[from..from + h_out * d]);
+            }
+        }
+        out.push(HostTensor::f32(vec![seq, h_out, d], data));
+    }
+    // Every element of every output crossed the (simulated) wire once.
+    let bytes: u64 = out.iter().map(|t| t.size_bytes() as u64).sum();
+    group.account_all_to_all(bytes);
+    out
+}
+
+/// head->seq all-to-all (inverse of `a2a_seq_to_head`).
+///
+/// `shards[r]`: rank r's `[seq, h_sh, d]`. Returns per dst rank the
+/// `[ssh, n_heads_total, d]` sequence shard with all heads. With
+/// `sum_replicas` (backward of kv replication), gradient pieces from
+/// ranks sharing a head are accumulated instead of overwritten.
+pub fn a2a_head_to_seq(
+    group: &Group,
+    shards: &[HostTensor],
+    n_heads_total: usize,
+    sum_replicas: bool,
+) -> Vec<HostTensor> {
+    let sp = shards.len();
+    assert_eq!(sp, group.world);
+    let dims = shards[0].shape();
+    assert_eq!(dims.len(), 3, "expected [seq, h_sh, d]");
+    let (seq, h_sh, d) = (dims[0], dims[1], dims[2]);
+    assert_eq!(seq % sp, 0);
+    let ssh = seq / sp;
+
+    let mut out = Vec::with_capacity(sp);
+    for dst in 0..sp {
+        let mut data = vec![0f32; ssh * n_heads_total * d];
+        for (src, shard) in shards.iter().enumerate() {
+            let h0 = if n_heads_total >= sp {
+                src * h_sh
+            } else {
+                head_start(src, n_heads_total, sp)
+            };
+            let src_data = shard.as_f32().expect("f32 relayout");
+            for s in 0..ssh {
+                let from = ((dst * ssh + s) * h_sh) * d;
+                let to = (s * n_heads_total + h0) * d;
+                let src_slice = &src_data[from..from + h_sh * d];
+                let dst_slice = &mut data[to..to + h_sh * d];
+                if sum_replicas {
+                    for (a, b) in dst_slice.iter_mut().zip(src_slice) {
+                        *a += b;
+                    }
+                } else {
+                    dst_slice.copy_from_slice(src_slice);
+                }
+            }
+        }
+        out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
+    }
+    let bytes: u64 = shards.iter().map(|t| t.size_bytes() as u64).sum();
+    group.account_all_to_all(bytes);
+    out
+}
+
+/// Per-step all-to-all wire volume for one attention block, in bytes —
+/// the closed form the perf model uses and tests assert against.
+/// q + k + v forward (seq->head) plus o backward (head->seq): each moves
+/// its full logical size once per direction.
+pub fn a2a_bytes_per_block(
+    seq: usize,
+    n_q: usize,
+    n_kv: usize,
+    head_dim: usize,
+    sp: usize,
+    elem_bytes: usize,
+) -> u64 {
+    let q_sh = heads_per_rank(n_q, sp);
+    let kv_sh = heads_per_rank(n_kv, sp);
+    // outputs of the forward a2a across ranks:
+    let q = seq * q_sh * head_dim * sp;
+    let kv = 2 * seq * kv_sh * head_dim * sp;
+    // inverse a2a moves the o tensor (same logical volume as q):
+    let o = q;
+    ((q + kv + o) * elem_bytes) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(sp: usize, ssh: usize, heads: usize, d: usize) -> Vec<HostTensor> {
+        // value encodes (rank, seq, head, dim) for exact relayout checks
+        (0..sp)
+            .map(|r| {
+                let mut data = Vec::with_capacity(ssh * heads * d);
+                for s in 0..ssh {
+                    for h in 0..heads {
+                        for k in 0..d {
+                            data.push(
+                                (r * 1000 + s * 100 + h * 10 + k) as f32,
+                            );
+                        }
+                    }
+                }
+                HostTensor::f32(vec![ssh, heads, d], data)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn seq_to_head_places_rows_globally() {
+        let (sp, ssh, heads, d) = (2, 2, 4, 1);
+        let g = Group::new(sp);
+        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d));
+        // dst rank 1, global seq row 2 (= src rank 1, local row 0), its
+        // head block starts at head 2
+        let r1 = out[1].as_f32().unwrap();
+        // [seq=4, h_out=2, d=1]; row 2, local head 0 = src(1, s0, h2)
+        assert_eq!(r1[(2 * 2 + 0) * 1], 1020.0);
+        assert_eq!(r1[(2 * 2 + 1) * 1], 1030.0);
+        // dst rank 0 row 1 head 1 = src(0, s1, h1)
+        let r0 = out[0].as_f32().unwrap();
+        assert_eq!(r0[(1 * 2 + 1) * 1], 110.0);
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        for (sp, heads) in [(2, 4), (4, 4), (2, 2), (4, 8)] {
+            let (ssh, d) = (4, 3);
+            let g = Group::new(sp);
+            let orig = mk(sp, ssh, heads, d);
+            let full = a2a_seq_to_head(&g, &orig);
+            let back = a2a_head_to_seq(&g, &full, heads, false);
+            assert_eq!(orig, back, "sp={sp} heads={heads}");
+        }
+    }
+
+    #[test]
+    fn replication_shares_source_heads() {
+        // kv = 2 heads, sp = 4: ranks (0,1) see head 0; (2,3) see head 1
+        let (sp, ssh, heads, d) = (4, 2, 2, 1);
+        let g = Group::new(sp);
+        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d));
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[2], out[3]);
+        assert_ne!(out[0], out[2]);
+    }
+
+    #[test]
+    fn replication_backward_sums() {
+        let (sp, seq, d) = (4, 4, 1);
+        // each rank holds [seq, 1, d] of ones * (rank+1)
+        let shards: Vec<HostTensor> = (0..sp)
+            .map(|r| HostTensor::f32(vec![seq, 1, d], vec![(r + 1) as f32; seq]))
+            .collect();
+        let g = Group::new(sp);
+        let back = a2a_head_to_seq(&g, &shards, 2, true);
+        for dst in 0..sp {
+            let data = back[dst].as_f32().unwrap();
+            // head 0 <- ranks 0+1 = 3; head 1 <- ranks 2+3 = 7
+            assert_eq!(data[0], 3.0);
+            assert_eq!(data[1], 7.0);
+        }
+    }
+
+    #[test]
+    fn paper_head_shard_examples() {
+        // §3.2.1 worked examples
+        assert_eq!(heads_per_rank(32, 8), 4);
+        assert_eq!(heads_per_rank(8, 8), 1);
+        assert_eq!(heads_per_rank(8, 32), 1); // replicated
+        assert_eq!(heads_per_rank(4, 8), 1);  // replicated
+        assert!(sp_is_valid(32, 8, 8));
+        assert!(sp_is_valid(32, 8, 32));
+        assert!(!sp_is_valid(32, 8, 3));      // 32 % 3 != 0
+        assert!(!sp_is_valid(9, 3, 8));       // §7.1: 9 q heads -> sp 1/3/9
+        assert!(sp_is_valid(9, 3, 3));
+        assert!(sp_is_valid(9, 3, 9));
+    }
+
+    #[test]
+    fn a2a_byte_accounting_matches_closed_form() {
+        let (sp, ssh, heads, d) = (4, 8, 8, 16);
+        let g = Group::new(sp);
+        let q = mk(sp, ssh, heads, d);
+        let full = a2a_seq_to_head(&g, &q);
+        let _ = a2a_head_to_seq(&g, &full, heads, false);
+        // each direction moves seq*heads*d floats total across ranks
+        let logical = (sp * ssh * heads * d * 4) as u64;
+        assert_eq!(g.stats().all_to_all_bytes, 2 * logical);
+    }
+}

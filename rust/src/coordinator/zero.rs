@@ -1,0 +1,221 @@
+//! ZeRO Stage-3 flat parameter/gradient sharding (paper §5.2 baseline;
+//! the superlinear seqlen scaling of §5.3.4 comes from this partitioning).
+//!
+//! All parameters live in ONE flat f32 vector laid out per the manifest's
+//! `param_layout`; each rank owns a padded `1/world` shard. Layer groups
+//! are all-gathered just-in-time before a stage runs and dropped after —
+//! that is what frees per-GPU memory as the cluster grows. Gradients
+//! reduce-scatter back into the owner's shard.
+
+use anyhow::Result;
+
+use crate::collectives::Group;
+use crate::runtime::manifest::{ParamEntry, ParamLayout};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// A flat vector sharded across `world` ranks (padded equal shards).
+#[derive(Debug, Clone)]
+pub struct ShardedStore {
+    pub total: usize,
+    pub shard_len: usize,
+    pub shards: Vec<Vec<f32>>,
+}
+
+impl ShardedStore {
+    pub fn zeros(total: usize, world: usize) -> ShardedStore {
+        let shard_len = total.div_ceil(world);
+        ShardedStore { total, shard_len, shards: vec![vec![0.0; shard_len]; world] }
+    }
+
+    pub fn from_flat(flat: &[f32], world: usize) -> ShardedStore {
+        let mut s = Self::zeros(flat.len(), world);
+        for (r, shard) in s.shards.iter_mut().enumerate() {
+            let start = r * s.shard_len;
+            if start >= flat.len() {
+                break;
+            }
+            let end = (start + s.shard_len).min(flat.len());
+            shard[..end - start].copy_from_slice(&flat[start..end]);
+        }
+        s
+    }
+
+    pub fn world(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Reassemble the full vector (tests / small exports only).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total);
+        for shard in &self.shards {
+            let take = (self.total - out.len()).min(shard.len());
+            out.extend_from_slice(&shard[..take]);
+            if out.len() == self.total {
+                break;
+            }
+        }
+        out
+    }
+
+    /// All-gather an arbitrary flat range (just-in-time param gather).
+    /// Wire accounting: the gathered bytes, once per participating rank
+    /// pair direction (ledgered as logical size, NCCL algbw convention).
+    pub fn gather_range(&self, group: &Group, range: std::ops::Range<usize>) -> Vec<f32> {
+        assert!(range.end <= self.total);
+        let mut out = vec![0f32; range.len()];
+        for (i, idx) in range.clone().enumerate() {
+            let (r, off) = (idx / self.shard_len, idx % self.shard_len);
+            out[i] = self.shards[r][off];
+        }
+        // account as an all-gather of the range
+        let dummy: Vec<&[f32]> = Vec::new();
+        let _ = dummy; // (stats API below)
+        group.account_gather(range.len() as u64 * 4);
+        out
+    }
+
+    /// Reduce-scatter `world` per-rank contributions covering `range`
+    /// into the owning shards: `shard[owner] += sum_r contribs[r]`.
+    pub fn reduce_into_range(
+        &mut self,
+        group: &Group,
+        range: std::ops::Range<usize>,
+        contribs: &[&[f32]],
+    ) {
+        assert_eq!(contribs.len(), self.world());
+        assert!(contribs.iter().all(|c| c.len() == range.len()));
+        for (i, idx) in range.clone().enumerate() {
+            let (r, off) = (idx / self.shard_len, idx % self.shard_len);
+            let mut acc = 0f32;
+            for c in contribs {
+                acc += c[i];
+            }
+            self.shards[r][off] += acc;
+        }
+        group.account_reduce_scatter(range.len() as u64 * 4);
+    }
+
+    pub fn zero_fill(&mut self) {
+        for s in &mut self.shards {
+            s.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Device bytes a single rank holds for this store (ZeRO-3 benefit).
+    pub fn shard_bytes(&self) -> u64 {
+        (self.shard_len * 4) as u64
+    }
+}
+
+/// Initialize the flat parameter vector per the manifest init recipes
+/// (std-0.02 normals, ones for norms, zeros for `wd` — mirrors
+/// `model.init_params`).
+pub fn init_flat_params(layout: &ParamLayout, seed: u64, std: f32) -> Vec<f32> {
+    let mut flat = vec![0f32; layout.total_numel()];
+    let mut rng = Rng::new(seed);
+    let mut fill = |entry: &ParamEntry, base: usize, rng: &mut Rng| {
+        let dst = &mut flat[base..base + entry.numel()];
+        match entry.init.as_str() {
+            "ones" => dst.iter_mut().for_each(|x| *x = 1.0),
+            "zeros" => dst.iter_mut().for_each(|x| *x = 0.0),
+            _ => dst.iter_mut().for_each(|x| *x = rng.normal() as f32 * std),
+        }
+    };
+    for e in &layout.embed {
+        fill(e, e.offset, &mut rng);
+    }
+    for l in 0..layout.n_layers {
+        for e in &layout.layer {
+            let base = layout.embed_numel + l * layout.layer_numel + e.offset;
+            fill(e, base, &mut rng);
+        }
+    }
+    for e in &layout.final_ {
+        let base = layout.embed_numel + layout.n_layers * layout.layer_numel + e.offset;
+        fill(e, base, &mut rng);
+    }
+    flat
+}
+
+/// View a gathered flat group as named tensors (zero-copy would need
+/// lifetimes through the engine; we copy — this is the gather cost anyway).
+pub fn slice_group(gathered: &[f32], entries: &[ParamEntry]) -> Vec<HostTensor> {
+    entries
+        .iter()
+        .map(|e| {
+            HostTensor::f32(
+                e.shape.clone(),
+                gathered[e.offset..e.offset + e.numel()].to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// Gradient accumulation buffer for one flat group (per rank, before the
+/// reduce-scatter). Named access mirrors `slice_group` order.
+pub struct GroupGrads {
+    pub entries: Vec<ParamEntry>,
+    pub flat: Vec<f32>,
+}
+
+impl GroupGrads {
+    pub fn zeros(entries: &[ParamEntry]) -> GroupGrads {
+        let total: usize = entries.iter().map(|e| e.numel()).sum();
+        GroupGrads { entries: entries.to_vec(), flat: vec![0.0; total] }
+    }
+
+    pub fn accumulate(&mut self, name: &str, grad: &HostTensor) -> Result<()> {
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown grad tensor `{name}`"))?;
+        anyhow::ensure!(e.shape == grad.shape(), "grad shape mismatch for {name}");
+        let dst = &mut self.flat[e.offset..e.offset + e.numel()];
+        for (d, s) in dst.iter_mut().zip(grad.as_f32()?) {
+            *d += s;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_round_trip() {
+        let flat: Vec<f32> = (0..103).map(|i| i as f32).collect();
+        let s = ShardedStore::from_flat(&flat, 4);
+        assert_eq!(s.shard_len, 26);
+        assert_eq!(s.to_flat(), flat);
+    }
+
+    #[test]
+    fn gather_range_crosses_shard_boundaries() {
+        let flat: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let s = ShardedStore::from_flat(&flat, 3); // shard_len 7
+        let g = Group::new(3);
+        assert_eq!(s.gather_range(&g, 5..10), vec![5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(g.stats().all_gather_bytes, 20);
+    }
+
+    #[test]
+    fn reduce_into_range_sums_across_ranks() {
+        let mut s = ShardedStore::zeros(8, 2);
+        let g = Group::new(2);
+        let a = vec![1.0f32; 4];
+        let b = vec![2.0f32; 4];
+        s.reduce_into_range(&g, 2..6, &[&a, &b]);
+        let flat = s.to_flat();
+        assert_eq!(flat, vec![0.0, 0.0, 3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shard_bytes_shrink_with_world() {
+        let s1 = ShardedStore::zeros(1000, 1);
+        let s8 = ShardedStore::zeros(1000, 8);
+        assert!(s8.shard_bytes() * 7 < s1.shard_bytes());
+    }
+}

@@ -1,0 +1,12 @@
+//! ALST-RS: Arctic Long Sequence Training reproduced as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
+pub mod util;
+pub mod config;
+pub mod runtime;
+pub mod collectives;
+pub mod coordinator;
+pub mod tiling;
+pub mod memory;
+pub mod perf;
+pub mod metrics;
+pub mod paper;

@@ -1,0 +1,287 @@
+//! `alst` — the launcher CLI.
+//!
+//! Subcommands:
+//!   train     — run real training through the PJRT pipeline
+//!               (--artifacts DIR --config tiny --sp 2 --seq 256 --steps N)
+//!   search    — simulator max-seqlen search per (model, GPUs, features)
+//!   ablate    — Table 1 feature-ablation ladder
+//!   estimate  — memory breakdown for a (model, seq, world)
+//!   tables    — regenerate every paper table/figure dataset to CSV
+
+use anyhow::{Context, Result};
+
+use alst::config::{preset, ClusterConfig, FeatureFlags, GIB};
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::memory::{max_seqlen_search, Estimator};
+use alst::metrics::RunLog;
+use alst::perf::{iteration_time, IterationModel};
+use alst::util::bench::{fmt_duration_hms, fmt_seqlen};
+use alst::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("search") => cmd_search(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("validate") => cmd_validate(&args),
+        _ => {
+            eprintln!(
+                "usage: alst <train|search|ablate|estimate|tables|validate> [--key value ...]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn flags_from_args(args: &Args) -> FeatureFlags {
+    let mut f = if args.flag("baseline") {
+        FeatureFlags::baseline()
+    } else {
+        FeatureFlags::alst()
+    };
+    if args.flag("weights-offload") {
+        f.weights_offload = true;
+    }
+    if args.flag("no-offload") {
+        f.ckpt_offload = false;
+    }
+    if args.flag("no-tiled-mlp") {
+        f.tiled_mlp = false;
+    }
+    f
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let config = args.get_or("config", "tiny");
+    let sp = args.usize("sp", 2);
+    let seq = args.usize("seq", 256);
+    let steps = args.usize("steps", 20);
+    let seed = args.usize("seed", 0) as u64;
+    let dir = alst::runtime::Manifest::artifact_dir(&root, &config, sp, seq);
+    println!("loading artifacts from {}", dir.display());
+
+    let mut opts = TrainerOptions {
+        flags: flags_from_args(args),
+        seed,
+        checked: args.flag("checked"),
+        ..Default::default()
+    };
+    opts.adamw.lr = args.f64("lr", opts.adamw.lr as f64) as f32;
+    if let Some(warmup) = args.get("warmup") {
+        opts.lr_schedule = Some(alst::coordinator::pipeline::LrSchedule {
+            peak_lr: opts.adamw.lr,
+            warmup_steps: warmup.parse().unwrap_or(10),
+            total_steps: steps as u64,
+            min_lr: opts.adamw.lr * 0.1,
+        });
+    }
+    let mut trainer = Trainer::new(&dir, opts)?;
+    if let Some(resume) = args.get("resume") {
+        trainer.load_snapshot(std::path::Path::new(resume))?;
+        println!("resumed from {resume} at step {}", trainer.step_count());
+    }
+    println!(
+        "model={} params={} sp={} seq={} kernels={}",
+        trainer.manifest.config.name,
+        trainer.manifest.config.params_count,
+        trainer.sp(),
+        trainer.manifest.seq,
+        trainer.manifest.config.kernels,
+    );
+
+    // --data FILE trains on a byte-tokenized real corpus (needs vocab>=256);
+    // default is the learnable synthetic Markov stream.
+    let source: Box<dyn alst::coordinator::dataloader::BatchSource> =
+        if let Some(path) = args.get("data") {
+            anyhow::ensure!(
+                trainer.manifest.config.vocab >= 256,
+                "byte-level corpus needs vocab >= 256"
+            );
+            Box::new(alst::coordinator::dataloader::CorpusSource::from_file(
+                std::path::Path::new(path),
+                seq,
+                seed,
+            )?)
+        } else {
+            Box::new(MarkovSource::new(
+                trainer.manifest.config.vocab,
+                seq,
+                0.05,
+                seed ^ 1,
+            ))
+        };
+    let mut loader = UlyssesDataLoader::new(source, sp);
+    let gas = args.usize("gas", 1);
+    let mut log = RunLog::default();
+    for step in 0..steps {
+        let batches: Vec<Vec<i32>> = (0..gas).map(|_| loader.next().0).collect();
+        let m = trainer.train_step_accum(&batches)?;
+        if step % args.usize("log-every", 1) == 0 {
+            println!(
+                "step {:>4}  loss {:.4}  gnorm {:.3}  {:.1}ms  a2a {:.1}MiB",
+                m.step,
+                m.loss,
+                m.grad_norm,
+                m.step_time.as_secs_f64() * 1e3,
+                m.a2a_bytes as f64 / (1 << 20) as f64,
+            );
+        }
+        log.push(m);
+    }
+    println!("{}", log.ascii_loss_curve(60, 12));
+    if let Some(path) = args.get("csv") {
+        log.write_csv(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("save") {
+        trainer.save_snapshot(std::path::Path::new(path))?;
+        println!("snapshot saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let model = preset(&args.get_or("model", "llama3-8b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset"))?;
+    let world = args.usize("gpus", 8);
+    let nodes = world.div_ceil(8);
+    let flags = flags_from_args(args);
+    let est = Estimator::new(model, ClusterConfig::h100(nodes), flags);
+    let out = max_seqlen_search(&est, world);
+    let perf = iteration_time(
+        &IterationModel {
+            model: model.clone(),
+            cluster: ClusterConfig::h100(nodes),
+            flags,
+        },
+        out.max_seqlen.max(1),
+        world,
+    );
+    println!(
+        "{} on {} GPUs [{}]: max seqlen {} (bound by {}), modeled iter {} @ {:.1} TFLOPS/GPU",
+        model.name,
+        world,
+        flags.describe(),
+        fmt_seqlen(out.max_seqlen),
+        out.binding,
+        fmt_duration_hms(std::time::Duration::from_secs_f64(perf.iteration_s)),
+        perf.tflops_per_gpu,
+    );
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let model = preset(&args.get_or("model", "llama3-8b")).unwrap();
+    let world = args.usize("gpus", 8);
+    let table = alst::paper::table1_ablations(model, world);
+    table.print();
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let model = preset(&args.get_or("model", "llama3-8b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset"))?;
+    let world = args.usize("gpus", 8);
+    let seq = args.usize("seq", 32_768);
+    let flags = flags_from_args(args);
+    let est = Estimator::new(model, ClusterConfig::h100(world.div_ceil(8)), flags);
+    let b = est.breakdown(seq, world);
+    let gib = |x: u64| x as f64 / GIB as f64;
+    println!(
+        "per-GPU memory for {} @ seq {} on {} GPUs [{}]:",
+        model.name,
+        fmt_seqlen(seq),
+        world,
+        flags.describe()
+    );
+    println!("  weights (device)   {:>8.2} GiB", gib(b.weights_device));
+    println!("  grads   (device)   {:>8.2} GiB", gib(b.grads_device));
+    println!("  optim   (device)   {:>8.2} GiB", gib(b.optim_device));
+    println!("  ckpt    (device)   {:>8.2} GiB", gib(b.acts.ckpt_device));
+    println!("  attn work          {:>8.2} GiB", gib(b.acts.attn_work));
+    println!("  mlp work           {:>8.2} GiB", gib(b.acts.mlp_work));
+    println!("  logits work        {:>8.2} GiB", gib(b.acts.logits_work));
+    println!("  resid work         {:>8.2} GiB", gib(b.acts.resid_work));
+    println!("  misc               {:>8.2} GiB", gib(b.misc));
+    println!("  TOTAL device       {:>8.2} GiB", gib(b.device_total()));
+    println!("  host per rank      {:>8.2} GiB", gib(b.host_per_rank));
+    println!("  fits: {}", est.fits(seq, world));
+    Ok(())
+}
+
+/// Artifact doctor: load a manifest, compile every stage, execute each
+/// with zero-filled inputs, and verify the output shapes — catches stale
+/// or mismatched artifacts before a long training run does.
+fn cmd_validate(args: &Args) -> Result<()> {
+    use alst::runtime::{Engine, HostTensor, Manifest};
+    let root = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let dirs: Vec<std::path::PathBuf> = if let Some(cfg) = args.get("config") {
+        vec![Manifest::artifact_dir(
+            &root,
+            cfg,
+            args.usize("sp", 1),
+            args.usize("seq", 256),
+        )]
+    } else {
+        std::fs::read_dir(&root)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.join("manifest.json").exists())
+            .collect()
+    };
+    anyhow::ensure!(!dirs.is_empty(), "no artifact dirs under {}", root.display());
+
+    let mut failures = 0;
+    for dir in dirs {
+        print!("{} ... ", dir.display());
+        let check = (|| -> Result<usize> {
+            let m = Manifest::load(&dir)?;
+            let mut engine = Engine::cpu()?;
+            engine.load_manifest(&m)?;
+            for (name, io) in &m.stages {
+                let inputs: Vec<HostTensor> = io
+                    .inputs
+                    .iter()
+                    .map(|t| match t.dtype {
+                        alst::runtime::Dtype::F32 => HostTensor::zeros(&t.shape),
+                        alst::runtime::Dtype::I32 => HostTensor::i32(
+                            t.shape.clone(),
+                            vec![0; t.shape.iter().product()],
+                        ),
+                    })
+                    .collect();
+                let refs: Vec<&HostTensor> = inputs.iter().collect();
+                engine
+                    .execute_checked(&m, name, &refs)
+                    .with_context(|| format!("stage {name}"))?;
+            }
+            Ok(m.stages.len())
+        })();
+        match check {
+            Ok(n) => println!("OK ({n} stages)"),
+            Err(e) => {
+                println!("FAIL: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} artifact dir(s) failed validation");
+    println!("all artifacts valid");
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    for (name, table) in alst::paper::all_tables() {
+        table.print();
+        std::fs::write(out_dir.join(format!("{name}.csv")), table.to_csv())?;
+    }
+    println!("\nCSV written to {}", out_dir.display());
+    Ok(())
+}

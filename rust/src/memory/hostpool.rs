@@ -1,0 +1,77 @@
+//! Host (CPU) memory pool for offload traffic.
+//!
+//! The paper's §5.3.2/§5.3.3 finding — 1.9 TiB of node RAM becomes the
+//! binding constraint for Llama-70B/Qwen-32B long-sequence configs — falls
+//! out of this pool's capacity check.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct HostPool {
+    capacity: u64,
+    current: u64,
+    peak: u64,
+}
+
+impl HostPool {
+    pub fn new(capacity: u64) -> HostPool {
+        HostPool { capacity, current: 0, peak: 0 }
+    }
+
+    /// The paper's per-node budget: 1.9 TiB shared by `gpus_per_node`
+    /// ranks; we model a per-rank slice.
+    pub fn per_rank(node_capacity: u64, gpus_per_node: usize) -> HostPool {
+        HostPool::new(node_capacity / gpus_per_node as u64)
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> Result<()> {
+        anyhow::ensure!(
+            self.current + bytes <= self.capacity,
+            "host memory exhausted: {} + {} MiB > {} MiB (paper §5.3.2: CPU \
+             RAM becomes the limiting factor)",
+            self.current >> 20,
+            bytes >> 20,
+            self.capacity >> 20
+        );
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enforces_capacity() {
+        let mut p = HostPool::new(100);
+        p.alloc(60).unwrap();
+        assert!(p.alloc(50).is_err());
+        p.free(30);
+        p.alloc(50).unwrap();
+        assert_eq!(p.peak(), 80);
+    }
+
+    #[test]
+    fn per_rank_splits_node_budget() {
+        let p = HostPool::per_rank(1 << 40, 8);
+        assert_eq!(p.capacity(), (1 << 40) / 8);
+    }
+}

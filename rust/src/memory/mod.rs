@@ -1,0 +1,21 @@
+//! Memory substrate: device-memory model, allocation tracker, host offload
+//! pool, the paper-formula estimator, and the max-seqlen search.
+//!
+//! Substitution (DESIGN.md): no H100s exist here; the paper's max-seqlen
+//! results are memory-capacity arithmetic, so the simulator implements the
+//! paper's own byte formulas (§2.1, §3.1, §3.3) — driven by the *same*
+//! coordinator decisions (tile plans, shard shapes, offload) the real
+//! pipeline uses — and is validated against every worked number in the
+//! paper's text.
+
+mod estimator;
+mod hostpool;
+mod search;
+mod timeline;
+mod tracker;
+
+pub use estimator::{ActivationBreakdown, Calibration, Estimator, MemoryBreakdown};
+pub use hostpool::HostPool;
+pub use search::{max_seqlen_search, SearchOutcome};
+pub use timeline::{simulate_step, sparkline, TimelineResult};
+pub use tracker::{DeviceModel, MemoryTracker, OomError};

@@ -1,0 +1,133 @@
+//! Max-seqlen search (the paper's evaluation protocol, §5.3: "zeroing in
+//! on the maximum length that does not OOM / NaN").
+//!
+//! Exponential probe + bisection over the estimator's `fits` predicate,
+//! quantized to 1K tokens like the paper's reported numbers.
+
+use crate::memory::Estimator;
+
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub max_seqlen: usize,
+    /// Which resource ended the search ("logits", "ckpt", "mlp",
+    /// "attention", "host-ram").
+    pub binding: &'static str,
+    pub probes: usize,
+}
+
+/// Largest sequence length (multiple of `quantum`) that fits.
+pub fn max_seqlen_search(est: &Estimator, world: usize) -> SearchOutcome {
+    let quantum = 1_000usize;
+    let mut probes = 0;
+    let mut fits = |s: usize| {
+        probes += 1;
+        est.fits(s, world)
+    };
+    if !fits(quantum) {
+        return SearchOutcome { max_seqlen: 0, binding: est.binding_constraint(quantum, world), probes };
+    }
+    // exponential growth to bracket
+    let mut lo = quantum;
+    let mut hi = quantum * 2;
+    while fits(hi) {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 32 {
+            break;
+        }
+    }
+    // bisect [lo fits, hi doesn't]
+    while hi - lo > quantum {
+        let mid = (lo + hi) / 2 / quantum * quantum;
+        if mid == lo {
+            break;
+        }
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // report the *next* length's constraint — i.e. what stopped us
+    let binding = est.binding_constraint(hi, world);
+    SearchOutcome { max_seqlen: lo, binding, probes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::preset;
+    use crate::config::{ClusterConfig, FeatureFlags};
+
+    fn search(flags: FeatureFlags, nodes: usize, world: usize) -> SearchOutcome {
+        let est = Estimator::new(
+            preset("llama3-8b").unwrap(),
+            ClusterConfig::h100(nodes),
+            flags,
+        );
+        max_seqlen_search(&est, world)
+    }
+
+    #[test]
+    fn baseline_is_logits_bound_around_32k() {
+        let out = search(FeatureFlags::baseline(), 1, 8);
+        // paper Table 1 row 1: 32K
+        assert!(out.max_seqlen >= 16_000 && out.max_seqlen <= 64_000, "{out:?}");
+        assert_eq!(out.binding, "logits");
+    }
+
+    #[test]
+    fn alst_beats_baseline_by_orders_of_magnitude() {
+        let base = search(FeatureFlags::baseline(), 1, 8).max_seqlen;
+        let alst = search(FeatureFlags::alst(), 1, 8).max_seqlen;
+        // paper: 32K -> 3.7M is ~116x; require >= 30x for the shape
+        assert!(alst > 30 * base, "{base} -> {alst}");
+    }
+
+    #[test]
+    fn scaling_with_gpus_is_roughly_linear() {
+        let s8 = search(FeatureFlags::alst(), 1, 8).max_seqlen;
+        let s32 = search(FeatureFlags::alst(), 4, 32).max_seqlen;
+        let ratio = s32 as f64 / s8 as f64;
+        assert!(ratio > 2.0 && ratio < 8.0, "8->32 GPUs ratio {ratio}");
+    }
+
+    #[test]
+    fn feature_ladder_is_monotone() {
+        let mut prev = 0;
+        for (name, flags) in FeatureFlags::table1_ladder() {
+            let out = search(flags, 1, 8);
+            assert!(
+                out.max_seqlen >= prev,
+                "{name}: {} < previous {prev}",
+                out.max_seqlen
+            );
+            prev = out.max_seqlen;
+        }
+    }
+
+    #[test]
+    fn host_ram_caps_llama70b() {
+        // §5.3.2: Llama-70B ckpt offload saturates 1.9 TiB/node.
+        let est = Estimator::new(
+            preset("llama3-70b").unwrap(),
+            ClusterConfig::h100(4),
+            FeatureFlags::alst(),
+        );
+        let out = max_seqlen_search(&est, 32);
+        assert!(out.max_seqlen > 0);
+        assert_eq!(out.binding, "host-ram", "{out:?}");
+    }
+
+    #[test]
+    fn zero_when_nothing_fits() {
+        // 70B on one GPU without weight offload cannot even hold states.
+        let est = Estimator::new(
+            preset("llama3-70b").unwrap(),
+            ClusterConfig::h100_single(),
+            FeatureFlags::baseline(),
+        );
+        let out = max_seqlen_search(&est, 1);
+        assert_eq!(out.max_seqlen, 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Step-timeline simulation (Figure 7): replay one fwd+bwd iteration's
+//! allocation sequence through the `MemoryTracker`, with and without
+//! checkpoint offload, and show that offload turns the per-layer "hill"
+//! into a flat line — peak device memory stops depending on layer count.
+//!
+//! Unlike the static estimator this walks the SAME event order the real
+//! pipeline executes (checkpoint store per layer going forward, fetch per
+//! layer going backward, transient working buffers per phase).
+
+use crate::config::{FeatureFlags, ModelPreset};
+use crate::memory::{HostPool, MemoryTracker};
+
+#[derive(Debug, Clone)]
+pub struct TimelineResult {
+    /// Device bytes sampled after every alloc/free event.
+    pub samples: Vec<u64>,
+    pub device_peak: u64,
+    pub host_peak: u64,
+    /// Peak attributable to checkpoints alone.
+    pub ckpt_peak: u64,
+}
+
+/// Replay one training iteration's memory events.
+pub fn simulate_step(
+    m: &ModelPreset,
+    seq: usize,
+    sp: usize,
+    flags: &FeatureFlags,
+    device_budget: u64,
+    host_budget: u64,
+) -> anyhow::Result<TimelineResult> {
+    let t_r = seq / sp.max(1);
+    let act_b = 2u64; // bf16 activations (simulator units)
+    let ckpt_bytes = (t_r * m.hidden) as u64 * act_b;
+    // per-layer transient working set (attention + mlp, coarse)
+    let work_bytes = {
+        let attn = (seq * (m.n_q_heads / sp.max(1)).max(1) * m.head_dim) as u64 * 4 * act_b;
+        let mlp_rows = if flags.tiled_mlp { m.hidden.min(t_r) } else { t_r };
+        let mlp = (mlp_rows * 2 * m.ffn) as u64 * act_b;
+        attn + mlp
+    };
+
+    let mut dev = MemoryTracker::new(device_budget);
+    let mut host = HostPool::new(host_budget);
+    let mut ckpt_peak = 0u64;
+
+    // forward: store one checkpoint per layer, run the layer, free work
+    for _li in 0..m.n_layers {
+        if flags.ckpt_offload {
+            host.alloc(ckpt_bytes)?;
+        } else {
+            dev.alloc(ckpt_bytes, "ckpt")?;
+        }
+        ckpt_peak = ckpt_peak.max(dev.tag_bytes("ckpt"));
+        dev.alloc(work_bytes, "work")?;
+        dev.free(work_bytes, "work");
+    }
+    // loss head
+    let logits_rows = if flags.tiled_loss { 8192.min(t_r) } else { t_r };
+    let logits = (logits_rows * m.vocab) as u64 * 4 * 2;
+    dev.alloc(logits, "logits")?;
+    dev.free(logits, "logits");
+
+    // backward: fetch checkpoints in reverse, recompute + grads
+    for _li in (0..m.n_layers).rev() {
+        dev.alloc(2 * work_bytes, "work")?; // recompute + gradient buffers
+        dev.free(2 * work_bytes, "work");
+        if flags.ckpt_offload {
+            host.free(ckpt_bytes);
+        } else {
+            dev.free(ckpt_bytes, "ckpt");
+        }
+    }
+
+    Ok(TimelineResult {
+        samples: dev.timeline.clone(),
+        device_peak: dev.peak(),
+        host_peak: host.peak(),
+        ckpt_peak,
+    })
+}
+
+/// ASCII sparkline of the timeline (examples/doc output).
+pub fn sparkline(samples: &[u64], width: usize) -> String {
+    if samples.is_empty() {
+        return String::new();
+    }
+    let max = *samples.iter().max().unwrap() as f64;
+    let glyphs = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let step = (samples.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < samples.len() && out.chars().count() < width {
+        let v = samples[i as usize] as f64;
+        let idx = if max == 0.0 { 0 } else { ((v / max) * 8.0).round() as usize };
+        out.push(glyphs[idx.min(8)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, FeatureFlags, GIB};
+
+    fn run(offload: bool, layers_scale: usize) -> TimelineResult {
+        let mut m = preset("llama3-8b").unwrap().clone();
+        m.n_layers *= layers_scale;
+        let mut f = FeatureFlags::alst();
+        f.ckpt_offload = offload;
+        simulate_step(&m, 500_000, 8, &f, 1 << 45, 1 << 45).unwrap()
+    }
+
+    #[test]
+    fn offload_flattens_the_hill() {
+        let hill = run(false, 1);
+        let flat = run(true, 1);
+        // Figure 7: same step, offload removes the checkpoint ramp
+        assert!(hill.device_peak > flat.device_peak + GIB);
+        assert!(flat.ckpt_peak == 0);
+        assert!(flat.host_peak > 0);
+    }
+
+    #[test]
+    fn peak_independent_of_layer_count_only_with_offload() {
+        // the paper's claim: "peak memory no longer depends on how many
+        // layers the model has"
+        let flat1 = run(true, 1);
+        let flat2 = run(true, 2);
+        assert_eq!(flat1.device_peak, flat2.device_peak);
+        let hill1 = run(false, 1);
+        let hill2 = run(false, 2);
+        assert!(hill2.device_peak > hill1.device_peak + GIB);
+    }
+
+    #[test]
+    fn timeline_shape_is_a_hill_without_offload() {
+        let hill = run(false, 1);
+        let peak_pos = hill
+            .samples
+            .iter()
+            .position(|&v| v == hill.device_peak)
+            .unwrap();
+        // peak happens somewhere in the middle (end of fwd / start of bwd),
+        // and the timeline returns to ~zero
+        assert!(peak_pos > hill.samples.len() / 4);
+        assert_eq!(*hill.samples.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn oom_when_device_budget_too_small() {
+        let m = preset("llama3-8b").unwrap();
+        let err = simulate_step(m, 500_000, 8, &FeatureFlags::baseline(), GIB, 1 << 45);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let s = sparkline(&[0, 1, 2, 3, 4, 4, 3, 2, 1, 0], 10);
+        assert!(!s.is_empty());
+        assert!(s.contains('█'));
+    }
+}

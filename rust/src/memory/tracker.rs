@@ -1,0 +1,201 @@
+//! Device-memory model + allocation tracker.
+//!
+//! Models one GPU's memory the way the paper's profiling describes it
+//! (§2.1 "runtime overheads"): total capacity minus CUDA context (~1 GiB)
+//! minus NCCL buffers, with a fragmentation headroom that shrinks when the
+//! expandable-segments allocator is enabled (§3.3).
+
+use std::collections::BTreeMap;
+
+use crate::config::GIB;
+
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub capacity: u64,
+    /// CUDA context + driver reservations (paper: ~1 GiB).
+    pub cuda_reserved: u64,
+    /// NCCL internal buffers ("multiple gigabytes", §2.1; grows with the
+    /// number of communicators — we model 1 GiB + 256 MiB per 8 ranks).
+    pub nccl_reserved: u64,
+    /// Fraction of usable memory lost to fragmentation. The paper's
+    /// expandable-segments fix "provided massive improvements": we model
+    /// 12% headroom without it, 3% with it.
+    pub frag_fraction: f64,
+}
+
+impl DeviceModel {
+    pub fn h100(world: usize, expandable_segments: bool) -> DeviceModel {
+        DeviceModel {
+            capacity: 80 * GIB,
+            cuda_reserved: GIB,
+            nccl_reserved: GIB + (world as u64).div_ceil(8) * 256 * (1 << 20),
+            frag_fraction: if expandable_segments { 0.03 } else { 0.12 },
+        }
+    }
+
+    /// Bytes actually available to tensors.
+    pub fn usable(&self) -> u64 {
+        let after_reserved = self
+            .capacity
+            .saturating_sub(self.cuda_reserved + self.nccl_reserved);
+        (after_reserved as f64 * (1.0 - self.frag_fraction)) as u64
+    }
+}
+
+#[derive(Debug)]
+pub struct OomError {
+    pub requested: u64,
+    pub in_use: u64,
+    pub usable: u64,
+    pub tag: String,
+}
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM allocating {} MiB for `{}`: {} / {} MiB in use",
+            self.requested >> 20,
+            self.tag,
+            self.in_use >> 20,
+            self.usable >> 20
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
+/// Allocation tracker for one simulated device. Tags give the per-category
+/// breakdown the paper's memory-profiler plots show (Figures 3, 4, 7).
+#[derive(Debug)]
+pub struct MemoryTracker {
+    usable: u64,
+    current: u64,
+    peak: u64,
+    by_tag: BTreeMap<String, u64>,
+    /// (time-ordered) samples of `current` for timeline plots.
+    pub timeline: Vec<u64>,
+}
+
+impl MemoryTracker {
+    pub fn new(usable: u64) -> MemoryTracker {
+        MemoryTracker {
+            usable,
+            current: 0,
+            peak: 0,
+            by_tag: BTreeMap::new(),
+            timeline: Vec::new(),
+        }
+    }
+
+    pub fn from_model(m: &DeviceModel) -> MemoryTracker {
+        Self::new(m.usable())
+    }
+
+    pub fn alloc(&mut self, bytes: u64, tag: &str) -> Result<(), anyhow::Error> {
+        if self.current + bytes > self.usable {
+            return Err(OomError {
+                requested: bytes,
+                in_use: self.current,
+                usable: self.usable,
+                tag: tag.to_string(),
+            }
+            .into());
+        }
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+        *self.by_tag.entry(tag.to_string()).or_insert(0) += bytes;
+        self.timeline.push(self.current);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: u64, tag: &str) {
+        debug_assert!(self.current >= bytes, "free underflow");
+        self.current = self.current.saturating_sub(bytes);
+        if let Some(v) = self.by_tag.get_mut(tag) {
+            *v = v.saturating_sub(bytes);
+        }
+        self.timeline.push(self.current);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn usable(&self) -> u64 {
+        self.usable
+    }
+
+    pub fn tag_bytes(&self, tag: &str) -> u64 {
+        self.by_tag.get(tag).copied().unwrap_or(0)
+    }
+
+    pub fn breakdown(&self) -> &BTreeMap<String, u64> {
+        &self.by_tag
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.current;
+        self.timeline.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_usable_is_below_capacity() {
+        let m = DeviceModel::h100(8, true);
+        assert!(m.usable() < 80 * GIB);
+        assert!(m.usable() > 70 * GIB);
+        // expandable segments buys real headroom (paper §3.3)
+        let frag = DeviceModel::h100(8, false);
+        assert!(m.usable() > frag.usable() + 5 * GIB);
+    }
+
+    #[test]
+    fn nccl_reservation_grows_with_world() {
+        assert!(
+            DeviceModel::h100(64, true).nccl_reserved
+                > DeviceModel::h100(8, true).nccl_reserved
+        );
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut t = MemoryTracker::new(1000);
+        t.alloc(600, "a").unwrap();
+        t.free(600, "a");
+        t.alloc(100, "b").unwrap();
+        assert_eq!(t.peak(), 600);
+        assert_eq!(t.current(), 100);
+    }
+
+    #[test]
+    fn oom_reports_context() {
+        let mut t = MemoryTracker::new(100);
+        t.alloc(90, "w").unwrap();
+        let err = t.alloc(20, "act").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("act"), "{msg}");
+    }
+
+    #[test]
+    fn timeline_records_hill_shape() {
+        let mut t = MemoryTracker::new(10_000);
+        for _ in 0..5 {
+            t.alloc(100, "ckpt").unwrap();
+        }
+        for _ in 0..5 {
+            t.free(100, "ckpt");
+        }
+        let max = *t.timeline.iter().max().unwrap();
+        assert_eq!(max, 500);
+        assert_eq!(*t.timeline.last().unwrap(), 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Training-run metrics: per-step records, loss-curve logging, and the
+//! run summaries EXPERIMENTS.md quotes.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+use crate::coordinator::pipeline::StepMetrics;
+
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub steps: Vec<StepMetrics>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    /// Mean loss over the first/last `n` steps (loss-curve trend check).
+    pub fn mean_loss_head(&self, n: usize) -> f32 {
+        let k = n.min(self.steps.len()).max(1);
+        self.steps[..k].iter().map(|s| s.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn mean_loss_tail(&self, n: usize) -> f32 {
+        let len = self.steps.len();
+        let k = n.min(len).max(1);
+        self.steps[len - k..].iter().map(|s| s.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn mean_step_time(&self) -> Duration {
+        if self.steps.is_empty() {
+            return Duration::ZERO;
+        }
+        self.steps.iter().map(|s| s.step_time).sum::<Duration>()
+            / self.steps.len() as u32
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.steps.iter().map(|s| s.tokens).sum()
+    }
+
+    /// CSV: step,loss,grad_norm,ms,a2a_bytes,gather_bytes,rs_bytes,ckpt_bytes
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "step,loss,grad_norm,step_ms,a2a_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes\n",
+        );
+        for m in &self.steps {
+            s.push_str(&format!(
+                "{},{:.6},{:.4},{:.1},{},{},{},{}\n",
+                m.step,
+                m.loss,
+                m.grad_norm,
+                m.step_time.as_secs_f64() * 1e3,
+                m.a2a_bytes,
+                m.gather_bytes,
+                m.reduce_scatter_bytes,
+                m.ckpt_transfer_bytes,
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// ASCII loss curve (examples print this; no plotting deps offline).
+    pub fn ascii_loss_curve(&self, width: usize, height: usize) -> String {
+        if self.steps.len() < 2 {
+            return String::from("(not enough steps)");
+        }
+        let losses: Vec<f32> = self.steps.iter().map(|s| s.loss).collect();
+        let (min, max) = losses
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        let span = (max - min).max(1e-6);
+        let mut grid = vec![vec![b' '; width]; height];
+        for (i, &l) in losses.iter().enumerate() {
+            let x = i * (width - 1) / (losses.len() - 1);
+            let y = ((max - l) / span * (height - 1) as f32).round() as usize;
+            grid[y.min(height - 1)][x] = b'*';
+        }
+        let mut out = String::new();
+        out.push_str(&format!("loss {max:.3}\n"));
+        for row in grid {
+            out.push_str("  |");
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!("     {min:.3} .. steps 1-{}\n", losses.len()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: u64, loss: f32) -> StepMetrics {
+        StepMetrics {
+            step: i,
+            loss,
+            grad_norm: 1.0,
+            tokens: 128,
+            step_time: Duration::from_millis(10),
+            a2a_bytes: 0,
+            gather_bytes: 0,
+            reduce_scatter_bytes: 0,
+            ckpt_transfer_bytes: 0,
+            device_peak_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn trend_helpers() {
+        let mut log = RunLog::default();
+        for i in 0..10 {
+            log.push(step(i, 5.0 - i as f32 * 0.3));
+        }
+        assert!(log.mean_loss_tail(3) < log.mean_loss_head(3));
+        assert_eq!(log.total_tokens(), 1280);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::default();
+        log.push(step(1, 2.5));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let mut log = RunLog::default();
+        for i in 0..20 {
+            log.push(step(i, (20 - i) as f32));
+        }
+        let art = log.ascii_loss_curve(40, 8);
+        assert!(art.contains('*'));
+    }
+}

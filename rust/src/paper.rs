@@ -1,0 +1,371 @@
+//! Paper-table/figure regeneration (the experiment index of DESIGN.md §4).
+//!
+//! Every public function returns a `Table` whose rows mirror one table or
+//! figure in the paper's evaluation; `all_tables()` is what
+//! `alst tables` / `cargo bench --bench bench_tables` emit. Absolute
+//! numbers come from the calibrated simulator (DESIGN.md substitutions);
+//! the asserted properties are the *shapes*: who wins, by what order of
+//! magnitude, where the binding constraint moves.
+
+use crate::config::{preset, ClusterConfig, FeatureFlags, ModelPreset, GIB};
+use crate::memory::{max_seqlen_search, Estimator};
+use crate::perf::{iteration_time, IterationModel};
+use crate::tiling::{plan_logits, plan_mlp};
+use crate::util::bench::{fmt_duration_hms, fmt_seqlen, Table};
+
+fn cluster_for(world: usize) -> ClusterConfig {
+    if world <= 1 {
+        ClusterConfig::h100_single()
+    } else {
+        ClusterConfig::h100(world.div_ceil(8))
+    }
+}
+
+/// Flags used for the paper's "baseline" bars, incl. the single-GPU
+/// weights-offload special case (§5.5 fn.24).
+fn baseline_for(world: usize) -> FeatureFlags {
+    let mut f = FeatureFlags::baseline();
+    if world == 1 {
+        f.weights_offload = true;
+    }
+    f
+}
+
+fn alst_for(world: usize) -> FeatureFlags {
+    let mut f = FeatureFlags::alst();
+    if world == 1 {
+        f.weights_offload = true;
+    }
+    f
+}
+
+fn search_row(model: &ModelPreset, world: usize, flags: FeatureFlags) -> (usize, &'static str, f64, f64) {
+    let cluster = cluster_for(world);
+    let est = Estimator::new(model, cluster.clone(), flags);
+    let out = max_seqlen_search(&est, world);
+    let perf = iteration_time(
+        &IterationModel { model: model.clone(), cluster, flags },
+        out.max_seqlen.max(1_000),
+        world,
+    );
+    (out.max_seqlen, out.binding, perf.iteration_s, perf.tflops_per_gpu)
+}
+
+/// Table 1 / Figure 11: single-node (8 GPU) feature-ablation ladder.
+pub fn table1_ablations(model: &ModelPreset, world: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Table 1: feature ablations ({} on {} GPUs)", model.name, world),
+        &["features", "max seqlen", "iter time", "TFLOPS/GPU", "bound by"],
+    );
+    for (name, flags) in FeatureFlags::table1_ladder() {
+        let (seq, bound, iter_s, tflops) = search_row(model, world, flags);
+        t.row(&[
+            name.to_string(),
+            fmt_seqlen(seq),
+            fmt_duration_hms(std::time::Duration::from_secs_f64(iter_s)),
+            format!("{tflops:.1}"),
+            bound.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Tables 2/3/4 + Figures 1/12: baseline vs ALST at 1/8/32 GPUs.
+pub fn tables_2_3_4(model: &ModelPreset) -> Table {
+    let mut t = Table::new(
+        &format!("Tables 2-4: baseline vs ALST ({})", model.name),
+        &["gpus", "setup", "max seqlen", "iter time", "TFLOPS/GPU", "improvement"],
+    );
+    for world in [1usize, 8, 32] {
+        let (b_seq, _, b_iter, b_tf) = search_row(model, world, baseline_for(world));
+        let (a_seq, _, a_iter, a_tf) = search_row(model, world, alst_for(world));
+        t.row(&[
+            world.to_string(),
+            "baseline".into(),
+            fmt_seqlen(b_seq),
+            fmt_duration_hms(std::time::Duration::from_secs_f64(b_iter)),
+            format!("{b_tf:.1}"),
+            "1x".into(),
+        ]);
+        t.row(&[
+            world.to_string(),
+            "ALST".into(),
+            fmt_seqlen(a_seq),
+            fmt_duration_hms(std::time::Duration::from_secs_f64(a_iter)),
+            format!("{a_tf:.1}"),
+            format!("{:.0}x", a_seq as f64 / b_seq.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Figures 8/9/10: max seqlen vs GPU count for each evaluation model.
+pub fn fig_8_9_10(model_name: &str, gpu_range: &[usize]) -> Table {
+    let model = preset(model_name).expect("known preset");
+    let mut t = Table::new(
+        &format!("Figure 8-10: max seqlen scaling ({model_name})"),
+        &["gpus", "sp", "max seqlen", "bound by", "seqlen/gpu"],
+    );
+    for &world in gpu_range {
+        let flags = alst_for(world);
+        let est = Estimator::new(model, cluster_for(world), flags);
+        let sp = est.sp_degree(world);
+        let out = max_seqlen_search(&est, world);
+        if out.max_seqlen == 0 {
+            t.row(&[
+                world.to_string(),
+                sp.to_string(),
+                "OOM".into(),
+                out.binding.to_string(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        t.row(&[
+            world.to_string(),
+            sp.to_string(),
+            fmt_seqlen(out.max_seqlen),
+            out.binding.to_string(),
+            fmt_seqlen(out.max_seqlen / world),
+        ]);
+    }
+    t
+}
+
+/// Figure 2: estimated activation memory vs sequence length (Llama-8B).
+pub fn fig2_activation_memory() -> Table {
+    let model = preset("llama3-8b").unwrap();
+    let est = Estimator::new(model, ClusterConfig::h100(1), FeatureFlags::baseline());
+    let mut t = Table::new(
+        "Figure 2: Llama-8B activation memory vs seqlen (per GPU, baseline)",
+        &["seqlen", "ckpt GiB", "logits GiB", "work GiB", "total GiB"],
+    );
+    for seq in [32_768usize, 65_536, 131_072, 262_144, 524_288, 1_048_576] {
+        let b = est.breakdown(seq, 8);
+        let gib = |x: u64| x as f64 / GIB as f64;
+        let work = b.acts.attn_work + b.acts.mlp_work + b.acts.resid_work;
+        t.row(&[
+            fmt_seqlen(seq),
+            format!("{:.1}", gib(b.acts.ckpt_device)),
+            format!("{:.1}", gib(b.acts.logits_work)),
+            format!("{:.1}", gib(work)),
+            format!("{:.1}", gib(b.acts.device_peak())),
+        ]);
+    }
+    t
+}
+
+/// Figure 3: loss-computation peak memory, untiled vs tiled (16K, Llama-8B
+/// vocab). The paper measured 50 -> 36 GiB on the full model; we report
+/// the loss-head delta the tiling is responsible for.
+pub fn fig3_tiled_loss() -> Table {
+    let mut t = Table::new(
+        "Figure 3: logits+loss peak memory, untiled vs tiled (fp32)",
+        &["seqlen", "untiled GiB", "tiled GiB", "chunks", "saved GiB"],
+    );
+    for seq in [16_000usize, 32_000, 64_000, 128_000] {
+        let plan = plan_logits(seq, 128_256, GIB);
+        let gib = |x: u64| x as f64 / GIB as f64;
+        t.row(&[
+            fmt_seqlen(seq),
+            format!("{:.1}", gib(plan.untiled_bytes)),
+            format!("{:.1}", gib(plan.tile_bytes)),
+            plan.n_tiles.to_string(),
+            format!("{:.1}", gib(plan.untiled_bytes - plan.tile_bytes)),
+        ]);
+    }
+    t
+}
+
+/// Figure 4: TiledMLP memory on the single-layer 256K x 4096 example.
+pub fn fig4_tiled_mlp() -> Table {
+    let mut t = Table::new(
+        "Figure 4: LlamaMLP fwd+bwd memory, untiled vs TiledMLP (bf16)",
+        &["seqlen", "untiled GiB", "tiled GiB", "shards", "saving"],
+    );
+    for seq in [64_000usize, 128_000, 256_000, 512_000] {
+        let plan = plan_mlp(seq, 4096, 14336, 2);
+        let gib = |x: u64| x as f64 / GIB as f64;
+        t.row(&[
+            fmt_seqlen(seq),
+            format!("{:.1}", gib(plan.untiled_bytes)),
+            format!("{:.2}", gib(plan.tile_bytes)),
+            plan.n_tiles.to_string(),
+            format!("{:.1}x", plan.saving_factor()),
+        ]);
+    }
+    t
+}
+
+/// Figure 7: per-step device-memory timeline with/without ckpt offload —
+/// replayed through the allocation tracker event by event (the "hill"
+/// vs the flat line of the paper's profiler plots).
+pub fn fig7_offload_hill() -> Table {
+    let model = preset("llama3-8b").unwrap();
+    let mut t = Table::new(
+        "Figure 7: device-memory timeline per step (Llama-8B, 8 GPUs, 500K)",
+        &["setup", "device peak GiB", "host peak GiB", "timeline (fwd...bwd)"],
+    );
+    for (label, offload) in [("ckpt on device", false), ("ckpt offloaded", true)] {
+        let mut f = FeatureFlags::alst();
+        f.ckpt_offload = offload;
+        let r = crate::memory::simulate_step(model, 500_000, 8, &f, 1 << 45, 1 << 45)
+            .expect("simulate");
+        let gib = |x: u64| x as f64 / GIB as f64;
+        t.row(&[
+            label.to_string(),
+            format!("{:.1}", gib(r.device_peak)),
+            format!("{:.1}", gib(r.host_peak)),
+            crate::memory::sparkline(&r.samples, 40),
+        ]);
+    }
+    t
+}
+
+/// Design-choice ablation (DESIGN.md §5): how sensitive are the modeled
+/// iteration times to the interconnect assumptions? Sweeps the inter-node
+/// fabric and PCIe offload bandwidths around the paper's testbed values
+/// (EFA ~200 GB/s, PCIe ~50 GB/s) at the Table-4 operating point.
+pub fn comm_sensitivity_table() -> Table {
+    let model = preset("llama3-8b").unwrap();
+    let mut t = Table::new(
+        "Ablation: interconnect sensitivity (Llama-8B, 15M tokens, 32 GPUs)",
+        &["inter-node GB/s", "pcie GB/s", "iter time", "a2a s", "offload s", "TFLOPS/GPU"],
+    );
+    for (inter, pcie) in [
+        (100e9, 50e9),
+        (200e9, 50e9),   // the paper's testbed
+        (400e9, 50e9),
+        (200e9, 25e9),
+        (200e9, 100e9),
+    ] {
+        let mut cluster = ClusterConfig::h100(4);
+        cluster.inter_bw_bytes_per_s = inter;
+        cluster.pcie_bw_bytes_per_s = pcie;
+        let r = iteration_time(
+            &IterationModel {
+                model: model.clone(),
+                cluster,
+                flags: FeatureFlags::alst(),
+            },
+            15_000_000,
+            32,
+        );
+        t.row(&[
+            format!("{:.0}", inter / 1e9),
+            format!("{:.0}", pcie / 1e9),
+            fmt_duration_hms(std::time::Duration::from_secs_f64(r.iteration_s)),
+            format!("{:.1}", r.a2a_s),
+            format!("{:.1}", r.offload_s),
+            format!("{:.1}", r.tflops_per_gpu),
+        ]);
+    }
+    t
+}
+
+/// §7.1 limitations: valid SP degrees per model (bounded by q-head count
+/// and divisibility), incl. the paper's hypothetical 9q/3kv example.
+pub fn sp_limits_table() -> Table {
+    let mut t = Table::new(
+        "§7.1: Ulysses SP degree limits per model",
+        &["model", "q heads", "kv heads", "valid sp degrees", "max sp"],
+    );
+    let mut models: Vec<ModelPreset> =
+        crate::config::PRESETS.iter().cloned().collect();
+    models.push(ModelPreset {
+        name: "hypothetical-9q3kv",
+        params: 0,
+        hidden: 9 * 64,
+        n_layers: 1,
+        n_q_heads: 9,
+        n_kv_heads: 3,
+        head_dim: 64,
+        ffn: 1,
+        vocab: 1,
+    });
+    for m in &models {
+        let valid = m.valid_sp_degrees(64);
+        t.row(&[
+            m.name.to_string(),
+            m.n_q_heads.to_string(),
+            m.n_kv_heads.to_string(),
+            valid.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","),
+            m.max_sp().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Everything `alst tables` emits, keyed by CSV file name.
+pub fn all_tables() -> Vec<(&'static str, Table)> {
+    let m8 = preset("llama3-8b").unwrap();
+    vec![
+        ("fig2_activation_memory", fig2_activation_memory()),
+        ("fig3_tiled_loss", fig3_tiled_loss()),
+        ("fig4_tiled_mlp", fig4_tiled_mlp()),
+        ("fig7_offload_hill", fig7_offload_hill()),
+        ("table1_ablations", table1_ablations(m8, 8)),
+        ("tables_2_3_4_llama8b", tables_2_3_4(m8)),
+        (
+            "fig8_llama8b_scaling",
+            fig_8_9_10("llama3-8b", &[1, 2, 4, 8, 16, 32]),
+        ),
+        (
+            "fig9_llama70b_scaling",
+            fig_8_9_10("llama3-70b", &[16, 32, 64]),
+        ),
+        (
+            "fig10_qwen32b_scaling",
+            fig_8_9_10("qwen3-32b", &[1, 8, 16, 32, 64]),
+        ),
+        ("sec7_1_sp_limits", sp_limits_table()),
+        ("ablation_comm_sensitivity", comm_sensitivity_table()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_generate() {
+        let tables = all_tables();
+        assert_eq!(tables.len(), 11);
+        for (name, t) in &tables {
+            assert!(!t.rows.is_empty(), "{name} has no rows");
+        }
+    }
+
+    #[test]
+    fn sp_limits_match_paper_7_1() {
+        let t = sp_limits_table();
+        let nine_q = t.rows.iter().find(|r| r[0].contains("9q3kv")).unwrap();
+        // "if the model has 9 q_heads, you'd need SP to be 1, 3 or 9"
+        assert_eq!(nine_q[3], "1,3,9");
+        let l70 = t.rows.iter().find(|r| r[0] == "llama3-70b").unwrap();
+        assert_eq!(l70[4], "64"); // "SP=64 is the maximum possible"
+    }
+
+    #[test]
+    fn tables_2_3_4_show_orders_of_magnitude() {
+        let t = tables_2_3_4(preset("llama3-8b").unwrap());
+        // row layout: [gpus, setup, seqlen, iter, tflops, improvement]
+        let improvements: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[1] == "ALST")
+            .map(|r| r[5].trim_end_matches('x').parse().unwrap())
+            .collect();
+        assert_eq!(improvements.len(), 3);
+        // paper: 16x / 116x / 469x — require >=8x everywhere and growth
+        assert!(improvements.iter().all(|&x| x >= 8.0), "{improvements:?}");
+        assert!(improvements[2] > improvements[0], "{improvements:?}");
+    }
+
+    #[test]
+    fn fig8_scaling_is_monotone_nondecreasing() {
+        let t = fig_8_9_10("llama3-8b", &[1, 2, 4, 8, 16, 32]);
+        let seqs: Vec<&str> = t.rows.iter().map(|r| r[2].as_str()).collect();
+        assert!(!seqs.contains(&"OOM"));
+    }
+}

@@ -1,0 +1,110 @@
+//! flos (floating-point operations — the BLOOM-coined spelling the paper
+//! adopts, fn.22) for one training iteration at batch size 1.
+//!
+//! Forward per layer: QKVO projections + attention scores/values + SwiGLU
+//! MLP; plus the logits matmul once. Training = 3x forward (fwd + bwd)
+//! + 1x forward again when activation checkpointing recomputes (§5.4's
+//! "repeated forwards" — our backward literally re-runs the layer).
+
+use crate::config::ModelPreset;
+
+#[derive(Debug, Clone, Default)]
+pub struct FlosBreakdown {
+    pub proj: f64,
+    pub attention: f64,
+    pub mlp: f64,
+    pub logits: f64,
+}
+
+impl FlosBreakdown {
+    pub fn forward_total(&self) -> f64 {
+        self.proj + self.attention + self.mlp + self.logits
+    }
+
+    /// Fraction of forward flos spent in attention — the paper's "at such
+    /// long sequence lengths attention renders MLP compute negligible".
+    pub fn attention_fraction(&self) -> f64 {
+        self.attention / self.forward_total()
+    }
+}
+
+/// Forward flos for ONE layer at sequence length `s` (batch 1).
+pub fn flos_per_layer(m: &ModelPreset, s: usize) -> (f64, f64, f64) {
+    let s = s as f64;
+    let h = m.hidden as f64;
+    let hq = (m.n_q_heads * m.head_dim) as f64;
+    let hkv = (m.n_kv_heads * m.head_dim) as f64;
+    let f = m.ffn as f64;
+    // q,o: 2*s*h*hq each; k,v: 2*s*h*hkv each (GQA-aware)
+    let proj = 2.0 * s * h * (2.0 * hq + 2.0 * hkv);
+    // scores (2*s^2*hq) + values (2*s^2*hq); Megatron convention: no
+    // causal halving.
+    let attention = 4.0 * s * s * hq;
+    // SwiGLU: gate, up, down matmuls
+    let mlp = 6.0 * s * h * f;
+    (proj, attention, mlp)
+}
+
+/// Total training flos for one iteration over one full sequence `s`.
+/// `recompute` adds the checkpointing forward (4x vs 3x forward).
+pub fn train_flos(m: &ModelPreset, s: usize, recompute: bool) -> FlosBreakdown {
+    let (proj, attention, mlp) = flos_per_layer(m, s);
+    let l = m.n_layers as f64;
+    let logits = 2.0 * s as f64 * m.hidden as f64 * m.vocab as f64;
+    let mult = if recompute { 4.0 } else { 3.0 };
+    FlosBreakdown {
+        proj: proj * l * mult,
+        attention: attention * l * mult,
+        mlp: mlp * l * mult,
+        logits: logits * mult,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::preset;
+
+    #[test]
+    fn llama8b_32k_forward_magnitude() {
+        // Hand-computed: ~1.05e15 forward flos at 32K (see DESIGN.md).
+        let m = preset("llama3-8b").unwrap();
+        let b = train_flos(m, 32_768, true);
+        let fwd = b.forward_total() / 4.0;
+        assert!((fwd - 1.05e15).abs() / 1.05e15 < 0.05, "{fwd:e}");
+    }
+
+    #[test]
+    fn attention_dominates_at_multi_million() {
+        let m = preset("llama3-8b").unwrap();
+        let short = train_flos(m, 8_192, true);
+        let long = train_flos(m, 3_700_000, true);
+        assert!(short.attention_fraction() < 0.3);
+        assert!(long.attention_fraction() > 0.95); // §5.4's observation
+    }
+
+    #[test]
+    fn recompute_multiplier_is_4_over_3() {
+        let m = preset("llama3-8b").unwrap();
+        let with = train_flos(m, 65_536, true).forward_total();
+        let without = train_flos(m, 65_536, false).forward_total();
+        assert!(((with / without) - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quadratic_attention_scaling() {
+        let m = preset("llama3-8b").unwrap();
+        let a = train_flos(m, 100_000, true).attention;
+        let b = train_flos(m, 200_000, true).attention;
+        assert!((b / a - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gqa_reduces_proj_flos() {
+        let m = preset("llama3-8b").unwrap(); // 32q/8kv
+        let mha = ModelPreset { n_kv_heads: 32, ..m.clone() };
+        let (p_gqa, ..) = flos_per_layer(m, 10_000);
+        let (p_mha, ..) = flos_per_layer(&mha, 10_000);
+        assert!(p_gqa < p_mha);
+    }
+}

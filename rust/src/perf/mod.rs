@@ -1,0 +1,9 @@
+//! Performance model: the Megatron-style flos formula the paper uses for
+//! its TFLOPS columns (§5.4 "standard Megatron-LM flos estimation taking
+//! into account repeated forwards"), plus a roofline iteration-time model.
+
+mod flos;
+mod roofline;
+
+pub use flos::{flos_per_layer, train_flos, FlosBreakdown};
+pub use roofline::{iteration_time, IterationModel, PerfResult};

@@ -1,0 +1,179 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many.
+//!
+//! One `Engine` is shared by all simulated ranks (the CPU client is a
+//! single device; rank-parallelism is data isolation in the coordinator,
+//! not device parallelism — see DESIGN.md substitutions).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+/// Cumulative execution statistics (perf pass; EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub exec_time: Duration,
+    /// host->device literal construction time (the L3-side overhead).
+    pub marshal_time: Duration,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, executables: HashMap::new(), stats: RefCell::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact under `key`.
+    pub fn load_stage(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.executables.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every stage of a manifest, keyed `<manifest-config>/<stage>`.
+    pub fn load_manifest(&mut self, m: &Manifest) -> Result<()> {
+        for (name, st) in &m.stages {
+            let key = Self::stage_key(m, name);
+            self.load_stage(&key, &m.dir.join(&st.file))?;
+        }
+        Ok(())
+    }
+
+    pub fn stage_key(m: &Manifest, stage: &str) -> String {
+        format!("{}-sp{}-seq{}/{stage}", m.config.name, m.sp, m.seq)
+    }
+
+    /// Upload a host tensor to a device buffer (single copy). Cached
+    /// buffers are the §Perf fast path: parameters go up once per step
+    /// instead of twice per stage call (to_literal + execute's internal
+    /// device copy).
+    pub fn to_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = match t {
+            HostTensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        let mut s = self.stats.borrow_mut();
+        s.marshal_time += t0.elapsed();
+        s.bytes_in += t.size_bytes() as u64;
+        Ok(buf)
+    }
+
+    /// Execute a loaded stage on device buffers (the hot path).
+    pub fn execute_buffers(
+        &self,
+        key: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("stage `{key}` not loaded"))?;
+        let t1 = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let exec = t1.elapsed();
+
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.decompose_tuple()?;
+        let outputs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_time += exec;
+        s.bytes_out += outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
+        Ok(outputs)
+    }
+
+    /// Execute a loaded stage from host tensors (upload + run).
+    pub fn execute(&self, key: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| self.to_buffer(t))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute_buffers(key, &refs)
+    }
+
+    /// Execute with shape validation against the manifest (debug builds
+    /// and tests; the hot path uses `execute`).
+    pub fn execute_checked(
+        &self,
+        m: &Manifest,
+        stage: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let io = m.stage(stage);
+        anyhow::ensure!(
+            inputs.len() == io.inputs.len(),
+            "stage {stage}: {} inputs given, {} expected",
+            inputs.len(),
+            io.inputs.len()
+        );
+        for (t, meta) in inputs.iter().zip(&io.inputs) {
+            anyhow::ensure!(
+                t.shape() == meta.shape.as_slice(),
+                "stage {stage} input `{}`: shape {:?} != manifest {:?}",
+                meta.name,
+                t.shape(),
+                meta.shape
+            );
+        }
+        let out = self.execute(&Self::stage_key(m, stage), inputs)?;
+        for (t, meta) in out.iter().zip(&io.outputs) {
+            anyhow::ensure!(
+                t.shape() == meta.shape.as_slice(),
+                "stage {stage} output shape {:?} != manifest {:?}",
+                t.shape(),
+                meta.shape
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = EngineStats::default();
+    }
+
+    pub fn loaded_stages(&self) -> usize {
+        self.executables.len()
+    }
+}

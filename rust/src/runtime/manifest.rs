@@ -1,0 +1,253 @@
+//! `artifacts/<cfg>-sp<k>-seq<n>/manifest.json` — the contract between
+//! `python/compile/aot.py` and the coordinator. It fixes the stage input
+//! order, every tensor shape, and the flat-parameter layout ZeRO shards.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{numel, Dtype};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    fn parse(j: &Json) -> Result<TensorMeta> {
+        Ok(TensorMeta {
+            name: j.str_field("name")?.to_string(),
+            shape: j.shape_field("shape")?,
+            dtype: Dtype::parse(j.str_field("dtype")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StageIo {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// One named tensor inside the flat parameter buffer.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "ones" | "zeros" — init recipe (mirrors model.init_params).
+    pub init: String,
+    /// Offset in f32 elements into the flat parameter vector.
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+}
+
+/// The flat layout: [embed group][layer 0]..[layer L-1][final group].
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub embed: Vec<ParamEntry>,
+    /// Template for ONE layer; layer `i` lives at
+    /// `embed_numel + i * layer_numel + entry.offset`.
+    pub layer: Vec<ParamEntry>,
+    pub final_: Vec<ParamEntry>,
+    pub embed_numel: usize,
+    pub layer_numel: usize,
+    pub final_numel: usize,
+    pub n_layers: usize,
+}
+
+impl ParamLayout {
+    pub fn total_numel(&self) -> usize {
+        self.embed_numel + self.n_layers * self.layer_numel + self.final_numel
+    }
+
+    /// Absolute offset of `name` within layer `layer_idx`'s group.
+    pub fn layer_tensor(&self, layer_idx: usize, name: &str) -> Option<(usize, &ParamEntry)> {
+        let e = self.layer.iter().find(|e| e.name == name)?;
+        Some((self.embed_numel + layer_idx * self.layer_numel + e.offset, e))
+    }
+
+    pub fn embed_tensor(&self, name: &str) -> Option<(usize, &ParamEntry)> {
+        let e = self.embed.iter().find(|e| e.name == name)?;
+        Some((e.offset, e))
+    }
+
+    pub fn final_tensor(&self, name: &str) -> Option<(usize, &ParamEntry)> {
+        let e = self.final_.iter().find(|e| e.name == name)?;
+        Some((
+            self.embed_numel + self.n_layers * self.layer_numel + e.offset,
+            e,
+        ))
+    }
+
+    /// Flat-range of one whole layer group (for just-in-time all-gather).
+    pub fn layer_range(&self, layer_idx: usize) -> std::ops::Range<usize> {
+        let start = self.embed_numel + layer_idx * self.layer_numel;
+        start..start + self.layer_numel
+    }
+}
+
+/// Architecture echo of the python ModelConfig (subset the runtime needs).
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub head_dim: usize,
+    pub params_count: usize,
+    pub kernels: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ManifestConfig,
+    pub seq: usize,
+    pub sp: usize,
+    pub seq_shard: usize,
+    pub q_heads_shard: usize,
+    pub kv_heads_shard: usize,
+    pub ignore_index: i32,
+    pub stages: BTreeMap<String, StageIo>,
+    pub params: ParamLayout,
+}
+
+pub const STAGE_NAMES: &[&str] = &[
+    "embed_fwd", "embed_bwd", "pre_attn_fwd", "pre_attn_bwd", "attn_fwd",
+    "attn_bwd", "post_attn_fwd", "post_attn_bwd", "loss_fwd", "loss_bwd",
+];
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let cj = j.field("config")?;
+        let config = ManifestConfig {
+            name: cj.str_field("name")?.to_string(),
+            vocab: cj.usize_field("vocab")?,
+            hidden: cj.usize_field("hidden")?,
+            n_layers: cj.usize_field("n_layers")?,
+            n_q_heads: cj.usize_field("n_q_heads")?,
+            n_kv_heads: cj.usize_field("n_kv_heads")?,
+            ffn: cj.usize_field("ffn")?,
+            head_dim: cj.usize_field("head_dim")?,
+            params_count: cj.usize_field("params_count")?,
+            kernels: cj.str_field("kernels")?.to_string(),
+        };
+
+        let mut stages = BTreeMap::new();
+        let sj = j
+            .field("stages")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("stages is not an object"))?;
+        for (name, st) in sj {
+            let parse_list = |key: &str| -> Result<Vec<TensorMeta>> {
+                st.field(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorMeta::parse)
+                    .collect()
+            };
+            stages.insert(
+                name.clone(),
+                StageIo {
+                    file: st.str_field("file")?.to_string(),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        for required in STAGE_NAMES {
+            if !stages.contains_key(*required) {
+                bail!("manifest missing stage `{required}`");
+            }
+        }
+
+        let lj = j.field("param_layout")?;
+        let parse_group = |key: &str| -> Result<(Vec<ParamEntry>, usize)> {
+            let arr = lj
+                .field(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("param group {key} not array"))?;
+            let mut out = Vec::new();
+            let mut off = 0usize;
+            for e in arr {
+                let shape = e.shape_field("shape")?;
+                let n = numel(&shape);
+                out.push(ParamEntry {
+                    name: e.str_field("name")?.to_string(),
+                    shape,
+                    init: e.str_field("init")?.to_string(),
+                    offset: off,
+                });
+                off += n;
+            }
+            Ok((out, off))
+        };
+        let (embed, embed_numel) = parse_group("embed")?;
+        let (layer, layer_numel) = parse_group("layer")?;
+        let (final_, final_numel) = parse_group("final")?;
+        let params = ParamLayout {
+            embed,
+            layer,
+            final_,
+            embed_numel,
+            layer_numel,
+            final_numel,
+            n_layers: config.n_layers,
+        };
+        if params.total_numel() != config.params_count {
+            bail!(
+                "param layout total {} != params_count {}",
+                params.total_numel(),
+                config.params_count
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            seq: j.usize_field("seq")?,
+            sp: j.usize_field("sp")?,
+            seq_shard: j.usize_field("seq_shard")?,
+            q_heads_shard: j.usize_field("q_heads_shard")?,
+            kv_heads_shard: j.usize_field("kv_heads_shard")?,
+            ignore_index: j.f64_field("ignore_index")? as i32,
+            stages,
+            params,
+        })
+    }
+
+    pub fn stage(&self, name: &str) -> &StageIo {
+        &self.stages[name]
+    }
+
+    pub fn stage_path(&self, name: &str) -> PathBuf {
+        self.dir.join(&self.stages[name].file)
+    }
+
+    /// Locate an artifact dir under `root` for (config, sp, seq).
+    pub fn artifact_dir(root: &Path, config: &str, sp: usize, seq: usize) -> PathBuf {
+        root.join(format!("{config}-sp{sp}-seq{seq}"))
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them on PJRT.
+//!
+//! Python is build-time only; after `make artifacts` the rust binary is
+//! self-contained. The interchange is HLO *text* (the image's
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos; the text
+//! parser reassigns ids — see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{Manifest, ParamLayout, StageIo, TensorMeta};
+pub use tensor::{Dtype, HostTensor};

@@ -1,0 +1,203 @@
+//! Host-side tensors: the coordinator's working representation.
+//!
+//! Everything the coordinator moves between ranks, checkpoints, offloads,
+//! shards for ZeRO, or feeds to PJRT is a `HostTensor`. f32 end-to-end on
+//! the CPU client (see DESIGN.md substitutions).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+}
+
+/// Dense row-major tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(self.shape())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Scalar extraction (loss values, token counts).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (copy), recovering shape + dtype.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+
+    /// Elementwise accumulate (gradient reduction).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        anyhow::ensure!(self.shape() == other.shape(), "shape mismatch in add");
+        let dst = self.as_f32_mut()?;
+        let src = other.as_f32()?;
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, a: f32) -> Result<()> {
+        for d in self.as_f32_mut()? {
+            *d *= a;
+        }
+        Ok(())
+    }
+
+    /// L2 norm (gradient clipping / debugging).
+    pub fn l2_norm(&self) -> Result<f64> {
+        Ok(self
+            .as_f32()?
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::f32(vec![3], vec![0.5, 0.5, 0.5]);
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[1.5, 2.5, 3.5]);
+        assert!(a.add_assign(&HostTensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let s = HostTensor::scalar(2.5);
+        assert_eq!(s.scalar_f32().unwrap(), 2.5);
+        assert!(HostTensor::zeros(&[2]).scalar_f32().is_err());
+    }
+
+    #[test]
+    fn literal_round_trip_f32_and_i32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+        let ti = HostTensor::i32(vec![3], vec![7, -100, 2]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), ti);
+    }
+}

@@ -1,0 +1,114 @@
+//! Sequence-tiling plans (paper §3.1): shard-count deduction, chunk sizing,
+//! and the per-plan peak-memory arithmetic the estimator and Figure-3/4
+//! benches consume.
+
+/// TiledMLP shard count (§3.1.1): `ceil(seqlen / hidden_size)`.
+/// The paper's example: ceil(256_000 / 4096) = 63.
+pub fn mlp_auto_shards(seqlen: usize, hidden: usize) -> usize {
+    seqlen.div_ceil(hidden).max(1)
+}
+
+/// Rows per MLP tile under the auto-shard rule.
+pub fn mlp_tile_rows(seqlen: usize, hidden: usize) -> usize {
+    seqlen.div_ceil(mlp_auto_shards(seqlen, hidden))
+}
+
+/// Tiled-logits chunk rows: the paper shards logits into ~`chunk_bytes`
+/// fp32 pieces (§3.1 uses 1 GiB -> ~8 chunks for 16K x 128256).
+pub fn logits_chunk_rows(vocab: usize, chunk_bytes: u64) -> usize {
+    ((chunk_bytes / 4) as usize / vocab).max(1)
+}
+
+pub fn logits_chunk_count(seqlen: usize, vocab: usize, chunk_bytes: u64) -> usize {
+    seqlen.div_ceil(logits_chunk_rows(vocab, chunk_bytes))
+}
+
+/// One tiled-compute plan: what runs per tile and what memory it needs.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub n_tiles: usize,
+    pub rows_per_tile: usize,
+    /// Peak live bytes for the tile's intermediates.
+    pub tile_bytes: u64,
+    /// What the untiled computation would have needed.
+    pub untiled_bytes: u64,
+}
+
+impl TilePlan {
+    pub fn saving_factor(&self) -> f64 {
+        self.untiled_bytes as f64 / self.tile_bytes.max(1) as f64
+    }
+}
+
+/// Plan a TiledMLP pass over `[seqlen, hidden]` with SwiGLU width `ffn`.
+/// Intermediates per tile: gate + up `[rows, ffn]` + silu product, at
+/// `elem_bytes` per element.
+pub fn plan_mlp(seqlen: usize, hidden: usize, ffn: usize, elem_bytes: u64) -> TilePlan {
+    let n_tiles = mlp_auto_shards(seqlen, hidden);
+    let rows = seqlen.div_ceil(n_tiles);
+    let per_row = (2 * ffn + hidden) as u64 * elem_bytes;
+    TilePlan {
+        n_tiles,
+        rows_per_tile: rows,
+        tile_bytes: rows as u64 * per_row,
+        untiled_bytes: seqlen as u64 * per_row,
+    }
+}
+
+/// Plan a tiled logits+loss pass (fp32, 2 copies fwd+bwd as §3.1 measures).
+pub fn plan_logits(seqlen: usize, vocab: usize, chunk_bytes: u64) -> TilePlan {
+    let rows = logits_chunk_rows(vocab, chunk_bytes).min(seqlen);
+    let n_tiles = seqlen.div_ceil(rows);
+    TilePlan {
+        n_tiles,
+        rows_per_tile: rows,
+        tile_bytes: 2 * (rows * vocab) as u64 * 4,
+        untiled_bytes: 2 * (seqlen * vocab) as u64 * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+
+    #[test]
+    fn paper_3_1_1_auto_shards_63() {
+        assert_eq!(mlp_auto_shards(256_000, 4096), 63);
+        assert_eq!(mlp_auto_shards(4096, 4096), 1);
+        assert_eq!(mlp_auto_shards(1, 4096), 1);
+    }
+
+    #[test]
+    fn paper_3_1_logits_chunks_about_8_at_16k() {
+        // "using a 1GiB shard size divides the computation into about 8
+        // chunks" for 16K x 128256 fp32.
+        let n = logits_chunk_count(16_000, 128_256, GIB);
+        assert!((7..=9).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn mlp_plan_saves_order_of_magnitude_at_256k() {
+        // Figure 4: ~10x memory saved on the 256K x 4096 LlamaMLP example.
+        let plan = plan_mlp(256_000, 4096, 14336, 2);
+        assert!(plan.saving_factor() > 8.0, "{}", plan.saving_factor());
+        assert_eq!(plan.n_tiles, 63);
+    }
+
+    #[test]
+    fn logits_plan_saving_grows_with_seq() {
+        let a = plan_logits(16_000, 128_256, GIB);
+        let b = plan_logits(128_000, 128_256, GIB);
+        assert!(b.saving_factor() > a.saving_factor());
+        // chunk memory itself is seq-independent (the O(1) claim)
+        assert_eq!(a.tile_bytes, b.tile_bytes);
+    }
+
+    #[test]
+    fn tile_plans_cover_all_rows() {
+        for seq in [100, 4096, 250_000, 1_000_000] {
+            let p = plan_mlp(seq, 4096, 14336, 2);
+            assert!(p.n_tiles * p.rows_per_tile >= seq);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro-bench harness (criterion is unavailable offline): warmup, timed
+//! iterations, mean/median/p95 reporting, and table emission for the paper
+//! reproduction benches.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` throwaway iterations, then at least
+/// `min_iters` and at least `min_time` of measurement.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         min_time: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        median: samples[samples.len() / 2],
+        p95: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+        min: samples[0],
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Quick default: 2 warmups, >=10 iters, >=300ms.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 2, 10, Duration::from_millis(300), f)
+}
+
+/// Fixed-width table printer for the paper-table benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Also emit machine-readable CSV (used by EXPERIMENTS.md collection).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.header.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Human formatting for sequence lengths (paper style: 32K, 3.7M, 15M).
+pub fn fmt_seqlen(s: usize) -> String {
+    if s >= 1_000_000 {
+        let m = s as f64 / 1_000_000.0;
+        if m >= 10.0 { format!("{:.0}M", m) } else { format!("{:.1}M", m) }
+    } else if s >= 1_000 {
+        format!("{}K", s / 1_000)
+    } else {
+        s.to_string()
+    }
+}
+
+pub fn fmt_duration_hms(d: Duration) -> String {
+    let total = d.as_secs();
+    format!("{}:{:02}:{:02}", total / 3600, (total % 3600) / 60, total % 60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 5, Duration::from_millis(1), || {});
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,bb\n1,2\n");
+    }
+
+    #[test]
+    fn seqlen_formatting_matches_paper_style() {
+        assert_eq!(fmt_seqlen(32_768), "32K");
+        assert_eq!(fmt_seqlen(500_000), "500K");
+        assert_eq!(fmt_seqlen(3_700_000), "3.7M");
+        assert_eq!(fmt_seqlen(15_000_000), "15M");
+    }
+
+    #[test]
+    fn hms_formatting() {
+        assert_eq!(fmt_duration_hms(Duration::from_secs(17)), "0:00:17");
+        assert_eq!(fmt_duration_hms(Duration::from_secs(6455)), "1:47:35");
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny argv parser: `--key value`, `--flag`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = args("train --sp 4 --offload --seq=1024 tiny");
+        assert_eq!(a.positional, vec!["train", "tiny"]);
+        assert_eq!(a.usize("sp", 1), 4);
+        assert_eq!(a.usize("seq", 0), 1024);
+        assert!(a.flag("offload"));
+        assert!(!a.flag("zero3"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.usize("sp", 2), 2);
+        assert_eq!(a.get_or("config", "tiny"), "tiny");
+        assert_eq!(a.f64("lr", 3e-4), 3e-4);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--verbose run`: "run" is consumed as the value of --verbose
+        // (documented limitation: place flags after positionals or use =).
+        let a = args("--verbose=true run");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+}

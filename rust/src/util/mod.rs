@@ -1,0 +1,7 @@
+//! Self-contained utilities (the image has no network registry, so JSON,
+//! CLI parsing, RNG, and the bench harness are implemented in-tree).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

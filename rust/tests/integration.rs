@@ -1,0 +1,371 @@
+//! Integration tests over the real PJRT pipeline (require `make artifacts`).
+//!
+//! These prove the three layers compose: rust coordinator -> PJRT CPU ->
+//! AOT'd jax/Pallas stage programs — including the paper's central claims:
+//! SP-degree invariance of the training trajectory (Figure 13) and
+//! attention-implementation agnosticism (§3.2).
+
+use std::path::{Path, PathBuf};
+
+use alst::config::FeatureFlags;
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::runtime::Manifest;
+
+fn artifacts(config: &str, sp: usize, seq: usize) -> Option<PathBuf> {
+    // tests run from the crate root
+    let dir = Manifest::artifact_dir(Path::new("artifacts"), config, sp, seq);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: {} missing — run `make artifacts`",
+            dir.display()
+        );
+        None
+    }
+}
+
+fn train_losses(dir: &Path, sp: usize, steps: usize, seed: u64) -> Vec<f32> {
+    let mut trainer = Trainer::new(
+        dir,
+        TrainerOptions { seed, checked: true, ..Default::default() },
+    )
+    .expect("trainer");
+    let vocab = trainer.manifest.config.vocab;
+    let seq = trainer.manifest.seq;
+    let mut loader =
+        UlyssesDataLoader::new(MarkovSource::new(vocab, seq, 0.05, seed ^ 1), sp);
+    (0..steps)
+        .map(|_| {
+            let (ids, _) = loader.next();
+            trainer.train_step(&ids).expect("step").loss
+        })
+        .collect()
+}
+
+#[test]
+fn tiny_sp2_trains_and_loss_decreases() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let losses = train_losses(&dir, 2, 25, 3);
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    // starts near chance ln(512)=6.24 on the Markov corpus
+    assert!((first - 6.24).abs() < 0.5, "first loss {first}");
+    assert!(last < first - 0.05, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn figure13_sp_invariance_through_pjrt() {
+    // Identical init + data: SP=1, 2, 4 must produce the same trajectory.
+    // SP=4 > kv_heads=2 also exercises kv replication end to end.
+    let (Some(d1), Some(d2), Some(d4)) = (
+        artifacts("tiny", 1, 256),
+        artifacts("tiny", 2, 256),
+        artifacts("tiny", 4, 256),
+    ) else {
+        return;
+    };
+    let l1 = train_losses(&d1, 1, 5, 42);
+    let l2 = train_losses(&d2, 2, 5, 42);
+    let l4 = train_losses(&d4, 4, 5, 42);
+    for i in 0..5 {
+        assert!(
+            (l1[i] - l2[i]).abs() < 1e-4,
+            "sp1 vs sp2 step {i}: {} vs {}",
+            l1[i],
+            l2[i]
+        );
+        assert!(
+            (l1[i] - l4[i]).abs() < 1e-4,
+            "sp1 vs sp4 step {i}: {} vs {}",
+            l1[i],
+            l4[i]
+        );
+    }
+}
+
+#[test]
+fn attention_agnostic_kernel_swap() {
+    // §3.2: the coordinator is agnostic to the attention implementation.
+    // `tiny` uses the Pallas flash kernel, `tiny-ref` the naive jnp path;
+    // same coordinator, same seed -> same losses.
+    let (Some(d_pallas), Some(d_ref)) =
+        (artifacts("tiny", 2, 256), artifacts("tiny-ref", 2, 256))
+    else {
+        return;
+    };
+    let lp = train_losses(&d_pallas, 2, 4, 11);
+    let lr = train_losses(&d_ref, 2, 4, 11);
+    for i in 0..4 {
+        assert!(
+            (lp[i] - lr[i]).abs() < 2e-3,
+            "kernel swap changed training: step {i}: {} vs {}",
+            lp[i],
+            lr[i]
+        );
+    }
+}
+
+#[test]
+fn ckpt_offload_does_not_change_numerics() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut flags_off = FeatureFlags::alst();
+    flags_off.ckpt_offload = false;
+    let base = {
+        let mut t = Trainer::new(
+            &dir,
+            TrainerOptions { flags: flags_off, seed: 9, ..Default::default() },
+        )
+        .unwrap();
+        let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 8), 2);
+        let (ids, _) = dl.next();
+        t.train_step(&ids).unwrap()
+    };
+    let offl = {
+        let mut t = Trainer::new(
+            &dir,
+            TrainerOptions { flags: FeatureFlags::alst(), seed: 9, ..Default::default() },
+        )
+        .unwrap();
+        let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 8), 2);
+        let (ids, _) = dl.next();
+        t.train_step(&ids).unwrap()
+    };
+    assert_eq!(base.loss, offl.loss, "offload is accounting-only");
+    assert!(offl.ckpt_transfer_bytes > 0);
+    assert_eq!(base.ckpt_transfer_bytes, 0);
+    assert!(offl.device_peak_bytes < base.device_peak_bytes,
+        "offload must reduce device peak: {} vs {}",
+        offl.device_peak_bytes, base.device_peak_bytes);
+}
+
+#[test]
+fn eval_loss_matches_train_loss_before_update() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut trainer =
+        Trainer::new(&dir, TrainerOptions { seed: 5, ..Default::default() }).unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 4), 2);
+    let (ids, _) = dl.next();
+    let ev = trainer.eval_loss(&ids).unwrap();
+    let tr = trainer.train_step(&ids).unwrap().loss;
+    assert!((ev - tr).abs() < 1e-5, "{ev} vs {tr}");
+    // after the update, the SAME sequence must score better
+    let ev2 = trainer.eval_loss(&ids).unwrap();
+    assert!(ev2 < ev, "{ev} -> {ev2}");
+}
+
+#[test]
+fn a2a_traffic_matches_closed_form() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut trainer =
+        Trainer::new(&dir, TrainerOptions { seed: 1, ..Default::default() }).unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 2), 2);
+    let (ids, _) = dl.next();
+    let m = trainer.train_step(&ids).unwrap();
+    // per layer: fwd (q+k+v seq->head, o head->seq) + recompute (same) +
+    // bwd (d_attn seq->head, d_q/d_k/d_v head->seq).
+    let (seq, sp, d) = (256u64, 2u64, 16u64);
+    let (nq, nkv, q_sh, kv_sh) = (4u64, 2u64, 2u64, 1u64);
+    let fwd_once = 4 * (seq * q_sh * d           // q out
+        + 2 * seq * kv_sh * d                    // k, v out
+        + seq * q_sh * d);                       // o back
+    let _ = fwd_once; // closed form spelled out below per direction:
+    let s2h = |heads_out: u64| sp * seq / sp * heads_out * d * sp / sp; // logical
+    let _ = s2h;
+    let q = seq * q_sh * d * sp / sp; // per-rank out, summed over ranks = seq*q_sh*d*sp
+    let _ = q;
+    // Simplest exact check: recompute expectation from the ulysses helper.
+    let per_block_fwd = alst::coordinator::ulysses::a2a_bytes_per_block(
+        seq as usize, nq as usize, nkv as usize, d as usize, sp as usize, 4,
+    );
+    // fwd + recompute + bwd(d_o in + d_q/d_k/d_v out ~ same volume as fwd)
+    let expect = per_block_fwd * 3 * trainer.n_layers() as u64;
+    assert_eq!(m.a2a_bytes, expect, "a2a ledger mismatch");
+}
+
+#[test]
+fn manifest_rejects_missing_dir() {
+    let err = Trainer::new(Path::new("artifacts/nonexistent"), TrainerOptions::default());
+    assert!(err.is_err());
+}
+
+#[test]
+fn wrong_sequence_length_is_rejected() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut trainer =
+        Trainer::new(&dir, TrainerOptions::default()).unwrap();
+    let ids = vec![1i32; 128]; // artifact expects 256
+    assert!(trainer.train_step(&ids).is_err());
+}
+
+#[test]
+fn gradient_accumulation_equals_paper_gas_protocol() {
+    // §5.6: the baseline uses grad accumulation to see the same data as
+    // the SP run. Accumulating two micro-batches must differ from two
+    // separate optimizer steps, and the accumulated loss must be the mean.
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut t = Trainer::new(&dir, TrainerOptions { seed: 21, ..Default::default() }).unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 20), 2);
+    let (a, _) = dl.next();
+    let (b, _) = dl.next();
+    let m = t.train_step_accum(&[a.clone(), b.clone()]).unwrap();
+    assert!(m.loss.is_finite());
+    assert_eq!(m.tokens, 512);
+    assert_eq!(t.step_count(), 1); // ONE optimizer step for two batches
+
+    // the accumulated loss is the mean of the two individual losses
+    let mut t2 =
+        Trainer::new(&dir, TrainerOptions { seed: 21, ..Default::default() }).unwrap();
+    let la = t2.eval_loss(&a).unwrap();
+    let lb = t2.eval_loss(&b).unwrap();
+    assert!((m.loss - (la + lb) / 2.0).abs() < 1e-4, "{} vs {}", m.loss, (la + lb) / 2.0);
+}
+
+#[test]
+fn snapshot_resume_continues_identically() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let snap_path = std::env::temp_dir().join("alst-resume-test.alst");
+
+    // run 4 steps, snapshot after 2
+    let mut t1 = Trainer::new(&dir, TrainerOptions { seed: 33, ..Default::default() }).unwrap();
+    let mut dl1 = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 30), 2);
+    let mut losses_full = Vec::new();
+    for i in 0..4 {
+        let (ids, _) = dl1.next();
+        losses_full.push(t1.train_step(&ids).unwrap().loss);
+        if i == 1 {
+            t1.save_snapshot(&snap_path).unwrap();
+        }
+    }
+
+    // fresh trainer resumes from the snapshot; replay the same data stream
+    let mut t2 = Trainer::new(&dir, TrainerOptions { seed: 99, ..Default::default() }).unwrap();
+    t2.load_snapshot(&snap_path).unwrap();
+    assert_eq!(t2.step_count(), 2);
+    let mut dl2 = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 30), 2);
+    let (_s1, _) = dl2.next();
+    let (_s2, _) = dl2.next();
+    for i in 2..4 {
+        let (ids, _) = dl2.next();
+        let loss = t2.train_step(&ids).unwrap().loss;
+        assert!(
+            (loss - losses_full[i]).abs() < 1e-5,
+            "resume diverged at step {i}: {loss} vs {}",
+            losses_full[i]
+        );
+    }
+}
+
+#[test]
+fn lr_schedule_is_applied() {
+    use alst::coordinator::pipeline::LrSchedule;
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let sched = LrSchedule { peak_lr: 1e-3, warmup_steps: 2, total_steps: 10, min_lr: 1e-5 };
+    // schedule math itself:
+    assert!((sched.lr_at(0) - 5e-4).abs() < 1e-9);
+    assert!((sched.lr_at(1) - 1e-3).abs() < 1e-9);
+    assert!(sched.lr_at(9) < sched.lr_at(2));
+    assert!(sched.lr_at(100) >= 1e-5);
+
+    let mut t = Trainer::new(
+        &dir,
+        TrainerOptions { seed: 1, lr_schedule: Some(sched), ..Default::default() },
+    )
+    .unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 2), 2);
+    let (ids, _) = dl.next();
+    t.train_step(&ids).unwrap();
+    assert!((t.opt.cfg.lr - 5e-4).abs() < 1e-9, "warmup lr applied: {}", t.opt.cfg.lr);
+}
+
+#[test]
+fn host_pool_exhaustion_surfaces_through_trainer() {
+    // §5.3.2's failure mode: ckpt offload needs host RAM; when the node
+    // budget is too small the step must fail with a clear error (not OOM
+    // the device silently).
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut t = Trainer::new(
+        &dir,
+        TrainerOptions { host_bytes: 1024, ..Default::default() }, // 1 KiB host
+    )
+    .unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 2), 2);
+    let (ids, _) = dl.next();
+    let err = t.train_step(&ids).unwrap_err();
+    assert!(format!("{err:#}").contains("host memory"), "{err:#}");
+}
+
+#[test]
+fn device_budget_exhaustion_without_offload() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut flags = FeatureFlags::alst();
+    flags.ckpt_offload = false; // checkpoints land on the tiny device
+    let mut t = Trainer::new(
+        &dir,
+        TrainerOptions { flags, device_bytes: 4096, ..Default::default() },
+    )
+    .unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 2), 2);
+    let (ids, _) = dl.next();
+    let err = t.train_step(&ids).unwrap_err();
+    assert!(format!("{err:#}").contains("OOM"), "{err:#}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_with_context() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    // copy the artifact dir, then break the manifest param layout
+    let tmp = std::env::temp_dir().join("alst-corrupt-manifest");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+    }
+    let mpath = tmp.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    // params_count inconsistent with the layout -> loader must refuse
+    let broken = text.replace("\"params_count\": 139584", "\"params_count\": 1");
+    assert_ne!(text, broken, "fixture assumption: tiny params_count");
+    std::fs::write(&mpath, broken).unwrap();
+    let err = Trainer::new(&tmp, TrainerOptions::default());
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("param layout"), "{msg}");
+}
+
+#[test]
+fn truncated_hlo_artifact_fails_compile_not_crash() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let tmp = std::env::temp_dir().join("alst-truncated-hlo");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+    }
+    let hlo = tmp.join("attn_fwd.hlo.txt");
+    let text = std::fs::read_to_string(&hlo).unwrap();
+    std::fs::write(&hlo, &text[..text.len() / 3]).unwrap();
+    let err = Trainer::new(&tmp, TrainerOptions::default());
+    assert!(err.is_err(), "truncated HLO must be a load error");
+}
+
+#[test]
+fn corpus_source_trains_through_pipeline() {
+    // the tiny-corpus (byte-tokenized real file) data path end to end
+    use alst::coordinator::dataloader::{BatchSource, CorpusSource};
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let mut t =
+        Trainer::new(&dir, TrainerOptions { seed: 2, ..Default::default() }).unwrap();
+    let mut src = CorpusSource::from_file(Path::new("README.md"), 256, 3).unwrap();
+    for _ in 0..2 {
+        let ids = src.next_sequence();
+        let m = t.train_step(&ids).unwrap();
+        assert!(m.loss.is_finite() && m.loss > 0.0);
+        // byte corpus: every token id < 256 < vocab 512
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+}

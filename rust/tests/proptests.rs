@@ -1,0 +1,389 @@
+//! Property-based tests (hand-rolled runner — proptest is unavailable in
+//! this offline image; `check` runs each property over many seeded random
+//! cases and reports the failing case on panic).
+
+use alst::collectives::Group;
+use alst::config::{preset, ClusterConfig, FeatureFlags, ParallelConfig};
+use alst::coordinator::dataloader::{shard_sequence, shift_labels, IGNORE_INDEX};
+use alst::coordinator::optimizer::{AdamW, AdamWConfig};
+use alst::coordinator::ulysses::{
+    a2a_head_to_seq, a2a_seq_to_head, head_start, heads_per_rank, sp_is_valid,
+};
+use alst::coordinator::zero::ShardedStore;
+use alst::memory::{max_seqlen_search, Estimator};
+use alst::runtime::HostTensor;
+use alst::util::json::Json;
+use alst::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded cases; on failure, re-panic with the seed.
+fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property `{name}` failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_tensor(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(shape.to_vec(), rng.normal_vec(n, 1.0))
+}
+
+// ---------------------------------------------------------------------------
+// Ulysses relayout properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_a2a_round_trip_identity() {
+    check("a2a round trip", 40, |rng| {
+        let sp = [1usize, 2, 4, 8][rng.below(4)];
+        let heads = sp * (1 + rng.below(3)); // divisible, no replication
+        let ssh = 1 + rng.below(16);
+        let d = 1 + rng.below(8);
+        let shards: Vec<HostTensor> =
+            (0..sp).map(|_| random_tensor(rng, &[ssh, heads, d])).collect();
+        let g = Group::new(sp);
+        let full = a2a_seq_to_head(&g, &shards);
+        let back = a2a_head_to_seq(&g, &full, heads, false);
+        assert_eq!(shards, back);
+    });
+}
+
+#[test]
+fn prop_a2a_replication_grad_flow_conserves_sum() {
+    // sum over all gradient elements is conserved by the backward a2a,
+    // including the kv-replication (sum_replicas) case.
+    check("a2a grad conservation", 40, |rng| {
+        let sp = [2usize, 4, 8][rng.below(3)];
+        let n_kv = 1 + rng.below(sp); // may be < sp (replication)
+        if !sp_is_valid(sp * 4, n_kv, sp) {
+            return;
+        }
+        let kv_sh = heads_per_rank(n_kv, sp);
+        let seq = sp * (1 + rng.below(8));
+        let d = 1 + rng.below(4);
+        let shards: Vec<HostTensor> =
+            (0..sp).map(|_| random_tensor(rng, &[seq, kv_sh, d])).collect();
+        let total_in: f64 = shards
+            .iter()
+            .map(|t| t.as_f32().unwrap().iter().map(|&x| x as f64).sum::<f64>())
+            .sum();
+        let g = Group::new(sp);
+        let back = a2a_head_to_seq(&g, &shards, n_kv, true);
+        let total_out: f64 = back
+            .iter()
+            .map(|t| t.as_f32().unwrap().iter().map(|&x| x as f64).sum::<f64>())
+            .sum();
+        assert!(
+            (total_in - total_out).abs() < 1e-3 * total_in.abs().max(1.0),
+            "{total_in} vs {total_out}"
+        );
+    });
+}
+
+#[test]
+fn prop_head_assignment_partitions_q_heads() {
+    // Every q head is owned by exactly one rank; kv head ownership covers
+    // all ranks' needs (paper §3.2.1).
+    check("head partition", 60, |rng| {
+        let sp = 1 << rng.below(6);
+        let n_q = sp * (1 + rng.below(4));
+        let q_sh = heads_per_rank(n_q, sp);
+        let mut seen = vec![0usize; n_q];
+        for r in 0..sp {
+            let start = r * q_sh;
+            for h in start..start + q_sh {
+                seen[h] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "q heads not partitioned");
+        // kv: head_start is monotone and within range
+        let n_kv = 1 + rng.below(n_q);
+        let mut prev = 0;
+        for r in 0..sp {
+            let h = head_start(r, n_kv, sp);
+            assert!(h < n_kv);
+            assert!(h >= prev);
+            prev = h;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ZeRO sharding properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_flat_shard_round_trip() {
+    check("sharded store round trip", 60, |rng| {
+        let total = 1 + rng.below(4000);
+        let world = 1 + rng.below(16);
+        let flat: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+        let store = ShardedStore::from_flat(&flat, world);
+        assert_eq!(store.to_flat(), flat);
+        // arbitrary range gather equals the slice
+        let a = rng.below(total);
+        let b = a + rng.below(total - a + 1);
+        let g = Group::new(world);
+        assert_eq!(store.gather_range(&g, a..b), flat[a..b]);
+    });
+}
+
+#[test]
+fn prop_reduce_into_range_equals_direct_sum() {
+    check("reduce-scatter correctness", 40, |rng| {
+        let total = 16 + rng.below(500);
+        let world = 1 + rng.below(8);
+        let a = rng.below(total);
+        let b = (a + 1 + rng.below(total - a)).min(total);
+        let mut store = ShardedStore::zeros(total, world);
+        let contribs: Vec<Vec<f32>> = (0..world)
+            .map(|_| (0..b - a).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = contribs.iter().map(|c| c.as_slice()).collect();
+        let g = Group::new(world);
+        store.reduce_into_range(&g, a..b, &refs);
+        let flat = store.to_flat();
+        for i in 0..total {
+            let want: f32 = if (a..b).contains(&i) {
+                contribs.iter().map(|c| c[i - a]).sum()
+            } else {
+                0.0
+            };
+            assert!((flat[i] - want).abs() < 1e-4, "idx {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_adamw_world_invariance() {
+    check("adamw sharding invariance", 20, |rng| {
+        let n = 8 + rng.below(64);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let grads: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut outs = Vec::new();
+        for world in [1usize, 3, 8] {
+            let mut p = ShardedStore::from_flat(&init, world);
+            let g = ShardedStore::from_flat(&grads, world);
+            let mut opt = AdamW::new(AdamWConfig::default(), n, world);
+            opt.step(&mut p, &g);
+            outs.push(p.to_flat());
+        }
+        for w in 1..outs.len() {
+            for i in 0..n {
+                assert!(
+                    (outs[0][i] - outs[w][i]).abs() < 1e-6,
+                    "divergence at {i}"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dataloader / labels properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shifted_labels_partition_tokens() {
+    // Concatenated shard labels == shift(full) exactly; nothing dropped
+    // at shard boundaries for ANY valid sp (the §4.3 bug class).
+    check("label sharding", 60, |rng| {
+        let sp = [1usize, 2, 4, 8][rng.below(4)];
+        let ssh = 1 + rng.below(32);
+        let seq = sp * ssh;
+        let ids: Vec<i32> = (0..seq).map(|_| rng.below(1000) as i32).collect();
+        let shards = shard_sequence(&ids, sp);
+        let flat: Vec<i32> =
+            shards.iter().flat_map(|s| s.labels.clone()).collect();
+        assert_eq!(flat, shift_labels(&ids));
+        assert_eq!(flat.iter().filter(|&&l| l == IGNORE_INDEX).count(), 1);
+        // positions are the identity permutation
+        let pos: Vec<i32> =
+            shards.iter().flat_map(|s| s.positions.clone()).collect();
+        assert_eq!(pos, (0..seq as i32).collect::<Vec<_>>());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Memory simulator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_estimator_monotone_in_seq() {
+    check("estimator seq monotonicity", 20, |rng| {
+        let model = preset(["llama3-8b", "llama3-70b", "qwen3-32b"][rng.below(3)]).unwrap();
+        let flags = if rng.below(2) == 0 {
+            FeatureFlags::baseline()
+        } else {
+            FeatureFlags::alst()
+        };
+        let est = Estimator::new(model, ClusterConfig::h100(1), flags);
+        let s1 = 1_000 + rng.below(1_000_000);
+        let s2 = s1 * 2;
+        let b1 = est.breakdown(s1, 8).device_total();
+        let b2 = est.breakdown(s2, 8).device_total();
+        assert!(b2 >= b1, "seq {s1}->{s2}: {b1} -> {b2}");
+    });
+}
+
+#[test]
+fn prop_search_result_is_tight() {
+    check("search tightness", 12, |rng| {
+        let model = preset(["llama3-8b", "qwen3-32b"][rng.below(2)]).unwrap();
+        let world = [8usize, 16, 32][rng.below(3)];
+        let est = Estimator::new(
+            model,
+            ClusterConfig::h100(world.div_ceil(8)),
+            FeatureFlags::alst(),
+        );
+        let out = max_seqlen_search(&est, world);
+        if out.max_seqlen > 0 {
+            assert!(est.fits(out.max_seqlen, world), "reported max must fit");
+            assert!(
+                !est.fits(out.max_seqlen + 2_000, world),
+                "max+2K must not fit (quantum 1K)"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Topology + util properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grid_bijection() {
+    check("dp x sp grid bijection", 40, |rng| {
+        let dp = 1 + rng.below(8);
+        let sp = 1 + rng.below(8);
+        let p = ParallelConfig::new(dp, sp);
+        let mut seen = vec![false; p.world_size()];
+        for d in 0..dp {
+            for s in 0..sp {
+                let r = p.rank_of(d, s);
+                assert!(!seen[r]);
+                seen[r] = true;
+                assert_eq!(p.coords(r), (d, s));
+            }
+        }
+        // groups are consistent
+        for r in 0..p.world_size() {
+            assert!(p.sp_group(r).contains(&r));
+            assert!(p.dp_group(r).contains(&r));
+            assert_eq!(p.sp_group(r).len(), sp);
+            assert_eq!(p.dp_group(r).len(), dp);
+        }
+    });
+}
+
+#[test]
+fn prop_json_round_trip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(100000) as f64) - 50000.0),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json round trip", 80, |rng| {
+        let j = random_json(rng, 3);
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).expect("reparse");
+        assert_eq!(j, back, "{text}");
+    });
+}
+
+#[test]
+fn prop_alst_features_never_hurt_max_seqlen() {
+    // adding any single ALST feature to any base flag set must not
+    // DECREASE the achievable sequence length (memory monotonicity).
+    check("feature monotonicity", 16, |rng| {
+        let model = preset(["llama3-8b", "qwen3-32b"][rng.below(2)]).unwrap();
+        let world = [8usize, 32][rng.below(2)];
+        let mut base = FeatureFlags::baseline();
+        // random subset of ALST features already on
+        if rng.below(2) == 0 { base.tiled_loss = true; }
+        if rng.below(2) == 0 { base.ulysses_sp = true; }
+        if rng.below(2) == 0 { base.tiled_mlp = true; }
+        let cluster = ClusterConfig::h100(world.div_ceil(8));
+        let before =
+            max_seqlen_search(&Estimator::new(model, cluster.clone(), base), world).max_seqlen;
+        for add in 0..4 {
+            let mut f = base;
+            match add {
+                0 => f.tiled_loss = true,
+                1 => f.ulysses_sp = true,
+                2 => f.tiled_mlp = true,
+                _ => f.ckpt_offload = true,
+            }
+            let after =
+                max_seqlen_search(&Estimator::new(model, cluster.clone(), f), world).max_seqlen;
+            assert!(
+                after >= before,
+                "feature {add} hurt: {before} -> {after} ({})",
+                f.describe()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lr_schedule_is_continuous_and_bounded() {
+    use alst::coordinator::pipeline::LrSchedule;
+    check("lr schedule bounds", 30, |rng| {
+        let sched = LrSchedule {
+            peak_lr: 1e-4 + rng.uniform() as f32 * 1e-2,
+            warmup_steps: rng.below(50) as u64,
+            total_steps: 50 + rng.below(500) as u64,
+            min_lr: 1e-6,
+        };
+        let mut prev = sched.lr_at(0);
+        assert!(prev > 0.0);
+        for step in 1..sched.total_steps + 10 {
+            let lr = sched.lr_at(step);
+            assert!(lr >= sched.min_lr - 1e-9, "below min at {step}");
+            assert!(lr <= sched.peak_lr + 1e-9, "above peak at {step}");
+            // no discontinuity bigger than the warmup ramp quantum
+            let max_jump = sched.peak_lr / sched.warmup_steps.max(1) as f32
+                + sched.peak_lr * 0.1;
+            assert!((lr - prev).abs() <= max_jump, "jump at {step}: {prev} -> {lr}");
+            prev = lr;
+        }
+        // decay phase ends at min_lr
+        assert!((sched.lr_at(sched.total_steps) - sched.min_lr).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_timeline_peak_bounded_by_estimator_style_sum() {
+    // the replayed timeline's device peak is consistent: positive, and
+    // strictly higher without offload than with, for any seq/sp.
+    check("timeline offload dominance", 16, |rng| {
+        let model = preset("llama3-8b").unwrap();
+        let sp = [1usize, 2, 4, 8][rng.below(4)];
+        let seq = sp * (1_000 + rng.below(500_000));
+        let mut on = FeatureFlags::alst();
+        on.ckpt_offload = true;
+        let mut off = FeatureFlags::alst();
+        off.ckpt_offload = false;
+        let r_on =
+            alst::memory::simulate_step(model, seq, sp, &on, 1 << 50, 1 << 50).unwrap();
+        let r_off =
+            alst::memory::simulate_step(model, seq, sp, &off, 1 << 50, 1 << 50).unwrap();
+        assert!(r_on.device_peak > 0);
+        assert!(r_off.device_peak >= r_on.device_peak);
+        assert_eq!(r_off.host_peak, 0);
+    });
+}
