@@ -1,0 +1,78 @@
+"""Rust <-> Pallas packed-layout contract (mirror of
+`rust/tests/packed_integration.rs`).
+
+The rust packing subsystem (`rust/src/packing/`) materializes seg_ids /
+position_ids / cu_seqlens for packed batches; the Pallas kernel
+`packed_attn.py` consumes the same convention. These fixtures are
+hard-coded IDENTICALLY on both sides: if either implementation drifts,
+one of the two suites fails. No hypothesis dependency — this file must
+run in minimal environments.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from compile.kernels import packed_attn
+
+
+def cu_seqlens_from(lengths):
+    """cu_seqlens as the rust side defines it: [0, cumsum(lengths)...]."""
+    return np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+
+
+class TestRustLayoutContract:
+    def test_fixture_3_2_4(self):
+        seg, pos = packed_attn.make_packed_segments([3, 2, 4])
+        np.testing.assert_array_equal(seg, [0, 0, 0, 1, 1, 2, 2, 2, 2])
+        np.testing.assert_array_equal(pos, [0, 1, 2, 0, 1, 0, 1, 2, 3])
+        np.testing.assert_array_equal(cu_seqlens_from([3, 2, 4]), [0, 3, 5, 9])
+
+    def test_fixture_2_3(self):
+        seg, pos = packed_attn.make_packed_segments([2, 3])
+        np.testing.assert_array_equal(seg, [0, 0, 1, 1, 1])
+        np.testing.assert_array_equal(pos, [0, 1, 0, 1, 2])
+        np.testing.assert_array_equal(cu_seqlens_from([2, 3]), [0, 2, 5])
+
+    def test_seg_ids_and_cu_seqlens_describe_the_same_mask(self):
+        """The kernel's block rule `causal & (seg_q == seg_k)` must equal
+        the mask implied by cu_seqlens windows — the rust coordinator
+        ships cu_seqlens, the kernel consumes seg_ids."""
+        lengths = [3, 2, 4, 1]
+        seg, _ = packed_attn.make_packed_segments(lengths)
+        seg = np.asarray(seg)
+        cu = cu_seqlens_from(lengths)
+        s = int(seg.shape[0])
+        causal = np.tril(np.ones((s, s), bool))
+        kernel_mask = causal & (seg[:, None] == seg[None, :])
+        window_mask = np.zeros((s, s), bool)
+        for a, b in zip(cu[:-1], cu[1:]):
+            window_mask[a:b, a:b] = causal[a:b, a:b]
+        np.testing.assert_array_equal(kernel_mask, window_mask)
+
+    def test_positions_reset_exactly_at_cu_boundaries(self):
+        lengths = [5, 1, 7, 2]
+        _, pos = packed_attn.make_packed_segments(lengths)
+        pos = np.asarray(pos)
+        cu = cu_seqlens_from(lengths)
+        for a, b in zip(cu[:-1], cu[1:]):
+            np.testing.assert_array_equal(pos[a:b], np.arange(b - a))
+
+    def test_shift_labels_packed_semantics(self):
+        """Mirror of `packing::shift_labels_packed`: shift within each
+        segment, IGNORE_INDEX (-100) at every segment's last token."""
+        IGNORE = -100
+        lengths = [3, 2, 4]
+        ids = np.concatenate(
+            [100 * (i + 1) + np.arange(n) for i, n in enumerate(lengths)]
+        )
+        cu = cu_seqlens_from(lengths)
+        labels = np.full_like(ids, IGNORE)
+        for a, b in zip(cu[:-1], cu[1:]):
+            labels[a : b - 1] = ids[a + 1 : b]
+        np.testing.assert_array_equal(
+            labels, [101, 102, IGNORE, 201, IGNORE, 301, 302, 303, IGNORE]
+        )
+        # the naive whole-sequence shift leaks one target per boundary
+        naive = np.concatenate([ids[1:], [IGNORE]])
+        leaks = np.nonzero(naive != labels)[0]
+        np.testing.assert_array_equal(leaks, cu[1:-1] - 1)

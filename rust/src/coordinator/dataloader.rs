@@ -22,6 +22,15 @@ pub struct ShardedBatch {
 }
 
 /// Paper §4.3: shift-left on the full sequence, pad with IGNORE_INDEX.
+///
+/// WHOLE-SEQUENCE-ONLY. This shift assumes `ids` is ONE document. On a
+/// packed sequence (several documents back to back) it leaks exactly one
+/// cross-document target per boundary: the last token of each document
+/// gets the NEXT document's first token as its label — a silent §7.2-class
+/// correctness bug. Packed inputs must use
+/// `crate::packing::shift_labels_packed`, which masks every boundary with
+/// `IGNORE_INDEX` instead (see `naive_shift_leaks_across_packed_boundaries`
+/// below for the executable counterexample).
 pub fn shift_labels(ids: &[i32]) -> Vec<i32> {
     let mut out = Vec::with_capacity(ids.len());
     out.extend_from_slice(&ids[1..]);
@@ -232,6 +241,44 @@ mod tests {
         let all: Vec<i32> = sh.iter().flat_map(|s| s.labels.clone()).collect();
         let expect: Vec<i32> = (101..164).chain([IGNORE_INDEX]).collect();
         assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn naive_shift_leaks_across_packed_boundaries() {
+        // The shift_labels hazard (companion to `naive_shard_then_shift`):
+        // applied to a PACKED sequence it emits exactly one cross-document
+        // target per boundary; the segment-aware shift differs from it at
+        // exactly those positions and nowhere else.
+        use crate::packing::shift_labels_packed;
+        let lens = [3usize, 2, 4, 1];
+        let mut ids = Vec::new();
+        let mut cu = vec![0i32];
+        for (d, &n) in lens.iter().enumerate() {
+            ids.extend((0..n as i32).map(|t| 100 * (d as i32 + 1) + t));
+            cu.push(ids.len() as i32);
+        }
+        let naive = shift_labels(&ids);
+        let packed = shift_labels_packed(&ids, &cu);
+        let boundaries: Vec<usize> =
+            cu[1..cu.len() - 1].iter().map(|&c| c as usize - 1).collect();
+        for i in 0..ids.len() {
+            if boundaries.contains(&i) {
+                // the leak: naive targets the NEXT document's first token
+                assert_eq!(naive[i], ids[i + 1], "expected leak at {i}");
+                assert_ne!(naive[i] / 100, ids[i] / 100, "leak crosses docs");
+                assert_eq!(packed[i], IGNORE_INDEX, "packed must mask {i}");
+            } else {
+                assert_eq!(naive[i], packed[i], "only boundaries differ ({i})");
+            }
+        }
+        // exactly one leaked target per internal boundary
+        let leaks = ids
+            .iter()
+            .enumerate()
+            .take(ids.len() - 1)
+            .filter(|&(i, _)| naive[i] != packed[i])
+            .count();
+        assert_eq!(leaks, lens.len() - 1);
     }
 
     #[test]

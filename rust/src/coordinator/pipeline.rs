@@ -23,7 +23,8 @@ use anyhow::{Context, Result};
 
 use crate::collectives::Group;
 use crate::config::FeatureFlags;
-use crate::coordinator::dataloader::{shard_sequence, ShardedBatch};
+use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX};
+use crate::packing::{shard_packed, PackedSequence};
 use crate::coordinator::optimizer::{AdamW, AdamWConfig};
 use crate::coordinator::tape::CheckpointTape;
 use crate::coordinator::ulysses::{a2a_head_to_seq, a2a_seq_to_head};
@@ -67,6 +68,11 @@ pub struct TrainerOptions {
     pub host_bytes: u64,
     /// Validate every stage's shapes against the manifest (tests; ~free).
     pub checked: bool,
+    /// Extract per-document losses on packed steps. Costs n_docs extra
+    /// loss-head passes (the logits matmul — the most expensive single
+    /// stage at large vocab) per step; turn off for steady-state
+    /// training where only the aggregate loss matters.
+    pub per_doc_loss: bool,
 }
 
 impl Default for TrainerOptions {
@@ -79,6 +85,7 @@ impl Default for TrainerOptions {
             device_bytes: 1 << 40,
             host_bytes: 1 << 40,
             checked: false,
+            per_doc_loss: true,
         }
     }
 }
@@ -96,6 +103,27 @@ pub struct StepMetrics {
     pub reduce_scatter_bytes: u64,
     pub ckpt_transfer_bytes: u64,
     pub device_peak_bytes: u64,
+}
+
+/// Loss attributed to one document of a packed batch (`metrics` logs
+/// these; `tokens` is the document length, so `tokens - 1` targets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DocumentLoss {
+    pub doc_id: u64,
+    pub tokens: usize,
+    pub loss: f32,
+}
+
+/// Per-step record for a packed batch: the aggregate step metrics plus
+/// the per-document loss breakdown and packing accounting.
+#[derive(Debug, Clone)]
+pub struct PackedStepMetrics {
+    pub metrics: StepMetrics,
+    pub doc_losses: Vec<DocumentLoss>,
+    /// Document tokens in the pack (excludes padding).
+    pub real_tokens: usize,
+    /// Trailing padding tokens (loss-masked).
+    pub padding_tokens: usize,
 }
 
 /// Device-resident parameter buffers for one step (perf fast path).
@@ -118,6 +146,7 @@ pub struct Trainer {
     lr_schedule: Option<LrSchedule>,
     step: u64,
     checked: bool,
+    per_doc_loss: bool,
 }
 
 impl Trainer {
@@ -151,6 +180,7 @@ impl Trainer {
             lr_schedule: opts.lr_schedule,
             step: 0,
             checked: opts.checked,
+            per_doc_loss: opts.per_doc_loss,
         })
     }
 
@@ -340,18 +370,48 @@ impl Trainer {
     /// ADDED to the ZeRO shards; no optimizer step. Returns
     /// (mean loss, checkpoint transfer bytes).
     fn forward_backward(&mut self, ids: &[i32], loss_scale: f32) -> Result<(f32, u64)> {
-        let sp = self.manifest.sp;
         anyhow::ensure!(
             ids.len() == self.manifest.seq,
             "sequence length {} != artifact seq {}",
             ids.len(),
             self.manifest.seq
         );
-        let shards: Vec<ShardedBatch> = shard_sequence(ids, sp);
+        let shards: Vec<ShardedBatch> = shard_sequence(ids, self.manifest.sp);
+        let (loss, transfer, _) = self.forward_backward_shards(&shards, loss_scale, None)?;
+        Ok((loss, transfer))
+    }
+
+    /// Shard-level forward+backward shared by the whole-sequence and
+    /// packed paths. With `packed` (and `per_doc_loss` on), per-document
+    /// losses are extracted at the loss head: each document's labels
+    /// isolated in turn (everything else `IGNORE_INDEX`), run only on
+    /// ranks whose shard overlaps the document. No extra layer-stack
+    /// compute, but each pass repeats the loss-head logits matmul —
+    /// n_docs of them per step; disable `TrainerOptions::per_doc_loss`
+    /// for steady-state training.
+    fn forward_backward_shards(
+        &mut self,
+        shards: &[ShardedBatch],
+        loss_scale: f32,
+        packed: Option<&PackedSequence>,
+    ) -> Result<(f32, u64, Vec<DocumentLoss>)> {
+        let sp = self.manifest.sp;
+        anyhow::ensure!(
+            shards.len() == sp,
+            "expected {sp} shards, got {}",
+            shards.len()
+        );
+        let total: usize = shards.iter().map(|s| s.ids.len()).sum();
+        anyhow::ensure!(
+            total == self.manifest.seq,
+            "sharded sequence length {} != artifact seq {}",
+            total,
+            self.manifest.seq
+        );
         let mut ids_b = Vec::with_capacity(sp);
         let mut pos_b = Vec::with_capacity(sp);
         let mut lab_b = Vec::with_capacity(sp);
-        for s in &shards {
+        for s in shards {
             ids_b.push(self.upload(&HostTensor::i32(vec![s.ids.len()], s.ids.clone()))?);
             pos_b.push(self.upload(&HostTensor::i32(
                 vec![s.positions.len()],
@@ -393,7 +453,47 @@ impl Trainer {
         }
         let loss_sum = self.group.all_reduce_scalars(&loss_sums);
         let count = self.group.all_reduce_scalars(&counts);
+        // Reachable on packed batches (e.g. every document length 1 =>
+        // all labels IGNORE_INDEX): without this check loss is NaN and
+        // the backward cotangent 1/count is inf, silently poisoning the
+        // weights.
+        anyhow::ensure!(
+            count > 0.0,
+            "batch has no trainable targets (all labels are IGNORE_INDEX)"
+        );
         let loss = loss_sum / count;
+
+        // Per-document loss (packed batches, opt-out via
+        // `TrainerOptions::per_doc_loss`): re-run the loss head with
+        // labels masked to one document at a time. A document with a
+        // single token has no target; it reports loss 0 over 0 targets.
+        let mut doc_losses = Vec::new();
+        if let Some(p) = packed.filter(|_| self.per_doc_loss) {
+            let ssh = self.manifest.seq / sp;
+            for d in 0..p.n_docs() {
+                let range = p.segment_range(d);
+                let (mut sum_d, mut count_d) = (0f32, 0f32);
+                for r in 0..sp {
+                    let (a, b) = (r * ssh, (r + 1) * ssh);
+                    if range.end <= a || range.start >= b {
+                        continue; // no overlap: all-IGNORE shard adds 0/0
+                    }
+                    let (lo, hi) = (range.start.max(a), range.end.min(b));
+                    let mut masked = vec![IGNORE_INDEX; ssh];
+                    masked[lo - a..hi - a]
+                        .copy_from_slice(&shards[r].labels[lo - a..hi - a]);
+                    let lab = self.upload(&HostTensor::i32(vec![ssh], masked))?;
+                    let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab])?;
+                    sum_d += out[0].scalar_f32()?;
+                    count_d += out[1].scalar_f32()?;
+                }
+                doc_losses.push(DocumentLoss {
+                    doc_id: p.doc_ids[d],
+                    tokens: range.len(),
+                    loss: if count_d > 0.0 { sum_d / count_d } else { 0.0 },
+                });
+            }
+        }
 
         // ---- backward ------------------------------------------------------
         let m = &self.manifest;
@@ -517,7 +617,62 @@ impl Trainer {
         self.grads
             .reduce_into_range(&self.group, 0..m.params.embed_numel, &contribs);
 
-        Ok((loss, tape.transfer_bytes))
+        Ok((loss, tape.transfer_bytes, doc_losses))
+    }
+
+    /// One training step on a PACKED batch of variable-length documents
+    /// (paper §3.4/§7.2): segment-aware labels (no cross-document
+    /// targets), per-document position ids (RoPE resets at boundaries),
+    /// and a per-document loss breakdown in the returned metrics
+    /// (empty when `TrainerOptions::per_doc_loss` is off — it costs one
+    /// loss-head pass per document).
+    ///
+    /// §7.2 caveat, stated loudly: the compiled `attn_fwd` stage is dense
+    /// causal over the full sequence and does not consume segment ids —
+    /// exactly the SDPA behaviour the paper warns about, so attention can
+    /// still read across boundaries inside this CPU artifact. The Pallas
+    /// layer's `packed_attn.py` kernel is the masked implementation; the
+    /// coordinator threads `cu_seqlens`/segment ids through every shard
+    /// (see `packing::PackedShard`) so a packed-attention artifact drops
+    /// in without coordinator changes. Labels and loss accounting are
+    /// already fully segment-correct.
+    pub fn train_step_packed(&mut self, p: &PackedSequence) -> Result<PackedStepMetrics> {
+        anyhow::ensure!(
+            p.len() == self.manifest.seq,
+            "packed length {} != artifact seq {}",
+            p.len(),
+            self.manifest.seq
+        );
+        let t0 = Instant::now();
+        self.group.reset_stats();
+        self.device.reset_peak();
+
+        let batches: Vec<ShardedBatch> = shard_packed(p, self.manifest.sp)
+            .into_iter()
+            .map(|s| s.batch)
+            .collect();
+        let (loss, ckpt_transfer, doc_losses) =
+            self.forward_backward_shards(&batches, 1.0, Some(p))?;
+        let grad_norm = self.optimizer_step();
+        let comm = self.group.stats();
+        let real_tokens: usize = p.doc_lengths().iter().sum();
+        Ok(PackedStepMetrics {
+            metrics: StepMetrics {
+                step: self.step,
+                loss,
+                grad_norm,
+                tokens: p.len(),
+                step_time: t0.elapsed(),
+                a2a_bytes: comm.all_to_all_bytes,
+                gather_bytes: comm.all_gather_bytes,
+                reduce_scatter_bytes: comm.reduce_scatter_bytes,
+                ckpt_transfer_bytes: ckpt_transfer,
+                device_peak_bytes: self.device.peak(),
+            },
+            doc_losses,
+            real_tokens,
+            padding_tokens: p.len() - real_tokens,
+        })
     }
 
     /// Save training state (params + optimizer + step) to `path`.

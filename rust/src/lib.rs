@@ -5,6 +5,7 @@ pub mod config;
 pub mod runtime;
 pub mod collectives;
 pub mod coordinator;
+pub mod packing;
 pub mod tiling;
 pub mod memory;
 pub mod perf;

@@ -270,6 +270,30 @@ impl Estimator {
         per_node <= self.cluster.host_mem_bytes
     }
 
+    /// Packed-batch breakdown at the same total token count. Every term
+    /// the estimator tracks is sequence-LINEAR (flash-style attention,
+    /// a2a buffers, checkpoints, logits) so the peak equals
+    /// `breakdown(total)`; what packing changes is the O(S²) arithmetic a
+    /// NAIVE implementation would need — see `packed_mask_bytes` /
+    /// `naive_scores_bytes`, the §3.4 numbers.
+    pub fn breakdown_packed(&self, seg_lens: &[usize], world: usize) -> MemoryBreakdown {
+        let total: usize = seg_lens.iter().sum();
+        self.breakdown(total, world)
+    }
+
+    /// Bytes a score-materializing segment-aware attention would hold:
+    /// the sum of per-segment squares, Σᵢ Sᵢ² (one activation-precision
+    /// element per in-segment score pair), versus S² for one document at
+    /// the same token count. The packed/unpacked ratio is 1/k for k equal
+    /// segments — same shape as the flos saving.
+    pub fn naive_scores_bytes(&self, seg_lens: &[usize]) -> u64 {
+        let act_b = self.precision.activation_bytes();
+        seg_lens
+            .iter()
+            .map(|&s| s as u64 * s as u64 * act_b)
+            .sum()
+    }
+
     /// Which resource binds at this (seq, world)? For the narrative tables.
     pub fn binding_constraint(&self, seq: usize, world: usize) -> &'static str {
         let b = self.breakdown(seq, world);
@@ -289,6 +313,18 @@ impl Estimator {
             "attention"
         }
     }
+}
+
+/// Paper §3.4: the 4-D additive attention mask a naive packed
+/// implementation materializes is `[1, 1, S, S]` bf16 — "29 GiB at 125K".
+pub fn packed_mask_bytes(seq: usize) -> u64 {
+    2 * seq as u64 * seq as u64
+}
+
+/// The paper's replacement: per-token position ids that reset at each
+/// document boundary — one i32 per token, O(S) instead of O(S²).
+pub fn position_ids_bytes(seq: usize) -> u64 {
+    4 * seq as u64
 }
 
 #[cfg(test)]
@@ -380,6 +416,37 @@ mod tests {
         let b = e.breakdown(1_000_000, 32);
         let gib = (b.acts.ckpt_host * 8) as f64 / GIB as f64;
         assert!((gib - 152.0).abs() < 3.0, "{gib}");
+    }
+
+    #[test]
+    fn paper_3_4_packed_mask_29gib_at_125k() {
+        // §3.4: a [1,1,125K,125K] bf16 mask is ~29 GiB; the position-id
+        // replacement is half a megabyte.
+        let gib = packed_mask_bytes(125_000) as f64 / GIB as f64;
+        assert!((gib - 29.1).abs() < 0.3, "{gib}");
+        assert_eq!(position_ids_bytes(125_000), 500_000);
+        assert!(position_ids_bytes(125_000) * 50_000 < packed_mask_bytes(125_000));
+    }
+
+    #[test]
+    fn packed_scores_are_sum_of_segment_squares() {
+        let e = est(FeatureFlags::alst());
+        let total = 131_072usize;
+        let one = e.naive_scores_bytes(&[total]);
+        for k in [2usize, 8, 32] {
+            let packed = e.naive_scores_bytes(&vec![total / k; k]);
+            assert_eq!(packed, one / k as u64, "k={k}");
+        }
+    }
+
+    #[test]
+    fn packed_breakdown_matches_total_token_count() {
+        // linear-memory terms see only the total token count
+        let e = est(FeatureFlags::alst());
+        let packed = e.breakdown_packed(&[400_000, 80_000, 20_000], 8);
+        let whole = e.breakdown(500_000, 8);
+        assert_eq!(packed.device_total(), whole.device_total());
+        assert_eq!(packed.acts.ckpt_host, whole.acts.ckpt_host);
     }
 
     #[test]

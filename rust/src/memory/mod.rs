@@ -14,7 +14,10 @@ mod search;
 mod timeline;
 mod tracker;
 
-pub use estimator::{ActivationBreakdown, Calibration, Estimator, MemoryBreakdown};
+pub use estimator::{
+    packed_mask_bytes, position_ids_bytes, ActivationBreakdown, Calibration, Estimator,
+    MemoryBreakdown,
+};
 pub use hostpool::HostPool;
 pub use search::{max_seqlen_search, SearchOutcome};
 pub use timeline::{simulate_step, sparkline, TimelineResult};

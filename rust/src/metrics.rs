@@ -5,16 +5,82 @@ use std::io::Write;
 use std::path::Path;
 use std::time::Duration;
 
-use crate::coordinator::pipeline::StepMetrics;
+use crate::coordinator::pipeline::{DocumentLoss, PackedStepMetrics, StepMetrics};
+
+/// One document's loss at one step (packed runs only).
+#[derive(Debug, Clone)]
+pub struct DocLossRecord {
+    pub step: u64,
+    pub doc: DocumentLoss,
+}
 
 #[derive(Debug, Default)]
 pub struct RunLog {
     pub steps: Vec<StepMetrics>,
+    /// Per-document losses from packed steps (empty for whole-sequence
+    /// runs).
+    pub doc_losses: Vec<DocLossRecord>,
+    /// Cumulative packed-token accounting (real vs padding).
+    pub packed_real_tokens: usize,
+    pub packed_padding_tokens: usize,
 }
 
 impl RunLog {
     pub fn push(&mut self, m: StepMetrics) {
         self.steps.push(m);
+    }
+
+    /// Record a packed step: aggregate metrics plus its per-document
+    /// breakdown.
+    pub fn push_packed(&mut self, m: PackedStepMetrics) {
+        let step = m.metrics.step;
+        for doc in m.doc_losses {
+            self.doc_losses.push(DocLossRecord { step, doc });
+        }
+        self.packed_real_tokens += m.real_tokens;
+        self.packed_padding_tokens += m.padding_tokens;
+        self.steps.push(m.metrics);
+    }
+
+    /// Target-weighted mean of per-document losses (weights are each
+    /// document's `tokens - 1` trainable targets) — matches the aggregate
+    /// loss when every target token weighs equally.
+    pub fn mean_doc_loss(&self) -> Option<f32> {
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for r in &self.doc_losses {
+            let w = r.doc.tokens.saturating_sub(1) as f64;
+            num += r.doc.loss as f64 * w;
+            den += w;
+        }
+        (den > 0.0).then(|| (num / den) as f32)
+    }
+
+    /// Fraction of emitted packed tokens that were real documents
+    /// (`None` before any packed step). Delegates to the packer's single
+    /// definition of efficiency.
+    pub fn packing_efficiency(&self) -> Option<f64> {
+        let emitted = self.packed_real_tokens + self.packed_padding_tokens;
+        (emitted > 0).then(|| {
+            crate::packing::PackingStats {
+                total_tokens: self.packed_real_tokens,
+                padded_tokens: self.packed_padding_tokens,
+                ..Default::default()
+            }
+            .efficiency()
+        })
+    }
+
+    /// CSV of the per-document breakdown: step,doc_id,tokens,loss
+    pub fn doc_loss_csv(&self) -> String {
+        let mut s = String::from("step,doc_id,tokens,loss\n");
+        for r in &self.doc_losses {
+            s.push_str(&format!(
+                "{},{},{},{:.6}\n",
+                r.step, r.doc.doc_id, r.doc.tokens, r.doc.loss
+            ));
+        }
+        s
     }
 
     pub fn last_loss(&self) -> Option<f32> {
@@ -136,6 +202,37 @@ mod tests {
         let csv = log.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn packed_push_aggregates_doc_losses() {
+        let mut log = RunLog::default();
+        log.push_packed(PackedStepMetrics {
+            metrics: step(1, 3.0),
+            doc_losses: vec![
+                DocumentLoss { doc_id: 7, tokens: 5, loss: 2.0 },
+                DocumentLoss { doc_id: 8, tokens: 9, loss: 4.0 },
+            ],
+            real_tokens: 14,
+            padding_tokens: 2,
+        });
+        assert_eq!(log.steps.len(), 1);
+        assert_eq!(log.doc_losses.len(), 2);
+        // weights 4 and 8 targets: (2*4 + 4*8) / 12 = 40/12
+        let m = log.mean_doc_loss().unwrap();
+        assert!((m - 40.0 / 12.0).abs() < 1e-6, "{m}");
+        assert!((log.packing_efficiency().unwrap() - 14.0 / 16.0).abs() < 1e-12);
+        let csv = log.doc_loss_csv();
+        assert!(csv.starts_with("step,doc_id,tokens,loss\n"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("1,7,5,2.000000"));
+    }
+
+    #[test]
+    fn empty_log_has_no_packed_summaries() {
+        let log = RunLog::default();
+        assert!(log.mean_doc_loss().is_none());
+        assert!(log.packing_efficiency().is_none());
     }
 
     #[test]

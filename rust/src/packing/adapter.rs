@@ -1,0 +1,280 @@
+//! SP-aware dataloading for packed batches: the packed analogue of
+//! `coordinator::dataloader::UlyssesDataLoader`.
+//!
+//! Labels are segment-aware-shifted on the FULL packed sequence first,
+//! then ids/positions/labels/segment-ids are sharded along the sequence
+//! dimension — the same order of operations that makes the whole-sequence
+//! path immune to the §4.3 boundary bug. Segment metadata crosses rank
+//! boundaries intact: each shard keeps its local `seg_ids` slice for the
+//! embedding-side ops AND the global `cu_seqlens`, because after the
+//! `a2a_seq_to_head` relayout every rank attends over the FULL sequence
+//! for its head shard and needs full-sequence boundaries. Replicating
+//! `cu_seqlens` is O(n_docs) integers per rank — the paper's point that
+//! position-id metadata is the cheap replacement for the O(S^2) mask.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::dataloader::ShardedBatch;
+use crate::packing::packer::{chunk_document, pack_ffd, Document, PackingStats};
+use crate::packing::sequence::PackedSequence;
+use crate::util::rng::Rng;
+
+/// One rank's view of a packed training sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedShard {
+    /// ids / per-document positions / segment-aware labels — the shape
+    /// `pipeline::Trainer` consumes (positions feed RoPE, so documents
+    /// are positionally independent; labels never cross a boundary).
+    pub batch: ShardedBatch,
+    /// This rank's slice of per-token segment ids.
+    pub seg_ids: Vec<i32>,
+    /// GLOBAL segment boundaries, replicated to every rank (needed on the
+    /// attention side, where each rank sees the full sequence).
+    pub cu_seqlens: Vec<i32>,
+    /// Segment (or segment-fragment) boundaries local to this shard,
+    /// offsets in `0..=ssh`. A document spanning a rank boundary
+    /// contributes a fragment on each side.
+    pub cu_seqlens_local: Vec<i32>,
+}
+
+/// Shard one packed sequence for `sp` ranks, preserving segment metadata.
+pub fn shard_packed(p: &PackedSequence, sp: usize) -> Vec<PackedShard> {
+    assert!(sp > 0, "sp must be positive");
+    assert_eq!(p.len() % sp, 0, "packed length {} not divisible by sp {sp}", p.len());
+    let labels = p.labels();
+    let ssh = p.len() / sp;
+    (0..sp)
+        .map(|r| {
+            let (a, b) = (r * ssh, (r + 1) * ssh);
+            let mut local = vec![0i32];
+            for &c in &p.cu_seqlens {
+                if (c as usize) > a && (c as usize) < b {
+                    local.push(c - a as i32);
+                }
+            }
+            local.push(ssh as i32);
+            PackedShard {
+                batch: ShardedBatch {
+                    ids: p.ids[a..b].to_vec(),
+                    positions: p.positions[a..b].to_vec(),
+                    labels: labels[a..b].to_vec(),
+                },
+                seg_ids: p.seg_ids[a..b].to_vec(),
+                cu_seqlens: p.cu_seqlens.clone(),
+                cu_seqlens_local: local,
+            }
+        })
+        .collect()
+}
+
+/// A stream of variable-length documents.
+pub trait DocumentSource {
+    fn next_document(&mut self) -> Document;
+}
+
+impl DocumentSource for Box<dyn DocumentSource> {
+    fn next_document(&mut self) -> Document {
+        (**self).next_document()
+    }
+}
+
+/// SFT-style mixed-length synthetic corpus: document lengths are
+/// log-uniform in `[min_len, max_len]` (a long-tailed mix of short chats
+/// and long articles), tokens uniform over the vocab. Deterministic by
+/// seed.
+pub struct MixedLengthSource {
+    pub vocab: usize,
+    pub min_len: usize,
+    pub max_len: usize,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl MixedLengthSource {
+    pub fn new(vocab: usize, min_len: usize, max_len: usize, seed: u64) -> MixedLengthSource {
+        assert!(min_len >= 1 && min_len <= max_len, "bad length range");
+        MixedLengthSource { vocab, min_len, max_len, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    fn sample_len(&mut self) -> usize {
+        let (lo, hi) = (self.min_len as f64, self.max_len as f64);
+        let ln = lo.ln() + self.rng.uniform() * (hi.ln() - lo.ln());
+        (ln.exp().round() as usize).clamp(self.min_len, self.max_len)
+    }
+}
+
+impl DocumentSource for MixedLengthSource {
+    fn next_document(&mut self) -> Document {
+        let n = self.sample_len();
+        let tokens = (0..n).map(|_| self.rng.below(self.vocab) as i32).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Document::new(id, tokens)
+    }
+}
+
+/// The packed adapter: buffers `lookahead_docs` documents (chunking any
+/// longer than `capacity`), FFD-packs them, and yields capacity-length
+/// `PackedSequence`s with their per-rank shard sets. Cumulative
+/// efficiency/waste stats are kept for the run report.
+pub struct PackedDataLoader<S: DocumentSource> {
+    pub source: S,
+    pub capacity: usize,
+    pub sp: usize,
+    pub lookahead_docs: usize,
+    queue: VecDeque<PackedSequence>,
+    stats: PackingStats,
+}
+
+impl<S: DocumentSource> PackedDataLoader<S> {
+    pub fn new(source: S, capacity: usize, sp: usize, lookahead_docs: usize) -> Result<Self> {
+        anyhow::ensure!(sp > 0, "sp must be positive");
+        anyhow::ensure!(
+            capacity > 0 && capacity % sp == 0,
+            "capacity {capacity} must be positive and divisible by sp {sp}"
+        );
+        anyhow::ensure!(lookahead_docs > 0, "need a positive packing lookahead");
+        Ok(PackedDataLoader {
+            source,
+            capacity,
+            sp,
+            lookahead_docs,
+            queue: VecDeque::new(),
+            stats: PackingStats::default(),
+        })
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        let mut docs = Vec::with_capacity(self.lookahead_docs);
+        while docs.len() < self.lookahead_docs {
+            let d = self.source.next_document();
+            docs.extend(chunk_document(d, self.capacity));
+        }
+        let packs = pack_ffd(docs, self.capacity)?;
+        self.stats.merge(&PackingStats::from_packs(&packs));
+        for pack in &packs {
+            self.queue.push_back(PackedSequence::from_pack(pack)?);
+        }
+        Ok(())
+    }
+
+    /// Next packed batch as (full packed sequence, per-rank shards).
+    pub fn next(&mut self) -> Result<(PackedSequence, Vec<PackedShard>)> {
+        let p = self.next_sequence()?;
+        let shards = shard_packed(&p, self.sp);
+        Ok((p, shards))
+    }
+
+    /// Next packed sequence WITHOUT materializing shards. Use this when
+    /// feeding `Trainer::train_step_packed`, which shards against its own
+    /// manifest SP degree — `next()` would do the labels() pass and
+    /// per-rank clones a second time just to throw them away.
+    pub fn next_sequence(&mut self) -> Result<PackedSequence> {
+        if self.queue.is_empty() {
+            self.refill()?;
+        }
+        Ok(self.queue.pop_front().expect("refill produced no packs"))
+    }
+
+    /// Cumulative packing stats over everything packed so far.
+    pub fn stats(&self) -> &PackingStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dataloader::IGNORE_INDEX;
+
+    fn seq(lens: &[usize]) -> PackedSequence {
+        let docs: Vec<Document> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| Document::new(i as u64, (0..n as i32).map(|t| 10 * i as i32 + t).collect()))
+            .collect();
+        PackedSequence::from_documents(&docs).unwrap()
+    }
+
+    #[test]
+    fn shards_reassemble_to_full_metadata() {
+        let p = seq(&[5, 3, 8]); // len 16
+        for sp in [1usize, 2, 4] {
+            let shards = shard_packed(&p, sp);
+            let ids: Vec<i32> = shards.iter().flat_map(|s| s.batch.ids.clone()).collect();
+            let pos: Vec<i32> = shards.iter().flat_map(|s| s.batch.positions.clone()).collect();
+            let seg: Vec<i32> = shards.iter().flat_map(|s| s.seg_ids.clone()).collect();
+            let lab: Vec<i32> = shards.iter().flat_map(|s| s.batch.labels.clone()).collect();
+            assert_eq!(ids, p.ids);
+            assert_eq!(pos, p.positions);
+            assert_eq!(seg, p.seg_ids);
+            assert_eq!(lab, p.labels());
+            for s in &shards {
+                assert_eq!(s.cu_seqlens, p.cu_seqlens, "global metadata replicated");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_spanning_document_keeps_labels_and_positions() {
+        // doc 1 (len 3) spans the sp=2 rank boundary at token 8 of 16
+        let p = seq(&[7, 3, 6]);
+        let shards = shard_packed(&p, 2);
+        // rank 0 holds doc1's first token (global 7), label = doc1's second
+        assert_eq!(*shards[0].batch.ids.last().unwrap(), 10);
+        assert_eq!(*shards[0].batch.labels.last().unwrap(), 11);
+        // rank 1 starts mid-doc-1: position continues at 1, not 0
+        assert_eq!(shards[1].batch.positions[0], 1);
+        assert_eq!(shards[1].seg_ids[0], 1);
+        // doc 0's last token label is masked, not doc 1's first token
+        assert_eq!(shards[0].batch.labels[6], IGNORE_INDEX);
+    }
+
+    #[test]
+    fn local_boundaries_are_shard_relative() {
+        let p = seq(&[5, 3, 8]); // cu [0,5,8,16]
+        let shards = shard_packed(&p, 2); // ssh = 8
+        assert_eq!(shards[0].cu_seqlens_local, vec![0, 5, 8]);
+        assert_eq!(shards[1].cu_seqlens_local, vec![0, 8]); // doc 2 only
+        let shards4 = shard_packed(&p, 4); // ssh = 4
+        assert_eq!(shards4[0].cu_seqlens_local, vec![0, 4]);
+        assert_eq!(shards4[1].cu_seqlens_local, vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn loader_yields_capacity_sequences_and_stats() {
+        let src = MixedLengthSource::new(100, 4, 60, 7);
+        let mut dl = PackedDataLoader::new(src, 64, 2, 16).unwrap();
+        for _ in 0..8 {
+            let (p, shards) = dl.next().unwrap();
+            assert_eq!(p.len(), 64);
+            assert_eq!(shards.len(), 2);
+            assert!(p.n_docs() >= 1);
+            // every label is in-segment or masked
+            let labels = p.labels();
+            for (i, &l) in labels.iter().enumerate() {
+                if l != IGNORE_INDEX {
+                    assert_eq!(p.seg_ids[i], p.seg_ids[i + 1]);
+                }
+            }
+        }
+        let s = dl.stats();
+        assert!(s.n_docs > 0 && s.n_packs >= 8);
+        assert!(s.efficiency() > 0.5, "log-uniform mix should pack well: {s:?}");
+    }
+
+    #[test]
+    fn mixed_length_source_is_deterministic_and_bounded() {
+        let mut a = MixedLengthSource::new(50, 2, 30, 3);
+        let mut b = MixedLengthSource::new(50, 2, 30, 3);
+        for _ in 0..20 {
+            let (da, db) = (a.next_document(), b.next_document());
+            assert_eq!(da, db);
+            assert!((2..=30).contains(&da.len()));
+            assert!(da.tokens.iter().all(|&t| (0..50).contains(&t)));
+        }
+        assert_eq!(a.next_document().id, 20);
+    }
+}

@@ -1,0 +1,32 @@
+//! Sequence-packing subsystem: variable-length corpora end-to-end.
+//!
+//! The paper's recipe assumes real corpora — many variable-length
+//! documents packed into one multi-million-token sequence, with
+//! position-id-aware attention so tokens never attend across sample
+//! boundaries (§3.4) and labels that never target across them (§4.3,
+//! §7.2's SDPA warning). This module is that data path for the rust
+//! coordinator:
+//!
+//! * `packer`   — first-fit-decreasing bin-packing + efficiency stats.
+//! * `sequence` — `PackedSequence` (ids, segment ids, per-document
+//!   position ids, FlashAttention-style `cu_seqlens`) and the
+//!   segment-aware label shift `shift_labels_packed`.
+//! * `adapter`  — SP sharding that preserves segment metadata across
+//!   rank boundaries, `DocumentSource` streams, and `PackedDataLoader`.
+//!
+//! Downstream: `coordinator::pipeline::Trainer::train_step_packed`
+//! consumes packed shards and reports per-document loss;
+//! `perf::train_flos_packed` / `memory`'s packed arithmetic model the
+//! cost as Σᵢ Sᵢ² instead of S². The segment/position layout convention
+//! is pinned to `python/compile/kernels/packed_attn.py` and
+//! cross-checked by `rust/tests/packed_integration.rs`.
+
+pub mod adapter;
+pub mod packer;
+pub mod sequence;
+
+pub use adapter::{
+    shard_packed, DocumentSource, MixedLengthSource, PackedDataLoader, PackedShard,
+};
+pub use packer::{chunk_document, pack_ffd, Document, Pack, PackingStats};
+pub use sequence::{shift_labels_packed, PackedSequence, PAD_TOKEN};

@@ -1,0 +1,240 @@
+//! `PackedSequence`: the SP-ready materialization of one pack — token
+//! ids, per-token segment ids, per-document position ids that reset to 0
+//! at every boundary (the paper's O(S) replacement for the O(S^2) 4-D
+//! attention mask, §3.4), FlashAttention-style `cu_seqlens`, and the
+//! segment-aware label shift.
+//!
+//! Layout convention is pinned to the Pallas side
+//! (`python/compile/kernels/packed_attn.py::make_packed_segments`):
+//! lengths [3, 2, 4] -> seg_ids [0 0 0 1 1 2 2 2 2],
+//! positions [0 1 2 0 1 0 1 2 3], cu_seqlens [0 3 5 9].
+//! `rust/tests/packed_integration.rs` cross-checks this fixture.
+
+use anyhow::Result;
+
+use crate::coordinator::dataloader::IGNORE_INDEX;
+use crate::packing::packer::{Document, Pack};
+
+/// Token id used for trailing padding (its whole segment is loss-masked,
+/// so the value never trains).
+pub const PAD_TOKEN: i32 = 0;
+
+/// One pack, materialized: documents back to back plus optional trailing
+/// padding as a final loss-masked segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedSequence {
+    pub ids: Vec<i32>,
+    /// Per-token segment index (non-decreasing; padding is the last one).
+    pub seg_ids: Vec<i32>,
+    /// Per-DOCUMENT position ids: reset to 0 at every boundary (§3.4).
+    pub positions: Vec<i32>,
+    /// FlashAttention-style cumulative boundaries, len = n_segments + 1;
+    /// `cu_seqlens[s]..cu_seqlens[s+1]` is segment `s`.
+    pub cu_seqlens: Vec<i32>,
+    /// Provenance id per real document (padding excluded).
+    pub doc_ids: Vec<u64>,
+    n_docs: usize,
+}
+
+impl PackedSequence {
+    /// Concatenate documents with no padding.
+    pub fn from_documents(docs: &[Document]) -> Result<PackedSequence> {
+        anyhow::ensure!(!docs.is_empty(), "cannot pack zero documents");
+        let total: usize = docs.iter().map(Document::len).sum();
+        let mut ids = Vec::with_capacity(total);
+        let mut seg_ids = Vec::with_capacity(total);
+        let mut positions = Vec::with_capacity(total);
+        let mut cu_seqlens = Vec::with_capacity(docs.len() + 1);
+        let mut doc_ids = Vec::with_capacity(docs.len());
+        cu_seqlens.push(0);
+        for (s, d) in docs.iter().enumerate() {
+            anyhow::ensure!(!d.is_empty(), "document {} is empty", d.id);
+            ids.extend_from_slice(&d.tokens);
+            seg_ids.extend(std::iter::repeat(s as i32).take(d.len()));
+            positions.extend(0..d.len() as i32);
+            cu_seqlens.push(ids.len() as i32);
+            doc_ids.push(d.id);
+        }
+        Ok(PackedSequence {
+            ids,
+            seg_ids,
+            positions,
+            cu_seqlens,
+            doc_ids,
+            n_docs: docs.len(),
+        })
+    }
+
+    /// Materialize a pack at its full capacity; any tail becomes one
+    /// padding segment whose labels are all `IGNORE_INDEX`.
+    pub fn from_pack(pack: &Pack) -> Result<PackedSequence> {
+        let mut p = Self::from_documents(&pack.docs)?;
+        anyhow::ensure!(
+            p.len() <= pack.capacity,
+            "pack overflows capacity: {} > {}",
+            p.len(),
+            pack.capacity
+        );
+        let pad = pack.capacity - p.len();
+        if pad > 0 {
+            let seg = p.n_segments() as i32;
+            p.ids.extend(std::iter::repeat(PAD_TOKEN).take(pad));
+            p.seg_ids.extend(std::iter::repeat(seg).take(pad));
+            p.positions.extend(0..pad as i32);
+            p.cu_seqlens.push(pack.capacity as i32);
+        }
+        Ok(p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Real documents (padding segment excluded).
+    pub fn n_docs(&self) -> usize {
+        self.n_docs
+    }
+
+    /// Segments including the padding segment, if any.
+    pub fn n_segments(&self) -> usize {
+        self.cu_seqlens.len() - 1
+    }
+
+    pub fn has_padding(&self) -> bool {
+        self.n_segments() > self.n_docs
+    }
+
+    pub fn segment_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.cu_seqlens[s] as usize..self.cu_seqlens[s + 1] as usize
+    }
+
+    /// Per-segment lengths (padding last, if present).
+    pub fn segment_lengths(&self) -> Vec<usize> {
+        self.cu_seqlens
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .collect()
+    }
+
+    /// Per-document lengths (padding excluded) — what the packed flos
+    /// model sums squares over.
+    pub fn doc_lengths(&self) -> Vec<usize> {
+        self.segment_lengths()[..self.n_docs].to_vec()
+    }
+
+    /// Segment-aware labels: shift within each document, mask each
+    /// document's last token AND the whole padding segment.
+    pub fn labels(&self) -> Vec<i32> {
+        let mut labels = shift_labels_packed(&self.ids, &self.cu_seqlens);
+        if self.has_padding() {
+            let pad = self.segment_range(self.n_docs);
+            for l in &mut labels[pad] {
+                *l = IGNORE_INDEX;
+            }
+        }
+        labels
+    }
+}
+
+/// Paper §4.3, packed form: shift-left WITHIN each segment; the last
+/// token of every segment gets `IGNORE_INDEX` instead of leaking the next
+/// segment's first token as a target. This is the correctness fix for
+/// `dataloader::shift_labels` on packed input (which leaks exactly one
+/// cross-document target per boundary — see the counterexample test
+/// there).
+pub fn shift_labels_packed(ids: &[i32], cu_seqlens: &[i32]) -> Vec<i32> {
+    assert!(cu_seqlens.len() >= 2, "need at least one segment");
+    assert_eq!(cu_seqlens[0], 0, "cu_seqlens must start at 0");
+    assert_eq!(
+        *cu_seqlens.last().unwrap() as usize,
+        ids.len(),
+        "cu_seqlens must end at the sequence length"
+    );
+    let mut out = vec![IGNORE_INDEX; ids.len()];
+    for w in cu_seqlens.windows(2) {
+        let (a, b) = (w[0] as usize, w[1] as usize);
+        assert!(a < b, "cu_seqlens must be strictly increasing");
+        out[a..b - 1].copy_from_slice(&ids[a + 1..b]);
+        // out[b - 1] stays IGNORE_INDEX: never target across the boundary
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn docs(lens: &[usize]) -> Vec<Document> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                Document::new(i as u64, (0..n as i32).map(|t| 100 * (i as i32 + 1) + t).collect())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn layout_matches_pallas_convention() {
+        // packed_attn.make_packed_segments([3, 2, 4]) fixture
+        let p = PackedSequence::from_documents(&docs(&[3, 2, 4])).unwrap();
+        assert_eq!(p.seg_ids, vec![0, 0, 0, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(p.positions, vec![0, 1, 2, 0, 1, 0, 1, 2, 3]);
+        assert_eq!(p.cu_seqlens, vec![0, 3, 5, 9]);
+        assert_eq!(p.doc_lengths(), vec![3, 2, 4]);
+        assert!(!p.has_padding());
+    }
+
+    #[test]
+    fn packed_shift_never_crosses_boundaries() {
+        let p = PackedSequence::from_documents(&docs(&[3, 2, 4])).unwrap();
+        let labels = p.labels();
+        // doc 0 tokens 100,101,102 -> labels 101,102,IGN
+        assert_eq!(&labels[..3], &[101, 102, IGNORE_INDEX]);
+        // doc 1 tokens 200,201 -> labels 201,IGN
+        assert_eq!(&labels[3..5], &[201, IGNORE_INDEX]);
+        // doc 2 tokens 300..303 -> labels 301,302,303,IGN
+        assert_eq!(&labels[5..], &[301, 302, 303, IGNORE_INDEX]);
+        // global: a label never belongs to a different segment
+        for (i, &l) in labels.iter().enumerate() {
+            if l != IGNORE_INDEX {
+                assert_eq!(p.seg_ids[i], p.seg_ids[i + 1], "label at {i} crosses");
+                assert_eq!(l, p.ids[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_a_masked_segment() {
+        let pack = Pack { capacity: 12, docs: docs(&[3, 2, 4]) };
+        let p = PackedSequence::from_pack(&pack).unwrap();
+        assert_eq!(p.len(), 12);
+        assert_eq!(p.n_docs(), 3);
+        assert_eq!(p.n_segments(), 4);
+        assert!(p.has_padding());
+        assert_eq!(p.cu_seqlens, vec![0, 3, 5, 9, 12]);
+        assert_eq!(&p.seg_ids[9..], &[3, 3, 3]);
+        assert_eq!(&p.positions[9..], &[0, 1, 2]);
+        let labels = p.labels();
+        assert!(labels[9..].iter().all(|&l| l == IGNORE_INDEX));
+        // doc labels unchanged by padding
+        assert_eq!(&labels[..3], &[101, 102, IGNORE_INDEX]);
+    }
+
+    #[test]
+    fn single_document_matches_whole_sequence_shift() {
+        use crate::coordinator::dataloader::shift_labels;
+        let ids: Vec<i32> = (1..=8).collect();
+        let packed = shift_labels_packed(&ids, &[0, 8]);
+        assert_eq!(packed, shift_labels(&ids));
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_empty_segment() {
+        shift_labels_packed(&[1, 2, 3], &[0, 2, 2, 3]);
+    }
+}

@@ -60,6 +60,41 @@ pub fn train_flos(m: &ModelPreset, s: usize, recompute: bool) -> FlosBreakdown {
     }
 }
 
+/// Packed-batch flos (paper §3.4): attention is the SUM OF PER-SEGMENT
+/// SQUARES — tokens never attend across document boundaries, so a packed
+/// batch of segments S₁..Sₖ costs Σᵢ 4·Sᵢ²·hq per layer, not 4·(ΣSᵢ)²·hq.
+/// Every other term (projections, MLP, logits) is linear in the token
+/// count and unchanged. Packing k equal documents into one sequence costs
+/// 1/k of the single-document attention flos at the same token count.
+pub fn train_flos_packed(
+    m: &ModelPreset,
+    seg_lens: &[usize],
+    recompute: bool,
+) -> FlosBreakdown {
+    let total: usize = seg_lens.iter().sum();
+    let mut b = train_flos(m, total, recompute);
+    let hq = (m.n_q_heads * m.head_dim) as f64;
+    let mult = if recompute { 4.0 } else { 3.0 };
+    let attn_layer: f64 = seg_lens
+        .iter()
+        .map(|&s| 4.0 * s as f64 * s as f64 * hq)
+        .sum();
+    b.attention = attn_layer * m.n_layers as f64 * mult;
+    b
+}
+
+/// Packed/unpacked attention-flos ratio at equal total tokens:
+/// Σᵢ Sᵢ² / (Σᵢ Sᵢ)². Equals 1/k for k equal segments, 1.0 for a single
+/// document.
+pub fn packed_attention_ratio(seg_lens: &[usize]) -> f64 {
+    let total: f64 = seg_lens.iter().map(|&s| s as f64).sum();
+    if total == 0.0 {
+        return 1.0;
+    }
+    let sq: f64 = seg_lens.iter().map(|&s| s as f64 * s as f64).sum();
+    sq / (total * total)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +132,48 @@ mod tests {
         let a = train_flos(m, 100_000, true).attention;
         let b = train_flos(m, 200_000, true).attention;
         assert!((b / a - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn packed_equal_segments_cost_one_kth_attention() {
+        // Acceptance: k equal segments at the SAME total token count report
+        // attention flos ~= 1/k of the single-document figure.
+        let m = preset("llama3-8b").unwrap();
+        let total = 1_048_576usize;
+        let single = train_flos(m, total, true);
+        for k in [2usize, 8, 64] {
+            let segs = vec![total / k; k];
+            let packed = train_flos_packed(m, &segs, true);
+            let ratio = packed.attention / single.attention;
+            assert!(
+                (ratio - 1.0 / k as f64).abs() < 1e-9,
+                "k={k}: ratio {ratio}"
+            );
+            // linear terms unchanged by packing
+            assert_eq!(packed.proj, single.proj);
+            assert_eq!(packed.mlp, single.mlp);
+            assert_eq!(packed.logits, single.logits);
+            assert!(packed.forward_total() < single.forward_total());
+        }
+    }
+
+    #[test]
+    fn packed_ratio_formula() {
+        assert_eq!(packed_attention_ratio(&[100]), 1.0);
+        assert!((packed_attention_ratio(&[50, 50]) - 0.5).abs() < 1e-12);
+        // skew: one long doc dominates the cost
+        let skew = packed_attention_ratio(&[900, 50, 50]);
+        assert!(skew > 0.8 && skew < 1.0, "{skew}");
+        assert_eq!(packed_attention_ratio(&[]), 1.0);
+    }
+
+    #[test]
+    fn single_segment_packed_equals_unpacked() {
+        let m = preset("llama3-8b").unwrap();
+        let a = train_flos(m, 65_536, true);
+        let b = train_flos_packed(m, &[65_536], true);
+        assert_eq!(a.attention, b.attention);
+        assert_eq!(a.forward_total(), b.forward_total());
     }
 
     #[test]

@@ -5,5 +5,7 @@
 mod flos;
 mod roofline;
 
-pub use flos::{flos_per_layer, train_flos, FlosBreakdown};
-pub use roofline::{iteration_time, IterationModel, PerfResult};
+pub use flos::{
+    flos_per_layer, packed_attention_ratio, train_flos, train_flos_packed, FlosBreakdown,
+};
+pub use roofline::{iteration_time, iteration_time_packed, IterationModel, PerfResult};

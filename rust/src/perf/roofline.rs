@@ -9,14 +9,16 @@
 
 use crate::config::{ClusterConfig, FeatureFlags, ModelPreset};
 use crate::coordinator::ulysses::a2a_bytes_per_block;
-use crate::perf::flos::train_flos;
+use crate::perf::flos::{train_flos, train_flos_packed, FlosBreakdown};
 
 pub const EFF_MAX: f64 = 0.60;
 pub const S_HALF: f64 = 50_000.0;
 
-/// Kernel efficiency as a function of full sequence length.
-pub fn efficiency(seq: usize) -> f64 {
-    EFF_MAX * seq as f64 / (seq as f64 + S_HALF)
+/// Kernel efficiency as a function of the effective sequence length the
+/// attention matmuls span: the full length for one document, the
+/// token-weighted mean segment length for a packed batch.
+pub fn efficiency(eff_seq: f64) -> f64 {
+    EFF_MAX * eff_seq / (eff_seq + S_HALF)
 }
 
 #[derive(Debug, Clone)]
@@ -43,14 +45,42 @@ pub struct PerfResult {
 
 /// Model one training iteration at sequence `seq` across `world` GPUs.
 pub fn iteration_time(m: &IterationModel, seq: usize, world: usize) -> PerfResult {
+    let flos = train_flos(&m.model, seq, m.flags.activation_checkpointing);
+    iteration_with_flos(m, seq, world, &flos, seq as f64)
+}
+
+/// Packed-batch iteration time: attention flos are Σᵢ Sᵢ² (see
+/// `train_flos_packed`), and kernel efficiency is evaluated at the
+/// token-weighted mean segment length ΣSᵢ²/ΣSᵢ — the expected segment a
+/// random token's attention matmul spans — instead of the full packed
+/// length. Everything sequence-linear (a2a volume, offload traffic) uses
+/// the total token count, which packing leaves unchanged.
+pub fn iteration_time_packed(
+    m: &IterationModel,
+    seg_lens: &[usize],
+    world: usize,
+) -> PerfResult {
+    let seq: usize = seg_lens.iter().sum();
+    assert!(seq > 0, "packed batch has no tokens");
+    let flos = train_flos_packed(&m.model, seg_lens, m.flags.activation_checkpointing);
+    let eff_seq = seg_lens.iter().map(|&s| (s * s) as f64).sum::<f64>() / seq as f64;
+    iteration_with_flos(m, seq, world, &flos, eff_seq)
+}
+
+fn iteration_with_flos(
+    m: &IterationModel,
+    seq: usize,
+    world: usize,
+    flos: &FlosBreakdown,
+    eff_seq: f64,
+) -> PerfResult {
     let sp = if m.flags.ulysses_sp {
         m.model.valid_sp_degrees(world).into_iter().max().unwrap_or(1)
     } else {
         1
     };
-    let flos = train_flos(&m.model, seq, m.flags.activation_checkpointing);
     let per_gpu_flos = flos.forward_total() / sp as f64;
-    let eff = efficiency(seq);
+    let eff = efficiency(eff_seq);
     let mut compute_s = per_gpu_flos / (eff * m.cluster.peak_flops);
 
     // weights-offload streaming (single-GPU configs): weights cross PCIe
@@ -174,6 +204,35 @@ mod tests {
         let t1 = iteration_time(&m, 1_000_000, 8).iteration_s;
         let t2 = iteration_time(&m, 2_000_000, 8).iteration_s;
         assert!(t2 > 3.0 * t1, "{t1} -> {t2}");
+    }
+
+    #[test]
+    fn packing_short_docs_is_cheaper_than_one_long_doc() {
+        // §5.4 corollary: at equal token count, k packed documents cost a
+        // fraction of one long document (attention dominates at 2M).
+        let m = model(FeatureFlags::alst(), 1);
+        let total = 2_000_000usize;
+        let one = iteration_time(&m, total, 8);
+        let packed = iteration_time_packed(&m, &vec![total / 16; 16], 8);
+        assert_eq!(packed.seq, total);
+        assert!(
+            packed.iteration_s < 0.5 * one.iteration_s,
+            "{} vs {}",
+            packed.iteration_s,
+            one.iteration_s
+        );
+        // sequence-linear terms are unchanged by packing
+        assert_eq!(packed.a2a_s, one.a2a_s);
+        assert_eq!(packed.offload_s, one.offload_s);
+    }
+
+    #[test]
+    fn packed_single_segment_matches_unpacked() {
+        let m = model(FeatureFlags::alst(), 1);
+        let a = iteration_time(&m, 500_000, 8);
+        let b = iteration_time_packed(&m, &[500_000], 8);
+        assert!((a.iteration_s - b.iteration_s).abs() < 1e-12);
+        assert!((a.tflops_per_gpu - b.tflops_per_gpu).abs() < 1e-9);
     }
 
     #[test]

@@ -339,6 +339,156 @@ fn prop_alst_features_never_hurt_max_seqlen() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Sequence-packing properties
+// ---------------------------------------------------------------------------
+
+use alst::packing::{
+    pack_ffd, shard_packed, Document, Pack, PackedSequence, PackingStats,
+};
+
+fn random_docs(rng: &mut Rng, capacity: usize) -> Vec<Document> {
+    let n = 1 + rng.below(24);
+    (0..n)
+        .map(|i| {
+            let len = 1 + rng.below(capacity);
+            Document::new(
+                i as u64,
+                (0..len).map(|_| rng.below(1000) as i32).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_packer_loses_and_duplicates_nothing() {
+    // every token of every document appears exactly once across all packs,
+    // in order within its document, and capacity is never exceeded.
+    check("packer conservation", 60, |rng| {
+        let capacity = 8 + rng.below(120);
+        let docs = random_docs(rng, capacity);
+        let total: usize = docs.iter().map(Document::len).sum();
+        let packs = pack_ffd(docs.clone(), capacity).unwrap();
+        let mut seen: Vec<Option<&Document>> = vec![None; docs.len()];
+        for p in &packs {
+            assert!(p.used() <= p.capacity, "pack over capacity");
+            assert_eq!(p.capacity, capacity);
+            for d in &p.docs {
+                assert!(seen[d.id as usize].is_none(), "doc {} duplicated", d.id);
+                seen[d.id as usize] = Some(d);
+            }
+        }
+        for (i, s) in seen.iter().enumerate() {
+            let d = s.unwrap_or_else(|| panic!("doc {i} lost"));
+            assert_eq!(d.tokens, docs[i].tokens, "doc {i} tokens mutated");
+        }
+        assert_eq!(packs.iter().map(Pack::used).sum::<usize>(), total);
+        let stats = PackingStats::from_packs(&packs);
+        assert!(stats.efficiency() > 0.0 && stats.efficiency() <= 1.0);
+        assert!(stats.n_packs >= total.div_ceil(capacity), "impossible pack count");
+    });
+}
+
+#[test]
+fn prop_positions_reset_at_every_cu_boundary() {
+    // for ANY document-length distribution: position ids are 0 at each
+    // cu_seqlens boundary and increment by 1 inside a segment; segment
+    // ids are contiguous (each segment is one uninterrupted run).
+    check("packed position reset", 60, |rng| {
+        let capacity = 8 + rng.below(200);
+        let docs = random_docs(rng, capacity);
+        let p = PackedSequence::from_documents(&docs).unwrap();
+        assert_eq!(p.cu_seqlens.len(), p.n_segments() + 1);
+        for s in 0..p.n_segments() {
+            let r = p.segment_range(s);
+            assert_eq!(p.positions[r.start], 0, "position not reset at segment {s}");
+            for (off, i) in r.clone().enumerate() {
+                assert_eq!(p.positions[i], off as i32, "non-monotone position");
+                assert_eq!(p.seg_ids[i], s as i32, "segment {s} not contiguous");
+            }
+        }
+        // seg ids are non-decreasing overall (packed layout)
+        assert!(p.seg_ids.windows(2).all(|w| w[0] <= w[1]));
+    });
+}
+
+#[test]
+fn prop_packed_labels_stay_in_segment() {
+    // acceptance criterion: shift_labels_packed never emits a target
+    // token belonging to a different segment.
+    check("packed label isolation", 60, |rng| {
+        let capacity = 8 + rng.below(100);
+        let docs = random_docs(rng, capacity);
+        let packs = pack_ffd(docs, capacity).unwrap();
+        for pack in &packs {
+            let p = PackedSequence::from_pack(pack).unwrap();
+            let labels = p.labels();
+            assert_eq!(labels.len(), p.len());
+            let mut masked = 0;
+            for (i, &l) in labels.iter().enumerate() {
+                if l == alst::coordinator::dataloader::IGNORE_INDEX {
+                    masked += 1;
+                } else {
+                    assert_eq!(l, p.ids[i + 1], "label is not the next token");
+                    assert_eq!(
+                        p.seg_ids[i],
+                        p.seg_ids[i + 1],
+                        "label at {i} crosses a segment boundary"
+                    );
+                }
+            }
+            // every segment masks its last token; the pad segment (if any)
+            // is fully masked.
+            let pad = if p.has_padding() {
+                p.segment_range(p.n_docs()).len()
+            } else {
+                0
+            };
+            assert_eq!(masked, p.n_docs() + pad);
+        }
+    });
+}
+
+#[test]
+fn prop_shard_packed_preserves_all_metadata() {
+    // sharding for any valid sp: concatenating the shards reproduces the
+    // full packed sequence (ids, positions, segment ids, labels), local
+    // boundaries map back onto global cu_seqlens, and global metadata is
+    // replicated on every rank.
+    check("packed sharding round trip", 40, |rng| {
+        let sp = [1usize, 2, 4, 8][rng.below(4)];
+        let capacity = sp * (4 + rng.below(40));
+        let docs = random_docs(rng, capacity);
+        for pack in pack_ffd(docs, capacity).unwrap() {
+            let p = PackedSequence::from_pack(&pack).unwrap();
+            let shards = shard_packed(&p, sp);
+            let ssh = p.len() / sp;
+            let ids: Vec<i32> = shards.iter().flat_map(|s| s.batch.ids.clone()).collect();
+            let seg: Vec<i32> = shards.iter().flat_map(|s| s.seg_ids.clone()).collect();
+            let pos: Vec<i32> =
+                shards.iter().flat_map(|s| s.batch.positions.clone()).collect();
+            let lab: Vec<i32> =
+                shards.iter().flat_map(|s| s.batch.labels.clone()).collect();
+            assert_eq!(ids, p.ids);
+            assert_eq!(seg, p.seg_ids);
+            assert_eq!(pos, p.positions);
+            assert_eq!(lab, p.labels());
+            for (r, s) in shards.iter().enumerate() {
+                assert_eq!(s.cu_seqlens, p.cu_seqlens, "global metadata lost");
+                assert_eq!(*s.cu_seqlens_local.first().unwrap(), 0);
+                assert_eq!(*s.cu_seqlens_local.last().unwrap(), ssh as i32);
+                for &c in &s.cu_seqlens_local[1..s.cu_seqlens_local.len() - 1] {
+                    let global = (r * ssh) as i32 + c;
+                    assert!(
+                        p.cu_seqlens.contains(&global),
+                        "local boundary {c} on rank {r} is not a global boundary"
+                    );
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_lr_schedule_is_continuous_and_bounded() {
     use alst::coordinator::pipeline::LrSchedule;

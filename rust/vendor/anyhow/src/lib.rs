@@ -1,0 +1,169 @@
+//! Minimal offline shim for the `anyhow` API surface this workspace uses:
+//! `Result`, `Error`, `anyhow!`, `bail!`, `ensure!`, and the `Context`
+//! extension trait. Error values carry a context chain; `{e}` prints the
+//! outermost message, `{e:#}` (and `{e:?}`) print the whole chain
+//! outermost-first joined by `": "` — matching real anyhow closely enough
+//! for the error-message assertions in the test suite.
+
+use std::fmt;
+
+/// Chain of messages, innermost cause first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.msgs.push(c.to_string());
+        self
+    }
+
+    /// Context chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().rev().map(String::as_str)
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, m) in self.msgs.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{m}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.fmt_chain(f)
+        } else {
+            // outermost context only, like anyhow's non-alternate Display
+            write!(f, "{}", self.msgs.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.fmt_chain(f)
+    }
+}
+
+// NB: deliberately NOT `impl std::error::Error for Error` — exactly like
+// real anyhow — so the blanket From below does not collide with the
+// reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(c)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::Error::msg(format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "inner cause"))
+    }
+
+    #[test]
+    fn context_chain_formats_outermost_first() {
+        let e: Error = io_fail().context("outer layer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer layer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("outer layer"), "{full}");
+        assert!(full.contains("inner cause"), "{full}");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            crate::ensure!(1 + 1 == 3, "math broke: {}", 2);
+            Ok(())
+        }
+        fn outer() -> Result<()> {
+            inner().with_context(|| format!("step {}", 7))?;
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.contains("step 7") && s.contains("math broke: 2"), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+}
