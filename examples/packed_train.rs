@@ -65,8 +65,11 @@ fn main() -> anyhow::Result<()> {
     let mut trainer = Trainer::new(&dir, TrainerOptions::default())?;
     let mut log = RunLog::default();
     for step in 1..=10 {
-        let p = loader.next_sequence()?;
-        let m = trainer.train_step_packed(&p)?;
+        // loader sp == trainer sp here, so feed the loader's shard set
+        // straight in (train_step_packed_shards) — nothing is sharded twice
+        let (p, shards) = loader.next()?;
+        let m = trainer
+            .train_step_packed_shards(&p, shards.into_iter().map(|s| s.batch).collect())?;
         if step % 2 == 0 {
             println!(
                 "step {step:>2}  loss {:.4}  docs {}  worst-doc {:.4}",

@@ -1,67 +1,149 @@
 //! End-to-end step latency through the real PJRT pipeline (tiny config),
-//! plus the L3-overhead split the §Perf log tracks: how much of a step is
-//! PJRT execution vs coordinator marshaling/relayout.
+//! plus the coordinator-side hot path that runs with NO artifacts: the
+//! per-step relayout cycle through the scratch arena, and the scoped-
+//! thread rank executor versus the serial loop.
 //!
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! Always emits repo-root `BENCH_pipeline.json` (schema in DESIGN.md);
+//! the PJRT sections additionally require `make artifacts` and are
+//! skipped gracefully without it.
 
 use std::path::Path;
 
+use alst::collectives::Group;
 use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
-use alst::coordinator::pipeline::{Trainer, TrainerOptions};
-use alst::runtime::Manifest;
-use alst::util::bench::bench;
+use alst::coordinator::pipeline::{run_ranks, Trainer, TrainerOptions};
+use alst::coordinator::ulysses::relayout_step_cycle;
+use alst::runtime::{HostTensor, Manifest, ScratchArena};
+use alst::util::bench::{bench, BenchReport};
+use alst::util::rng::Rng;
 
 fn main() {
-    let dir = Manifest::artifact_dir(Path::new("artifacts"), "tiny", 2, 256);
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP bench_pipeline: run `make artifacts` first");
-        return;
-    }
-    println!("bench_pipeline: tiny config, sp=2, seq=256 (PJRT CPU)\n");
+    let mut report = BenchReport::new("pipeline");
+    println!("bench_pipeline: coordinator hot path + PJRT step (if artifacts)\n");
 
-    let mut trainer = Trainer::new(&dir, TrainerOptions::default()).unwrap();
-    let mut loader = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 1), 2);
-    let (ids, _) = loader.next();
-
-    // eval (forward only)
-    let ids_c = ids.clone();
-    trainer.eval_loss(&ids_c).unwrap(); // warm the executable cache
-    trainer.engine.reset_stats();
+    // ---- coordinator-only: relayout step cycle (no artifacts needed) ----
+    let (sp, seq, n_q, n_kv, d, n_layers) = (8usize, 16384usize, 32usize, 4usize, 128usize, 4usize);
+    let ssh = seq / sp;
+    let mut rng = Rng::new(1);
+    let q: Vec<HostTensor> = (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, n_q, d], rng.normal_vec(ssh * n_q * d, 1.0)))
+        .collect();
+    let kv: Vec<HostTensor> = (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, n_kv, d], rng.normal_vec(ssh * n_kv * d, 1.0)))
+        .collect();
+    let g = Group::new(sp);
+    // this shape's per-layer relayout working set (~1.3 GB pooled at
+    // steady state) exceeds the default budget; size the pool to fit so
+    // the bench measures the allocation-free path
+    let arena = ScratchArena::with_byte_budget(4 << 30);
+    // warm one cycle: populates the pool AND measures the exact ledgered
+    // wire volume of a cycle (the GiB/s denominator)
+    relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv);
+    let cycle_bytes = g.stats().all_to_all_bytes;
+    g.reset_stats();
     let r = bench(
-        "eval_loss (fwd only)",
+        &format!("relayout step-cycle sp={sp} seq={seq} L={n_layers} pooled"),
         1,
         10,
         std::time::Duration::from_secs(2),
-        || {
-            trainer.eval_loss(&ids_c).unwrap();
-        },
-    );
-    let st = trainer.engine.stats();
-    let exec_frac = st.exec_time.as_secs_f64()
-        / (r.mean.as_secs_f64() * r.iters as f64);
+        || relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv),
+    )
+    .with_bytes(cycle_bytes);
     println!(
-        "    -> {} PJRT executions; exec {:.0}% / marshal {:.0}% of step",
-        st.executions as usize / r.iters,
-        100.0 * exec_frac,
-        100.0 * st.marshal_time.as_secs_f64() / (r.mean.as_secs_f64() * r.iters as f64),
+        "    -> {:.2} GiB/s, arena hit rate {:.4} ({} buffers pooled)",
+        r.gib_per_s().unwrap_or(0.0),
+        arena.hit_rate(),
+        arena.pooled()
     );
+    report.push(&r);
 
-    // full train step (fwd + recompute + bwd + optimizer)
-    trainer.engine.reset_stats();
-    let r = bench(
-        "train_step (fwd+bwd+adamw)",
-        1,
-        10,
-        std::time::Duration::from_secs(3),
-        || {
-            trainer.train_step(&ids).unwrap();
-        },
-    );
-    let st = trainer.engine.stats();
-    println!(
-        "    -> {} PJRT executions/step; exec {:.1}ms marshal {:.1}ms per step",
-        st.executions as usize / r.iters,
-        st.exec_time.as_secs_f64() * 1e3 / r.iters as f64,
-        st.marshal_time.as_secs_f64() * 1e3 / r.iters as f64,
-    );
+    // ---- coordinator-only: scoped-thread rank executor ------------------
+    // A cpu-bound per-rank workload (the shape of per-rank stage calls);
+    // serial vs parallel run_ranks on the same closure.
+    let work: Vec<Vec<f32>> = (0..sp).map(|_| rng.normal_vec(1 << 18, 1.0)).collect();
+    let rank_work = |r: usize| -> anyhow::Result<f64> {
+        let mut acc = 0f64;
+        for &x in &work[r] {
+            acc += (x as f64) * (x as f64);
+        }
+        Ok(acc)
+    };
+    for (parallel, label) in [(false, "serial"), (true, "threaded")] {
+        let r = bench(
+            &format!("run_ranks sp={sp} {label}"),
+            1,
+            20,
+            std::time::Duration::from_millis(500),
+            || {
+                let out = run_ranks(sp, parallel, rank_work).unwrap();
+                std::hint::black_box(out);
+            },
+        );
+        report.push(&r);
+    }
+
+    // ---- PJRT sections (need `make artifacts`) ---------------------------
+    let dir = Manifest::artifact_dir(Path::new("artifacts"), "tiny", 2, 256);
+    if dir.join("manifest.json").exists() {
+        println!("\nPJRT step (tiny config, sp=2, seq=256):\n");
+        // serial ranks here: the exec/marshal percentage split below sums
+        // per-rank stage durations, which only reads as a fraction of the
+        // step when ranks don't overlap in wall time
+        let opts = TrainerOptions { parallel_ranks: false, ..Default::default() };
+        let mut trainer = Trainer::new(&dir, opts).unwrap();
+        let mut loader = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 1), 2);
+        let (ids, _) = loader.next();
+
+        // eval (forward only)
+        let ids_c = ids.clone();
+        trainer.eval_loss(&ids_c).unwrap(); // warm the executable cache
+        trainer.engine.reset_stats();
+        let r = bench(
+            "eval_loss (fwd only)",
+            1,
+            10,
+            std::time::Duration::from_secs(2),
+            || {
+                trainer.eval_loss(&ids_c).unwrap();
+            },
+        );
+        let st = trainer.engine.stats();
+        let exec_frac = st.exec_time.as_secs_f64() / (r.mean.as_secs_f64() * r.iters as f64);
+        println!(
+            "    -> {} PJRT executions; exec {:.0}% / marshal {:.0}% of step",
+            st.executions as usize / r.iters,
+            100.0 * exec_frac,
+            100.0 * st.marshal_time.as_secs_f64() / (r.mean.as_secs_f64() * r.iters as f64),
+        );
+        report.push(&r);
+
+        // full train step (fwd + recompute + bwd + optimizer)
+        trainer.engine.reset_stats();
+        let r = bench(
+            "train_step (fwd+bwd+adamw)",
+            1,
+            10,
+            std::time::Duration::from_secs(3),
+            || {
+                trainer.train_step(&ids).unwrap();
+            },
+        );
+        let st = trainer.engine.stats();
+        println!(
+            "    -> {} PJRT executions/step; exec {:.1}ms marshal {:.1}ms per step; \
+             relayout arena hit rate {:.4}",
+            st.executions as usize / r.iters,
+            st.exec_time.as_secs_f64() * 1e3 / r.iters as f64,
+            st.marshal_time.as_secs_f64() * 1e3 / r.iters as f64,
+            trainer.arena().hit_rate(),
+        );
+        report.push(&r);
+    } else {
+        eprintln!("\nSKIP PJRT sections: run `make artifacts` first");
+    }
+
+    match report.write_repo_root() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nFAILED to write BENCH_pipeline.json: {e}"),
+    }
 }

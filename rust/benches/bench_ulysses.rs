@@ -1,11 +1,23 @@
 //! Hot-path bench: the Ulysses all-to-all relayout (L3's per-layer cost).
-//! Reports throughput at several (sp, seq, heads) points including the
-//! paper's head-sharding regimes (MHA split, GQA split, kv replication).
+//!
+//! Two variants per configuration:
+//!   * `fresh-alloc` — each call allocates its output buffers (the
+//!     committed-baseline behaviour this PR's arena replaced);
+//!   * `pooled`      — outputs checked out of a persistent `ScratchArena`
+//!     and recycled after use, so steady-state iterations are
+//!     allocation-free (the production step-loop path).
+//!
+//! Emits the machine-readable perf trajectory to repo-root
+//! `BENCH_ulysses.json` (schema in DESIGN.md). The `sp=8 llama 32K`
+//! point (seq 32768, 32 q heads, d 128) is the acceptance configuration:
+//! `pooled` throughput is the number tracked against `fresh-alloc`.
 
 use alst::collectives::Group;
-use alst::coordinator::ulysses::{a2a_head_to_seq, a2a_seq_to_head};
-use alst::runtime::HostTensor;
-use alst::util::bench::quick;
+use alst::coordinator::ulysses::{
+    a2a_head_to_seq, a2a_head_to_seq_into, a2a_seq_to_head, a2a_seq_to_head_into,
+};
+use alst::runtime::{HostTensor, ScratchArena};
+use alst::util::bench::{quick, BenchReport};
 use alst::util::rng::Rng;
 
 fn shards(rng: &mut Rng, sp: usize, ssh: usize, heads: usize, d: usize) -> Vec<HostTensor> {
@@ -17,34 +29,98 @@ fn shards(rng: &mut Rng, sp: usize, ssh: usize, heads: usize, d: usize) -> Vec<H
 fn main() {
     println!("bench_ulysses: all-to-all relayout throughput\n");
     let mut rng = Rng::new(0);
+    let mut report = BenchReport::new("ulysses");
     for (sp, seq, heads, d, label) in [
         (2usize, 4096usize, 8usize, 64usize, "sp=2 mha-split"),
         (4, 4096, 8, 64, "sp=4 gqa-split"),
         (8, 4096, 4, 64, "sp=8 kv-replicated"),
         (8, 16384, 32, 128, "sp=8 llama-shaped"),
+        (8, 32768, 32, 128, "sp=8 llama 32K (acceptance)"),
     ] {
         let ssh = seq / sp;
         let input = shards(&mut rng, sp, ssh, heads, d);
-        let bytes = (sp * ssh * heads * d * 4) as f64;
         let g = Group::new(sp);
+        // per-direction volumes come from the byte ledger itself (one
+        // probe call each), so the GiB/s denominators stay consistent
+        // with CommStats even in the kv-replicated regime, where output
+        // and input volumes differ
+        let full = a2a_seq_to_head(&g, &input);
+        let s2h_bytes = g.stats().all_to_all_bytes;
+        g.reset_stats();
+        let _ = a2a_head_to_seq(&g, &full, heads, false);
+        let h2s_bytes = g.stats().all_to_all_bytes;
+        g.reset_stats();
 
-        let r = quick(&format!("a2a seq->head {label}"), || {
+        // ---- seq->head: fresh-alloc baseline vs pooled ------------------
+        let r = quick(&format!("a2a seq->head {label} fresh-alloc"), || {
             let out = a2a_seq_to_head(&g, &input);
             std::hint::black_box(&out);
-        });
-        println!(
-            "    -> {:.2} GiB/s",
-            bytes / r.median.as_secs_f64() / (1u64 << 30) as f64
-        );
+        })
+        .with_bytes(s2h_bytes);
+        println!("    -> {:.2} GiB/s", r.gib_per_s().unwrap_or(0.0));
+        report.push(&r);
 
-        let full = a2a_seq_to_head(&g, &input);
-        let r = quick(&format!("a2a head->seq {label}"), || {
+        let arena = ScratchArena::new();
+        let r = quick(&format!("a2a seq->head {label} pooled"), || {
+            let out = a2a_seq_to_head_into(&g, &input, &arena);
+            std::hint::black_box(&out);
+            arena.recycle_all(out);
+        })
+        .with_bytes(s2h_bytes);
+        println!(
+            "    -> {:.2} GiB/s (arena hit rate {:.3})",
+            r.gib_per_s().unwrap_or(0.0),
+            arena.hit_rate()
+        );
+        report.push(&r);
+
+        // ---- head->seq over the forward output --------------------------
+        let r = quick(&format!("a2a head->seq {label} fresh-alloc"), || {
             let out = a2a_head_to_seq(&g, &full, heads, false);
             std::hint::black_box(&out);
-        });
+        })
+        .with_bytes(h2s_bytes);
+        println!("    -> {:.2} GiB/s", r.gib_per_s().unwrap_or(0.0));
+        report.push(&r);
+
+        let arena = ScratchArena::new();
+        let r = quick(&format!("a2a head->seq {label} pooled"), || {
+            let out = a2a_head_to_seq_into(&g, &full, heads, false, &arena);
+            std::hint::black_box(&out);
+            arena.recycle_all(out);
+        })
+        .with_bytes(h2s_bytes);
         println!(
-            "    -> {:.2} GiB/s",
-            bytes / r.median.as_secs_f64() / (1u64 << 30) as f64
+            "    -> {:.2} GiB/s (arena hit rate {:.3})",
+            r.gib_per_s().unwrap_or(0.0),
+            arena.hit_rate()
         );
+        report.push(&r);
+
+        // ---- replica-sum backward (the fused accumulate pass) -----------
+        if heads < sp {
+            let kv: Vec<HostTensor> = (0..sp)
+                .map(|_| {
+                    HostTensor::f32(vec![seq, 1, d], rng.normal_vec(seq * d, 1.0))
+                })
+                .collect();
+            let arena = ScratchArena::new();
+            g.reset_stats();
+            let _ = a2a_head_to_seq_into(&g, &kv, heads, true, &arena);
+            let rs_bytes = g.stats().all_to_all_bytes;
+            g.reset_stats();
+            let r = quick(&format!("a2a head->seq {label} replica-sum pooled"), || {
+                let out = a2a_head_to_seq_into(&g, &kv, heads, true, &arena);
+                std::hint::black_box(&out);
+                arena.recycle_all(out);
+            })
+            .with_bytes(rs_bytes);
+            println!("    -> {:.2} GiB/s", r.gib_per_s().unwrap_or(0.0));
+            report.push(&r);
+        }
+    }
+    match report.write_repo_root() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nFAILED to write BENCH_ulysses.json: {e}"),
     }
 }

@@ -7,15 +7,24 @@
 //! what where, replication, reduction) is identical — transport differs.
 //! Byte counts are asserted against the closed-form volumes, and the
 //! roofline model turns them into modeled wire time.
+//!
+//! Buffer discipline: every collective has an `_into` variant that writes
+//! its output into `ScratchArena`-recycled buffers and accumulates in
+//! place — at steady state the simulated wire allocates nothing (the
+//! FPDT observation that buffer reuse, not bandwidth, decides long-
+//! sequence throughput). The ledger sits behind a `Mutex` so a `Group`
+//! can be shared with the scoped rank threads; each op is one commutative
+//! integer update, so the totals are deterministic under any
+//! interleaving.
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{HostTensor, ScratchArena};
 
 /// Traffic ledger for one process group.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct CommStats {
     pub all_gather_bytes: u64,
     pub reduce_scatter_bytes: u64,
@@ -37,21 +46,21 @@ impl CommStats {
 #[derive(Debug)]
 pub struct Group {
     pub world: usize,
-    stats: RefCell<CommStats>,
+    stats: Mutex<CommStats>,
 }
 
 impl Group {
     pub fn new(world: usize) -> Group {
         assert!(world >= 1);
-        Group { world, stats: RefCell::default() }
+        Group { world, stats: Mutex::default() }
     }
 
     pub fn stats(&self) -> CommStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = CommStats::default();
+        *self.stats.lock().unwrap() = CommStats::default();
     }
 
     /// All-gather of equal-length f32 shards: each rank contributes its
@@ -66,34 +75,81 @@ impl Group {
         for s in shards {
             out.extend_from_slice(s);
         }
-        let mut st = self.stats.borrow_mut();
-        st.all_gather_bytes += (total * 4) as u64;
-        st.ops += 1;
+        self.account_gather((total * 4) as u64);
+        out
+    }
+
+    /// `all_gather` into an arena-recycled buffer (allocation-free at
+    /// steady state; caller recycles the result when done).
+    pub fn all_gather_into(&self, shards: &[&[f32]], arena: &ScratchArena) -> Vec<f32> {
+        assert_eq!(shards.len(), self.world);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let mut out = arena.take_f32(total);
+        let mut off = 0;
+        for s in shards {
+            out[off..off + s.len()].copy_from_slice(s);
+            off += s.len();
+        }
+        self.account_gather((total * 4) as u64);
         out
     }
 
     /// Reduce-scatter (sum): input is one full-length gradient per rank;
     /// output is rank r's reduced shard. Shard boundaries are equal
-    /// `total/world` splits (caller pads to divisibility).
+    /// `total/world` splits (caller pads to divisibility). Accumulation
+    /// is in place: rank 0's slice seeds the output, the rest add.
     pub fn reduce_scatter(&self, fulls: &[&[f32]]) -> Vec<Vec<f32>> {
+        let arena = ScratchArena::new(); // one-shot: plain allocations
+        self.reduce_scatter_into(fulls, &arena)
+    }
+
+    /// `reduce_scatter` into arena-recycled shard buffers.
+    pub fn reduce_scatter_into(
+        &self,
+        fulls: &[&[f32]],
+        arena: &ScratchArena,
+    ) -> Vec<Vec<f32>> {
         assert_eq!(fulls.len(), self.world);
         let total = fulls[0].len();
         assert!(fulls.iter().all(|f| f.len() == total), "ragged reduce-scatter");
         assert_eq!(total % self.world, 0, "reduce-scatter needs padded input");
         let shard = total / self.world;
-        let mut out = vec![vec![0f32; shard]; self.world];
-        for (r, dst) in out.iter_mut().enumerate() {
+        let mut out = Vec::with_capacity(self.world);
+        for r in 0..self.world {
             let base = r * shard;
-            for f in fulls {
-                let src = &f[base..base + shard];
-                for (d, s) in dst.iter_mut().zip(src) {
+            let mut dst = arena.take_f32(shard);
+            dst.copy_from_slice(&fulls[0][base..base + shard]);
+            for f in &fulls[1..] {
+                for (d, s) in dst.iter_mut().zip(&f[base..base + shard]) {
                     *d += s;
                 }
             }
+            out.push(dst);
         }
-        let mut st = self.stats.borrow_mut();
-        st.reduce_scatter_bytes += (total * 4) as u64;
-        st.ops += 1;
+        self.account_reduce_scatter((total * 4) as u64);
+        out
+    }
+
+    /// All-to-all of equal blocks: `sends[r]` holds `world` contiguous
+    /// blocks; output `out[d]` is the concatenation over `r` of
+    /// `sends[r]`'s block `d` (NCCL `ncclAllToAll` semantics). The
+    /// head/seq-aware relayout lives in `coordinator::ulysses`; this is
+    /// the generic primitive. Outputs come from the arena.
+    pub fn all_to_all(&self, sends: &[&[f32]], arena: &ScratchArena) -> Vec<Vec<f32>> {
+        assert_eq!(sends.len(), self.world);
+        let per_rank = sends[0].len();
+        assert!(sends.iter().all(|s| s.len() == per_rank), "ragged all-to-all");
+        assert_eq!(per_rank % self.world, 0, "all-to-all needs equal blocks");
+        let blk = per_rank / self.world;
+        let mut out = Vec::with_capacity(self.world);
+        for d in 0..self.world {
+            let mut dst = arena.take_f32(per_rank);
+            for (r, s) in sends.iter().enumerate() {
+                dst[r * blk..(r + 1) * blk].copy_from_slice(&s[d * blk..(d + 1) * blk]);
+            }
+            out.push(dst);
+        }
+        self.account_all_to_all((self.world * per_rank * 4) as u64);
         out
     }
 
@@ -102,31 +158,49 @@ impl Group {
     /// all_reduce to save >3 GiB/GPU (§3.3); we only ever move the scalars.
     pub fn all_reduce_scalars(&self, vals: &[f32]) -> f32 {
         assert_eq!(vals.len(), self.world);
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.all_reduce_bytes += (vals.len() * 4) as u64;
         st.ops += 1;
         vals.iter().sum()
     }
 
-    /// All-reduce (sum) of one tensor per rank, in place semantics:
-    /// returns the summed tensor each rank would hold.
+    /// All-reduce (sum) of one tensor per rank: returns the summed tensor
+    /// each rank would hold. Accumulates in place into one output buffer
+    /// (no `tensors[0].clone()` round trip through a second allocation).
     pub fn all_reduce_sum(&self, tensors: &[&HostTensor]) -> Result<HostTensor> {
+        let arena = ScratchArena::new();
+        self.all_reduce_sum_into(tensors, &arena)
+    }
+
+    /// `all_reduce_sum` into an arena-recycled output buffer.
+    pub fn all_reduce_sum_into(
+        &self,
+        tensors: &[&HostTensor],
+        arena: &ScratchArena,
+    ) -> Result<HostTensor> {
         assert_eq!(tensors.len(), self.world);
-        let mut acc = tensors[0].clone();
+        let shape = tensors[0].shape().to_vec();
+        let first = tensors[0].as_f32()?;
+        let mut acc = arena.take_f32(first.len());
+        acc.copy_from_slice(first);
         for t in &tensors[1..] {
-            acc.add_assign(t)?;
+            anyhow::ensure!(t.shape() == shape.as_slice(), "shape mismatch in add");
+            for (d, s) in acc.iter_mut().zip(t.as_f32()?) {
+                *d += s;
+            }
         }
-        let mut st = self.stats.borrow_mut();
+        let out = HostTensor::f32(shape, acc);
+        let mut st = self.stats.lock().unwrap();
         // ring all-reduce moves 2*(w-1)/w * bytes; ledger the logical size
-        st.all_reduce_bytes += acc.size_bytes() as u64;
+        st.all_reduce_bytes += out.size_bytes() as u64;
         st.ops += 1;
-        Ok(acc)
+        Ok(out)
     }
 
     /// Record an all-to-all's traffic (the relayout itself is done by
     /// `coordinator::ulysses`, which owns the head/seq math).
     pub fn account_all_to_all(&self, bytes: u64) {
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.all_to_all_bytes += bytes;
         st.ops += 1;
     }
@@ -134,14 +208,14 @@ impl Group {
     /// Ledger an all-gather performed by a data-structure owner (e.g. the
     /// ZeRO store's just-in-time parameter gather).
     pub fn account_gather(&self, bytes: u64) {
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.all_gather_bytes += bytes;
         st.ops += 1;
     }
 
     /// Ledger a reduce-scatter performed by a data-structure owner.
     pub fn account_reduce_scatter(&self, bytes: u64) {
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.reduce_scatter_bytes += bytes;
         st.ops += 1;
     }
@@ -157,6 +231,18 @@ mod tests {
         let out = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(g.stats().all_gather_bytes, 24);
+    }
+
+    #[test]
+    fn all_gather_into_reuses_pooled_buffers() {
+        let g = Group::new(2);
+        let arena = ScratchArena::new();
+        let out = g.all_gather_into(&[&[1.0, 2.0], &[3.0, 4.0]], &arena);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        arena.recycle_f32(out);
+        let out2 = g.all_gather_into(&[&[5.0, 6.0], &[7.0, 8.0]], &arena);
+        assert_eq!(out2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!((arena.hits(), arena.misses()), (1, 1));
     }
 
     #[test]
@@ -181,9 +267,41 @@ mod tests {
     }
 
     #[test]
+    fn all_to_all_transposes_blocks() {
+        let g = Group::new(2);
+        let arena = ScratchArena::new();
+        // rank 0 sends [1,2 | 3,4]; rank 1 sends [5,6 | 7,8]
+        let out = g.all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena);
+        assert_eq!(out[0], vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(out[1], vec![3.0, 4.0, 7.0, 8.0]);
+        assert_eq!(g.stats().all_to_all_bytes, 32);
+        // steady state: second call hits the pool after recycling
+        for v in out {
+            arena.recycle_f32(v);
+        }
+        let _ = g.all_to_all(&[&[0.0; 4], &[0.0; 4]], &arena);
+        assert_eq!(arena.misses(), 2);
+        assert_eq!(arena.hits(), 2);
+    }
+
+    #[test]
     fn scalar_all_reduce() {
         let g = Group::new(4);
         assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]), 10.0);
+    }
+
+    #[test]
+    fn tensor_all_reduce_sums_in_place() {
+        let g = Group::new(3);
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let b = HostTensor::f32(vec![2], vec![10.0, 20.0]);
+        let c = HostTensor::f32(vec![2], vec![100.0, 200.0]);
+        let out = g.all_reduce_sum(&[&a, &b, &c]).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[111.0, 222.0]);
+        assert_eq!(g.stats().all_reduce_bytes, 8);
+        // shape mismatch is an error
+        let bad = HostTensor::zeros(&[3]);
+        assert!(g.all_reduce_sum(&[&a, &b, &bad]).is_err());
     }
 
     #[test]

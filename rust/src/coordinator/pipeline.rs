@@ -27,10 +27,37 @@ use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX}
 use crate::packing::{shard_packed, PackedSequence};
 use crate::coordinator::optimizer::{AdamW, AdamWConfig};
 use crate::coordinator::tape::CheckpointTape;
-use crate::coordinator::ulysses::{a2a_head_to_seq, a2a_seq_to_head};
+use crate::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
 use crate::coordinator::zero::{init_flat_params, slice_group, GroupGrads, ShardedStore};
 use crate::memory::{HostPool, MemoryTracker};
-use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::runtime::{Engine, HostTensor, Manifest, ScratchArena};
+
+/// Execute `f` once per rank, returning the per-rank results in rank
+/// order. With `parallel` (and at least two ranks) the ranks run
+/// concurrently on `std::thread::scope` threads — legal because the
+/// simulated ranks share no mutable state by design (DESIGN.md
+/// substitutions: rank-parallelism is data isolation in the coordinator),
+/// and the `Group`/`Engine` ledgers sit behind locks whose per-op updates
+/// are commutative sums, so the accounted totals are byte-identical to a
+/// serial run regardless of thread interleaving (pinned by
+/// `rust/tests/relayout_equiv.rs`).
+pub fn run_ranks<T, F>(sp: usize, parallel: bool, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    if !parallel || sp < 2 {
+        return (0..sp).map(f).collect();
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..sp).map(|r| scope.spawn(move || f(r))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("rank thread panicked"))?)
+            .collect()
+    })
+}
 
 /// Linear-warmup + cosine-decay learning-rate schedule.
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +100,22 @@ pub struct TrainerOptions {
     /// stage at large vocab) per step; turn off for steady-state
     /// training where only the aggregate loss matters.
     pub per_doc_loss: bool,
+    /// Run the data-isolated per-rank stage executions on scoped threads
+    /// (`run_ranks`). Accounting stays deterministic (see `run_ranks`);
+    /// turn off to debug with strictly serial rank order. Note: assumes
+    /// the linked `xla` crate's buffers are `Sync` (true of the vendored
+    /// stub's host-side buffers). Cost model: each stage call spawns and
+    /// joins `sp` scoped threads (scoped spawning is what lets the
+    /// closures borrow per-call rank state safely), so the win
+    /// materializes when per-rank stage work dominates the ~tens-of-µs
+    /// spawn cost — the multi-K-token regime; for toy configs where a
+    /// stage is microseconds, serial can be faster.
+    pub parallel_ranks: bool,
+    /// Pooled-byte budget per dtype for the relayout scratch arena.
+    /// Raise it when the per-step relayout working set exceeds the
+    /// default (see `runtime::tensor::DEFAULT_POOL_BYTE_BUDGET`) or the
+    /// pool sheds buffers and every checkout allocates.
+    pub arena_byte_budget: usize,
 }
 
 impl Default for TrainerOptions {
@@ -86,6 +129,8 @@ impl Default for TrainerOptions {
             host_bytes: 1 << 40,
             checked: false,
             per_doc_loss: true,
+            parallel_ranks: true,
+            arena_byte_budget: crate::runtime::tensor::DEFAULT_POOL_BYTE_BUDGET,
         }
     }
 }
@@ -147,6 +192,11 @@ pub struct Trainer {
     step: u64,
     checked: bool,
     per_doc_loss: bool,
+    parallel_ranks: bool,
+    /// Scratch-buffer pool the step loop's relayouts ping-pong through:
+    /// after the first forward/backward cycle populates it, the 2×n_layers
+    /// relayouts of every later step are allocation-free.
+    arena: ScratchArena,
 }
 
 impl Trainer {
@@ -181,11 +231,19 @@ impl Trainer {
             step: 0,
             checked: opts.checked,
             per_doc_loss: opts.per_doc_loss,
+            parallel_ranks: opts.parallel_ranks,
+            arena: ScratchArena::with_byte_budget(opts.arena_byte_budget),
         })
     }
 
     pub fn sp(&self) -> usize {
         self.manifest.sp
+    }
+
+    /// The trainer's relayout scratch pool (hit/miss counters readable by
+    /// tests and benches; steady-state hit rate should be 1.0).
+    pub fn arena(&self) -> &ScratchArena {
+        &self.arena
     }
 
     pub fn n_layers(&self) -> usize {
@@ -259,39 +317,65 @@ impl Trainer {
         let (ln1, wq, wk, wv) = (&lp[0], &lp[1], &lp[2], &lp[3]);
         let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
 
+        // Per-rank stage executions run concurrently (scoped threads) —
+        // ranks are data-isolated; see `run_ranks`.
+        let qkv = run_ranks(sp, self.parallel_ranks, |r| {
+            let out = self.exec("pre_attn_fwd", &[ln1, wq, wk, wv, &h[r], &pos[r]])?;
+            let mut it = out.into_iter();
+            Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+        })?;
         let mut qs = Vec::with_capacity(sp);
         let mut ks = Vec::with_capacity(sp);
         let mut vs = Vec::with_capacity(sp);
-        for r in 0..sp {
-            let out = self.exec("pre_attn_fwd", &[ln1, wq, wk, wv, &h[r], &pos[r]])?;
-            let mut it = out.into_iter();
-            qs.push(it.next().unwrap());
-            ks.push(it.next().unwrap());
-            vs.push(it.next().unwrap());
+        for (q, k, v) in qkv {
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
         }
-        // Ulysses boundary 1: sequence -> head layout.
-        let q_full = a2a_seq_to_head(&self.group, &qs);
-        let k_full = a2a_seq_to_head(&self.group, &ks);
-        let v_full = a2a_seq_to_head(&self.group, &vs);
+        // Ulysses boundary 1: sequence -> head layout, through the arena:
+        // outputs land in recycled buffers, and both the pre-relayout
+        // shards and the uploaded host copies go straight back to the
+        // pool — the ping-pong that makes steady-state relayout
+        // allocation-free.
+        let q_full = a2a_seq_to_head_into(&self.group, &qs, &self.arena);
+        let k_full = a2a_seq_to_head_into(&self.group, &ks, &self.arena);
+        let v_full = a2a_seq_to_head_into(&self.group, &vs, &self.arena);
+        self.arena.recycle_all(qs);
+        self.arena.recycle_all(ks);
+        self.arena.recycle_all(vs);
         let q_full_b = self.upload_all(&q_full)?;
         let k_full_b = self.upload_all(&k_full)?;
         let v_full_b = self.upload_all(&v_full)?;
+        self.arena.recycle_all(q_full);
+        self.arena.recycle_all(k_full);
+        self.arena.recycle_all(v_full);
 
-        let mut o_full = Vec::with_capacity(sp);
-        for r in 0..sp {
+        let o_full = run_ranks(sp, self.parallel_ranks, |r| {
             let out = self.exec("attn_fwd", &[&q_full_b[r], &k_full_b[r], &v_full_b[r]])?;
-            o_full.push(out.into_iter().next().unwrap());
-        }
+            Ok(out.into_iter().next().unwrap())
+        })?;
         // Ulysses boundary 2: head -> sequence layout.
-        let o_sh = a2a_head_to_seq(&self.group, &o_full, self.manifest.config.n_q_heads, false);
+        let o_sh = a2a_head_to_seq_into(
+            &self.group,
+            &o_full,
+            self.manifest.config.n_q_heads,
+            false,
+            &self.arena,
+        );
+        self.arena.recycle_all(o_full);
         let o_sh_b = self.upload_all(&o_sh)?;
+        self.arena.recycle_all(o_sh);
 
-        let mut h_out = Vec::with_capacity(sp);
-        let mut h_out_host = Vec::with_capacity(sp);
-        for r in 0..sp {
+        let post = run_ranks(sp, self.parallel_ranks, |r| {
             let out = self.exec("post_attn_fwd", &[wo, ln2, wg, wu, wd, &h[r], &o_sh_b[r]])?;
             let t = out.into_iter().next().unwrap();
-            h_out.push(self.upload(&t)?);
+            let b = self.upload(&t)?;
+            Ok((b, t))
+        })?;
+        let mut h_out = Vec::with_capacity(sp);
+        let mut h_out_host = Vec::with_capacity(sp);
+        for (b, t) in post {
+            h_out.push(b);
             h_out_host.push(t);
         }
         Ok((
@@ -423,12 +507,16 @@ impl Trainer {
         // ---- forward -------------------------------------------------------
         let dev_params = self.build_step_params()?;
         let n_layers = self.n_layers();
-        let mut h: Vec<xla::PjRtBuffer> = Vec::with_capacity(sp);
-        let mut h_host: Vec<HostTensor> = Vec::with_capacity(sp);
-        for r in 0..sp {
+        let embed_out = run_ranks(sp, self.parallel_ranks, |r| {
             let out = self.exec("embed_fwd", &[&dev_params.embed[0], &ids_b[r]])?;
             let t = out.into_iter().next().unwrap();
-            h.push(self.upload(&t)?);
+            let b = self.upload(&t)?;
+            Ok((b, t))
+        })?;
+        let mut h: Vec<xla::PjRtBuffer> = Vec::with_capacity(sp);
+        let mut h_host: Vec<HostTensor> = Vec::with_capacity(sp);
+        for (b, t) in embed_out {
+            h.push(b);
             h_host.push(t);
         }
 
@@ -444,13 +532,11 @@ impl Trainer {
         }
 
         let (lnf, unembed) = (&dev_params.final_[0], &dev_params.final_[1]);
-        let mut loss_sums = Vec::with_capacity(sp);
-        let mut counts = Vec::with_capacity(sp);
-        for r in 0..sp {
+        let loss_out = run_ranks(sp, self.parallel_ranks, |r| {
             let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab_b[r]])?;
-            loss_sums.push(out[0].scalar_f32()?);
-            counts.push(out[1].scalar_f32()?);
-        }
+            Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
+        })?;
+        let (loss_sums, counts): (Vec<f32>, Vec<f32>) = loss_out.into_iter().unzip();
         let loss_sum = self.group.all_reduce_scalars(&loss_sums);
         let count = self.group.all_reduce_scalars(&counts);
         // Reachable on packed batches (e.g. every document length 1 =>
@@ -479,10 +565,13 @@ impl Trainer {
                         continue; // no overlap: all-IGNORE shard adds 0/0
                     }
                     let (lo, hi) = (range.start.max(a), range.end.min(b));
-                    let mut masked = vec![IGNORE_INDEX; ssh];
+                    let mut masked = self.arena.take_i32(ssh);
+                    masked.fill(IGNORE_INDEX);
                     masked[lo - a..hi - a]
                         .copy_from_slice(&shards[r].labels[lo - a..hi - a]);
-                    let lab = self.upload(&HostTensor::i32(vec![ssh], masked))?;
+                    let masked_t = HostTensor::i32(vec![ssh], masked);
+                    let lab = self.upload(&masked_t)?;
+                    self.arena.recycle(masked_t);
                     let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab])?;
                     sum_d += out[0].scalar_f32()?;
                     count_d += out[1].scalar_f32()?;
@@ -500,15 +589,19 @@ impl Trainer {
         let ct = self.upload(&HostTensor::scalar(loss_scale / count))?;
         let mut final_grads: Vec<GroupGrads> =
             (0..sp).map(|_| GroupGrads::zeros(&m.params.final_)).collect();
-        let mut d_h: Vec<xla::PjRtBuffer> = Vec::with_capacity(sp);
-        for r in 0..sp {
+        let loss_bwd_out = run_ranks(sp, self.parallel_ranks, |r| {
             let out = self.exec("loss_bwd", &[lnf, unembed, &h[r], &lab_b[r], &ct])?;
             let mut it = out.into_iter();
             let d_lnf = it.next().unwrap();
             let d_unembed = it.next().unwrap();
-            d_h.push(self.upload(&it.next().unwrap())?);
+            let d_h_b = self.upload(&it.next().unwrap())?;
+            Ok((d_lnf, d_unembed, d_h_b))
+        })?;
+        let mut d_h: Vec<xla::PjRtBuffer> = Vec::with_capacity(sp);
+        for (r, (d_lnf, d_unembed, d_h_b)) in loss_bwd_out.into_iter().enumerate() {
             final_grads[r].accumulate("lnf", &d_lnf)?;
             final_grads[r].accumulate("unembed", &d_unembed)?;
+            d_h.push(d_h_b);
         }
         {
             let p = &self.manifest.params;
@@ -540,14 +633,17 @@ impl Trainer {
             let mut layer_grads: Vec<GroupGrads> =
                 (0..sp).map(|_| GroupGrads::zeros(&m.params.layer)).collect();
 
-            // post_attn backward
-            let mut d_h_resid = Vec::with_capacity(sp);
-            let mut d_attn = Vec::with_capacity(sp);
-            for r in 0..sp {
-                let out = self.exec(
+            // post_attn backward (per-rank exec in parallel; the grad
+            // ledger merges serially in rank order — deterministic)
+            let post_out = run_ranks(sp, self.parallel_ranks, |r| {
+                self.exec(
                     "post_attn_bwd",
                     &[wo, ln2, wg, wu, wd, &h_in[r], &act.o_sh[r], &d_h[r]],
-                )?;
+                )
+            })?;
+            let mut d_h_resid = Vec::with_capacity(sp);
+            let mut d_attn = Vec::with_capacity(sp);
+            for (r, out) in post_out.into_iter().enumerate() {
                 let mut it = out.into_iter();
                 for name in ["wo", "ln2", "wg", "wu", "wd"] {
                     layer_grads[r].accumulate(name, &it.next().unwrap())?;
@@ -557,45 +653,61 @@ impl Trainer {
             }
 
             // transposed all-to-all: d_attn (seq layout) -> head layout
-            let d_o_full = a2a_seq_to_head(&self.group, &d_attn);
+            let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena);
+            self.arena.recycle_all(d_attn);
             let d_o_full_b = self.upload_all(&d_o_full)?;
-            let mut d_q_full = Vec::with_capacity(sp);
-            let mut d_k_full = Vec::with_capacity(sp);
-            let mut d_v_full = Vec::with_capacity(sp);
-            for r in 0..sp {
+            self.arena.recycle_all(d_o_full);
+            let attn_out = run_ranks(sp, self.parallel_ranks, |r| {
                 let out = self.exec(
                     "attn_bwd",
                     &[&act.q_full[r], &act.k_full[r], &act.v_full[r], &d_o_full_b[r]],
                 )?;
                 let mut it = out.into_iter();
-                d_q_full.push(it.next().unwrap());
-                d_k_full.push(it.next().unwrap());
-                d_v_full.push(it.next().unwrap());
+                Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+            })?;
+            let mut d_q_full = Vec::with_capacity(sp);
+            let mut d_k_full = Vec::with_capacity(sp);
+            let mut d_v_full = Vec::with_capacity(sp);
+            for (q, k, v) in attn_out {
+                d_q_full.push(q);
+                d_k_full.push(k);
+                d_v_full.push(v);
             }
-            // inverse a2a; kv grads SUM over replica consumers.
+            // inverse a2a; kv grads SUM over replica consumers (fused
+            // copy-first/accumulate-rest pass inside the relayout).
             let nq = m.config.n_q_heads;
             let nkv = m.config.n_kv_heads;
-            let d_q = a2a_head_to_seq(&self.group, &d_q_full, nq, true);
-            let d_k = a2a_head_to_seq(&self.group, &d_k_full, nkv, true);
-            let d_v = a2a_head_to_seq(&self.group, &d_v_full, nkv, true);
+            let d_q = a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena);
+            let d_k = a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena);
+            let d_v = a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena);
+            self.arena.recycle_all(d_q_full);
+            self.arena.recycle_all(d_k_full);
+            self.arena.recycle_all(d_v_full);
 
             // pre_attn backward; d_h = qkv path + residual path
-            let mut new_d_h = Vec::with_capacity(sp);
-            for r in 0..sp {
+            let pre_out = run_ranks(sp, self.parallel_ranks, |r| {
                 let d_q_b = self.upload(&d_q[r])?;
                 let d_k_b = self.upload(&d_k[r])?;
                 let d_v_b = self.upload(&d_v[r])?;
-                let out = self.exec(
+                self.exec(
                     "pre_attn_bwd",
                     &[ln1, wq, wk, wv, &h_in[r], &pos_b[r], &d_q_b, &d_k_b, &d_v_b],
-                )?;
+                )
+            })?;
+            self.arena.recycle_all(d_q);
+            self.arena.recycle_all(d_k);
+            self.arena.recycle_all(d_v);
+            let mut new_d_h = Vec::with_capacity(sp);
+            for (r, (out, resid)) in pre_out.into_iter().zip(d_h_resid).enumerate() {
                 let mut it = out.into_iter();
                 for name in ["ln1", "wq", "wk", "wv"] {
                     layer_grads[r].accumulate(name, &it.next().unwrap())?;
                 }
                 let mut d_hr = it.next().unwrap();
-                d_hr.add_assign(&d_h_resid[r])?;
+                d_hr.add_assign(&resid)?;
                 new_d_h.push(self.upload(&d_hr)?);
+                self.arena.recycle(d_hr);
+                self.arena.recycle(resid);
             }
             d_h = new_d_h;
 
@@ -608,8 +720,10 @@ impl Trainer {
         // embed backward
         let mut embed_grads: Vec<GroupGrads> =
             (0..sp).map(|_| GroupGrads::zeros(&m.params.embed)).collect();
-        for r in 0..sp {
-            let out = self.exec("embed_bwd", &[&dev_params.embed[0], &ids_b[r], &d_h[r]])?;
+        let embed_bwd_out = run_ranks(sp, self.parallel_ranks, |r| {
+            self.exec("embed_bwd", &[&dev_params.embed[0], &ids_b[r], &d_h[r]])
+        })?;
+        for (r, out) in embed_bwd_out.into_iter().enumerate() {
             embed_grads[r].accumulate("embed", &out[0])?;
         }
         let contribs: Vec<&[f32]> =
@@ -637,20 +751,109 @@ impl Trainer {
     /// in without coordinator changes. Labels and loss accounting are
     /// already fully segment-correct.
     pub fn train_step_packed(&mut self, p: &PackedSequence) -> Result<PackedStepMetrics> {
+        let t0 = Instant::now(); // sharding counts toward step_time
         anyhow::ensure!(
             p.len() == self.manifest.seq,
             "packed length {} != artifact seq {}",
             p.len(),
             self.manifest.seq
         );
-        let t0 = Instant::now();
-        self.group.reset_stats();
-        self.device.reset_peak();
-
         let batches: Vec<ShardedBatch> = shard_packed(p, self.manifest.sp)
             .into_iter()
             .map(|s| s.batch)
             .collect();
+        // shard_packed output is correct by construction — skip the
+        // caller-input validation the pre-sharded entry point performs
+        self.packed_step_core(p, batches, t0)
+    }
+
+    /// `train_step_packed` on PRE-SHARDED batches. When the caller already
+    /// holds a shard set at the trainer's SP degree (e.g. from
+    /// `PackedDataLoader::next`), this consumes it directly instead of
+    /// re-running the per-rank slicing — the double materialization
+    /// `PackedDataLoader::next_sequence` used to warn about.
+    pub fn train_step_packed_shards(
+        &mut self,
+        p: &PackedSequence,
+        batches: Vec<ShardedBatch>,
+    ) -> Result<PackedStepMetrics> {
+        let t0 = Instant::now(); // validation counts toward step_time
+        anyhow::ensure!(
+            p.len() == self.manifest.seq,
+            "packed length {} != artifact seq {}",
+            p.len(),
+            self.manifest.seq
+        );
+        // A stale or foreign shard set satisfies the count/length checks
+        // downstream while silently mis-attributing per-document losses —
+        // or, worse, training on cross-document targets if the caller
+        // sharded with the whole-sequence helper (the §4.3 bug class).
+        // Allocation-free O(S) guards, always on: shards must be
+        // equal-length (the per-doc loss slicing assumes seq/sp each) and
+        // ids/positions must reassemble the pack (whole-sequence sharding
+        // fails the positions check — no per-document resets).
+        let ssh = p.len() / self.manifest.sp;
+        anyhow::ensure!(
+            batches.iter().all(|b| b.ids.len() == ssh
+                && b.positions.len() == ssh
+                && b.labels.len() == ssh)
+                && batches.len() * ssh == p.len(),
+            "packed shards must be {} equal-length rank batches (seq/sp = {ssh})",
+            self.manifest.sp
+        );
+        anyhow::ensure!(
+            batches.iter().flat_map(|b| b.ids.iter()).eq(p.ids.iter())
+                && batches
+                    .iter()
+                    .flat_map(|b| b.positions.iter())
+                    .eq(p.positions.iter()),
+            "shard set does not reassemble the packed sequence (mismatched \
+             sequence/shards pair, or sharded without segment awareness?)"
+        );
+        // Labels must be the pack's segment-aware shift, checked
+        // element-wise against ids/seg_ids — allocation-free, so it stays
+        // on unconditionally (the rule mirrors `shift_labels_packed` +
+        // the padding mask of `PackedSequence::labels`). Whole-sequence
+        // shifting fails at the first boundary: one leaked cross-document
+        // target per boundary is the §4.3 bug.
+        let pad_seg = if p.has_padding() { Some(p.n_docs() as i32) } else { None };
+        let labels_ok =
+            batches
+                .iter()
+                .flat_map(|b| b.labels.iter())
+                .enumerate()
+                .all(|(i, &l)| {
+                    let expect = if Some(p.seg_ids[i]) == pad_seg {
+                        IGNORE_INDEX
+                    } else if i + 1 < p.len() && p.seg_ids[i + 1] == p.seg_ids[i] {
+                        p.ids[i + 1]
+                    } else {
+                        IGNORE_INDEX
+                    };
+                    l == expect
+                });
+        anyhow::ensure!(
+            labels_ok,
+            "shard labels are not the segment-aware shift of the packed \
+             sequence (sharded with the whole-sequence helper? see \
+             packing::shift_labels_packed)"
+        );
+        self.packed_step_core(p, batches, t0)
+    }
+
+    /// The metered packed step both entry points share (inputs already
+    /// validated or correct by construction). `t0` is the entry-point
+    /// start time, so sharding/validation stay inside `step_time` as they
+    /// were before the entry points split.
+    fn packed_step_core(
+        &mut self,
+        p: &PackedSequence,
+        batches: Vec<ShardedBatch>,
+        t0: Instant,
+    ) -> Result<PackedStepMetrics> {
+        self.group.reset_stats();
+        self.device.reset_peak();
+
         let (loss, ckpt_transfer, doc_losses) =
             self.forward_backward_shards(&batches, 1.0, Some(p))?;
         let grad_norm = self.optimizer_step();

@@ -7,9 +7,26 @@
 //! and the inverse after attention. kv tensors replicate when
 //! `n_kv_heads < sp`; the backward of that replication SUMS the gradient
 //! contributions from every consumer rank.
+//!
+//! Hot-path discipline (the per-layer cost ALST's step time is dominated
+//! by): the `_into` variants write into `ScratchArena`-recycled buffers —
+//! zero allocation at steady state — and move data as one contiguous
+//! block copy per (dst, src) rank pair (`copy_rows`): for a fixed source
+//! rank the destination rows are adjacent, so only the source side is
+//! strided. `sp == 1` degenerates to a single memcpy passthrough, and the
+//! `n_kv < sp` backward runs a fused single pass that copies the first
+//! replica's contribution and accumulates the rest — no zero-fill, no
+//! second sweep. The naive per-(dst, src, s) reference lives on in
+//! `rust/tests/relayout_equiv.rs`, which pins the rewrite bit-for-bit,
+//! with one documented exception: the sign of zero. The reference's
+//! zero-init-then-add computes `0.0 + x` for the first contribution,
+//! which normalizes `x = -0.0` to `+0.0`; the fused copy preserves
+//! `-0.0`'s bit pattern. Numerically identical under IEEE `==` either
+//! way, and the addend ORDER of every replica sum is unchanged
+//! (ascending source rank), so all nonzero results round identically.
 
 use crate::collectives::Group;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{accumulate_rows, copy_rows, HostTensor, ScratchArena};
 
 /// First global head owned by `rank` when `n_heads` are distributed over
 /// `sp` ranks. Handles both the contiguous-split (n_heads >= sp) and the
@@ -38,13 +55,25 @@ pub fn sp_is_valid(n_q: usize, n_kv: usize, sp: usize) -> bool {
         && (n_kv >= sp && n_kv % sp == 0 || n_kv < sp)
 }
 
+/// seq->head all-to-all (one-shot buffers; see `a2a_seq_to_head_into`).
+pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Vec<HostTensor> {
+    a2a_seq_to_head_into(group, shards, &ScratchArena::new())
+}
+
 /// seq->head all-to-all.
 ///
 /// `shards[r]`: rank r's `[ssh, n_heads, d]` tensor. Returns per dst rank
 /// the `[ssh*sp, h_out, d]` full-sequence head shard, where
-/// `h_out = heads_per_rank(n_heads, sp)`. Copies are contiguous per
-/// (src, seq-row): heads are the middle axis.
-pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Vec<HostTensor> {
+/// `h_out = heads_per_rank(n_heads, sp)`, in buffers checked out of
+/// `arena` (recycle them once consumed — the step loop ping-pongs the
+/// same buffers through all 2×n_layers relayouts). Data movement is one
+/// `copy_rows` call per (dst, src) pair; the destination side of each
+/// pair is a single contiguous span.
+pub fn a2a_seq_to_head_into(
+    group: &Group,
+    shards: &[HostTensor],
+    arena: &ScratchArena,
+) -> Vec<HostTensor> {
     let sp = shards.len();
     assert_eq!(sp, group.world);
     let dims = shards[0].shape();
@@ -52,39 +81,59 @@ pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Vec<HostTensor> 
     let (ssh, n_heads, d) = (dims[0], dims[1], dims[2]);
     let h_out = heads_per_rank(n_heads, sp);
     let seq = ssh * sp;
+    let out_len = seq * h_out * d;
 
     let mut out = Vec::with_capacity(sp);
-    for dst in 0..sp {
-        let h0 = if n_heads >= sp { dst * h_out } else { head_start(dst, n_heads, sp) };
-        let mut data = vec![0f32; seq * h_out * d];
-        for (src, shard) in shards.iter().enumerate() {
-            let src_data = shard.as_f32().expect("f32 relayout");
-            for s in 0..ssh {
-                let from = (s * n_heads + h0) * d;
-                let to = ((src * ssh + s) * h_out) * d;
-                data[to..to + h_out * d]
-                    .copy_from_slice(&src_data[from..from + h_out * d]);
-            }
-        }
+    if sp == 1 {
+        // Passthrough fast path: the relayout is the identity; one memcpy.
+        let src = shards[0].as_f32().expect("f32 relayout");
+        let mut data = arena.take_f32(out_len);
+        data.copy_from_slice(src);
         out.push(HostTensor::f32(vec![seq, h_out, d], data));
+    } else {
+        let blk = h_out * d;
+        let row = n_heads * d;
+        for dst in 0..sp {
+            let h0 = if n_heads >= sp { dst * h_out } else { head_start(dst, n_heads, sp) };
+            // contents unspecified: every element is overwritten below
+            let mut data = arena.take_f32(out_len);
+            for (src, shard) in shards.iter().enumerate() {
+                let src_data = shard.as_f32().expect("f32 relayout");
+                copy_rows(&mut data, src * ssh * blk, blk, src_data, h0 * d, row, ssh, blk);
+            }
+            out.push(HostTensor::f32(vec![seq, h_out, d], data));
+        }
     }
     // Every element of every output crossed the (simulated) wire once.
-    let bytes: u64 = out.iter().map(|t| t.size_bytes() as u64).sum();
-    group.account_all_to_all(bytes);
+    group.account_all_to_all((sp * out_len * 4) as u64);
     out
 }
 
-/// head->seq all-to-all (inverse of `a2a_seq_to_head`).
-///
-/// `shards[r]`: rank r's `[seq, h_sh, d]`. Returns per dst rank the
-/// `[ssh, n_heads_total, d]` sequence shard with all heads. With
-/// `sum_replicas` (backward of kv replication), gradient pieces from
-/// ranks sharing a head are accumulated instead of overwritten.
+/// head->seq all-to-all (one-shot buffers; see `a2a_head_to_seq_into`).
 pub fn a2a_head_to_seq(
     group: &Group,
     shards: &[HostTensor],
     n_heads_total: usize,
     sum_replicas: bool,
+) -> Vec<HostTensor> {
+    a2a_head_to_seq_into(group, shards, n_heads_total, sum_replicas, &ScratchArena::new())
+}
+
+/// head->seq all-to-all (inverse of `a2a_seq_to_head`).
+///
+/// `shards[r]`: rank r's `[seq, h_sh, d]`. Returns per dst rank the
+/// `[ssh, n_heads_total, d]` sequence shard with all heads, in
+/// arena-recycled buffers. With `sum_replicas` (backward of kv
+/// replication) and `n_heads_total < sp`, the ranks sharing a head are
+/// fused in a single pass: the first replica's contribution is a copy,
+/// the rest accumulate — replica sums land in ascending source-rank
+/// order, identical to the naive zero-init-then-add reference.
+pub fn a2a_head_to_seq_into(
+    group: &Group,
+    shards: &[HostTensor],
+    n_heads_total: usize,
+    sum_replicas: bool,
+    arena: &ScratchArena,
 ) -> Vec<HostTensor> {
     let sp = shards.len();
     assert_eq!(sp, group.world);
@@ -93,10 +142,43 @@ pub fn a2a_head_to_seq(
     let (seq, h_sh, d) = (dims[0], dims[1], dims[2]);
     assert_eq!(seq % sp, 0);
     let ssh = seq / sp;
+    let out_len = ssh * n_heads_total * d;
+    let in_bytes: u64 = shards.iter().map(|t| t.size_bytes() as u64).sum();
 
     let mut out = Vec::with_capacity(sp);
+    if sp == 1 && h_sh == n_heads_total {
+        // passthrough fast path: the relayout is the identity; one memcpy
+        let src = shards[0].as_f32().expect("f32 relayout");
+        let mut data = arena.take_f32(out_len);
+        data.copy_from_slice(src);
+        out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
+        group.account_all_to_all(in_bytes);
+        return out;
+    }
+
+    // With n_heads_total >= sp the source head blocks partition the output
+    // columns, so even under `sum_replicas` every element is written
+    // exactly once (pure copy). Only the replicated regime accumulates.
+    let replicated = sum_replicas && n_heads_total < sp;
+    // The copy pass covers every output column exactly when the shard
+    // heads tile n_heads_total (partitioned regime) or h_sh == 1 with
+    // head_start surjective (replicated regime) — true for everything the
+    // coordinator produces. A PARTIAL head view (h_sh * sp <
+    // n_heads_total) leaves uncovered columns, which must read as zero
+    // like the pre-arena implementation returned.
+    let full_cover = if n_heads_total >= sp {
+        sp * h_sh == n_heads_total
+    } else {
+        h_sh == 1
+    };
+    let blk = h_sh * d;
+    let row = n_heads_total * d;
     for dst in 0..sp {
-        let mut data = vec![0f32; ssh * n_heads_total * d];
+        let mut data = if full_cover {
+            arena.take_f32(out_len) // contents unspecified: fully overwritten
+        } else {
+            arena.take_f32_zeroed(out_len)
+        };
         for (src, shard) in shards.iter().enumerate() {
             let h0 = if n_heads_total >= sp {
                 src * h_sh
@@ -104,25 +186,74 @@ pub fn a2a_head_to_seq(
                 head_start(src, n_heads_total, sp)
             };
             let src_data = shard.as_f32().expect("f32 relayout");
-            for s in 0..ssh {
-                let from = ((dst * ssh + s) * h_sh) * d;
-                let to = (s * n_heads_total + h0) * d;
-                let src_slice = &src_data[from..from + h_sh * d];
-                let dst_slice = &mut data[to..to + h_sh * d];
-                if sum_replicas {
-                    for (a, b) in dst_slice.iter_mut().zip(src_slice) {
-                        *a += b;
-                    }
-                } else {
-                    dst_slice.copy_from_slice(src_slice);
-                }
+            // fused replica-sum: first writer of a head group copies,
+            // later replicas accumulate onto it
+            let first_writer =
+                !replicated || src == 0 || head_start(src - 1, n_heads_total, sp) != h0;
+            if first_writer {
+                copy_rows(&mut data, h0 * d, row, src_data, dst * ssh * blk, blk, ssh, blk);
+            } else {
+                accumulate_rows(&mut data, h0 * d, row, src_data, dst * ssh * blk, blk, ssh, blk);
             }
         }
         out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
     }
-    let bytes: u64 = shards.iter().map(|t| t.size_bytes() as u64).sum();
-    group.account_all_to_all(bytes);
+    group.account_all_to_all(in_bytes);
     out
+}
+
+/// Drive one train step's worth of relayouts through `arena`, mirroring
+/// `pipeline::Trainer`'s schedule. Forward, per layer: q/k/v seq->head +
+/// o head->seq. Backward, per layer: activation checkpointing REPLAYS
+/// the forward relayouts (recompute), then d_attn seq->head and the
+/// three gradient head->seq relayouts (kv grads sum over replica
+/// consumers). Every buffer ping-pongs through the arena exactly as the
+/// pipeline does. This is the single source of the schedule for
+/// `bench_pipeline`'s step-cycle row and the steady-state
+/// allocation-freedom test — KEEP IN SYNC with `Trainer::layer_forward`
+/// and its backward loop if the relayout order ever changes.
+///
+/// `q_shards[r]`: `[ssh, n_q, d]`; `kv_shards[r]`: `[ssh, n_kv, d]`.
+pub fn relayout_step_cycle(
+    group: &Group,
+    arena: &ScratchArena,
+    q_shards: &[HostTensor],
+    kv_shards: &[HostTensor],
+    n_layers: usize,
+    n_q: usize,
+    n_kv: usize,
+) {
+    for _ in 0..n_layers {
+        let qf = a2a_seq_to_head_into(group, q_shards, arena);
+        let kf = a2a_seq_to_head_into(group, kv_shards, arena);
+        let vf = a2a_seq_to_head_into(group, kv_shards, arena);
+        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena);
+        arena.recycle_all(qf);
+        arena.recycle_all(kf);
+        arena.recycle_all(vf);
+        arena.recycle_all(o);
+    }
+    for _ in 0..n_layers {
+        // recompute replay of the forward relayouts; qf/kf/vf stay live
+        // through attn_bwd, as in the pipeline
+        let qf = a2a_seq_to_head_into(group, q_shards, arena);
+        let kf = a2a_seq_to_head_into(group, kv_shards, arena);
+        let vf = a2a_seq_to_head_into(group, kv_shards, arena);
+        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena);
+        arena.recycle_all(o);
+        // d_attn (q-shaped) seq->head, then dq/dk/dv head->seq
+        let d_o = a2a_seq_to_head_into(group, q_shards, arena);
+        let d_q = a2a_head_to_seq_into(group, &qf, n_q, true, arena);
+        let d_k = a2a_head_to_seq_into(group, &kf, n_kv, true, arena);
+        let d_v = a2a_head_to_seq_into(group, &vf, n_kv, true, arena);
+        arena.recycle_all(qf);
+        arena.recycle_all(kf);
+        arena.recycle_all(vf);
+        arena.recycle_all(d_o);
+        arena.recycle_all(d_q);
+        arena.recycle_all(d_k);
+        arena.recycle_all(d_v);
+    }
 }
 
 /// Per-step all-to-all wire volume for one attention block, in bytes —
@@ -188,7 +319,7 @@ mod tests {
 
     #[test]
     fn round_trip_is_identity() {
-        for (sp, heads) in [(2, 4), (4, 4), (2, 2), (4, 8)] {
+        for (sp, heads) in [(1, 4), (2, 4), (4, 4), (2, 2), (4, 8)] {
             let (ssh, d) = (4, 3);
             let g = Group::new(sp);
             let orig = mk(sp, ssh, heads, d);
@@ -196,6 +327,37 @@ mod tests {
             let back = a2a_head_to_seq(&g, &full, heads, false);
             assert_eq!(orig, back, "sp={sp} heads={heads}");
         }
+    }
+
+    #[test]
+    fn sp1_passthrough_is_identity_and_accounted() {
+        let g = Group::new(1);
+        let orig = mk(1, 4, 8, 2);
+        let full = a2a_seq_to_head(&g, &orig);
+        assert_eq!(full[0].as_f32().unwrap(), orig[0].as_f32().unwrap());
+        assert_eq!(full[0].shape(), &[4, 8, 2]);
+        assert_eq!(g.stats().all_to_all_bytes, (4 * 8 * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn relayout_reuses_arena_buffers_across_calls() {
+        let (sp, ssh, heads, d) = (4, 4, 8, 3);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let input = mk(sp, ssh, heads, d);
+        for cycle in 0..3 {
+            let full = a2a_seq_to_head_into(&g, &input, &arena);
+            let back = a2a_head_to_seq_into(&g, &full, heads, false, &arena);
+            arena.recycle_all(full);
+            assert_eq!(back, input);
+            arena.recycle_all(back);
+            if cycle == 0 {
+                assert_eq!(arena.misses(), 2 * sp as u64, "first cycle allocates");
+            }
+        }
+        // cycles 1 and 2 were served entirely from the pool
+        assert_eq!(arena.misses(), 2 * sp as u64);
+        assert_eq!(arena.hits(), 4 * sp as u64);
     }
 
     #[test]

@@ -1,5 +1,17 @@
 //! ALST-RS: Arctic Long Sequence Training reproduced as a three-layer
 //! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
+// Style lints the codebase deliberately trades away: rank/sequence loops
+// are written as indexed `for r in 0..sp` to mirror the SPMD math in the
+// paper, and the strided copy helpers take (offset, stride) tuples per
+// side. CI enforces `clippy -D warnings` over everything else.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::identity_op,
+    clippy::erasing_op,
+    clippy::type_complexity,
+    clippy::new_without_default
+)]
 pub mod util;
 pub mod config;
 pub mod runtime;

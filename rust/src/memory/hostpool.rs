@@ -25,15 +25,18 @@ impl HostPool {
     }
 
     pub fn alloc(&mut self, bytes: u64) -> Result<()> {
+        // checked_add: a pathological `bytes` near u64::MAX must report
+        // exhaustion, not wrap the capacity comparison around to success
+        let want = self.current.checked_add(bytes);
         anyhow::ensure!(
-            self.current + bytes <= self.capacity,
+            want.is_some_and(|w| w <= self.capacity),
             "host memory exhausted: {} + {} MiB > {} MiB (paper §5.3.2: CPU \
              RAM becomes the limiting factor)",
             self.current >> 20,
             bytes >> 20,
             self.capacity >> 20
         );
-        self.current += bytes;
+        self.current = want.unwrap();
         self.peak = self.peak.max(self.current);
         Ok(())
     }
@@ -73,5 +76,20 @@ mod tests {
     fn per_rank_splits_node_budget() {
         let p = HostPool::per_rank(1 << 40, 8);
         assert_eq!(p.capacity(), (1 << 40) / 8);
+    }
+
+    #[test]
+    fn overflow_sized_alloc_reports_exhaustion_not_wraparound() {
+        let mut p = HostPool::new(u64::MAX);
+        p.alloc(16).unwrap();
+        // current + bytes would wrap past zero; must be an error, and the
+        // pool must be left untouched
+        let err = p.alloc(u64::MAX).unwrap_err();
+        assert!(format!("{err:#}").contains("host memory exhausted"));
+        assert_eq!(p.current(), 16);
+        assert_eq!(p.peak(), 16);
+        // exactly filling the remaining capacity still succeeds
+        p.alloc(u64::MAX - 16).unwrap();
+        assert_eq!(p.current(), u64::MAX);
     }
 }

@@ -39,6 +39,39 @@ pub struct PackedShard {
     pub cu_seqlens_local: Vec<i32>,
 }
 
+/// A full-sequence view reassembled from a shard set (the inverse of
+/// `shard_packed`, used by round-trip checks and the trainer-side
+/// debugging utilities).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatheredSequence {
+    pub ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub seg_ids: Vec<i32>,
+}
+
+/// Reassemble the full packed sequence from its shard set by borrowing
+/// each shard's slices into one preallocated buffer per field — a single
+/// `extend_from_slice` pass, no per-shard `Vec` clones (the
+/// `flat_map(clone)` pattern this replaces allocated one throwaway vector
+/// per rank per field).
+pub fn gather_shards(shards: &[PackedShard]) -> GatheredSequence {
+    let total: usize = shards.iter().map(|s| s.batch.ids.len()).sum();
+    let mut out = GatheredSequence {
+        ids: Vec::with_capacity(total),
+        positions: Vec::with_capacity(total),
+        labels: Vec::with_capacity(total),
+        seg_ids: Vec::with_capacity(total),
+    };
+    for s in shards {
+        out.ids.extend_from_slice(&s.batch.ids);
+        out.positions.extend_from_slice(&s.batch.positions);
+        out.labels.extend_from_slice(&s.batch.labels);
+        out.seg_ids.extend_from_slice(&s.seg_ids);
+    }
+    out
+}
+
 /// Shard one packed sequence for `sp` ranks, preserving segment metadata.
 pub fn shard_packed(p: &PackedSequence, sp: usize) -> Vec<PackedShard> {
     assert!(sp > 0, "sp must be positive");
@@ -167,10 +200,11 @@ impl<S: DocumentSource> PackedDataLoader<S> {
         Ok((p, shards))
     }
 
-    /// Next packed sequence WITHOUT materializing shards. Use this when
-    /// feeding `Trainer::train_step_packed`, which shards against its own
-    /// manifest SP degree — `next()` would do the labels() pass and
-    /// per-rank clones a second time just to throw them away.
+    /// Next packed sequence WITHOUT materializing shards — for callers
+    /// that only need the sequence. When the loader's `sp` matches the
+    /// trainer's, prefer `next()` + `Trainer::train_step_packed_shards`,
+    /// which consumes the shard set directly (nothing is materialized
+    /// twice on either path).
     pub fn next_sequence(&mut self) -> Result<PackedSequence> {
         if self.queue.is_empty() {
             self.refill()?;
@@ -203,14 +237,11 @@ mod tests {
         let p = seq(&[5, 3, 8]); // len 16
         for sp in [1usize, 2, 4] {
             let shards = shard_packed(&p, sp);
-            let ids: Vec<i32> = shards.iter().flat_map(|s| s.batch.ids.clone()).collect();
-            let pos: Vec<i32> = shards.iter().flat_map(|s| s.batch.positions.clone()).collect();
-            let seg: Vec<i32> = shards.iter().flat_map(|s| s.seg_ids.clone()).collect();
-            let lab: Vec<i32> = shards.iter().flat_map(|s| s.batch.labels.clone()).collect();
-            assert_eq!(ids, p.ids);
-            assert_eq!(pos, p.positions);
-            assert_eq!(seg, p.seg_ids);
-            assert_eq!(lab, p.labels());
+            let g = gather_shards(&shards);
+            assert_eq!(g.ids, p.ids);
+            assert_eq!(g.positions, p.positions);
+            assert_eq!(g.seg_ids, p.seg_ids);
+            assert_eq!(g.labels, p.labels());
             for s in &shards {
                 assert_eq!(s.cu_seqlens, p.cu_seqlens, "global metadata replicated");
             }

@@ -26,7 +26,10 @@ pub mod packer;
 pub mod sequence;
 
 pub use adapter::{
-    shard_packed, DocumentSource, MixedLengthSource, PackedDataLoader, PackedShard,
+    gather_shards, shard_packed, DocumentSource, GatheredSequence, MixedLengthSource,
+    PackedDataLoader, PackedShard,
 };
-pub use packer::{chunk_document, pack_ffd, Document, Pack, PackingStats};
+pub use packer::{
+    chunk_document, pack_ffd, pack_first_fit_reference, Document, Pack, PackingStats,
+};
 pub use sequence::{shift_labels_packed, PackedSequence, PAD_TOKEN};

@@ -1,11 +1,17 @@
-//! First-fit-decreasing bin-packing of variable-length documents into
+//! Best-fit-decreasing bin-packing of variable-length documents into
 //! fixed-capacity sequences (the paper's assumed data recipe: "multiple
 //! samples packed into one long sequence", §3.4).
 //!
-//! FFD is the standard packing heuristic for SFT-style corpora: sort
-//! documents longest-first, drop each into the first pack with room. It
-//! is deterministic (ties broken by document id) and within 11/9·OPT+1 of
-//! the optimal pack count, which is all a dataloader needs.
+//! Documents are sorted longest-first (ties broken by id for
+//! determinism) and each is placed in the open pack with the SMALLEST
+//! remaining capacity that still fits, found through an ordered
+//! free-capacity index (`BTreeMap` keyed by remaining space) — O(n log n)
+//! total instead of the first-fit linear scan's O(n·packs), at the same
+//! 11/9·OPT+1 worst-case guarantee. The historical linear first-fit
+//! survives as `pack_first_fit_reference`; the property suite asserts
+//! best-fit never packs worse on the same corpus.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::Result;
 
@@ -102,14 +108,9 @@ impl PackingStats {
     }
 }
 
-/// First-fit-decreasing: sort by length descending (ties by id for
-/// determinism), place each document in the first pack that fits.
-///
-/// Every document must be non-empty and no longer than `capacity`
-/// (`PackedDataLoader` pre-chunks oversize documents before calling this).
-pub fn pack_ffd(docs: Vec<Document>, capacity: usize) -> Result<Vec<Pack>> {
+fn validate_docs(docs: &[Document], capacity: usize) -> Result<()> {
     anyhow::ensure!(capacity > 0, "pack capacity must be positive");
-    for d in &docs {
+    for d in docs {
         anyhow::ensure!(!d.is_empty(), "document {} is empty", d.id);
         anyhow::ensure!(
             d.len() <= capacity,
@@ -119,11 +120,69 @@ pub fn pack_ffd(docs: Vec<Document>, capacity: usize) -> Result<Vec<Pack>> {
             capacity
         );
     }
-    let mut sorted = docs;
-    sorted.sort_by(|a, b| b.len().cmp(&a.len()).then(a.id.cmp(&b.id)));
+    Ok(())
+}
 
+fn sort_decreasing(mut docs: Vec<Document>) -> Vec<Document> {
+    docs.sort_by(|a, b| b.len().cmp(&a.len()).then(a.id.cmp(&b.id)));
+    docs
+}
+
+/// Best-fit-decreasing: sort by length descending (ties by id for
+/// determinism), place each document in the open pack with the smallest
+/// remaining capacity that fits (ties broken by lowest pack index). The
+/// free-capacity index makes each placement O(log n).
+///
+/// Every document must be non-empty and no longer than `capacity`
+/// (`PackedDataLoader` pre-chunks oversize documents before calling this).
+///
+/// (The name is historical — this entry point started as first-fit; see
+/// `pack_first_fit_reference` for the original scan.)
+pub fn pack_ffd(docs: Vec<Document>, capacity: usize) -> Result<Vec<Pack>> {
+    validate_docs(&docs, capacity)?;
     let mut packs: Vec<Pack> = Vec::new();
-    for doc in sorted {
+    // remaining capacity -> open pack indices with exactly that much room
+    let mut open: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for doc in sort_decreasing(docs) {
+        let n = doc.len();
+        // smallest remaining >= n; among equals, the lowest pack index
+        let slot = open
+            .range(n..)
+            .next()
+            .map(|(&rem, set)| (rem, *set.iter().next().expect("empty capacity class")));
+        match slot {
+            Some((rem, idx)) => {
+                let class = open.get_mut(&rem).unwrap();
+                class.remove(&idx);
+                if class.is_empty() {
+                    open.remove(&rem);
+                }
+                packs[idx].docs.push(doc);
+                if rem - n > 0 {
+                    open.entry(rem - n).or_default().insert(idx);
+                }
+            }
+            None => {
+                let idx = packs.len();
+                packs.push(Pack { capacity, docs: vec![doc] });
+                let rem = packs[idx].remaining();
+                if rem > 0 {
+                    open.entry(rem).or_default().insert(idx);
+                }
+            }
+        }
+    }
+    Ok(packs)
+}
+
+/// The original first-fit-decreasing linear scan, kept as the reference
+/// the property suite compares `pack_ffd` against (best-fit must never
+/// produce more packs on the same corpus) and as the O(n·packs) baseline
+/// for the packer bench.
+pub fn pack_first_fit_reference(docs: Vec<Document>, capacity: usize) -> Result<Vec<Pack>> {
+    validate_docs(&docs, capacity)?;
+    let mut packs: Vec<Pack> = Vec::new();
+    for doc in sort_decreasing(docs) {
         match packs.iter_mut().find(|p| p.remaining() >= doc.len()) {
             Some(p) => p.docs.push(doc),
             None => packs.push(Pack { capacity, docs: vec![doc] }),
@@ -192,6 +251,25 @@ mod tests {
         let cat: Vec<i32> = chunks.iter().flat_map(|c| c.tokens.clone()).collect();
         assert_eq!(cat, (0..23).collect::<Vec<i32>>());
         assert!(chunks.iter().all(|c| c.id == 9));
+    }
+
+    #[test]
+    fn best_fit_chooses_snuggest_pack() {
+        // capacity 10, lengths 6,5,4,3: 6->p0(rem 4), 5->p1(rem 5),
+        // 4 -> snuggest fit p0 (rem 4, not p1's rem 5), 3 -> p1.
+        let packs =
+            pack_ffd(vec![doc(0, 6), doc(1, 5), doc(2, 4), doc(3, 3)], 10).unwrap();
+        assert_eq!(packs.len(), 2);
+        assert_eq!(packs[0].used(), 10);
+        assert_eq!(packs[1].used(), 8);
+        assert_eq!(packs[0].docs.iter().map(|d| d.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(packs[1].docs.iter().map(|d| d.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn best_fit_matches_reference_on_the_classic_example() {
+        let mk = || vec![doc(0, 7), doc(1, 5), doc(2, 4), doc(3, 3), doc(4, 1)];
+        assert_eq!(pack_ffd(mk(), 10).unwrap(), pack_first_fit_reference(mk(), 10).unwrap());
     }
 
     #[test]

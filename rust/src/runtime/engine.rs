@@ -4,9 +4,9 @@
 //! single device; rank-parallelism is data isolation in the coordinator,
 //! not device parallelism — see DESIGN.md substitutions).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -28,13 +28,16 @@ pub struct EngineStats {
 pub struct Engine {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    stats: RefCell<EngineStats>,
+    /// Behind a mutex (not a RefCell) so `&Engine` can be shared with the
+    /// scoped rank threads; every update is a commutative sum, so the
+    /// totals are deterministic under any thread interleaving.
+    stats: Mutex<EngineStats>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, executables: HashMap::new(), stats: RefCell::default() })
+        Ok(Engine { client, executables: HashMap::new(), stats: Mutex::default() })
     }
 
     pub fn platform(&self) -> String {
@@ -84,7 +87,7 @@ impl Engine {
                 self.client.buffer_from_host_buffer(data, shape, None)?
             }
         };
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().unwrap();
         s.marshal_time += t0.elapsed();
         s.bytes_in += t.size_bytes() as u64;
         Ok(buf)
@@ -112,7 +115,7 @@ impl Engine {
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
 
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().unwrap();
         s.executions += 1;
         s.exec_time += exec;
         s.bytes_out += outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
@@ -166,11 +169,11 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = EngineStats::default();
+        *self.stats.lock().unwrap() = EngineStats::default();
     }
 
     pub fn loaded_stages(&self) -> usize {

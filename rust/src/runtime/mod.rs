@@ -11,4 +11,6 @@ pub mod tensor;
 
 pub use engine::Engine;
 pub use manifest::{Manifest, ParamLayout, StageIo, TensorMeta};
-pub use tensor::{Dtype, HostTensor};
+pub use tensor::{
+    accumulate_rows, copy_rows, Dtype, HostTensor, ScratchArena, TensorData,
+};

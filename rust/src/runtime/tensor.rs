@@ -4,6 +4,9 @@
 //! shards for ZeRO, or feeds to PJRT is a `HostTensor`. f32 end-to-end on
 //! the CPU client (see DESIGN.md substitutions).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -155,6 +158,292 @@ impl HostTensor {
             .sum::<f64>()
             .sqrt())
     }
+
+    /// Move the underlying storage out of the tensor (shape, data). The
+    /// arena uses this to recycle a consumed tensor's allocation instead
+    /// of dropping it — the "move-out reuse" half of the zero-copy
+    /// relayout discipline.
+    pub fn take_data(self) -> (Vec<usize>, TensorData) {
+        match self {
+            HostTensor::F32 { shape, data } => (shape, TensorData::F32(data)),
+            HostTensor::I32 { shape, data } => (shape, TensorData::I32(data)),
+        }
+    }
+}
+
+/// Raw storage moved out of a `HostTensor` (see `HostTensor::take_data`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+// ---------------------------------------------------------------------------
+// Borrowed strided-view copy helpers
+// ---------------------------------------------------------------------------
+
+/// Copy `rows` blocks of `block` contiguous elements from `src` into
+/// `dst`: row `r` moves `src[src_off + r*src_stride ..][..block]` to
+/// `dst[dst_off + r*dst_stride ..][..block]`. Each row lowers to one
+/// `copy_from_slice` (memcpy); when both sides are contiguous
+/// (`stride == block`) the whole span collapses to a single memcpy. This
+/// is the primitive the Ulysses relayout is built from: one call per
+/// (dst-rank, src-rank) pair instead of a per-row scalar loop.
+pub fn copy_rows(
+    dst: &mut [f32],
+    dst_off: usize,
+    dst_stride: usize,
+    src: &[f32],
+    src_off: usize,
+    src_stride: usize,
+    rows: usize,
+    block: usize,
+) {
+    if rows == 0 || block == 0 {
+        return;
+    }
+    debug_assert!(dst_off + (rows - 1) * dst_stride + block <= dst.len());
+    debug_assert!(src_off + (rows - 1) * src_stride + block <= src.len());
+    if dst_stride == block && src_stride == block {
+        dst[dst_off..dst_off + rows * block]
+            .copy_from_slice(&src[src_off..src_off + rows * block]);
+        return;
+    }
+    for r in 0..rows {
+        let (a, b) = (dst_off + r * dst_stride, src_off + r * src_stride);
+        dst[a..a + block].copy_from_slice(&src[b..b + block]);
+    }
+}
+
+/// `copy_rows` with `+=` instead of overwrite (the replica-sum backward).
+/// The inner zipped add over a contiguous block is the shape LLVM
+/// auto-vectorizes; the contiguous case fuses to one pass.
+pub fn accumulate_rows(
+    dst: &mut [f32],
+    dst_off: usize,
+    dst_stride: usize,
+    src: &[f32],
+    src_off: usize,
+    src_stride: usize,
+    rows: usize,
+    block: usize,
+) {
+    if rows == 0 || block == 0 {
+        return;
+    }
+    debug_assert!(dst_off + (rows - 1) * dst_stride + block <= dst.len());
+    debug_assert!(src_off + (rows - 1) * src_stride + block <= src.len());
+    if dst_stride == block && src_stride == block {
+        let (d, s) = (
+            &mut dst[dst_off..dst_off + rows * block],
+            &src[src_off..src_off + rows * block],
+        );
+        for (a, b) in d.iter_mut().zip(s) {
+            *a += b;
+        }
+        return;
+    }
+    for r in 0..rows {
+        let (a, b) = (dst_off + r * dst_stride, src_off + r * src_stride);
+        for (x, y) in dst[a..a + block].iter_mut().zip(&src[b..b + block]) {
+            *x += y;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ScratchArena: size-class buffer pool for the relayout hot path
+// ---------------------------------------------------------------------------
+
+/// Bound on pooled buffers per dtype — a leak backstop, far above what a
+/// step's ping-pong working set (a few tensors per rank per boundary)
+/// ever holds.
+const MAX_POOLED: usize = 256;
+
+/// Default bound on pooled BYTES per dtype. The count cap alone is not a
+/// memory bound: the pipeline also recycles exec-output tensors the pool
+/// never sourced, and at multi-million-token shapes a single relayout
+/// buffer is tens of MB — 256 of those would pin multiple GiB for the
+/// trainer's lifetime. Incoming recycles beyond the budget are dropped
+/// (freed) instead of parked. Long-sequence configs whose relayout
+/// working set legitimately exceeds this should raise the budget
+/// (`ScratchArena::with_byte_budget` / `TrainerOptions::arena_byte_budget`)
+/// or the pool will shed buffers and miss on every checkout.
+pub const DEFAULT_POOL_BYTE_BUDGET: usize = 1 << 30;
+
+/// One dtype's free list plus its pooled-byte total (tracked
+/// incrementally — no O(pool) scan per recycle).
+#[derive(Debug, Default)]
+struct Pool<T> {
+    bufs: Vec<Vec<T>>,
+    bytes: usize,
+}
+
+/// Size-class scratch-buffer pool: `take_*` checks out a recycled
+/// `Vec` (best-fit by capacity), `recycle*` returns it. At steady state
+/// — after the first train-step cycle has populated the pool — every
+/// relayout checkout is a hit and the hot path performs zero heap
+/// allocation (see DESIGN.md §Buffer lifecycle).
+///
+/// Counters: `hits` = checkouts served from the pool, `misses` =
+/// checkouts that had to allocate. `Sync` (mutex + atomics) so a
+/// `Trainer` holding one can be borrowed across the scoped rank threads.
+#[derive(Debug)]
+pub struct ScratchArena {
+    f32_free: Mutex<Pool<f32>>,
+    i32_free: Mutex<Pool<i32>>,
+    byte_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::with_byte_budget(DEFAULT_POOL_BYTE_BUDGET)
+    }
+}
+
+/// Best-fit checkout shared by both dtype pools: take the smallest
+/// pooled buffer whose capacity holds `len` (hit), else allocate
+/// (miss). Reused buffers keep their old contents where possible — the
+/// checkout contract is "contents unspecified".
+fn take_from<T: Copy + Default>(
+    pool: &Mutex<Pool<T>>,
+    hits: &AtomicU64,
+    misses: &AtomicU64,
+    len: usize,
+) -> Vec<T> {
+    let mut pool = pool.lock().unwrap();
+    let best = pool
+        .bufs
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.capacity() >= len)
+        .min_by_key(|(_, v)| v.capacity())
+        .map(|(i, _)| i);
+    match best {
+        Some(i) => {
+            let mut v = pool.bufs.swap_remove(i);
+            pool.bytes -= v.capacity() * std::mem::size_of::<T>();
+            drop(pool);
+            hits.fetch_add(1, Ordering::Relaxed);
+            if v.len() >= len {
+                v.truncate(len); // no zero-fill: full-overwrite contract
+            } else {
+                v.resize(len, T::default());
+            }
+            v
+        }
+        None => {
+            drop(pool);
+            misses.fetch_add(1, Ordering::Relaxed);
+            vec![T::default(); len]
+        }
+    }
+}
+
+fn recycle_into<T>(pool: &Mutex<Pool<T>>, byte_budget: usize, v: Vec<T>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    let incoming = v.capacity() * std::mem::size_of::<T>();
+    let mut pool = pool.lock().unwrap();
+    if pool.bufs.len() < MAX_POOLED && pool.bytes + incoming <= byte_budget {
+        pool.bytes += incoming;
+        pool.bufs.push(v);
+    }
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Arena with a custom per-dtype pooled-byte budget (see
+    /// `DEFAULT_POOL_BYTE_BUDGET` for why the default exists and when to
+    /// raise it).
+    pub fn with_byte_budget(bytes: usize) -> ScratchArena {
+        ScratchArena {
+            f32_free: Mutex::default(),
+            i32_free: Mutex::default(),
+            byte_budget: bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Check out an f32 buffer of exactly `len` elements. CONTENTS ARE
+    /// UNSPECIFIED (recycled data) — for paths that overwrite every
+    /// element, which is every relayout copy path. Use `take_f32_zeroed`
+    /// when accumulating.
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        take_from(&self.f32_free, &self.hits, &self.misses, len)
+    }
+
+    /// Check out an f32 buffer of `len` zeros (accumulation paths).
+    pub fn take_f32_zeroed(&self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Check out an i32 buffer of exactly `len` elements, contents
+    /// unspecified (token-id / label staging).
+    pub fn take_i32(&self, len: usize) -> Vec<i32> {
+        take_from(&self.i32_free, &self.hits, &self.misses, len)
+    }
+
+    pub fn recycle_f32(&self, v: Vec<f32>) {
+        recycle_into(&self.f32_free, self.byte_budget, v);
+    }
+
+    pub fn recycle_i32(&self, v: Vec<i32>) {
+        recycle_into(&self.i32_free, self.byte_budget, v);
+    }
+
+    /// Recycle a consumed tensor's storage (shape is dropped).
+    pub fn recycle(&self, t: HostTensor) {
+        match t.take_data().1 {
+            TensorData::F32(v) => self.recycle_f32(v),
+            TensorData::I32(v) => self.recycle_i32(v),
+        }
+    }
+
+    /// Recycle a batch of consumed tensors (e.g. relayout outputs after
+    /// device upload — the ping-pong half of the cycle).
+    pub fn recycle_all<I: IntoIterator<Item = HostTensor>>(&self, ts: I) {
+        for t in ts {
+            self.recycle(t);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of checkouts served without allocating (1.0 = steady
+    /// state, fully allocation-free).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits() as f64, self.misses() as f64);
+        if h + m == 0.0 {
+            return 1.0;
+        }
+        h / (h + m)
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.f32_free.lock().unwrap().bufs.len() + self.i32_free.lock().unwrap().bufs.len()
+    }
+
+    /// Bytes currently parked in the pool (both dtypes).
+    pub fn pooled_bytes(&self) -> usize {
+        self.f32_free.lock().unwrap().bytes + self.i32_free.lock().unwrap().bytes
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +478,104 @@ mod tests {
         let s = HostTensor::scalar(2.5);
         assert_eq!(s.scalar_f32().unwrap(), 2.5);
         assert!(HostTensor::zeros(&[2]).scalar_f32().is_err());
+    }
+
+    #[test]
+    fn take_data_moves_storage_out() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let (shape, data) = t.take_data();
+        assert_eq!(shape, vec![2, 2]);
+        assert_eq!(data, TensorData::F32(vec![1.0, 2.0, 3.0, 4.0]));
+        let (_, di) = HostTensor::i32(vec![1], vec![7]).take_data();
+        assert_eq!(di, TensorData::I32(vec![7]));
+    }
+
+    #[test]
+    fn copy_rows_strided_and_contiguous() {
+        // strided src (stride 4, block 2) -> contiguous dst
+        let src = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let mut dst = vec![-1.0; 4];
+        copy_rows(&mut dst, 0, 2, &src, 1, 4, 2, 2);
+        assert_eq!(dst, vec![1.0, 2.0, 5.0, 6.0]);
+        // contiguous both sides: single memcpy fast path
+        let mut d2 = vec![0.0; 6];
+        copy_rows(&mut d2, 0, 3, &src, 2, 3, 2, 3);
+        assert_eq!(d2, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        // zero rows is a no-op
+        copy_rows(&mut d2, 0, 3, &src, 0, 3, 0, 3);
+        assert_eq!(d2, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn accumulate_rows_adds_in_place() {
+        let src = vec![1.0, 2.0, 3.0, 4.0];
+        let mut dst = vec![10.0, 10.0, 10.0, 10.0];
+        accumulate_rows(&mut dst, 0, 2, &src, 0, 2, 2, 2);
+        assert_eq!(dst, vec![11.0, 12.0, 13.0, 14.0]);
+        // strided dst (stride 3, block 1)
+        let mut d2 = vec![0.0; 6];
+        accumulate_rows(&mut d2, 1, 3, &src, 0, 1, 2, 1);
+        assert_eq!(d2, vec![0.0, 1.0, 0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn arena_recycles_and_counts_hits() {
+        let arena = ScratchArena::new();
+        let a = arena.take_f32(128);
+        assert_eq!(a.len(), 128);
+        assert_eq!((arena.hits(), arena.misses()), (0, 1));
+        arena.recycle_f32(a);
+        assert_eq!(arena.pooled(), 1);
+        // same-size checkout is a hit; larger is a miss
+        let b = arena.take_f32(100);
+        assert_eq!(b.len(), 100);
+        assert_eq!((arena.hits(), arena.misses()), (1, 1));
+        let c = arena.take_f32(4096);
+        assert_eq!((arena.hits(), arena.misses()), (1, 2));
+        arena.recycle_f32(b);
+        arena.recycle_f32(c);
+        // best-fit: a 128-elem ask reuses the 128-cap buffer, not 4096
+        let d = arena.take_f32(128);
+        assert!(d.capacity() < 4096);
+        assert!(arena.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn arena_zeroed_checkout_is_zero_after_reuse() {
+        let arena = ScratchArena::new();
+        arena.recycle_f32(vec![5.0; 64]);
+        let v = arena.take_f32_zeroed(64);
+        assert!(v.iter().all(|&x| x == 0.0));
+        // non-zeroed reuse keeps the old contents (full-overwrite contract)
+        arena.recycle_f32(vec![5.0; 64]);
+        let w = arena.take_f32(64);
+        assert_eq!(w, vec![5.0; 64]);
+    }
+
+    #[test]
+    fn arena_byte_budget_sheds_excess_buffers() {
+        // budget of 100 f32-bytes = 25 elements per dtype pool
+        let arena = ScratchArena::with_byte_budget(100);
+        arena.recycle_f32(vec![0.0; 20]); // 80 bytes: kept
+        assert_eq!(arena.pooled(), 1);
+        arena.recycle_f32(vec![0.0; 10]); // would make 120 bytes: dropped
+        assert_eq!(arena.pooled(), 1);
+        assert_eq!(arena.pooled_bytes(), 80);
+        // checking out releases budget; the next recycle fits again
+        let v = arena.take_f32(20);
+        assert_eq!(arena.pooled_bytes(), 0);
+        arena.recycle_f32(v);
+        assert_eq!(arena.pooled_bytes(), 80);
+    }
+
+    #[test]
+    fn arena_recycles_tensors_of_both_dtypes() {
+        let arena = ScratchArena::new();
+        arena.recycle(HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]));
+        arena.recycle(HostTensor::i32(vec![2], vec![4, 5]));
+        assert_eq!(arena.pooled(), 2);
+        assert_eq!(arena.take_i32(2).len(), 2);
+        assert_eq!((arena.hits(), arena.misses()), (1, 0));
     }
 
     #[test]

@@ -1,8 +1,21 @@
 //! Micro-bench harness (criterion is unavailable offline): warmup, timed
-//! iterations, mean/median/p95 reporting, and table emission for the paper
-//! reproduction benches.
+//! iterations, mean/median/p95 reporting, table emission for the paper
+//! reproduction benches, and machine-readable `BENCH_*.json` reports —
+//! the perf trajectory the repo commits alongside optimization PRs.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// CI smoke mode: `ALST_BENCH_FAST=1` shrinks every bench to a handful of
+/// iterations so the whole suite finishes in seconds. The JSON reports
+/// are still emitted (and record `fast_mode`), the numbers are just not
+/// meaningful for comparison.
+pub fn fast_mode() -> bool {
+    std::env::var_os("ALST_BENCH_FAST").is_some_and(|v| v != "0" && !v.is_empty())
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -11,6 +24,9 @@ pub struct BenchResult {
     pub median: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// Logical bytes moved per iteration (set with `with_bytes`); powers
+    /// the GiB/s column of the JSON report.
+    pub bytes_per_iter: Option<u64>,
 }
 
 impl BenchResult {
@@ -20,18 +36,60 @@ impl BenchResult {
             self.name, self.iters, self.mean, self.median, self.p95, self.min
         )
     }
+
+    /// Attach the per-iteration data volume (for throughput reporting).
+    pub fn with_bytes(mut self, bytes: u64) -> BenchResult {
+        self.bytes_per_iter = Some(bytes);
+        self
+    }
+
+    /// Median-based throughput in GiB/s, when a data volume is attached.
+    pub fn gib_per_s(&self) -> Option<f64> {
+        let b = self.bytes_per_iter?;
+        let s = self.median.as_secs_f64();
+        if s <= 0.0 {
+            return None;
+        }
+        Some(b as f64 / s / (1u64 << 30) as f64)
+    }
+
+    /// Machine-readable record (BENCH_*.json schema, documented in
+    /// DESIGN.md): times in integer nanoseconds, bytes as logical volume
+    /// per iteration, `gib_per_s` derived from the median.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean.as_nanos() as f64));
+        m.insert("median_ns".to_string(), Json::Num(self.median.as_nanos() as f64));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95.as_nanos() as f64));
+        m.insert("min_ns".to_string(), Json::Num(self.min.as_nanos() as f64));
+        if let Some(b) = self.bytes_per_iter {
+            m.insert("bytes_per_iter".to_string(), Json::Num(b as f64));
+        }
+        if let Some(g) = self.gib_per_s() {
+            m.insert("gib_per_s".to_string(), Json::Num(g));
+        }
+        Json::Obj(m)
+    }
 }
 
 /// Run `f` repeatedly: `warmup` throwaway iterations, then at least
-/// `min_iters` and at least `min_time` of measurement.
+/// `min_iters` and at least `min_time` of measurement. Under `fast_mode`
+/// the warmup/iteration/time floors are clamped for CI smoke runs.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
                          min_time: Duration, mut f: F) -> BenchResult {
+    let (warmup, min_iters, min_time) = if fast_mode() {
+        (warmup.min(1), min_iters.min(2), min_time.min(Duration::from_millis(5)))
+    } else {
+        (warmup, min_iters, min_time)
+    };
     for _ in 0..warmup {
         f();
     }
     let mut samples = Vec::new();
     let start = Instant::now();
-    while samples.len() < min_iters || start.elapsed() < min_time {
+    while samples.len() < min_iters.max(1) || start.elapsed() < min_time {
         let t = Instant::now();
         f();
         samples.push(t.elapsed());
@@ -48,6 +106,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
         median: samples[samples.len() / 2],
         p95: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
         min: samples[0],
+        bytes_per_iter: None,
     };
     println!("{}", res.report());
     res
@@ -56,6 +115,66 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
 /// Quick default: 2 warmups, >=10 iters, >=300ms.
 pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench(name, 2, 10, Duration::from_millis(300), f)
+}
+
+/// Accumulates `BenchResult`s into the repo-root `BENCH_<name>.json`
+/// perf-trajectory file. Schema (see DESIGN.md §Bench trajectory):
+///
+/// ```json
+/// { "bench": "ulysses", "schema": 1, "fast_mode": false,
+///   "results": [ { "name": ..., "iters": ..., "mean_ns": ...,
+///                  "median_ns": ..., "p95_ns": ..., "min_ns": ...,
+///                  "bytes_per_iter": ..., "gib_per_s": ... } ] }
+/// ```
+pub struct BenchReport {
+    bench: String,
+    results: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport { bench: bench.to_string(), results: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        m.insert("schema".to_string(), Json::Num(1.0));
+        m.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+        m.insert(
+            "generated_by".to_string(),
+            Json::Str(format!("cargo bench --bench bench_{}", self.bench)),
+        );
+        m.insert("results".to_string(), Json::Arr(self.results.clone()));
+        Json::Obj(m)
+    }
+
+    /// Write `BENCH_<bench>.json` at the repo root (the parent of the
+    /// rust crate — resolved from the compile-time manifest dir, so it
+    /// lands in the same place regardless of the invocation cwd).
+    pub fn write_repo_root(&self) -> std::io::Result<PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .to_path_buf();
+        let path = root.join(format!("BENCH_{}.json", self.bench));
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text)?;
+        Ok(path)
+    }
 }
 
 /// Fixed-width table printer for the paper-table benches.
@@ -139,8 +258,37 @@ mod tests {
     #[test]
     fn bench_collects_samples() {
         let r = bench("noop", 1, 5, Duration::from_millis(1), || {});
-        assert!(r.iters >= 5);
+        assert!(r.iters >= 2);
         assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn bench_result_json_round_trips() {
+        let r = BenchResult {
+            name: "a2a seq->head".to_string(),
+            iters: 12,
+            mean: Duration::from_nanos(1_500),
+            median: Duration::from_nanos(1_000),
+            p95: Duration::from_nanos(3_000),
+            min: Duration::from_nanos(900),
+            bytes_per_iter: None,
+        }
+        .with_bytes(1 << 30);
+        // 1 GiB in 1000ns -> 1e6 GiB/s
+        assert!((r.gib_per_s().unwrap() - 1e6).abs() < 1.0);
+        let j = r.to_json();
+        assert_eq!(j.str_field("name").unwrap(), "a2a seq->head");
+        assert_eq!(j.usize_field("median_ns").unwrap(), 1_000);
+        assert_eq!(j.usize_field("bytes_per_iter").unwrap(), 1 << 30);
+        // report wraps it with schema metadata and reparses cleanly
+        let mut rep = BenchReport::new("ulysses");
+        rep.push(&r);
+        assert_eq!(rep.len(), 1);
+        let text = rep.to_json().to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.str_field("bench").unwrap(), "ulysses");
+        assert_eq!(back.field("results").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(back.usize_field("schema").unwrap(), 1);
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! the rust coordinator and the Pallas packed-attention kernel
 //! (`python/compile/kernels/packed_attn.py`). The fixtures here are the
 //! exact outputs of `make_packed_segments` on the same length lists —
-//! `python/tests/test_packed_attn.py::test_rust_layout_contract` asserts
-//! the mirror-image fixtures on the python side, so a convention drift on
-//! either side fails one suite or the other.
+//! `python/tests/test_packing_contract.py::TestRustLayoutContract`
+//! asserts the mirror-image fixtures on the python side (and runs
+//! without hypothesis, so it survives minimal environments), so a
+//! convention drift on either side fails one suite or the other.
 //!
 //! The PJRT end-to-end packed test gates on `make artifacts` like the
 //! rest of the integration suite.
@@ -79,8 +80,8 @@ fn packed_labels_and_shards_never_leak_targets() {
                 assert_eq!(p.seg_ids[i], p.seg_ids[i + 1]);
             }
         }
-        let recat: Vec<i32> = shards.iter().flat_map(|s| s.batch.labels.clone()).collect();
-        assert_eq!(recat, labels, "sharding changed labels");
+        let recat = alst::packing::gather_shards(&shards);
+        assert_eq!(recat.labels, labels, "sharding changed labels");
     }
 }
 

@@ -344,7 +344,8 @@ fn prop_alst_features_never_hurt_max_seqlen() {
 // ---------------------------------------------------------------------------
 
 use alst::packing::{
-    pack_ffd, shard_packed, Document, Pack, PackedSequence, PackingStats,
+    gather_shards, pack_ffd, pack_first_fit_reference, shard_packed, Document, Pack,
+    PackedSequence, PackingStats,
 };
 
 fn random_docs(rng: &mut Rng, capacity: usize) -> Vec<Document> {
@@ -386,6 +387,42 @@ fn prop_packer_loses_and_duplicates_nothing() {
         let stats = PackingStats::from_packs(&packs);
         assert!(stats.efficiency() > 0.0 && stats.efficiency() <= 1.0);
         assert!(stats.n_packs >= total.div_ceil(capacity), "impossible pack count");
+    });
+}
+
+#[test]
+fn prop_best_fit_never_packs_worse_than_first_fit() {
+    // the ordered-index best-fit packer must match or beat the retained
+    // linear first-fit reference in pack count (=> identical-or-better
+    // efficiency) on the same corpus, at O(n log n) instead of O(n·bins).
+    //
+    // CAVEAT: BFD vs FFD dominance is NOT a theorem — the two heuristics
+    // are incomparable on adversarial instances. This check is pinned to
+    // the fixed SplitMix64 seeds below (pre-verified exhaustively, plus a
+    // 5000-instance sweep with zero BFD>FFD cases); if the seed formula,
+    // case count, or random_docs distribution changes, re-verify rather
+    // than assuming the inequality transfers.
+    check("best-fit vs first-fit", 60, |rng| {
+        let capacity = 8 + rng.below(120);
+        let docs = random_docs(rng, capacity);
+        let best = pack_ffd(docs.clone(), capacity).unwrap();
+        let first = pack_first_fit_reference(docs, capacity).unwrap();
+        assert!(
+            best.len() <= first.len(),
+            "best-fit used {} packs, first-fit {}",
+            best.len(),
+            first.len()
+        );
+        // same corpus either way: token totals agree
+        assert_eq!(
+            best.iter().map(Pack::used).sum::<usize>(),
+            first.iter().map(Pack::used).sum::<usize>()
+        );
+        let (eb, ef) = (
+            PackingStats::from_packs(&best).efficiency(),
+            PackingStats::from_packs(&first).efficiency(),
+        );
+        assert!(eb >= ef - 1e-12, "efficiency regressed: {eb} < {ef}");
     });
 }
 
@@ -463,16 +500,11 @@ fn prop_shard_packed_preserves_all_metadata() {
             let p = PackedSequence::from_pack(&pack).unwrap();
             let shards = shard_packed(&p, sp);
             let ssh = p.len() / sp;
-            let ids: Vec<i32> = shards.iter().flat_map(|s| s.batch.ids.clone()).collect();
-            let seg: Vec<i32> = shards.iter().flat_map(|s| s.seg_ids.clone()).collect();
-            let pos: Vec<i32> =
-                shards.iter().flat_map(|s| s.batch.positions.clone()).collect();
-            let lab: Vec<i32> =
-                shards.iter().flat_map(|s| s.batch.labels.clone()).collect();
-            assert_eq!(ids, p.ids);
-            assert_eq!(seg, p.seg_ids);
-            assert_eq!(pos, p.positions);
-            assert_eq!(lab, p.labels());
+            let g = gather_shards(&shards);
+            assert_eq!(g.ids, p.ids);
+            assert_eq!(g.seg_ids, p.seg_ids);
+            assert_eq!(g.positions, p.positions);
+            assert_eq!(g.labels, p.labels());
             for (r, s) in shards.iter().enumerate() {
                 assert_eq!(s.cu_seqlens, p.cu_seqlens, "global metadata lost");
                 assert_eq!(*s.cu_seqlens_local.first().unwrap(), 0);

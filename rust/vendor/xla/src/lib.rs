@@ -8,7 +8,15 @@
 //! integration tests, benches, and examples all gate on the presence of
 //! `artifacts/` and skip gracefully, so the tier-1 suite passes offline;
 //! swapping this path dependency for the real `xla-rs` crate re-enables
-//! end-to-end PJRT execution with no source changes.
+//! end-to-end PJRT execution.
+//!
+//! Swap caveat: this stub's buffer/client types are plain host data and
+//! therefore `Send + Sync`, which the coordinator's scoped-thread rank
+//! executor (`pipeline::run_ranks` behind `TrainerOptions::parallel_ranks`)
+//! relies on. The real xla-rs wraps C++ pointers; if its types are not
+//! `Sync`, the parallel rank path will not compile against it — serialize
+//! the rank loops (drop the scoped-thread branch of `run_ranks`) or wrap
+//! the buffers before swapping.
 
 use std::fmt;
 use std::path::Path;
