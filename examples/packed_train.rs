@@ -8,12 +8,17 @@
 //!
 //!     cargo run --release --example packed_train
 
-use alst::config::{preset, ClusterConfig, FeatureFlags};
+use alst::config::{preset, ClusterConfig, FeatureFlags, GIB};
 use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::memory::MemoryTracker;
 use alst::metrics::RunLog;
 use alst::packing::{MixedLengthSource, PackedDataLoader};
 use alst::perf::{iteration_time, iteration_time_packed, IterationModel};
-use alst::runtime::Manifest;
+use alst::runtime::{HostTensor, Manifest, ScratchArena};
+use alst::tiling::exec::{
+    untiled_loss_bwd_bytes, TiledLossExec, LOSS_HEAD_TAG,
+};
+use alst::tiling::plan_logits;
 use alst::util::bench::fmt_seqlen;
 
 fn main() -> anyhow::Result<()> {
@@ -56,13 +61,76 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- the headline win: tiled loss-head execution (§3.1) ------------
+    // Tracker-MEASURED peak of the loss-head tag, untiled vs the tiled
+    // sweep, at Llama-8B scale (vocab 128256, 32K-token shard). No
+    // artifacts needed: the driver streams shape-correct no-op tiles —
+    // the measurement is the instrumentation the trainer shares.
+    {
+        let (s, vocab, hidden) = (32_768usize, 128_256usize, 8usize);
+        let plan = plan_logits(s, vocab, GIB);
+        let mut untiled = MemoryTracker::new(1 << 46);
+        let b = untiled_loss_bwd_bytes(s, vocab);
+        untiled.alloc(b, LOSS_HEAD_TAG)?;
+        untiled.free(b, LOSS_HEAD_TAG);
+        let arena = ScratchArena::new();
+        let mut tiled = MemoryTracker::new(1 << 46);
+        let drv =
+            TiledLossExec::new(s, hidden, vocab, plan.rows_per_tile, -100, &arena)?;
+        let h0 = HostTensor::f32(vec![s, hidden], vec![0.0; s * hidden]);
+        let labels0 = vec![0i32; s];
+        let mut d_lnf = vec![0f32; hidden];
+        let mut d_unembed = vec![0f32; hidden * vocab];
+        let d_h = drv.backward(
+            &mut tiled,
+            &h0,
+            &labels0,
+            &mut d_lnf,
+            &mut d_unembed,
+            |_, lt| {
+                let n = lt.numel();
+                Ok((
+                    HostTensor::f32(vec![hidden], vec![0.0; hidden]),
+                    HostTensor::f32(vec![hidden, vocab], vec![0.0; hidden * vocab]),
+                    HostTensor::f32(vec![n, hidden], vec![0.0; n * hidden]),
+                ))
+            },
+        )?;
+        arena.recycle(d_h);
+        let (up, tp) = (
+            untiled.tag_peak(LOSS_HEAD_TAG),
+            tiled.tag_peak(LOSS_HEAD_TAG),
+        );
+        println!(
+            "\ntiled loss head at {} x vocab {vocab} ({} tiles of {} rows):",
+            fmt_seqlen(s),
+            plan.n_tiles,
+            plan.rows_per_tile
+        );
+        println!(
+            "  measured loss-head peak: {:.2} GiB untiled -> {:.3} GiB tiled \
+             (drop {:.2} GiB, plan savings {:.2} GiB)",
+            up as f64 / GIB as f64,
+            tp as f64 / GIB as f64,
+            (up - tp) as f64 / GIB as f64,
+            plan.savings() as f64 / GIB as f64,
+        );
+    }
+
     // ---- PJRT training with per-document loss (needs artifacts) --------
     let dir = Manifest::artifact_dir(std::path::Path::new("artifacts"), "tiny", 2, capacity);
     if !dir.join("manifest.json").exists() {
         println!("\n(artifacts missing — run `make artifacts` for the training half)");
         return Ok(());
     }
-    let mut trainer = Trainer::new(&dir, TrainerOptions::default())?;
+    // Enable the tiled loss-head sweep when the artifact carries the
+    // tile stages: per-document losses then cost ZERO extra loss-head
+    // executions, and the tracker shows the §3.1 peak cut for real.
+    let tiled_loss = Manifest::load(&dir)?.has_tiled_loss();
+    if !tiled_loss {
+        println!("(old artifact without tile stages — training untiled)");
+    }
+    let mut trainer = Trainer::new(&dir, TrainerOptions { tiled_loss, ..Default::default() })?;
     let mut log = RunLog::default();
     for step in 1..=10 {
         // loader sp == trainer sp here, so feed the loader's shard set
@@ -88,6 +156,13 @@ fn main() -> anyhow::Result<()> {
         100.0 * log.packing_efficiency().unwrap_or(1.0),
         log.mean_doc_loss().unwrap_or(f32::NAN)
     );
+    if tiled_loss {
+        println!(
+            "tiled loss head: measured per-step loss-head peak {} B \
+             (tile-sized; per-doc losses cost no extra loss-head runs)",
+            trainer.device.tag_peak(LOSS_HEAD_TAG)
+        );
+    }
     println!("packed_train OK");
     Ok(())
 }

@@ -49,7 +49,52 @@ def spec(shape, dtype=F32):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def stage_specs(cfg: M.ModelConfig, seq: int, sp: int) -> dict:
+GIB = 1 << 30
+
+
+def loss_tile_rows(cfg: M.ModelConfig, ssh: int, chunk_bytes: int) -> int:
+    """Rows per loss-head tile: the §3.1 ~`chunk_bytes` fp32 logits slice
+    (`chunk_bytes / 4 / vocab` rows), clamped to the shard and rounded
+    down to a multiple of the CE kernel's `tile_s` so the kernel grid
+    divides evenly (BOTH kernel paths — pallas and the lax.scan ref —
+    assert `s % tile_s == 0`; rows below tile_s rely on the stage-side
+    `min(tile_s, rows)` clamp). Mirrors
+    `rust/src/tiling::logits_chunk_rows`; the rust driver re-derives the
+    value from the exported stage shapes, so this is the single source.
+
+    Rejects a chunk budget smaller than one fp32 vocab row — the
+    degenerate config `tiling::plan_logits_checked` documents: 1-row
+    tiles whose bytes silently EXCEED the budget.
+    """
+    if chunk_bytes // 4 < cfg.vocab:
+        raise ValueError(
+            f"--chunk-bytes {chunk_bytes} holds no fp32 vocab row "
+            f"({4 * cfg.vocab} B): 1-row tiles would exceed the budget"
+        )
+    rows = max(1, (chunk_bytes // 4) // cfg.vocab)
+    rows = min(rows, ssh)
+    if rows > cfg.tile_s:
+        rows -= rows % cfg.tile_s
+    return rows
+
+
+def mlp_tile_rows(cfg: M.ModelConfig, ssh: int) -> int:
+    """Rows per MLP tile under the §3.1.1 auto-shard rule
+    `ceil(ssh / ceil(ssh / hidden))` (mirrors `rust/src/tiling`), with
+    the same alignment rule as `loss_tile_rows`: rounded down to a
+    multiple of the MLP kernel's `tile_s` (both kernel paths assert
+    divisibility; rows below `tile_s` are handled by the stage-side
+    clamp in `post_attn_fwd`). The rust driver pads the resulting
+    ragged tail, so a smaller tile only means one more tile."""
+    shards = max(1, -(-ssh // cfg.hidden))
+    rows = -(-ssh // shards)
+    if rows > cfg.tile_s:
+        rows -= rows % cfg.tile_s
+    return rows
+
+
+def stage_specs(cfg: M.ModelConfig, seq: int, sp: int,
+                loss_chunk_bytes: int = GIB) -> dict:
     """Input ShapeDtypeStructs for every stage, keyed by stage name.
 
     Shapes follow the Ulysses layouts: `ssh = seq/sp` outside attention,
@@ -83,6 +128,21 @@ def stage_specs(cfg: M.ModelConfig, seq: int, sp: int) -> dict:
         ("lnf", spec((h,))), ("unembed", spec((h, v))),
         ("h", spec((ssh, h))), ("labels", spec((ssh,), I32)),
     ]
+    # Row-tiled stage shapes (§3.1 executed): OPTIONAL stages — rust
+    # manifests without them still load, and the coordinator falls back
+    # to the monolithic loss/post_attn path.
+    t_loss = loss_tile_rows(cfg, ssh, loss_chunk_bytes)
+    t_mlp = mlp_tile_rows(cfg, ssh)
+    loss_tile = [
+        ("lnf", spec((h,))), ("unembed", spec((h, v))),
+        ("h", spec((t_loss, h))), ("labels", spec((t_loss,), I32)),
+    ]
+    mlp_tile = [
+        ("wo", spec((hq, h))), ("ln2", spec((h,))),
+        ("wg", spec((h, cfg.ffn))), ("wu", spec((h, cfg.ffn))),
+        ("wd", spec((cfg.ffn, h))),
+        ("h_in", spec((t_mlp, h))), ("attn", spec((t_mlp, nq, d))),
+    ]
     return {
         "embed_fwd": (M.embed_fwd, emb),
         "embed_bwd": (M.embed_bwd, emb + [("d_h", spec((ssh, h)))]),
@@ -98,6 +158,14 @@ def stage_specs(cfg: M.ModelConfig, seq: int, sp: int) -> dict:
         "post_attn_bwd": (M.post_attn_bwd, post + [("d_out", spec((ssh, h)))]),
         "loss_fwd": (M.loss_fwd, loss),
         "loss_bwd": (M.loss_bwd, loss + [("ct_sum", spec(()))]),
+        # Tiled execution stages: loss_bwd_tile IS loss_bwd at tile
+        # shapes; mlp_{fwd,bwd}_tile ARE post_attn_{fwd,bwd} at tile
+        # shapes (the whole post-attention block is row-wise).
+        "loss_fwd_tile": (M.loss_fwd_tile, loss_tile),
+        "loss_bwd_tile": (M.loss_bwd, loss_tile + [("ct_sum", spec(()))]),
+        "mlp_fwd_tile": (M.post_attn_fwd, mlp_tile),
+        "mlp_bwd_tile": (M.post_attn_bwd,
+                         mlp_tile + [("d_out", spec((t_mlp, h)))]),
     }
 
 
@@ -132,7 +200,8 @@ def _shape_entry(name, s):
 
 
 def export(cfg: M.ModelConfig, seq: int, sp: int, out_root: pathlib.Path,
-           kernels: str | None = None) -> pathlib.Path:
+           kernels: str | None = None,
+           loss_chunk_bytes: int = GIB) -> pathlib.Path:
     if kernels and kernels != cfg.kernels:
         # Kernel-swap variant gets its own artifact dir (attention-agnostic
         # property: rust loads either with zero coordinator changes).
@@ -140,7 +209,7 @@ def export(cfg: M.ModelConfig, seq: int, sp: int, out_root: pathlib.Path,
                                   kernels=kernels)
     out = out_root / f"{cfg.name}-sp{sp}-seq{seq}"
     out.mkdir(parents=True, exist_ok=True)
-    specs = stage_specs(cfg, seq, sp)
+    specs = stage_specs(cfg, seq, sp, loss_chunk_bytes=loss_chunk_bytes)
     stages = {}
     for name, (fn, inputs) in specs.items():
         bound = functools.partial(fn, cfg)
@@ -174,6 +243,12 @@ def export(cfg: M.ModelConfig, seq: int, sp: int, out_root: pathlib.Path,
         "seq": seq, "sp": sp, "seq_shard": seq // sp,
         "q_heads_shard": q_sh, "kv_heads_shard": kv_sh,
         "ignore_index": M.IGNORE_INDEX,
+        # Informational echo: rust re-derives tile rows from the tile
+        # stages' input shapes (single source of truth is the stage IO).
+        "tile_rows": {
+            "loss": loss_tile_rows(cfg, seq // sp, loss_chunk_bytes),
+            "mlp": mlp_tile_rows(cfg, seq // sp),
+        },
         "stages": stages,
         "param_layout": {
             g: [{"name": n, "shape": sh, "init": init} for n, sh, init in tensors]
@@ -190,15 +265,18 @@ def dataclasses_replace(cfg, **kw):
 
 
 # The default build set: everything the examples, tests and benches load.
+# Fifth field: loss-head tile chunk bytes. The paper's 1 GiB chunk would
+# mean one tile at toy vocab sizes, so the tiny builds shrink it (64 KiB
+# = 32 rows at vocab 512) to exercise multi-tile sweeps end to end.
 DEFAULT_BUILDS = [
-    ("tiny", 256, 1, None),
-    ("tiny", 256, 2, None),
-    ("tiny", 256, 4, None),      # exercises kv replication (kv=2 < sp=4)
-    ("tiny", 256, 2, "ref"),     # kernel-swap path (attention-agnostic test)
-    ("e2e-25m", 512, 1, None),
-    ("e2e-25m", 512, 4, None),
-    ("e2e-100m", 512, 4, None),   # single-core-friendly e2e driver default
-    ("e2e-100m", 1024, 4, None),
+    ("tiny", 256, 1, None, 64 * 1024),
+    ("tiny", 256, 2, None, 64 * 1024),
+    ("tiny", 256, 4, None, 64 * 1024),  # exercises kv replication (kv=2 < sp=4)
+    ("tiny", 256, 2, "ref", 64 * 1024),  # kernel-swap path (attention-agnostic)
+    ("e2e-25m", 512, 1, None, GIB),
+    ("e2e-25m", 512, 4, None, GIB),
+    ("e2e-100m", 512, 4, None, GIB),  # single-core-friendly e2e driver default
+    ("e2e-100m", 1024, 4, None, GIB),
 ]
 
 
@@ -208,6 +286,8 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--sp", type=int, default=1)
     ap.add_argument("--kernels", choices=["pallas", "ref"], default=None)
+    ap.add_argument("--chunk-bytes", type=int, default=GIB,
+                    help="loss-head tile chunk size (§3.1; fp32 bytes)")
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--all", action="store_true",
                     help="build the default artifact set")
@@ -216,12 +296,13 @@ def main() -> None:
     if args.all or args.config is None:
         builds = DEFAULT_BUILDS
     else:
-        builds = [(args.config, args.seq, args.sp, args.kernels)]
-    for name, seq, sp, kern in builds:
+        builds = [(args.config, args.seq, args.sp, args.kernels,
+                   args.chunk_bytes)]
+    for name, seq, sp, kern, chunk in builds:
         cfg = M.CONFIGS[name]
         tag = f"{name}-sp{sp}-seq{seq}" + (f" [{kern}]" if kern else "")
         print(f"export {tag}")
-        export(cfg, seq, sp, out_root, kernels=kern)
+        export(cfg, seq, sp, out_root, kernels=kern, loss_chunk_bytes=chunk)
     print("done")
 
 

@@ -177,7 +177,9 @@ def post_attn_fwd(cfg: ModelConfig, wo, ln2, wg, wu, wd, h_in, attn):
     h1 = h_in + attn.reshape(s, cfg.n_q_heads * cfg.head_dim) @ wo
     x = rms_norm(h1, ln2, cfg.norm_eps)
     if cfg.kernels == "pallas":
-        y = tiled_mlp.mlp_tiled(x, wg, wu, wd, cfg.tile_s)
+        # clamp tile_s to the row count: this stage is also lowered at
+        # `[rows_per_tile, ...]` tile shapes (mlp_fwd_tile)
+        y = tiled_mlp.mlp_tiled(x, wg, wu, wd, min(cfg.tile_s, s))
     else:
         y = ref.mlp_tiled_jnp(x, wg, wu, wd, tile_s=min(cfg.tile_s, s))
     return (h1 + y,)
@@ -191,8 +193,12 @@ def loss_fwd(cfg: ModelConfig, lnf, unembed, h, labels):
     """
     x = rms_norm(h, lnf, cfg.norm_eps)
     if cfg.kernels == "pallas":
+        # clamp tile_s to the row count: this stage is also lowered at
+        # `[rows_per_tile, H]` tile shapes (loss_bwd_tile), where rows
+        # may be smaller than the configured CE tile
         loss_sum, count = tiled_ce.ce_tiled(x, unembed, labels,
-                                            cfg.tile_s, cfg.tile_v)
+                                            min(cfg.tile_s, h.shape[0]),
+                                            cfg.tile_v)
     else:
         loss_sum, count = ref.ce_tiled_jnp(x, unembed, labels,
                                            tile_s=min(cfg.tile_s, h.shape[0]))
@@ -237,6 +243,49 @@ def loss_bwd(cfg, lnf, unembed, h, labels, ct_sum):
         lambda *a: loss_fwd(cfg, *a, labels)[0], lnf, unembed, h
     )
     return pull(ct_sum)                   # (d_lnf, d_unembed, d_h)
+
+
+# ---------------------------------------------------------------------------
+# Row-tiled execution stages (paper §3.1 EXECUTED, not just planned).
+#
+# The rust coordinator's `tiling::exec` driver slices a sequence shard into
+# fixed `[T, ...]` row tiles and streams them through these programs; the
+# ragged tail tile is padded with zero rows and IGNORE_INDEX labels, so
+# padding contributes exactly 0 loss and 0 gradient. The full-shard
+# `[Ssh, vocab]` logits tensor never exists — only one `[T, vocab]` tile
+# (Liger-style, §3.1's 1-GiB chunks).
+#
+# `loss_bwd_tile` is `loss_bwd` lowered at tile shapes, and
+# `mlp_{fwd,bwd}_tile` are `post_attn_{fwd,bwd}` at tile shapes — every op
+# in the post-attention block (output projection, residual, RMSNorm,
+# SwiGLU) is row-wise, so the same stage function tiles for free. Only the
+# loss-head forward needs a new function: the monolithic `loss_fwd` emits
+# a scalar (sum, count) pair, while the tiled sweep needs PER-ROW losses
+# so the driver can (a) sum rows in the pinned ascending order of the
+# summation contract and (b) bucket rows by segment id, yielding
+# per-document losses from the same single pass — no per-document re-run.
+# ---------------------------------------------------------------------------
+def loss_fwd_tile(cfg: ModelConfig, lnf, unembed, h, labels):
+    """Per-row fused CE over one `[T, H]` sequence tile.
+
+    Returns the `[T]` per-row loss vector; IGNORE_INDEX rows emit exactly
+    0.0 (this is what makes the driver's masked padding rows free).
+    """
+    x = rms_norm(h, lnf, cfg.norm_eps)
+    mask = labels != IGNORE_INDEX
+    if cfg.kernels == "pallas":
+        t = x.shape[0]
+        m, l, tgt = tiled_ce.ce_forward_parts(
+            x, unembed, labels, tile_s=min(cfg.tile_s, t), tile_v=cfg.tile_v
+        )
+        per = (m + jnp.log(l)) - tgt
+    else:
+        logits = x @ unembed              # [T, V]: the tile working set
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        safe = jnp.where(mask, labels, 0)
+        tgt = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+        per = lse - tgt
+    return (jnp.where(mask, per, 0.0),)
 
 
 # ---------------------------------------------------------------------------

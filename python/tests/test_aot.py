@@ -23,10 +23,35 @@ def test_all_stage_files_exist(exported):
         "embed_fwd", "embed_bwd", "pre_attn_fwd", "pre_attn_bwd",
         "attn_fwd", "attn_bwd", "post_attn_fwd", "post_attn_bwd",
         "loss_fwd", "loss_bwd",
+        # optional tiled-execution stages (rust loads manifests without
+        # them; new exports always carry them)
+        "loss_fwd_tile", "loss_bwd_tile", "mlp_fwd_tile", "mlp_bwd_tile",
     }
     for st in manifest["stages"].values():
         text = (path / st["file"]).read_text()
         assert text.startswith("HloModule"), st["file"]
+
+
+def test_tile_stage_shapes(exported):
+    """Tile stages are row-sliced copies of their monolithic parents; the
+    manifest's informational tile_rows echo must match the stage IO (the
+    rust driver derives rows from the stage shapes)."""
+    _, m = exported
+    st, cfg = m["stages"], m["config"]
+    t_loss = m["tile_rows"]["loss"]
+    t_mlp = m["tile_rows"]["mlp"]
+    h_in = next(e for e in st["loss_fwd_tile"]["inputs"] if e["name"] == "h")
+    assert h_in["shape"] == [t_loss, cfg["hidden"]]
+    # per-row loss out, not a scalar pair
+    assert st["loss_fwd_tile"]["outputs"][0]["shape"] == [t_loss]
+    # loss_bwd_tile mirrors loss_bwd's outputs at tile shapes
+    assert st["loss_bwd_tile"]["outputs"][2]["shape"] == [t_loss, cfg["hidden"]]
+    mlp_h = next(e for e in st["mlp_fwd_tile"]["inputs"] if e["name"] == "h_in")
+    assert mlp_h["shape"] == [t_mlp, cfg["hidden"]]
+    assert st["mlp_fwd_tile"]["outputs"][0]["shape"] == [t_mlp, cfg["hidden"]]
+    # mlp_bwd_tile: 5 weight grads + d_h_in + d_attn
+    assert len(st["mlp_bwd_tile"]["outputs"]) == 7
+    assert st["mlp_bwd_tile"]["outputs"][5]["shape"] == [t_mlp, cfg["hidden"]]
 
 
 def test_manifest_shapes_consistent(exported):

@@ -1,0 +1,189 @@
+"""Tiled-execution stage equivalence (paper §3.1 executed).
+
+The rust `tiling::exec` driver assumes three properties of the tile
+stages, asserted here against the monolithic stages they replace:
+
+  1. Summing `loss_fwd_tile`'s per-row losses over a sweep of row tiles
+     reproduces `loss_fwd`'s (loss_sum, count).
+  2. Accumulating `loss_bwd_tile` partials over the sweep reproduces
+     `loss_bwd`'s weight gradients, and the d_h tiles concatenate to the
+     full d_h (rows are independent).
+  3. Padding rows (zero hidden state + IGNORE_INDEX label — how the
+     driver masks a ragged tail tile) contribute exactly 0 loss and 0
+     gradient.
+
+Plus the per-document property the single-pass sweep relies on: bucketing
+per-row losses by segment id equals the old masked-label re-execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+CFG_REF = dataclasses.replace(CFG, name="tiny-ref", kernels="ref")
+IGNORE = M.IGNORE_INDEX
+
+
+def loss_head_inputs(seed: int, ssh: int, cfg):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    lnf = jnp.ones((cfg.hidden,)) + 0.01 * jax.random.normal(k[0], (cfg.hidden,))
+    unembed = jax.random.normal(k[1], (cfg.hidden, cfg.vocab)) * 0.05
+    h = jax.random.normal(k[2], (ssh, cfg.hidden))
+    labels = jax.random.randint(k[3], (ssh,), 0, cfg.vocab, dtype=jnp.int32)
+    labels = labels.at[ssh - 1].set(IGNORE)  # shard tail is always masked
+    labels = labels.at[5].set(IGNORE)
+    return lnf, unembed, h, labels
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG_REF], ids=["pallas", "ref"])
+def test_tile_sweep_matches_monolithic_loss(cfg):
+    ssh, t = 64, 32
+    lnf, unembed, h, labels = loss_head_inputs(0, ssh, cfg)
+    want_sum, want_count = M.loss_fwd(cfg, lnf, unembed, h, labels)
+    per_rows = []
+    for lo in range(0, ssh, t):
+        (rows,) = M.loss_fwd_tile(cfg, lnf, unembed, h[lo:lo + t],
+                                  labels[lo:lo + t])
+        per_rows.append(rows)
+    per = jnp.concatenate(per_rows)
+    np.testing.assert_allclose(per.sum(), want_sum, rtol=1e-5)
+    assert int((labels != IGNORE).sum()) == int(want_count)
+    # ignored rows emit exactly 0 per-row loss
+    assert per[5] == 0.0 and per[ssh - 1] == 0.0
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG_REF], ids=["pallas", "ref"])
+def test_tile_sweep_matches_monolithic_backward(cfg):
+    ssh, t = 64, 32
+    lnf, unembed, h, labels = loss_head_inputs(1, ssh, cfg)
+    ct = jnp.float32(1.0 / 62.0)
+    want_lnf, want_unembed, want_dh = M.loss_bwd(cfg, lnf, unembed, h,
+                                                 labels, ct)
+    acc_lnf = jnp.zeros_like(want_lnf)
+    acc_unembed = jnp.zeros_like(want_unembed)
+    dh_tiles = []
+    for lo in range(0, ssh, t):
+        d_lnf, d_unembed, d_h = M.loss_bwd(cfg, lnf, unembed, h[lo:lo + t],
+                                           labels[lo:lo + t], ct)
+        acc_lnf += d_lnf
+        acc_unembed += d_unembed
+        dh_tiles.append(d_h)
+    np.testing.assert_allclose(acc_lnf, want_lnf, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(acc_unembed, want_unembed, rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(jnp.concatenate(dh_tiles), want_dh,
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG_REF], ids=["pallas", "ref"])
+def test_padding_rows_are_free(cfg):
+    """Zero hidden rows + IGNORE labels = the driver's ragged-tail mask.
+
+    t = 64 with a 32-row live half so the live-only comparison tile is
+    still a multiple of the pallas CE kernel's tile_s.
+    """
+    t = 64
+    lnf, unembed, h, labels = loss_head_inputs(2, t, cfg)
+    h = h.at[t // 2:].set(0.0)
+    labels = labels.at[t // 2:].set(IGNORE)
+    (per,) = M.loss_fwd_tile(cfg, lnf, unembed, h, labels)
+    assert bool((per[t // 2:] == 0.0).all())
+    d_lnf, d_unembed, d_h = M.loss_bwd(cfg, lnf, unembed, h, labels,
+                                       jnp.float32(0.125))
+    assert bool((d_h[t // 2:] == 0.0).all())
+    # and the live half still produces the same grads as a live-only tile
+    d_lnf2, d_unembed2, d_h2 = M.loss_bwd(
+        cfg, lnf, unembed, h[: t // 2], labels[: t // 2], jnp.float32(0.125)
+    )
+    np.testing.assert_allclose(d_unembed, d_unembed2, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(d_h[: t // 2], d_h2, rtol=1e-6, atol=1e-8)
+
+
+def test_per_row_bucketing_equals_masked_label_rerun():
+    """Per-document losses from ONE tiled sweep == the old n_docs
+    re-execution with masked labels (the path the trainer replaces)."""
+    cfg = CFG_REF
+    ssh = 64
+    lnf, unembed, h, _ = loss_head_inputs(3, ssh, cfg)
+    # three "documents" over the shard rows
+    bounds = [0, 20, 45, 64]
+    rng = np.random.default_rng(7)
+    labels = rng.integers(0, cfg.vocab, ssh).astype(np.int32)
+    for b in bounds[1:]:
+        labels[b - 1] = IGNORE  # no cross-document target
+    labels = jnp.asarray(labels)
+
+    (per,) = M.loss_fwd_tile(cfg, lnf, unembed, h, labels)
+    for d in range(3):
+        lo, hi = bounds[d], bounds[d + 1]
+        masked = jnp.full((ssh,), IGNORE, jnp.int32)
+        masked = masked.at[lo:hi].set(labels[lo:hi])
+        old_sum, old_count = M.loss_fwd(cfg, lnf, unembed, h, masked)
+        np.testing.assert_allclose(per[lo:hi].sum(), old_sum, rtol=1e-5)
+        assert int(old_count) == int((labels[lo:hi] != IGNORE).sum())
+
+
+def test_tile_row_helpers_align_and_reject_degenerate_chunks():
+    """Tile rows must satisfy the kernels' `s % tile_s == 0` asserts on
+    BOTH kernel paths, and a chunk budget below one fp32 vocab row is a
+    config error (mirrors rust's plan_logits_checked)."""
+    with pytest.raises(ValueError, match="vocab row"):
+        aot.loss_tile_rows(CFG, 64, 100)
+    for cfg in (CFG, CFG_REF):
+        # ssh=96 -> raw mlp rows 48, not a multiple of tile_s=32: aligned
+        assert aot.mlp_tile_rows(cfg, 96) == 32
+        # 100 KB chunk -> raw 48 loss rows: aligned down to 32
+        assert aot.loss_tile_rows(cfg, 96, 100_000) == 32
+        # rows below tile_s pass through (stage-side clamp handles them)
+        assert aot.loss_tile_rows(cfg, 96, 16 * 1024) == 8
+        # boundary: exactly one vocab row of budget is accepted
+        assert aot.loss_tile_rows(cfg, 96, 4 * cfg.vocab) == 1
+
+
+def test_mlp_tile_sweep_matches_post_attn():
+    cfg = CFG
+    ssh, t = 64, 32
+    k = jax.random.split(jax.random.PRNGKey(4), 7)
+    hq = cfg.n_q_heads * cfg.head_dim
+    wo = jax.random.normal(k[0], (hq, cfg.hidden)) * 0.05
+    ln2 = jnp.ones((cfg.hidden,))
+    wg = jax.random.normal(k[1], (cfg.hidden, cfg.ffn)) * 0.05
+    wu = jax.random.normal(k[2], (cfg.hidden, cfg.ffn)) * 0.05
+    wd = jax.random.normal(k[3], (cfg.ffn, cfg.hidden)) * 0.05
+    h_in = jax.random.normal(k[4], (ssh, cfg.hidden))
+    attn = jax.random.normal(k[5], (ssh, cfg.n_q_heads, cfg.head_dim))
+    d_out = jax.random.normal(k[6], (ssh, cfg.hidden))
+
+    (want,) = M.post_attn_fwd(cfg, wo, ln2, wg, wu, wd, h_in, attn)
+    tiles = [
+        M.post_attn_fwd(cfg, wo, ln2, wg, wu, wd, h_in[lo:lo + t],
+                        attn[lo:lo + t])[0]
+        for lo in range(0, ssh, t)
+    ]
+    np.testing.assert_allclose(jnp.concatenate(tiles), want, rtol=1e-5,
+                               atol=1e-6)
+
+    want_bwd = M.post_attn_bwd(cfg, wo, ln2, wg, wu, wd, h_in, attn, d_out)
+    acc = [jnp.zeros_like(g) for g in want_bwd[:5]]
+    dh_tiles, dattn_tiles = [], []
+    for lo in range(0, ssh, t):
+        out = M.post_attn_bwd(cfg, wo, ln2, wg, wu, wd, h_in[lo:lo + t],
+                              attn[lo:lo + t], d_out[lo:lo + t])
+        for i in range(5):
+            acc[i] += out[i]
+        dh_tiles.append(out[5])
+        dattn_tiles.append(out[6])
+    for got, want_g in zip(acc, want_bwd[:5]):
+        np.testing.assert_allclose(got, want_g, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(jnp.concatenate(dh_tiles), want_bwd[5],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(jnp.concatenate(dattn_tiles), want_bwd[6],
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,151 @@
+//! Bench: tiled vs untiled loss-head EXECUTION (paper §3.1).
+//!
+//! Uses the `HostLossHead` reference executor, so it runs without PJRT
+//! artifacts: the comparison is the `tiling::exec` driver overhead
+//! (arena tile slicing, padding, pinned reductions) against the same
+//! arithmetic in one monolithic pass, plus the paper-scale byte ledger
+//! (GiB held untiled vs per tile, and the measured tracker peaks that
+//! the acceptance tests pin to `TilePlan::savings()`).
+//!
+//! Emits `BENCH_tiling.json` (schema in DESIGN.md §Bench trajectory).
+
+use alst::config::GIB;
+use alst::memory::MemoryTracker;
+use alst::runtime::{HostTensor, ScratchArena};
+use alst::tiling::exec::{
+    untiled_loss_bwd_bytes, HostLossHead, TiledLossExec, LOSS_HEAD_TAG,
+};
+use alst::tiling::plan_logits;
+use alst::util::bench::{fmt_seqlen, quick, BenchReport, Table};
+use alst::util::rng::Rng;
+
+const IGNORE: i32 = -100;
+
+fn main() {
+    println!("bench_tiling\n");
+    let mut report = BenchReport::new("tiling");
+
+    // ---- timed rows: real host compute, tiled vs untiled ----------------
+    let (s, vocab, hidden) = (256usize, 2048usize, 64usize);
+    let mut rng = Rng::new(42);
+    let lnf: Vec<f32> = (0..hidden).map(|_| 1.0 + 0.02 * rng.normal() as f32).collect();
+    let head =
+        HostLossHead::new(hidden, vocab, IGNORE, lnf, rng.normal_vec(hidden * vocab, 0.05))
+            .unwrap();
+    let h = HostTensor::f32(vec![s, hidden], rng.normal_vec(s * hidden, 1.0));
+    let labels: Vec<i32> = (0..s).map(|_| (rng.below(vocab)) as i32).collect();
+    let arena = ScratchArena::new();
+    // logical fp32 logits volume the loss head streams per pass
+    let logits_bytes = (s * vocab) as u64 * 4;
+
+    for rows in [s, 32] {
+        let tag = if rows == s {
+            format!("loss fwd untiled ({s} rows)")
+        } else {
+            format!("loss fwd tiled rows={rows} ({} tiles)", s.div_ceil(rows))
+        };
+        let drv = TiledLossExec::new(s, hidden, vocab, rows, IGNORE, &arena).unwrap();
+        let mut tracker = MemoryTracker::new(1 << 44);
+        let r = quick(&tag, || {
+            let sweep = drv
+                .forward(&mut tracker, &h, &labels, |ht, lt| {
+                    let per = head.per_row_losses(ht.as_f32()?, lt.as_i32()?)?;
+                    Ok(HostTensor::f32(vec![per.len()], per))
+                })
+                .unwrap();
+            arena.recycle_f32(sweep.per_row_loss);
+        })
+        .with_bytes(logits_bytes);
+        report.push(&r);
+    }
+    for rows in [s, 32] {
+        let tag = if rows == s {
+            format!("loss bwd untiled ({s} rows)")
+        } else {
+            format!("loss bwd tiled rows={rows} ({} tiles)", s.div_ceil(rows))
+        };
+        let drv = TiledLossExec::new(s, hidden, vocab, rows, IGNORE, &arena).unwrap();
+        let mut tracker = MemoryTracker::new(1 << 44);
+        let mut d_lnf = vec![0f32; hidden];
+        let mut d_unembed = vec![0f32; hidden * vocab];
+        let r = quick(&tag, || {
+            let d_h = drv
+                .backward(
+                    &mut tracker,
+                    &h,
+                    &labels,
+                    &mut d_lnf,
+                    &mut d_unembed,
+                    |ht, lt| {
+                        let lab = lt.as_i32()?;
+                        let rows_t = lab.len();
+                        let mut dl = vec![0f32; hidden];
+                        let mut dw = vec![0f32; hidden * vocab];
+                        let mut dh = vec![0f32; rows_t * hidden];
+                        head.backward(ht.as_f32()?, lab, 0.25, &mut dl, &mut dw, &mut dh)?;
+                        Ok((
+                            HostTensor::f32(vec![hidden], dl),
+                            HostTensor::f32(vec![hidden, vocab], dw),
+                            HostTensor::f32(vec![rows_t, hidden], dh),
+                        ))
+                    },
+                )
+                .unwrap();
+            arena.recycle(d_h);
+        })
+        .with_bytes(2 * logits_bytes);
+        report.push(&r);
+    }
+
+    // ---- paper-scale byte ledger (no compute; tracker-measured) ----------
+    let mut table = Table::new(
+        "Loss-head bytes, untiled vs tiled (fp32, fwd+bwd copies; §3.1)",
+        &["seqlen", "vocab", "untiled GiB", "tile GiB", "tiles", "saving", "measured"],
+    );
+    for (seq, vocab) in [(16_000usize, 128_256usize), (32_768, 128_256), (131_072, 152_064)]
+    {
+        let plan = plan_logits(seq, vocab, GIB);
+        // measured: drive the no-op executor and read the tracker peaks
+        let arena = ScratchArena::new();
+        let mut untiled = MemoryTracker::new(1 << 46);
+        untiled
+            .alloc(untiled_loss_bwd_bytes(seq, vocab), LOSS_HEAD_TAG)
+            .unwrap();
+        untiled.free(untiled_loss_bwd_bytes(seq, vocab), LOSS_HEAD_TAG);
+        let mut tiled = MemoryTracker::new(1 << 46);
+        let drv = TiledLossExec::new(seq, 8, vocab, plan.rows_per_tile, IGNORE, &arena)
+            .unwrap();
+        let h0 = HostTensor::f32(vec![seq, 8], vec![0.0; seq * 8]);
+        let lab0 = vec![0i32; seq];
+        let mut dl = vec![0f32; 8];
+        let mut dw = vec![0f32; 8 * vocab];
+        let d_h = drv
+            .backward(&mut tiled, &h0, &lab0, &mut dl, &mut dw, |_, lt| {
+                let n = lt.numel();
+                Ok((
+                    HostTensor::f32(vec![8], vec![0.0; 8]),
+                    HostTensor::f32(vec![8, vocab], vec![0.0; 8 * vocab]),
+                    HostTensor::f32(vec![n, 8], vec![0.0; n * 8]),
+                ))
+            })
+            .unwrap();
+        arena.recycle(d_h);
+        let measured_drop =
+            untiled.tag_peak(LOSS_HEAD_TAG) - tiled.tag_peak(LOSS_HEAD_TAG);
+        table.row(&[
+            fmt_seqlen(seq),
+            vocab.to_string(),
+            format!("{:.2}", plan.untiled_bytes as f64 / GIB as f64),
+            format!("{:.2}", plan.tile_bytes as f64 / GIB as f64),
+            plan.n_tiles.to_string(),
+            format!("{:.1}x", plan.saving_factor()),
+            format!("{:.2} GiB", measured_drop as f64 / GIB as f64),
+        ]);
+    }
+    table.print();
+
+    match report.write_repo_root() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_tiling.json: {e}"),
+    }
+}

@@ -31,6 +31,10 @@ use crate::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
 use crate::coordinator::zero::{init_flat_params, slice_group, GroupGrads, ShardedStore};
 use crate::memory::{HostPool, MemoryTracker};
 use crate::runtime::{Engine, HostTensor, Manifest, ScratchArena};
+use crate::tiling::exec::{
+    untiled_loss_bwd_bytes, untiled_loss_fwd_bytes, untiled_mlp_fwd_bytes, TiledLossExec,
+    TiledMlpExec, LOSS_HEAD_TAG, MLP_TAG,
+};
 
 /// Execute `f` once per rank, returning the per-rank results in rank
 /// order. With `parallel` (and at least two ranks) the ranks run
@@ -95,7 +99,9 @@ pub struct TrainerOptions {
     pub host_bytes: u64,
     /// Validate every stage's shapes against the manifest (tests; ~free).
     pub checked: bool,
-    /// Extract per-document losses on packed steps. Costs n_docs extra
+    /// Extract per-document losses on packed steps. With `tiled_loss`
+    /// this is FREE (per-row losses from the tiled sweep are bucketed by
+    /// segment id). On the monolithic path it costs n_docs extra
     /// loss-head passes (the logits matmul — the most expensive single
     /// stage at large vocab) per step; turn off for steady-state
     /// training where only the aggregate loss matters.
@@ -116,6 +122,20 @@ pub struct TrainerOptions {
     /// default (see `runtime::tensor::DEFAULT_POOL_BYTE_BUDGET`) or the
     /// pool sheds buffers and every checkout allocates.
     pub arena_byte_budget: usize,
+    /// EXECUTE the loss head as a row-tiled sweep (`tiling::exec`):
+    /// `loss_fwd_tile`/`loss_bwd_tile` stream `[rows_per_tile, vocab]`
+    /// logits tiles instead of one full-shard `loss_fwd`/`loss_bwd`,
+    /// and per-document losses fall out of the SAME sweep (per-row
+    /// losses bucketed by segment id — zero extra stage executions,
+    /// versus n_docs loss-head re-runs on the monolithic path).
+    /// Requires an artifact that exports the optional tile stages
+    /// (`Trainer::new` refuses otherwise). Unlike `FeatureFlags`, which
+    /// drive the memory/perf *model*, this changes what actually runs.
+    pub tiled_loss: bool,
+    /// EXECUTE the post-attention block (projection + residual +
+    /// RMSNorm + SwiGLU MLP — all row-wise) as a row-tiled sweep via
+    /// `mlp_fwd_tile`/`mlp_bwd_tile`. Same artifact requirement.
+    pub tiled_mlp: bool,
 }
 
 impl Default for TrainerOptions {
@@ -131,6 +151,8 @@ impl Default for TrainerOptions {
             per_doc_loss: true,
             parallel_ranks: true,
             arena_byte_budget: crate::runtime::tensor::DEFAULT_POOL_BYTE_BUDGET,
+            tiled_loss: false,
+            tiled_mlp: false,
         }
     }
 }
@@ -193,6 +215,12 @@ pub struct Trainer {
     checked: bool,
     per_doc_loss: bool,
     parallel_ranks: bool,
+    /// Tiled-execution gates (see `TrainerOptions`); the `*_tile_rows`
+    /// are read back from the manifest's tile-stage shapes at load.
+    tiled_loss: bool,
+    tiled_mlp: bool,
+    loss_tile_rows: usize,
+    mlp_tile_rows: usize,
     /// Scratch-buffer pool the step loop's relayouts ping-pong through:
     /// after the first forward/backward cycle populates it, the 2×n_layers
     /// relayouts of every later step are allocation-free.
@@ -206,6 +234,34 @@ impl Trainer {
             .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
         let mut engine = Engine::cpu()?;
         engine.load_manifest(&manifest)?;
+
+        // Tiled execution needs the optional tile stages; refusing at
+        // load beats silently falling back (the caller asked for a
+        // different memory profile).
+        let loss_tile_rows = if opts.tiled_loss {
+            anyhow::ensure!(
+                manifest.has_tiled_loss(),
+                "TrainerOptions::tiled_loss set but artifact `{}` exports no \
+                 loss_fwd_tile/loss_bwd_tile stages — re-export with the \
+                 current compile.aot",
+                artifact_dir.display()
+            );
+            manifest.loss_tile_rows().unwrap_or(0)
+        } else {
+            0
+        };
+        let mlp_tile_rows = if opts.tiled_mlp {
+            anyhow::ensure!(
+                manifest.has_tiled_mlp(),
+                "TrainerOptions::tiled_mlp set but artifact `{}` exports no \
+                 mlp_fwd_tile/mlp_bwd_tile stages — re-export with the \
+                 current compile.aot",
+                artifact_dir.display()
+            );
+            manifest.mlp_tile_rows().unwrap_or(0)
+        } else {
+            0
+        };
 
         let sp = manifest.sp;
         // ZeRO-3 shards over the SP group; without zero3 every rank holds
@@ -232,6 +288,10 @@ impl Trainer {
             checked: opts.checked,
             per_doc_loss: opts.per_doc_loss,
             parallel_ranks: opts.parallel_ranks,
+            tiled_loss: opts.tiled_loss,
+            tiled_mlp: opts.tiled_mlp,
+            loss_tile_rows,
+            mlp_tile_rows,
             arena: ScratchArena::with_byte_budget(opts.arena_byte_budget),
         })
     }
@@ -304,13 +364,28 @@ impl Trainer {
         self.group.account_gather(range.len() as u64 * 4);
     }
 
+    /// Ranks whose stage working sets are resident at once on the
+    /// monolithic (untiled) paths: all `sp` under the scoped-thread
+    /// executor, one when ranks run serially. Tracker charges scale by
+    /// this so `parallel_ranks: false` runs are not overstated.
+    fn resident_ranks(&self) -> u64 {
+        if self.parallel_ranks && self.manifest.sp > 1 {
+            self.manifest.sp as u64
+        } else {
+            1
+        }
+    }
+
     /// Forward through one layer for all ranks; returns (new_h, saved)
     /// where `saved` holds what backward reuses after recompute (qkv +
-    /// attention-output buffers, device-side).
+    /// attention-output buffers, device-side). `h_host` is the host copy
+    /// of `h` — the tiled post-attention sweep slices its row tiles from
+    /// it (`&mut self` only for the MemoryTracker instrumentation).
     fn layer_forward(
-        &self,
+        &mut self,
         lp: &[xla::PjRtBuffer],
         h: &[xla::PjRtBuffer],
+        h_host: &[HostTensor],
         pos: &[xla::PjRtBuffer],
     ) -> Result<(Vec<xla::PjRtBuffer>, LayerAct)> {
         let sp = self.sp();
@@ -363,21 +438,48 @@ impl Trainer {
             &self.arena,
         );
         self.arena.recycle_all(o_full);
-        let o_sh_b = self.upload_all(&o_sh)?;
-        self.arena.recycle_all(o_sh);
 
-        let post = run_ranks(sp, self.parallel_ranks, |r| {
-            let out = self.exec("post_attn_fwd", &[wo, ln2, wg, wu, wd, &h[r], &o_sh_b[r]])?;
-            let t = out.into_iter().next().unwrap();
-            let b = self.upload(&t)?;
-            Ok((b, t))
-        })?;
         let mut h_out = Vec::with_capacity(sp);
         let mut h_out_host = Vec::with_capacity(sp);
-        for (b, t) in post {
-            h_out.push(b);
-            h_out_host.push(t);
-        }
+        let mut o_sh_b = Vec::new();
+        let o_sh_host = if self.tiled_mlp {
+            // Row-tiled post-attention sweep: h/attn tiles sliced from
+            // the host copies, one `[rows, ffn]`-scale working set at a
+            // time. The o_sh host tensors ride along in the LayerAct —
+            // backward's tile sweep slices the same inputs. No full
+            // o_sh device upload: only tile-sized buffers go up.
+            let post = self.tiled_post_attn_forward(lp, h_host, &o_sh)?;
+            for (b, t) in post {
+                h_out.push(b);
+                h_out_host.push(t);
+            }
+            o_sh
+        } else {
+            o_sh_b = self.upload_all(&o_sh)?;
+            self.arena.recycle_all(o_sh);
+            // untiled: the full-shard gate/up working set, one copy per
+            // resident rank
+            let c = &self.manifest.config;
+            let ssh = self.manifest.seq_shard;
+            let bytes = self.resident_ranks() * untiled_mlp_fwd_bytes(ssh, c.hidden, c.ffn);
+            self.device.alloc(bytes, MLP_TAG)?;
+            let post = run_ranks(sp, self.parallel_ranks, |r| {
+                let out =
+                    self.exec("post_attn_fwd", &[wo, ln2, wg, wu, wd, &h[r], &o_sh_b[r]])?;
+                let t = out.into_iter().next().unwrap();
+                let b = self.upload(&t)?;
+                Ok((b, t))
+            });
+            // free before `?`: a failed stage must not leave phantom
+            // bytes charged on the reusable tracker
+            self.device.free(bytes, MLP_TAG);
+            let post = post?;
+            for (b, t) in post {
+                h_out.push(b);
+                h_out_host.push(t);
+            }
+            Vec::new()
+        };
         Ok((
             h_out,
             LayerAct {
@@ -385,9 +487,95 @@ impl Trainer {
                 k_full: k_full_b,
                 v_full: v_full_b,
                 o_sh: o_sh_b,
+                o_sh_host,
                 h_out_host,
             },
         ))
+    }
+
+    /// The tiled post-attention forward sweep: per rank, slice
+    /// `(h_in, attn)` row tiles and stream them through `mlp_fwd_tile`.
+    /// Serial over ranks — tiles must accumulate nothing here, but the
+    /// driver's tracker charges want a single writer.
+    fn tiled_post_attn_forward(
+        &mut self,
+        lp: &[xla::PjRtBuffer],
+        h_host: &[HostTensor],
+        o_sh: &[HostTensor],
+    ) -> Result<Vec<(xla::PjRtBuffer, HostTensor)>> {
+        let sp = self.manifest.sp;
+        let ssh = self.manifest.seq_shard;
+        let rows = self.mlp_tile_rows;
+        let key = Engine::stage_key(&self.manifest, "mlp_fwd_tile");
+        let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
+        let c = &self.manifest.config;
+        let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+        let mut out = Vec::with_capacity(sp);
+        for r in 0..sp {
+            let drv = TiledMlpExec::new(
+                ssh, c.hidden, c.ffn, rows, c.n_q_heads, c.head_dim, arena,
+            )?;
+            let h_out = drv.forward(device, &h_host[r], &o_sh[r], |ht, at| {
+                let hb = engine.to_buffer(ht)?;
+                let ab = engine.to_buffer(at)?;
+                let o = engine.execute_buffers(&key, &[wo, ln2, wg, wu, wd, &hb, &ab])?;
+                Ok(o.into_iter().next().unwrap())
+            })?;
+            let b = engine.to_buffer(&h_out)?;
+            out.push((b, h_out));
+        }
+        Ok(out)
+    }
+
+    /// The tiled post-attention backward sweep: per rank, stream
+    /// `(h_in, attn, d_out)` tiles through `mlp_bwd_tile`, accumulating
+    /// the five weight-grad partials into `layer_grads[r]` in ascending
+    /// tile order (the pinned accumulation contract) and assembling the
+    /// full `(d_h_resid, d_attn)` shards.
+    fn tiled_post_attn_backward(
+        &mut self,
+        lp: &[xla::PjRtBuffer],
+        h_in_host: &[HostTensor],
+        o_sh_host: &[HostTensor],
+        d_h_host: &[HostTensor],
+        layer_grads: &mut [GroupGrads],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let sp = self.manifest.sp;
+        let ssh = self.manifest.seq_shard;
+        let rows = self.mlp_tile_rows;
+        let key = Engine::stage_key(&self.manifest, "mlp_bwd_tile");
+        let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
+        let c = &self.manifest.config;
+        let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+        let mut d_h_resid = Vec::with_capacity(sp);
+        let mut d_attn = Vec::with_capacity(sp);
+        for r in 0..sp {
+            let drv = TiledMlpExec::new(
+                ssh, c.hidden, c.ffn, rows, c.n_q_heads, c.head_dim, arena,
+            )?;
+            let lg = &mut layer_grads[r];
+            let (dh, da) = drv.backward(
+                device,
+                &h_in_host[r],
+                &o_sh_host[r],
+                &d_h_host[r],
+                |ht, at, dt| {
+                    let hb = engine.to_buffer(ht)?;
+                    let ab = engine.to_buffer(at)?;
+                    let db = engine.to_buffer(dt)?;
+                    let o = engine
+                        .execute_buffers(&key, &[wo, ln2, wg, wu, wd, &hb, &ab, &db])?;
+                    let mut it = o.into_iter();
+                    for name in ["wo", "ln2", "wg", "wu", "wd"] {
+                        lg.accumulate(name, &it.next().unwrap())?;
+                    }
+                    Ok((it.next().unwrap(), it.next().unwrap()))
+                },
+            )?;
+            d_h_resid.push(dh);
+            d_attn.push(da);
+        }
+        Ok((d_h_resid, d_attn))
     }
 
     /// One full training step on one global sequence (effective batch 1,
@@ -467,12 +655,13 @@ impl Trainer {
 
     /// Shard-level forward+backward shared by the whole-sequence and
     /// packed paths. With `packed` (and `per_doc_loss` on), per-document
-    /// losses are extracted at the loss head: each document's labels
-    /// isolated in turn (everything else `IGNORE_INDEX`), run only on
-    /// ranks whose shard overlaps the document. No extra layer-stack
-    /// compute, but each pass repeats the loss-head logits matmul —
-    /// n_docs of them per step; disable `TrainerOptions::per_doc_loss`
-    /// for steady-state training.
+    /// losses are extracted at the loss head. Tiled loss: ONE sweep
+    /// emits per-row losses, documents are row buckets — no extra stage
+    /// executions. Monolithic loss: each document's labels isolated in
+    /// turn (everything else `IGNORE_INDEX`), run only on ranks whose
+    /// shard overlaps the document — n_docs extra loss-head logits
+    /// matmuls per step; disable `TrainerOptions::per_doc_loss` for
+    /// steady-state training on that path.
     fn forward_backward_shards(
         &mut self,
         shards: &[ShardedBatch],
@@ -501,7 +690,13 @@ impl Trainer {
                 vec![s.positions.len()],
                 s.positions.clone(),
             ))?);
-            lab_b.push(self.upload(&HostTensor::i32(vec![s.labels.len()], s.labels.clone()))?);
+            // the tiled loss sweeps slice labels host-side per tile —
+            // no full-shard label upload on that path
+            if !self.tiled_loss {
+                lab_b.push(
+                    self.upload(&HostTensor::i32(vec![s.labels.len()], s.labels.clone()))?,
+                );
+            }
         }
 
         // ---- forward -------------------------------------------------------
@@ -522,21 +717,64 @@ impl Trainer {
 
         let mut tape = CheckpointTape::new(n_layers, sp, self.flags.ckpt_offload);
         for li in 0..n_layers {
-            // checkpoint the layer INPUT (host side, offloadable — §3.3)
+            // run the layer first (the tiled MLP sweep slices row tiles
+            // from the live h_host copies), THEN checkpoint the layer
+            // INPUT (host side, offloadable — §3.3)
+            let (h_new, act) =
+                self.layer_forward(&dev_params.layers[li], &h, &h_host, &pos_b)?;
             for (r, hr) in h_host.drain(..).enumerate() {
                 tape.store(li, r, hr, &mut self.device, &mut self.host)?;
             }
-            let (h_new, act) = self.layer_forward(&dev_params.layers[li], &h, &pos_b)?;
+            // fwd pass keeps no per-layer hosts: backward recomputes
+            self.arena.recycle_all(act.o_sh_host);
             h_host = act.h_out_host;
             h = h_new;
         }
 
         let (lnf, unembed) = (&dev_params.final_[0], &dev_params.final_[1]);
-        let loss_out = run_ranks(sp, self.parallel_ranks, |r| {
-            let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab_b[r]])?;
-            Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
-        })?;
-        let (loss_sums, counts): (Vec<f32>, Vec<f32>) = loss_out.into_iter().unzip();
+        let ssh = self.manifest.seq_shard;
+        let vocab = self.manifest.config.vocab;
+        // Per-row losses per rank, tiled path only (consumed by the
+        // single-pass per-document bucketing, then recycled).
+        let mut per_row_ranks: Vec<Vec<f32>> = Vec::new();
+        let (loss_sums, counts): (Vec<f32>, Vec<f32>) = if self.tiled_loss {
+            // Row-tiled sweep: one [rows, vocab] fp32 logits tile at a
+            // time, serial over ranks (single tracker writer; the pinned
+            // ascending-row reduction needs no cross-rank order anyway).
+            let hidden = self.manifest.config.hidden;
+            let ignore = self.manifest.ignore_index;
+            let rows = self.loss_tile_rows;
+            let key = Engine::stage_key(&self.manifest, "loss_fwd_tile");
+            let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+            let mut sums = Vec::with_capacity(sp);
+            let mut cnts = Vec::with_capacity(sp);
+            for r in 0..sp {
+                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?;
+                let sweep =
+                    drv.forward(device, &h_host[r], &shards[r].labels, |ht, lt| {
+                        let hb = engine.to_buffer(ht)?;
+                        let lb = engine.to_buffer(lt)?;
+                        let out =
+                            engine.execute_buffers(&key, &[lnf, unembed, &hb, &lb])?;
+                        Ok(out.into_iter().next().unwrap())
+                    })?;
+                sums.push(sweep.loss_sum);
+                cnts.push(sweep.count);
+                per_row_ranks.push(sweep.per_row_loss);
+            }
+            (sums, cnts)
+        } else {
+            // untiled: each resident rank holds its full-shard fp32
+            // logits copy (the §3.1 monster the tracker tags)
+            let bytes = self.resident_ranks() * untiled_loss_fwd_bytes(ssh, vocab);
+            self.device.alloc(bytes, LOSS_HEAD_TAG)?;
+            let loss_out = run_ranks(sp, self.parallel_ranks, |r| {
+                let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab_b[r]])?;
+                Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
+            });
+            self.device.free(bytes, LOSS_HEAD_TAG);
+            loss_out?.into_iter().unzip()
+        };
         let loss_sum = self.group.all_reduce_scalars(&loss_sums);
         let count = self.group.all_reduce_scalars(&counts);
         // Reachable on packed batches (e.g. every document length 1 =>
@@ -550,31 +788,52 @@ impl Trainer {
         let loss = loss_sum / count;
 
         // Per-document loss (packed batches, opt-out via
-        // `TrainerOptions::per_doc_loss`): re-run the loss head with
-        // labels masked to one document at a time. A document with a
-        // single token has no target; it reports loss 0 over 0 targets.
+        // `TrainerOptions::per_doc_loss`). Tiled path: FREE — the sweep
+        // already produced per-row losses, so documents are just row
+        // buckets (ascending-row sums, same pinned order as the
+        // aggregate); engine executions for the loss stage stay at
+        // n_tiles. Untiled path: the old n_docs re-execution, re-running
+        // the loss head with labels masked to one document at a time —
+        // kept as the reference the equivalence tests compare against.
+        // A document with a single token has no target; it reports loss
+        // 0 over 0 targets either way.
         let mut doc_losses = Vec::new();
         if let Some(p) = packed.filter(|_| self.per_doc_loss) {
-            let ssh = self.manifest.seq / sp;
+            let ignore = self.manifest.ignore_index;
             for d in 0..p.n_docs() {
                 let range = p.segment_range(d);
                 let (mut sum_d, mut count_d) = (0f32, 0f32);
-                for r in 0..sp {
-                    let (a, b) = (r * ssh, (r + 1) * ssh);
-                    if range.end <= a || range.start >= b {
-                        continue; // no overlap: all-IGNORE shard adds 0/0
+                if self.tiled_loss {
+                    for i in range.clone() {
+                        let (r, off) = (i / ssh, i % ssh);
+                        if shards[r].labels[off] != ignore {
+                            sum_d += per_row_ranks[r][off];
+                            count_d += 1.0;
+                        }
                     }
-                    let (lo, hi) = (range.start.max(a), range.end.min(b));
-                    let mut masked = self.arena.take_i32(ssh);
-                    masked.fill(IGNORE_INDEX);
-                    masked[lo - a..hi - a]
-                        .copy_from_slice(&shards[r].labels[lo - a..hi - a]);
-                    let masked_t = HostTensor::i32(vec![ssh], masked);
-                    let lab = self.upload(&masked_t)?;
-                    self.arena.recycle(masked_t);
-                    let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab])?;
-                    sum_d += out[0].scalar_f32()?;
-                    count_d += out[1].scalar_f32()?;
+                } else {
+                    for r in 0..sp {
+                        let (a, b) = (r * ssh, (r + 1) * ssh);
+                        if range.end <= a || range.start >= b {
+                            continue; // no overlap: all-IGNORE shard adds 0/0
+                        }
+                        let (lo, hi) = (range.start.max(a), range.end.min(b));
+                        let mut masked = self.arena.take_i32(ssh);
+                        masked.fill(IGNORE_INDEX);
+                        masked[lo - a..hi - a]
+                            .copy_from_slice(&shards[r].labels[lo - a..hi - a]);
+                        let masked_t = HostTensor::i32(vec![ssh], masked);
+                        let lab = self.upload(&masked_t)?;
+                        self.arena.recycle(masked_t);
+                        // each re-run holds one rank's full logits copy
+                        let bytes = untiled_loss_fwd_bytes(ssh, vocab);
+                        self.device.alloc(bytes, LOSS_HEAD_TAG)?;
+                        let out = self.exec("loss_fwd", &[lnf, unembed, &h[r], &lab]);
+                        self.device.free(bytes, LOSS_HEAD_TAG);
+                        let out = out?;
+                        sum_d += out[0].scalar_f32()?;
+                        count_d += out[1].scalar_f32()?;
+                    }
                 }
                 doc_losses.push(DocumentLoss {
                     doc_id: p.doc_ids[d],
@@ -583,26 +842,98 @@ impl Trainer {
                 });
             }
         }
+        // per-row sweep buffers are arena-sourced; complete the ping-pong
+        for v in per_row_ranks.drain(..) {
+            self.arena.recycle_f32(v);
+        }
 
         // ---- backward ------------------------------------------------------
-        let m = &self.manifest;
         let ct = self.upload(&HostTensor::scalar(loss_scale / count))?;
-        let mut final_grads: Vec<GroupGrads> =
-            (0..sp).map(|_| GroupGrads::zeros(&m.params.final_)).collect();
-        let loss_bwd_out = run_ranks(sp, self.parallel_ranks, |r| {
-            let out = self.exec("loss_bwd", &[lnf, unembed, &h[r], &lab_b[r], &ct])?;
-            let mut it = out.into_iter();
-            let d_lnf = it.next().unwrap();
-            let d_unembed = it.next().unwrap();
-            let d_h_b = self.upload(&it.next().unwrap())?;
-            Ok((d_lnf, d_unembed, d_h_b))
-        })?;
+        let mut final_grads: Vec<GroupGrads> = (0..sp)
+            .map(|_| GroupGrads::zeros(&self.manifest.params.final_))
+            .collect();
         let mut d_h: Vec<xla::PjRtBuffer> = Vec::with_capacity(sp);
-        for (r, (d_lnf, d_unembed, d_h_b)) in loss_bwd_out.into_iter().enumerate() {
-            final_grads[r].accumulate("lnf", &d_lnf)?;
-            final_grads[r].accumulate("unembed", &d_unembed)?;
-            d_h.push(d_h_b);
+        // host copies of d_h ride along only when the tiled MLP backward
+        // needs to slice row tiles from them
+        let mut d_h_host: Vec<HostTensor> = Vec::with_capacity(sp);
+        if self.tiled_loss {
+            // Tiled sweep: d_lnf/d_unembed tile partials accumulate
+            // straight into the rank's GroupGrads flat buffer in the
+            // pinned ascending-tile order; d_h tiles assemble in place.
+            let hidden = self.manifest.config.hidden;
+            let ignore = self.manifest.ignore_index;
+            let rows = self.loss_tile_rows;
+            let keep_host = self.tiled_mlp;
+            let key = Engine::stage_key(&self.manifest, "loss_bwd_tile");
+            let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+            for r in 0..sp {
+                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?;
+                let g = &mut final_grads[r];
+                anyhow::ensure!(
+                    g.entries.len() == 2 && g.entries[0].name == "lnf",
+                    "final param group layout changed (expected [lnf, unembed])"
+                );
+                let (dl, dw) = g.flat.split_at_mut(g.entries[1].offset);
+                let dh = drv.backward(
+                    device,
+                    &h_host[r],
+                    &shards[r].labels,
+                    dl,
+                    dw,
+                    |ht, lt| {
+                        let hb = engine.to_buffer(ht)?;
+                        let lb = engine.to_buffer(lt)?;
+                        let out = engine
+                            .execute_buffers(&key, &[lnf, unembed, &hb, &lb, &ct])?;
+                        let mut it = out.into_iter();
+                        Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+                    },
+                )?;
+                // under tiled_mlp the backward consumes d_h host-side
+                // (tile slices); the device copy is only materialized
+                // for embed_bwd after the layer loop
+                if keep_host {
+                    d_h_host.push(dh);
+                } else {
+                    d_h.push(engine.to_buffer(&dh)?);
+                    arena.recycle(dh);
+                }
+            }
+        } else {
+            // untiled: logits + d_logits fp32 copies per resident rank
+            // ("2 times of 8GiB", §3.1)
+            let bytes = self.resident_ranks() * untiled_loss_bwd_bytes(ssh, vocab);
+            self.device.alloc(bytes, LOSS_HEAD_TAG)?;
+            let loss_bwd_out = run_ranks(sp, self.parallel_ranks, |r| {
+                let out = self.exec("loss_bwd", &[lnf, unembed, &h[r], &lab_b[r], &ct])?;
+                let mut it = out.into_iter();
+                let d_lnf = it.next().unwrap();
+                let d_unembed = it.next().unwrap();
+                let d_h_t = it.next().unwrap();
+                // tiled_mlp consumes d_h host-side; skip the device copy
+                let d_h_b = if self.tiled_mlp {
+                    None
+                } else {
+                    Some(self.upload(&d_h_t)?)
+                };
+                Ok((d_lnf, d_unembed, d_h_t, d_h_b))
+            });
+            self.device.free(bytes, LOSS_HEAD_TAG);
+            for (r, (d_lnf, d_unembed, d_h_t, d_h_b)) in
+                loss_bwd_out?.into_iter().enumerate()
+            {
+                final_grads[r].accumulate("lnf", &d_lnf)?;
+                final_grads[r].accumulate("unembed", &d_unembed)?;
+                if let Some(b) = d_h_b {
+                    d_h.push(b);
+                }
+                if self.tiled_mlp {
+                    d_h_host.push(d_h_t);
+                }
+            }
         }
+        // the final-layer host outputs' last reader is the loss sweep
+        self.arena.recycle_all(h_host);
         {
             let p = &self.manifest.params;
             let start = p.embed_numel + p.n_layers * p.layer_numel;
@@ -626,31 +957,58 @@ impl Trainer {
             // Recompute forward through the layer (activation checkpointing
             // replays the all-to-alls too — the paper's flos model counts
             // this extra forward).
-            let (_h_out, act) = self.layer_forward(lp, &h_in, &pos_b)?;
+            let (_h_out, mut act) = self.layer_forward(lp, &h_in, &h_in_host, &pos_b)?;
+            // backward never reads the recompute's layer OUTPUT; recycle
+            // the host copies (arena-sourced under tiled_mlp) instead of
+            // dropping them
+            self.arena.recycle_all(std::mem::take(&mut act.h_out_host));
 
             let (ln1, wq, wk, wv) = (&lp[0], &lp[1], &lp[2], &lp[3]);
             let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
-            let mut layer_grads: Vec<GroupGrads> =
-                (0..sp).map(|_| GroupGrads::zeros(&m.params.layer)).collect();
+            let mut layer_grads: Vec<GroupGrads> = (0..sp)
+                .map(|_| GroupGrads::zeros(&self.manifest.params.layer))
+                .collect();
 
-            // post_attn backward (per-rank exec in parallel; the grad
-            // ledger merges serially in rank order — deterministic)
-            let post_out = run_ranks(sp, self.parallel_ranks, |r| {
-                self.exec(
-                    "post_attn_bwd",
-                    &[wo, ln2, wg, wu, wd, &h_in[r], &act.o_sh[r], &d_h[r]],
-                )
-            })?;
-            let mut d_h_resid = Vec::with_capacity(sp);
-            let mut d_attn = Vec::with_capacity(sp);
-            for (r, out) in post_out.into_iter().enumerate() {
-                let mut it = out.into_iter();
-                for name in ["wo", "ln2", "wg", "wu", "wd"] {
-                    layer_grads[r].accumulate(name, &it.next().unwrap())?;
+            // post_attn backward. Tiled: row-tile sweep over
+            // (h_in, attn, d_h) host copies, weight-grad partials in
+            // pinned tile order. Untiled: per-rank exec in parallel; the
+            // grad ledger merges serially in rank order — deterministic.
+            let (d_h_resid, d_attn) = if self.tiled_mlp {
+                let o_sh_host = std::mem::take(&mut act.o_sh_host);
+                let out = self.tiled_post_attn_backward(
+                    lp,
+                    &h_in_host,
+                    &o_sh_host,
+                    &d_h_host,
+                    &mut layer_grads,
+                )?;
+                self.arena.recycle_all(o_sh_host);
+                out
+            } else {
+                let c = &self.manifest.config;
+                let bytes =
+                    2 * self.resident_ranks() * untiled_mlp_fwd_bytes(ssh, c.hidden, c.ffn);
+                self.device.alloc(bytes, MLP_TAG)?;
+                let post_out = run_ranks(sp, self.parallel_ranks, |r| {
+                    self.exec(
+                        "post_attn_bwd",
+                        &[wo, ln2, wg, wu, wd, &h_in[r], &act.o_sh[r], &d_h[r]],
+                    )
+                });
+                self.device.free(bytes, MLP_TAG);
+                let post_out = post_out?;
+                let mut d_h_resid = Vec::with_capacity(sp);
+                let mut d_attn = Vec::with_capacity(sp);
+                for (r, out) in post_out.into_iter().enumerate() {
+                    let mut it = out.into_iter();
+                    for name in ["wo", "ln2", "wg", "wu", "wd"] {
+                        layer_grads[r].accumulate(name, &it.next().unwrap())?;
+                    }
+                    d_h_resid.push(it.next().unwrap());
+                    d_attn.push(it.next().unwrap());
                 }
-                d_h_resid.push(it.next().unwrap());
-                d_attn.push(it.next().unwrap());
-            }
+                (d_h_resid, d_attn)
+            };
 
             // transposed all-to-all: d_attn (seq layout) -> head layout
             let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena);
@@ -675,8 +1033,8 @@ impl Trainer {
             }
             // inverse a2a; kv grads SUM over replica consumers (fused
             // copy-first/accumulate-rest pass inside the relayout).
-            let nq = m.config.n_q_heads;
-            let nkv = m.config.n_kv_heads;
+            let nq = self.manifest.config.n_q_heads;
+            let nkv = self.manifest.config.n_kv_heads;
             let d_q = a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena);
             let d_k = a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena);
             let d_v = a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena);
@@ -698,6 +1056,7 @@ impl Trainer {
             self.arena.recycle_all(d_k);
             self.arena.recycle_all(d_v);
             let mut new_d_h = Vec::with_capacity(sp);
+            let mut new_d_h_host = Vec::with_capacity(sp);
             for (r, (out, resid)) in pre_out.into_iter().zip(d_h_resid).enumerate() {
                 let mut it = out.into_iter();
                 for name in ["ln1", "wq", "wk", "wv"] {
@@ -705,21 +1064,39 @@ impl Trainer {
                 }
                 let mut d_hr = it.next().unwrap();
                 d_hr.add_assign(&resid)?;
-                new_d_h.push(self.upload(&d_hr)?);
-                self.arena.recycle(d_hr);
+                if self.tiled_mlp {
+                    // next layer's tile sweep slices d_h host-side; the
+                    // device copy is only needed once, for embed_bwd
+                    new_d_h_host.push(d_hr);
+                } else {
+                    new_d_h.push(self.upload(&d_hr)?);
+                    self.arena.recycle(d_hr);
+                }
                 self.arena.recycle(resid);
             }
             d_h = new_d_h;
+            self.arena.recycle_all(d_h_host.drain(..));
+            d_h_host = new_d_h_host;
 
             let contribs: Vec<&[f32]> =
                 layer_grads.iter().map(|g| g.flat.as_slice()).collect();
-            let range = m.params.layer_range(li);
+            let range = self.manifest.params.layer_range(li);
             self.grads.reduce_into_range(&self.group, range, &contribs);
+            // tape-fetched checkpoints are spent; back to the pool
+            // (arena-sourced under tiled_mlp — keeps sweeps
+            // allocation-free at steady state)
+            self.arena.recycle_all(h_in_host);
         }
 
-        // embed backward
-        let mut embed_grads: Vec<GroupGrads> =
-            (0..sp).map(|_| GroupGrads::zeros(&m.params.embed)).collect();
+        // embed backward; under tiled_mlp the device d_h is materialized
+        // only here (the one place backward actually executes against it)
+        if self.tiled_mlp {
+            d_h = self.upload_all(&d_h_host)?;
+        }
+        self.arena.recycle_all(d_h_host.drain(..));
+        let mut embed_grads: Vec<GroupGrads> = (0..sp)
+            .map(|_| GroupGrads::zeros(&self.manifest.params.embed))
+            .collect();
         let embed_bwd_out = run_ranks(sp, self.parallel_ranks, |r| {
             self.exec("embed_bwd", &[&dev_params.embed[0], &ids_b[r], &d_h[r]])
         })?;
@@ -728,8 +1105,9 @@ impl Trainer {
         }
         let contribs: Vec<&[f32]> =
             embed_grads.iter().map(|g| g.flat.as_slice()).collect();
+        let embed_numel = self.manifest.params.embed_numel;
         self.grads
-            .reduce_into_range(&self.group, 0..m.params.embed_numel, &contribs);
+            .reduce_into_range(&self.group, 0..embed_numel, &contribs);
 
         Ok((loss, tape.transfer_bytes, doc_losses))
     }
@@ -897,13 +1275,16 @@ impl Trainer {
         self.step
     }
 
-    /// Forward-only evaluation loss on one sequence.
+    /// Forward-only evaluation loss on one sequence (the loss head runs
+    /// the monolithic `loss_fwd` stage — eval allocates no backward
+    /// state, so the tiled sweep's memory win does not apply here).
     pub fn eval_loss(&mut self, ids: &[i32]) -> Result<f32> {
         let sp = self.manifest.sp;
         anyhow::ensure!(ids.len() == self.manifest.seq, "bad sequence length");
         let shards = shard_sequence(ids, sp);
         let dev_params = self.build_step_params()?;
         let mut h = Vec::with_capacity(sp);
+        let mut h_host = Vec::with_capacity(sp);
         let mut pos_b = Vec::with_capacity(sp);
         for s in &shards {
             let ids_t = self.upload(&HostTensor::i32(vec![s.ids.len()], s.ids.clone()))?;
@@ -912,12 +1293,19 @@ impl Trainer {
                 s.positions.clone(),
             ))?);
             let out = self.exec("embed_fwd", &[&dev_params.embed[0], &ids_t])?;
-            h.push(self.upload(&out.into_iter().next().unwrap())?);
+            let t = out.into_iter().next().unwrap();
+            h.push(self.upload(&t)?);
+            h_host.push(t);
         }
         for li in 0..self.n_layers() {
-            let (h_new, _) = self.layer_forward(&dev_params.layers[li], &h, &pos_b)?;
+            let (h_new, act) =
+                self.layer_forward(&dev_params.layers[li], &h, &h_host, &pos_b)?;
+            self.arena.recycle_all(h_host);
+            self.arena.recycle_all(act.o_sh_host);
+            h_host = act.h_out_host;
             h = h_new;
         }
+        self.arena.recycle_all(h_host.drain(..));
         let mut sums = Vec::new();
         let mut counts = Vec::new();
         for (r, s) in shards.iter().enumerate() {
@@ -939,6 +1327,13 @@ struct LayerAct {
     q_full: Vec<xla::PjRtBuffer>,
     k_full: Vec<xla::PjRtBuffer>,
     v_full: Vec<xla::PjRtBuffer>,
+    /// Full attention-output device shards — consumed by the monolithic
+    /// `post_attn_bwd`; EMPTY under `tiled_mlp` (only tile-sized
+    /// buffers are uploaded on that path).
     o_sh: Vec<xla::PjRtBuffer>,
+    /// Host copies of the attention output shards — populated only under
+    /// `tiled_mlp` (the backward tile sweep slices them); empty and free
+    /// otherwise. Recycle into the arena when done.
+    o_sh_host: Vec<HostTensor>,
     h_out_host: Vec<HostTensor>,
 }

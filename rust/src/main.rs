@@ -69,6 +69,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         flags: flags_from_args(args),
         seed,
         checked: args.flag("checked"),
+        // tiled EXECUTION (requires artifacts with the *_tile stages)
+        tiled_loss: args.flag("tiled-loss"),
+        tiled_mlp: args.flag("tiled-mlp"),
         ..Default::default()
     };
     opts.adamw.lr = args.f64("lr", opts.adamw.lr as f64) as f32;

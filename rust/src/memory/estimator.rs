@@ -15,7 +15,7 @@
 
 use crate::config::{ClusterConfig, FeatureFlags, ModelPreset, Precision, GIB};
 use crate::coordinator::ulysses::heads_per_rank;
-use crate::tiling::{logits_chunk_rows, mlp_tile_rows};
+use crate::tiling::{plan_logits, plan_mlp, TilePlan};
 
 /// Activation-side working memory, by phase (the max over phases is what
 /// the allocator must satisfy at peak).
@@ -213,30 +213,28 @@ impl Estimator {
         let attn_fwd = (send + recv + o + o_send) * act_b;
         let attn_work = (attn_fwd as f64 * self.cal.bwd_factor) as u64;
 
-        // MLP phase: gate/up [rows, ffn] x2 + down input; rows = t_r or the
-        // auto-deduced tile (§3.1.1: ceil(seq/hidden) shards).
-        let mlp_rows = if f.tiled_mlp {
-            mlp_tile_rows(t_r, m.hidden) as u64
+        // MLP phase: priced from the SAME TilePlan the execution driver
+        // runs (§3.1.1 auto-shards), so the estimator cannot disagree
+        // with the planner — `tiled_pricing_matches_tile_plan_bytes`
+        // pins the equality. Untiled takes the plan's full-shard bytes.
+        let mlp_plan = self.mlp_plan(t_r);
+        let mlp_fwd = if f.tiled_mlp {
+            mlp_plan.tile_bytes
         } else {
-            t_r as u64
+            mlp_plan.untiled_bytes
         };
-        let mlp_fwd = mlp_rows * (2 * m.ffn as u64 + h) * act_b;
         let mlp_work = (mlp_fwd as f64 * self.cal.bwd_factor) as u64;
 
-        // logits phase (§3.1): fp32 [rows, vocab]; untiled holds the full
-        // sequence's logits (multiple copies), tiled caps rows at the
-        // 1-GiB-chunk size the paper uses.
-        let logits_rows = if f.tiled_loss {
-            logits_chunk_rows(m.vocab, GIB).min(t_r) as u64
+        // logits phase (§3.1): fp32 [rows, vocab], priced from the
+        // TilePlan (which owns the 2-copy fwd+bwd convention); the
+        // calibration's copy counts scale relative to those 2 copies.
+        let logits_plan = self.logits_plan(t_r);
+        let (logits_base, logits_copies) = if f.tiled_loss {
+            (logits_plan.tile_bytes, self.cal.tiled_logits_copies)
         } else {
-            t_r as u64
+            (logits_plan.untiled_bytes, self.cal.untiled_logits_copies)
         };
-        let copies = if f.tiled_loss {
-            self.cal.tiled_logits_copies
-        } else {
-            self.cal.untiled_logits_copies
-        };
-        let logits_work = (logits_rows as f64 * m.vocab as f64 * 4.0 * copies) as u64;
+        let logits_work = (logits_base as f64 * logits_copies / 2.0) as u64;
 
         let resid_work =
             (t_r as f64 * h as f64 * act_b as f64 * self.cal.resid_copies) as u64;
@@ -256,6 +254,28 @@ impl Estimator {
             host_per_rank,
             misc: self.cal.misc_bytes,
         }
+    }
+
+    /// The loss-head tile plan priced at `rows` per-rank tokens, from
+    /// the same PLANNER the executor's plans come from, at the paper's
+    /// 1 GiB chunk. An actual artifact may bake different rows (custom
+    /// `--chunk-bytes`, pallas tile_s alignment) — for a loaded
+    /// manifest, price with `tiling::plan_logits_rows(.., manifest
+    /// rows)` instead; this estimator models paper-scale presets that
+    /// have no artifact.
+    pub fn logits_plan(&self, rows: usize) -> TilePlan {
+        plan_logits(rows, self.model.vocab, GIB)
+    }
+
+    /// The MLP tile plan at `rows` per-rank tokens (§3.1.1 auto-shards;
+    /// same caveat as [`Estimator::logits_plan`] for real artifacts).
+    pub fn mlp_plan(&self, rows: usize) -> TilePlan {
+        plan_mlp(
+            rows,
+            self.model.hidden,
+            self.model.ffn,
+            self.precision.activation_bytes(),
+        )
     }
 
     /// Does `seq` fit on `world` GPUs (device AND host constraints)?
@@ -447,6 +467,38 @@ mod tests {
         let whole = e.breakdown(500_000, 8);
         assert_eq!(packed.device_total(), whole.device_total());
         assert_eq!(packed.acts.ckpt_host, whole.acts.ckpt_host);
+    }
+
+    #[test]
+    fn tiled_pricing_matches_tile_plan_bytes() {
+        // Satellite contract: when tiling is on, the estimator's
+        // loss-head and MLP bytes ARE the TilePlan's bytes (no separate
+        // arithmetic to drift). Default calibration: tiled logits = the
+        // plan's 2 fwd+bwd copies; MLP work = plan tile bytes x
+        // bwd_factor.
+        let mut f = FeatureFlags::alst();
+        f.ulysses_sp = false; // t_r == seq, keeps the plan inputs obvious
+        let e = est(f);
+        let seq = 500_000;
+        let b = e.breakdown(seq, 8);
+        assert_eq!(b.acts.logits_work, e.logits_plan(seq).tile_bytes);
+        assert_eq!(
+            b.acts.mlp_work,
+            (e.mlp_plan(seq).tile_bytes as f64 * e.cal.bwd_factor) as u64
+        );
+        // untiled prices from the SAME plan's full-shard bytes
+        let eb = est(FeatureFlags::baseline());
+        let ub = eb.breakdown(seq, 8);
+        assert_eq!(
+            ub.acts.logits_work,
+            (eb.logits_plan(seq).untiled_bytes as f64
+                * eb.cal.untiled_logits_copies
+                / 2.0) as u64
+        );
+        assert_eq!(
+            ub.acts.mlp_work,
+            (eb.mlp_plan(seq).untiled_bytes as f64 * eb.cal.bwd_factor) as u64
+        );
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct MemoryTracker {
     current: u64,
     peak: u64,
     by_tag: BTreeMap<String, u64>,
+    /// High-water mark per tag (what the tiled-execution tests assert:
+    /// the loss-head tag's peak drops by `TilePlan::savings()`).
+    tag_peaks: BTreeMap<String, u64>,
     /// (time-ordered) samples of `current` for timeline plots.
     pub timeline: Vec<u64>,
 }
@@ -84,6 +87,7 @@ impl MemoryTracker {
             current: 0,
             peak: 0,
             by_tag: BTreeMap::new(),
+            tag_peaks: BTreeMap::new(),
             timeline: Vec::new(),
         }
     }
@@ -104,7 +108,11 @@ impl MemoryTracker {
         }
         self.current += bytes;
         self.peak = self.peak.max(self.current);
-        *self.by_tag.entry(tag.to_string()).or_insert(0) += bytes;
+        let cur_tag = self.by_tag.entry(tag.to_string()).or_insert(0);
+        *cur_tag += bytes;
+        let cur_tag = *cur_tag;
+        let tag_peak = self.tag_peaks.entry(tag.to_string()).or_insert(0);
+        *tag_peak = (*tag_peak).max(cur_tag);
         self.timeline.push(self.current);
         Ok(())
     }
@@ -134,12 +142,19 @@ impl MemoryTracker {
         self.by_tag.get(tag).copied().unwrap_or(0)
     }
 
+    /// High-water mark of `tag`'s live bytes since construction or the
+    /// last `reset_peak`.
+    pub fn tag_peak(&self, tag: &str) -> u64 {
+        self.tag_peaks.get(tag).copied().unwrap_or(0)
+    }
+
     pub fn breakdown(&self) -> &BTreeMap<String, u64> {
         &self.by_tag
     }
 
     pub fn reset_peak(&mut self) {
         self.peak = self.current;
+        self.tag_peaks = self.by_tag.clone();
         self.timeline.clear();
     }
 }
@@ -174,6 +189,24 @@ mod tests {
         t.alloc(100, "b").unwrap();
         assert_eq!(t.peak(), 600);
         assert_eq!(t.current(), 100);
+    }
+
+    #[test]
+    fn tag_peak_is_per_tag_high_water() {
+        let mut t = MemoryTracker::new(10_000);
+        t.alloc(600, "logits").unwrap();
+        t.alloc(300, "ckpt").unwrap();
+        t.free(600, "logits");
+        t.alloc(200, "logits").unwrap();
+        assert_eq!(t.tag_peak("logits"), 600);
+        assert_eq!(t.tag_peak("ckpt"), 300);
+        assert_eq!(t.tag_bytes("logits"), 200);
+        assert_eq!(t.tag_peak("nope"), 0);
+        // reset_peak rebases tag peaks on the live bytes
+        t.reset_peak();
+        assert_eq!(t.tag_peak("logits"), 200);
+        t.alloc(50, "logits").unwrap();
+        assert_eq!(t.tag_peak("logits"), 250);
     }
 
     #[test]

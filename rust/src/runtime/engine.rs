@@ -4,7 +4,7 @@
 //! single device; rank-parallelism is data isolation in the coordinator,
 //! not device parallelism — see DESIGN.md substitutions).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -23,6 +23,10 @@ pub struct EngineStats {
     pub marshal_time: Duration,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    /// Executions per stage key. This is how tests pin execution-count
+    /// contracts, e.g. "per-document losses cost `n_tiles` loss-stage
+    /// runs, not `n_tiles + n_docs`" for the tiled loss sweep.
+    pub per_stage: BTreeMap<String, u64>,
 }
 
 pub struct Engine {
@@ -117,9 +121,22 @@ impl Engine {
 
         let mut s = self.stats.lock().unwrap();
         s.executions += 1;
+        *s.per_stage.entry(key.to_string()).or_insert(0) += 1;
         s.exec_time += exec;
         s.bytes_out += outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
         Ok(outputs)
+    }
+
+    /// Executions recorded for one stage key (see `Engine::stage_key`);
+    /// 0 if the stage never ran since the last `reset_stats`.
+    pub fn executions_for(&self, key: &str) -> u64 {
+        self.stats
+            .lock()
+            .unwrap()
+            .per_stage
+            .get(key)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Execute a loaded stage from host tensors (upload + run).

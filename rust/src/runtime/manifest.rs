@@ -134,6 +134,13 @@ pub const STAGE_NAMES: &[&str] = &[
     "attn_bwd", "post_attn_fwd", "post_attn_bwd", "loss_fwd", "loss_bwd",
 ];
 
+/// OPTIONAL tiled-execution stages (paper §3.1 executed). Newer AOT
+/// exports always carry them; manifests without them still load and the
+/// coordinator falls back to the monolithic loss/post_attn stages, so
+/// old artifact directories remain valid.
+pub const OPTIONAL_STAGE_NAMES: &[&str] =
+    &["loss_fwd_tile", "loss_bwd_tile", "mlp_fwd_tile", "mlp_bwd_tile"];
+
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
@@ -240,6 +247,44 @@ impl Manifest {
 
     pub fn stage(&self, name: &str) -> &StageIo {
         &self.stages[name]
+    }
+
+    /// Whether this artifact carries `name` (use for the
+    /// [`OPTIONAL_STAGE_NAMES`] tiled-execution stages).
+    pub fn has_stage(&self, name: &str) -> bool {
+        self.stages.contains_key(name)
+    }
+
+    /// All four tiled-execution stages for the loss head present?
+    pub fn has_tiled_loss(&self) -> bool {
+        self.has_stage("loss_fwd_tile") && self.has_stage("loss_bwd_tile")
+    }
+
+    /// Both tiled post-attention/MLP stages present?
+    pub fn has_tiled_mlp(&self) -> bool {
+        self.has_stage("mlp_fwd_tile") && self.has_stage("mlp_bwd_tile")
+    }
+
+    fn tile_rows(&self, stage: &str, input: &str) -> Option<usize> {
+        self.stages
+            .get(stage)?
+            .inputs
+            .iter()
+            .find(|t| t.name == input)
+            .and_then(|t| t.shape.first().copied())
+    }
+
+    /// Rows per loss-head tile, read back from the `loss_fwd_tile`
+    /// stage's `h` input shape — the exporter's baked-in shapes are the
+    /// single source of truth, so the driver cannot drift from the
+    /// compiled artifact.
+    pub fn loss_tile_rows(&self) -> Option<usize> {
+        self.tile_rows("loss_fwd_tile", "h")
+    }
+
+    /// Rows per post-attention/MLP tile (`mlp_fwd_tile`'s `h_in` shape).
+    pub fn mlp_tile_rows(&self) -> Option<usize> {
+        self.tile_rows("mlp_fwd_tile", "h_in")
     }
 
     pub fn stage_path(&self, name: &str) -> PathBuf {

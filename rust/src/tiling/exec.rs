@@ -1,0 +1,621 @@
+//! Row-tile EXECUTION drivers (paper §3.1 executed, not just planned).
+//!
+//! [`TiledLossExec`] and [`TiledMlpExec`] stream a sequence shard through
+//! a fixed-shape tile stage: shard rows are sliced into arena-backed
+//! `[rows_per_tile, ...]` tiles with `copy_rows` (zero steady-state
+//! allocation once the arena is warm), the ragged tail tile is padded
+//! with zero rows and `ignore_index` labels (masked padding — 0 loss, 0
+//! gradient, pinned by `python/tests/test_tiled_stages.py`), and results
+//! are accumulated in place. The drivers are generic over the tile
+//! executor closure, so the trainer plugs in AOT'd PJRT stages
+//! (`loss_fwd_tile` / `mlp_fwd_tile` ...) while the tier-1 tests and
+//! benches plug in [`HostLossHead`], a PJRT-free host reference — the
+//! same split `relayout_equiv.rs` uses.
+//!
+//! # Summation-order contract
+//!
+//! Like the relayout bit-identity contract in `rust/tests/relayout_equiv.rs`,
+//! equality between tiled and untiled execution is exact only because the
+//! accumulation order is pinned:
+//!
+//! * **Per-row quantities** (per-row loss, each row of `d_h`) are
+//!   row-local: bit-identical under ANY tiling.
+//! * **The scalar loss/count reduction** is performed by the driver over
+//!   the per-row vector in ascending global row order — also
+//!   tiling-invariant, so tiled-vs-untiled total loss is bit-identical.
+//! * **Cross-row weight-gradient reductions** (`d_lnf`, `d_unembed`, the
+//!   MLP weight grads) are pinned TILE-MAJOR: rows accumulate in
+//!   ascending order *within* a tile (each tile partial starts from
+//!   zero), and tile partials are added elementwise in ascending tile
+//!   order. An untiled reference that replays the same schedule matches
+//!   bit-for-bit; changing `rows_per_tile` re-rounds these sums like any
+//!   resharding (the same class of exception as the relayout contract's
+//!   sign-of-zero note) and agrees only to fp tolerance.
+//!
+//! # Memory instrumentation
+//!
+//! Each tile execution charges the [`MemoryTracker`] with the §3.1 fp32
+//! logits-copy arithmetic (`TilePlan::tile_bytes` = 2 copies, fwd+bwd)
+//! under [`LOSS_HEAD_TAG`], and the untiled trainer path charges the
+//! full-shard equivalent, so `tracker.tag_peak(LOSS_HEAD_TAG)` measures
+//! the drop `TilePlan::savings()` predicts. MLP tiles charge
+//! [`MLP_TAG`] with the gate/up/down working set, doubled in backward
+//! (the estimator's `bwd_factor`).
+
+use anyhow::{ensure, Result};
+
+use crate::memory::MemoryTracker;
+use crate::runtime::tensor::{copy_rows, HostTensor, ScratchArena};
+use crate::tiling::{plan_logits_rows, plan_mlp_rows, TilePlan};
+
+/// Tracker tag for loss-head (logits+CE) working bytes, both paths.
+pub const LOSS_HEAD_TAG: &str = "loss_head";
+/// Tracker tag for MLP-phase working bytes, both paths.
+pub const MLP_TAG: &str = "mlp";
+
+/// Untiled loss-head forward working set: one fp32 `[rows, vocab]`
+/// logits copy (what the monolithic `loss_fwd` stage holds). Half the
+/// plan's 2-copy (fwd+bwd) `untiled_bytes` — the copy convention lives
+/// in ONE place, `TilePlan`, exactly like the estimator's pricing.
+pub fn untiled_loss_fwd_bytes(rows: usize, vocab: usize) -> u64 {
+    untiled_loss_bwd_bytes(rows, vocab) / 2
+}
+
+/// Untiled loss-head backward working set: logits + d_logits fp32
+/// copies ("2 times of 8 GiB", §3.1) — the plan's `untiled_bytes`.
+pub fn untiled_loss_bwd_bytes(rows: usize, vocab: usize) -> u64 {
+    plan_logits_rows(rows, vocab, rows).untiled_bytes
+}
+
+/// Untiled MLP forward working set: gate + up `[rows, ffn]` + down
+/// input — the plan's `untiled_bytes` at fp32.
+pub fn untiled_mlp_fwd_bytes(rows: usize, hidden: usize, ffn: usize) -> u64 {
+    plan_mlp_rows(rows, hidden, ffn, rows, 4).untiled_bytes
+}
+
+/// Result of one tiled loss-head forward sweep.
+pub struct LossFwdSweep {
+    /// Per-row loss over the whole shard (0.0 at `ignore_index` rows) —
+    /// what per-document bucketing consumes. Arena-sourced: recycle it
+    /// (`arena.recycle_f32`) when done to keep the sweep allocation-free.
+    pub per_row_loss: Vec<f32>,
+    /// Ascending-row sum of per-row losses (the pinned reduction).
+    pub loss_sum: f32,
+    /// Number of non-ignored rows, as f32 (matches the stage contract).
+    pub count: f32,
+    pub tiles_run: usize,
+}
+
+/// Row-tiled loss-head driver: `[seqlen, hidden]` hidden states + labels
+/// -> per-row losses (forward) and `d_lnf`/`d_unembed`/`d_h` (backward),
+/// never holding more than one `[rows_per_tile, vocab]` logits tile.
+pub struct TiledLossExec<'a> {
+    pub plan: TilePlan,
+    seqlen: usize,
+    hidden: usize,
+    ignore_index: i32,
+    arena: &'a ScratchArena,
+}
+
+impl<'a> TiledLossExec<'a> {
+    pub fn new(
+        seqlen: usize,
+        hidden: usize,
+        vocab: usize,
+        rows_per_tile: usize,
+        ignore_index: i32,
+        arena: &'a ScratchArena,
+    ) -> Result<TiledLossExec<'a>> {
+        ensure!(seqlen > 0, "tiled loss over an empty shard");
+        ensure!(hidden > 0 && vocab > 0, "tiled loss needs hidden/vocab > 0");
+        ensure!(rows_per_tile > 0, "tiled loss needs rows_per_tile > 0");
+        Ok(TiledLossExec {
+            plan: plan_logits_rows(seqlen, vocab, rows_per_tile),
+            seqlen,
+            hidden,
+            ignore_index,
+            arena,
+        })
+    }
+
+    /// Slice the `[lo, hi)` row range of `(h, labels)` into a padded
+    /// `[rows_per_tile, ...]` tile pair from the arena.
+    fn slice_tile(
+        &self,
+        hs: &[f32],
+        labels: &[i32],
+        lo: usize,
+        hi: usize,
+    ) -> (HostTensor, HostTensor) {
+        let (rows, hd) = (self.plan.rows_per_tile, self.hidden);
+        let n = hi - lo;
+        let mut ht = self.arena.take_f32(rows * hd);
+        copy_rows(&mut ht, 0, hd, hs, lo * hd, hd, n, hd);
+        ht[n * hd..].fill(0.0); // masked padding rows (ragged tail)
+        let mut lt = self.arena.take_i32(rows);
+        lt[..n].copy_from_slice(&labels[lo..hi]);
+        lt[n..].fill(self.ignore_index);
+        (
+            HostTensor::f32(vec![rows, hd], ht),
+            HostTensor::i32(vec![rows], lt),
+        )
+    }
+
+    /// Forward sweep. `tile_fn(h_tile [T,H], labels_tile [T])` must
+    /// return the `[T]` per-row loss tensor (the `loss_fwd_tile` stage).
+    pub fn forward<F>(
+        &self,
+        tracker: &mut MemoryTracker,
+        h: &HostTensor,
+        labels: &[i32],
+        mut tile_fn: F,
+    ) -> Result<LossFwdSweep>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<HostTensor>,
+    {
+        let (s, hd, rows) = (self.seqlen, self.hidden, self.plan.rows_per_tile);
+        ensure!(
+            h.shape() == [s, hd],
+            "tiled loss: h shape {:?} != [{s}, {hd}]",
+            h.shape()
+        );
+        ensure!(labels.len() == s, "tiled loss: {} labels != {s}", labels.len());
+        let hs = h.as_f32()?;
+        let mut per_row = self.arena.take_f32(s);
+        // one fp32 [T, vocab] logits copy lives during a forward tile
+        let fwd_bytes = self.plan.tile_bytes / 2;
+        for t in 0..self.plan.n_tiles {
+            let lo = t * rows;
+            let hi = (lo + rows).min(s);
+            let (ht, lt) = self.slice_tile(hs, labels, lo, hi);
+            tracker.alloc(fwd_bytes, LOSS_HEAD_TAG)?;
+            let out = tile_fn(&ht, &lt);
+            // free before surfacing errors: a failed tile must not leave
+            // phantom bytes charged on the (reusable) tracker
+            tracker.free(fwd_bytes, LOSS_HEAD_TAG);
+            self.arena.recycle(ht);
+            self.arena.recycle(lt);
+            let out = out?;
+            ensure!(
+                out.numel() == rows,
+                "loss tile {t}: {} per-row losses != rows_per_tile {rows}",
+                out.numel()
+            );
+            per_row[lo..hi].copy_from_slice(&out.as_f32()?[..hi - lo]);
+            self.arena.recycle(out);
+        }
+        // Pinned reduction: ascending global row order, skipping ignored
+        // rows (their per-row loss is exactly 0 by the stage contract).
+        let (mut loss_sum, mut count) = (0f32, 0f32);
+        for (i, &l) in labels.iter().enumerate() {
+            if l != self.ignore_index {
+                loss_sum += per_row[i];
+                count += 1.0;
+            }
+        }
+        Ok(LossFwdSweep {
+            per_row_loss: per_row,
+            loss_sum,
+            count,
+            tiles_run: self.plan.n_tiles,
+        })
+    }
+
+    /// Backward sweep. `tile_fn(h_tile, labels_tile)` must return the
+    /// `(d_lnf [H], d_unembed [H,V], d_h_tile [T,H])` partials of the
+    /// tile (the `loss_bwd_tile` stage; the scalar cotangent is the
+    /// caller's to capture in the closure). Weight-grad partials are
+    /// accumulated into `d_lnf`/`d_unembed` in the pinned tile-major
+    /// order; returns the assembled `[S, H]` d_h (arena-sourced).
+    pub fn backward<F>(
+        &self,
+        tracker: &mut MemoryTracker,
+        h: &HostTensor,
+        labels: &[i32],
+        d_lnf: &mut [f32],
+        d_unembed: &mut [f32],
+        mut tile_fn: F,
+    ) -> Result<HostTensor>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<(HostTensor, HostTensor, HostTensor)>,
+    {
+        let (s, hd, rows) = (self.seqlen, self.hidden, self.plan.rows_per_tile);
+        ensure!(
+            h.shape() == [s, hd],
+            "tiled loss bwd: h shape {:?} != [{s}, {hd}]",
+            h.shape()
+        );
+        ensure!(labels.len() == s, "tiled loss bwd: {} labels != {s}", labels.len());
+        ensure!(d_lnf.len() == hd, "d_lnf accumulator length");
+        let hs = h.as_f32()?;
+        let mut d_h = self.arena.take_f32(s * hd);
+        // logits + d_logits fp32 copies live during a backward tile
+        let bwd_bytes = self.plan.tile_bytes;
+        for t in 0..self.plan.n_tiles {
+            let lo = t * rows;
+            let hi = (lo + rows).min(s);
+            let (ht, lt) = self.slice_tile(hs, labels, lo, hi);
+            tracker.alloc(bwd_bytes, LOSS_HEAD_TAG)?;
+            let out = tile_fn(&ht, &lt);
+            tracker.free(bwd_bytes, LOSS_HEAD_TAG);
+            self.arena.recycle(ht);
+            self.arena.recycle(lt);
+            let (dl, dw, dht) = out?;
+            ensure!(dl.numel() == hd, "loss tile {t}: bad d_lnf partial shape");
+            ensure!(
+                dw.numel() == d_unembed.len(),
+                "loss tile {t}: bad d_unembed partial shape"
+            );
+            ensure!(
+                dht.shape() == [rows, hd],
+                "loss tile {t}: bad d_h tile shape {:?}",
+                dht.shape()
+            );
+            for (a, b) in d_lnf.iter_mut().zip(dl.as_f32()?) {
+                *a += b;
+            }
+            for (a, b) in d_unembed.iter_mut().zip(dw.as_f32()?) {
+                *a += b;
+            }
+            copy_rows(&mut d_h, lo * hd, hd, dht.as_f32()?, 0, hd, hi - lo, hd);
+            self.arena.recycle(dl);
+            self.arena.recycle(dw);
+            self.arena.recycle(dht);
+        }
+        Ok(HostTensor::f32(vec![s, hd], d_h))
+    }
+}
+
+/// Row-tiled post-attention/MLP driver. The whole post-attention block
+/// (output projection, residual, RMSNorm, SwiGLU MLP) is row-wise, so
+/// one `[rows_per_tile, ...]` slice of `(h_in, attn)` yields the same
+/// output rows as the monolithic stage.
+pub struct TiledMlpExec<'a> {
+    pub plan: TilePlan,
+    seqlen: usize,
+    hidden: usize,
+    /// attn row block = n_q_heads * head_dim elements.
+    attn_block: usize,
+    /// Tile shape of the attn input, `[rows, n_q_heads, head_dim]`.
+    attn_tile_shape: Vec<usize>,
+    arena: &'a ScratchArena,
+}
+
+impl<'a> TiledMlpExec<'a> {
+    pub fn new(
+        seqlen: usize,
+        hidden: usize,
+        ffn: usize,
+        rows_per_tile: usize,
+        n_q_heads: usize,
+        head_dim: usize,
+        arena: &'a ScratchArena,
+    ) -> Result<TiledMlpExec<'a>> {
+        ensure!(seqlen > 0, "tiled MLP over an empty shard");
+        ensure!(hidden > 0 && ffn > 0, "tiled MLP needs hidden/ffn > 0");
+        ensure!(rows_per_tile > 0, "tiled MLP needs rows_per_tile > 0");
+        let plan = plan_mlp_rows(seqlen, hidden, ffn, rows_per_tile, 4);
+        let rows = plan.rows_per_tile;
+        Ok(TiledMlpExec {
+            plan,
+            seqlen,
+            hidden,
+            attn_block: n_q_heads * head_dim,
+            attn_tile_shape: vec![rows, n_q_heads, head_dim],
+            arena,
+        })
+    }
+
+    fn slice_pair(
+        &self,
+        h_in: &[f32],
+        attn: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> (HostTensor, HostTensor) {
+        let (rows, hd, ab) = (self.plan.rows_per_tile, self.hidden, self.attn_block);
+        let n = hi - lo;
+        let mut ht = self.arena.take_f32(rows * hd);
+        copy_rows(&mut ht, 0, hd, h_in, lo * hd, hd, n, hd);
+        ht[n * hd..].fill(0.0);
+        let mut at = self.arena.take_f32(rows * ab);
+        copy_rows(&mut at, 0, ab, attn, lo * ab, ab, n, ab);
+        at[n * ab..].fill(0.0);
+        (
+            HostTensor::f32(vec![rows, hd], ht),
+            HostTensor::f32(self.attn_tile_shape.clone(), at),
+        )
+    }
+
+    fn check_inputs(&self, h_in: &HostTensor, attn: &HostTensor) -> Result<()> {
+        let (s, hd, ab) = (self.seqlen, self.hidden, self.attn_block);
+        ensure!(
+            h_in.shape() == [s, hd],
+            "tiled MLP: h_in shape {:?} != [{s}, {hd}]",
+            h_in.shape()
+        );
+        ensure!(
+            attn.numel() == s * ab && attn.shape()[0] == s,
+            "tiled MLP: attn shape {:?} != [{s}, heads*dim = {ab}]",
+            attn.shape()
+        );
+        Ok(())
+    }
+
+    /// Forward sweep. `tile_fn(h_in_tile [T,H], attn_tile [T,nq,d])`
+    /// must return the `[T, H]` output tile (the `mlp_fwd_tile` stage,
+    /// weights captured by the closure). Returns the `[S, H]` output
+    /// (arena-sourced).
+    pub fn forward<F>(
+        &self,
+        tracker: &mut MemoryTracker,
+        h_in: &HostTensor,
+        attn: &HostTensor,
+        mut tile_fn: F,
+    ) -> Result<HostTensor>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<HostTensor>,
+    {
+        self.check_inputs(h_in, attn)?;
+        let (s, hd, rows) = (self.seqlen, self.hidden, self.plan.rows_per_tile);
+        let (hs, ats) = (h_in.as_f32()?, attn.as_f32()?);
+        let mut h_out = self.arena.take_f32(s * hd);
+        for t in 0..self.plan.n_tiles {
+            let lo = t * rows;
+            let hi = (lo + rows).min(s);
+            let (ht, at) = self.slice_pair(hs, ats, lo, hi);
+            tracker.alloc(self.plan.tile_bytes, MLP_TAG)?;
+            let out = tile_fn(&ht, &at);
+            tracker.free(self.plan.tile_bytes, MLP_TAG);
+            self.arena.recycle(ht);
+            self.arena.recycle(at);
+            let out = out?;
+            ensure!(
+                out.shape() == [rows, hd],
+                "mlp tile {t}: bad output shape {:?}",
+                out.shape()
+            );
+            copy_rows(&mut h_out, lo * hd, hd, out.as_f32()?, 0, hd, hi - lo, hd);
+            self.arena.recycle(out);
+        }
+        Ok(HostTensor::f32(vec![s, hd], h_out))
+    }
+
+    /// Backward sweep. `tile_fn(h_in_tile, attn_tile, d_out_tile)` must
+    /// return `(d_h_in_tile [T,H], d_attn_tile [T,nq,d])` and is itself
+    /// responsible for accumulating the five weight-grad partials it
+    /// also receives from the stage (tiles are invoked in ascending
+    /// order — the pinned accumulation order). Returns the assembled
+    /// `(d_h_in [S,H], d_attn [S,nq,d])`, both arena-sourced.
+    pub fn backward<F>(
+        &self,
+        tracker: &mut MemoryTracker,
+        h_in: &HostTensor,
+        attn: &HostTensor,
+        d_out: &HostTensor,
+        mut tile_fn: F,
+    ) -> Result<(HostTensor, HostTensor)>
+    where
+        F: FnMut(&HostTensor, &HostTensor, &HostTensor) -> Result<(HostTensor, HostTensor)>,
+    {
+        self.check_inputs(h_in, attn)?;
+        let (s, hd, ab, rows) =
+            (self.seqlen, self.hidden, self.attn_block, self.plan.rows_per_tile);
+        ensure!(
+            d_out.shape() == [s, hd],
+            "tiled MLP bwd: d_out shape {:?} != [{s}, {hd}]",
+            d_out.shape()
+        );
+        let (hs, ats, dos) = (h_in.as_f32()?, attn.as_f32()?, d_out.as_f32()?);
+        let mut d_h_in = self.arena.take_f32(s * hd);
+        let mut d_attn = self.arena.take_f32(s * ab);
+        for t in 0..self.plan.n_tiles {
+            let lo = t * rows;
+            let hi = (lo + rows).min(s);
+            let n = hi - lo;
+            let (ht, at) = self.slice_pair(hs, ats, lo, hi);
+            let mut dt = self.arena.take_f32(rows * hd);
+            copy_rows(&mut dt, 0, hd, dos, lo * hd, hd, n, hd);
+            dt[n * hd..].fill(0.0);
+            let dt_t = HostTensor::f32(vec![rows, hd], dt);
+            // backward holds ~2x the forward working set (recompute +
+            // cotangents — the estimator's bwd_factor)
+            tracker.alloc(2 * self.plan.tile_bytes, MLP_TAG)?;
+            let out = tile_fn(&ht, &at, &dt_t);
+            tracker.free(2 * self.plan.tile_bytes, MLP_TAG);
+            self.arena.recycle(ht);
+            self.arena.recycle(at);
+            self.arena.recycle(dt_t);
+            let (dh_t, da_t) = out?;
+            ensure!(
+                dh_t.shape() == [rows, hd],
+                "mlp tile {t}: bad d_h_in shape {:?}",
+                dh_t.shape()
+            );
+            ensure!(
+                da_t.numel() == rows * ab,
+                "mlp tile {t}: bad d_attn shape {:?}",
+                da_t.shape()
+            );
+            copy_rows(&mut d_h_in, lo * hd, hd, dh_t.as_f32()?, 0, hd, n, hd);
+            copy_rows(&mut d_attn, lo * ab, ab, da_t.as_f32()?, 0, ab, n, ab);
+            self.arena.recycle(dh_t);
+            self.arena.recycle(da_t);
+        }
+        let mut attn_shape = self.attn_tile_shape.clone();
+        attn_shape[0] = s;
+        Ok((
+            HostTensor::f32(vec![s, hd], d_h_in),
+            HostTensor::f32(attn_shape, d_attn),
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HostLossHead: the PJRT-free reference executor
+// ---------------------------------------------------------------------------
+
+/// Host-side loss head (final RMSNorm + logits + CE) with fully pinned
+/// arithmetic: every cross-element reduction runs in ascending index
+/// order, one element at a time. Serves as (a) the tile executor the
+/// tier-1 tests and `bench_tiling` plug into the drivers — no PJRT
+/// backend exists offline — and (b) the untiled reference whose pinned
+/// row-major schedule the bit-identity tests compare against (the
+/// `pack_first_fit_reference` pattern).
+pub struct HostLossHead {
+    pub hidden: usize,
+    pub vocab: usize,
+    pub eps: f32,
+    pub ignore_index: i32,
+    /// `[hidden]` final-norm weight.
+    pub lnf: Vec<f32>,
+    /// `[hidden, vocab]` row-major unembedding.
+    pub unembed: Vec<f32>,
+}
+
+impl HostLossHead {
+    pub fn new(
+        hidden: usize,
+        vocab: usize,
+        ignore_index: i32,
+        lnf: Vec<f32>,
+        unembed: Vec<f32>,
+    ) -> Result<HostLossHead> {
+        ensure!(lnf.len() == hidden, "lnf length != hidden");
+        ensure!(unembed.len() == hidden * vocab, "unembed length != hidden*vocab");
+        Ok(HostLossHead { hidden, vocab, eps: 1e-5, ignore_index, lnf, unembed })
+    }
+
+    /// RMS-normalize one row into `x`; returns the inverse-rms factor.
+    fn norm_row(&self, hr: &[f32], x: &mut [f32]) -> f32 {
+        let mut var = 0f32;
+        for &a in hr {
+            var += a * a;
+        }
+        var /= self.hidden as f32;
+        let inv = 1.0 / (var + self.eps).sqrt();
+        for (j, xo) in x.iter_mut().enumerate() {
+            *xo = hr[j] * inv * self.lnf[j];
+        }
+        inv
+    }
+
+    /// `logits = x @ unembed`, accumulated in ascending-j order.
+    fn row_logits(&self, x: &[f32], logits: &mut [f32]) {
+        logits.fill(0.0);
+        for (j, &xj) in x.iter().enumerate() {
+            let w = &self.unembed[j * self.vocab..(j + 1) * self.vocab];
+            for (l, &wv) in logits.iter_mut().zip(w) {
+                *l += xj * wv;
+            }
+        }
+    }
+
+    /// log-sum-exp over one logits row (ascending-v max and sum).
+    fn row_lse(logits: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for &l in logits {
+            m = m.max(l);
+        }
+        let mut sum = 0f32;
+        for &l in logits {
+            sum += (l - m).exp();
+        }
+        m + sum.ln()
+    }
+
+    /// Per-row losses for a `[rows, hidden]` block (0.0 at ignored rows).
+    /// Row values are row-local: identical under any tiling of the rows.
+    pub fn per_row_losses(&self, h: &[f32], labels: &[i32]) -> Result<Vec<f32>> {
+        let (hd, v) = (self.hidden, self.vocab);
+        ensure!(h.len() == labels.len() * hd, "h/labels row mismatch");
+        let mut x = vec![0f32; hd];
+        let mut logits = vec![0f32; v];
+        let mut out = vec![0f32; labels.len()];
+        for (r, &lab) in labels.iter().enumerate() {
+            if lab == self.ignore_index {
+                continue;
+            }
+            ensure!((lab as usize) < v, "label {lab} out of vocab {v}");
+            self.norm_row(&h[r * hd..(r + 1) * hd], &mut x);
+            self.row_logits(&x, &mut logits);
+            out[r] = Self::row_lse(&logits) - logits[lab as usize];
+        }
+        Ok(out)
+    }
+
+    /// Untiled reference forward: per-row losses reduced in ascending
+    /// row order. Returns (loss_sum, count).
+    pub fn untiled_loss(&self, h: &[f32], labels: &[i32]) -> Result<(f32, f32)> {
+        let per = self.per_row_losses(h, labels)?;
+        let (mut sum, mut count) = (0f32, 0f32);
+        for (i, &l) in labels.iter().enumerate() {
+            if l != self.ignore_index {
+                sum += per[i];
+                count += 1.0;
+            }
+        }
+        Ok((sum, count))
+    }
+
+    /// Backward for a `[rows, hidden]` block with scalar cotangent `ct`
+    /// on the loss sum. ACCUMULATES into `d_lnf [H]` / `d_unembed [H,V]`
+    /// row-by-row in ascending order; OVERWRITES `d_h [rows, H]`.
+    /// Ignored rows contribute exactly 0 everywhere.
+    pub fn backward(
+        &self,
+        h: &[f32],
+        labels: &[i32],
+        ct: f32,
+        d_lnf: &mut [f32],
+        d_unembed: &mut [f32],
+        d_h: &mut [f32],
+    ) -> Result<()> {
+        let (hd, v) = (self.hidden, self.vocab);
+        ensure!(h.len() == labels.len() * hd, "h/labels row mismatch");
+        ensure!(d_lnf.len() == hd && d_unembed.len() == hd * v, "grad buffer shapes");
+        ensure!(d_h.len() == h.len(), "d_h shape");
+        let mut x = vec![0f32; hd];
+        let mut logits = vec![0f32; v];
+        let mut d_x = vec![0f32; hd];
+        for (r, &lab) in labels.iter().enumerate() {
+            let d_hr = &mut d_h[r * hd..(r + 1) * hd];
+            if lab == self.ignore_index {
+                d_hr.fill(0.0);
+                continue;
+            }
+            let hr = &h[r * hd..(r + 1) * hd];
+            let inv = self.norm_row(hr, &mut x);
+            self.row_logits(&x, &mut logits);
+            let lse = Self::row_lse(&logits);
+            // d_logits = (softmax - onehot) * ct, folded in place
+            for (vi, l) in logits.iter_mut().enumerate() {
+                let p = (*l - lse).exp();
+                let oh = if vi == lab as usize { 1.0 } else { 0.0 };
+                *l = (p - oh) * ct;
+            }
+            // d_x and d_unembed from the logits matmul
+            for j in 0..hd {
+                let w = &self.unembed[j * v..(j + 1) * v];
+                let dw = &mut d_unembed[j * v..(j + 1) * v];
+                let mut acc = 0f32;
+                for (vi, &dl) in logits.iter().enumerate() {
+                    acc += dl * w[vi];
+                    dw[vi] += x[j] * dl;
+                }
+                d_x[j] = acc;
+            }
+            // RMSNorm backward: x[j] = hr[j] * inv * lnf[j]
+            let mut s = 0f32;
+            for j in 0..hd {
+                d_lnf[j] += d_x[j] * hr[j] * inv;
+                s += d_x[j] * self.lnf[j] * hr[j];
+            }
+            let k = inv * inv * inv * s / hd as f32;
+            for j in 0..hd {
+                d_hr[j] = inv * d_x[j] * self.lnf[j] - k * hr[j];
+            }
+        }
+        Ok(())
+    }
+}

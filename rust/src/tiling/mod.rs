@@ -1,6 +1,11 @@
-//! Sequence-tiling plans (paper §3.1): shard-count deduction, chunk sizing,
-//! and the per-plan peak-memory arithmetic the estimator and Figure-3/4
-//! benches consume.
+//! Sequence-tiling plans AND execution (paper §3.1): shard-count
+//! deduction, chunk sizing, the per-plan peak-memory arithmetic the
+//! estimator and Figure-3/4 benches consume, and — in [`exec`] — the
+//! row-tile driver that streams a sequence shard through the AOT'd
+//! `*_tile` stages without ever materializing the full-shard
+//! intermediates.
+
+pub mod exec;
 
 /// TiledMLP shard count (§3.1.1): `ceil(seqlen / hidden_size)`.
 /// The paper's example: ceil(256_000 / 4096) = 63.
@@ -38,12 +43,30 @@ impl TilePlan {
     pub fn saving_factor(&self) -> f64 {
         self.untiled_bytes as f64 / self.tile_bytes.max(1) as f64
     }
+
+    /// Bytes the tiled schedule keeps off the device versus untiled —
+    /// the acceptance quantity the tracker-measured peak delta is
+    /// asserted against (`exec` tests).
+    pub fn savings(&self) -> u64 {
+        self.untiled_bytes.saturating_sub(self.tile_bytes)
+    }
+
+    /// An empty plan: what a zero-length shard tiles into (0 tiles, 0
+    /// bytes). Keeps the unchecked planners total instead of panicking
+    /// on `seqlen == 0` (`0usize.div_ceil(0)` used to).
+    fn empty() -> TilePlan {
+        TilePlan { n_tiles: 0, rows_per_tile: 0, tile_bytes: 0, untiled_bytes: 0 }
+    }
 }
 
 /// Plan a TiledMLP pass over `[seqlen, hidden]` with SwiGLU width `ffn`.
 /// Intermediates per tile: gate + up `[rows, ffn]` + silu product, at
-/// `elem_bytes` per element.
+/// `elem_bytes` per element. `seqlen == 0` yields the empty plan; use
+/// [`plan_mlp_checked`] to surface degenerate configs as errors.
 pub fn plan_mlp(seqlen: usize, hidden: usize, ffn: usize, elem_bytes: u64) -> TilePlan {
+    if seqlen == 0 {
+        return TilePlan::empty();
+    }
     let n_tiles = mlp_auto_shards(seqlen, hidden);
     let rows = seqlen.div_ceil(n_tiles);
     let per_row = (2 * ffn + hidden) as u64 * elem_bytes;
@@ -55,16 +78,90 @@ pub fn plan_mlp(seqlen: usize, hidden: usize, ffn: usize, elem_bytes: u64) -> Ti
     }
 }
 
-/// Plan a tiled logits+loss pass (fp32, 2 copies fwd+bwd as §3.1 measures).
+/// Plan a tiled logits+loss pass (fp32, 2 copies fwd+bwd as §3.1
+/// measures). `seqlen == 0` yields the empty plan; a `chunk_bytes` too
+/// small for one vocab row silently degrades to 1-row tiles whose
+/// `tile_bytes` EXCEED the chunk budget — [`plan_logits_checked`] turns
+/// both edges into errors.
 pub fn plan_logits(seqlen: usize, vocab: usize, chunk_bytes: u64) -> TilePlan {
+    if seqlen == 0 {
+        return TilePlan::empty();
+    }
     let rows = logits_chunk_rows(vocab, chunk_bytes).min(seqlen);
-    let n_tiles = seqlen.div_ceil(rows);
+    plan_logits_rows(seqlen, vocab, rows)
+}
+
+/// Logits plan from an explicit `rows_per_tile` (how the coordinator
+/// rebuilds the plan the AOT exporter baked into a manifest's
+/// `loss_fwd_tile` stage shapes).
+pub fn plan_logits_rows(seqlen: usize, vocab: usize, rows_per_tile: usize) -> TilePlan {
+    if seqlen == 0 || rows_per_tile == 0 {
+        return TilePlan::empty();
+    }
+    let rows = rows_per_tile.min(seqlen);
     TilePlan {
-        n_tiles,
+        n_tiles: seqlen.div_ceil(rows),
         rows_per_tile: rows,
         tile_bytes: 2 * (rows * vocab) as u64 * 4,
         untiled_bytes: 2 * (seqlen * vocab) as u64 * 4,
     }
+}
+
+/// MLP plan from an explicit `rows_per_tile` (rebuilding the plan an AOT
+/// manifest baked into its `mlp_fwd_tile` stage shapes).
+pub fn plan_mlp_rows(
+    seqlen: usize,
+    hidden: usize,
+    ffn: usize,
+    rows_per_tile: usize,
+    elem_bytes: u64,
+) -> TilePlan {
+    if seqlen == 0 || rows_per_tile == 0 {
+        return TilePlan::empty();
+    }
+    let rows = rows_per_tile.min(seqlen);
+    let per_row = (2 * ffn + hidden) as u64 * elem_bytes;
+    TilePlan {
+        n_tiles: seqlen.div_ceil(rows),
+        rows_per_tile: rows,
+        tile_bytes: rows as u64 * per_row,
+        untiled_bytes: seqlen as u64 * per_row,
+    }
+}
+
+/// [`plan_logits`] with the degenerate configs rejected: a plan is only
+/// returned when every tile actually fits the chunk budget and there is
+/// at least one row to tile. The AOT exporter enforces the same
+/// chunk-vs-vocab-row invariant at export time
+/// (`compile.aot.loss_tile_rows` raises), so artifacts carrying tile
+/// stages never embed an over-budget 1-row tiling.
+pub fn plan_logits_checked(
+    seqlen: usize,
+    vocab: usize,
+    chunk_bytes: u64,
+) -> anyhow::Result<TilePlan> {
+    anyhow::ensure!(seqlen > 0, "cannot plan a logits tiling over 0 rows");
+    anyhow::ensure!(vocab > 0, "cannot plan a logits tiling over vocab 0");
+    anyhow::ensure!(
+        chunk_bytes / 4 >= vocab as u64,
+        "logits chunk budget {chunk_bytes} B holds no fp32 vocab row \
+         ({} B): 1-row tiles would exceed the budget",
+        vocab * 4
+    );
+    Ok(plan_logits(seqlen, vocab, chunk_bytes))
+}
+
+/// [`plan_mlp`] with degenerate configs rejected.
+pub fn plan_mlp_checked(
+    seqlen: usize,
+    hidden: usize,
+    ffn: usize,
+    elem_bytes: u64,
+) -> anyhow::Result<TilePlan> {
+    anyhow::ensure!(seqlen > 0, "cannot plan an MLP tiling over 0 rows");
+    anyhow::ensure!(hidden > 0 && ffn > 0, "MLP tiling needs hidden > 0 and ffn > 0");
+    anyhow::ensure!(elem_bytes > 0, "MLP tiling needs elem_bytes > 0");
+    Ok(plan_mlp(seqlen, hidden, ffn, elem_bytes))
 }
 
 #[cfg(test)]
@@ -110,5 +207,49 @@ mod tests {
             let p = plan_mlp(seq, 4096, 14336, 2);
             assert!(p.n_tiles * p.rows_per_tile >= seq);
         }
+    }
+
+    #[test]
+    fn zero_seqlen_plans_are_empty_not_panicking() {
+        // plan_logits(0, ..) used to hit 0.div_ceil(0); plan_mlp(0, ..)
+        // produced a 1-tile/0-row nonsense plan.
+        for p in [plan_mlp(0, 4096, 14336, 2), plan_logits(0, 128_256, GIB)] {
+            assert_eq!((p.n_tiles, p.rows_per_tile), (0, 0));
+            assert_eq!((p.tile_bytes, p.untiled_bytes), (0, 0));
+            assert_eq!(p.savings(), 0);
+        }
+        assert!(plan_mlp_checked(0, 4096, 14336, 2).is_err());
+        assert!(plan_logits_checked(0, 128_256, GIB).is_err());
+    }
+
+    #[test]
+    fn undersized_chunk_budget_is_rejected_not_silently_exceeded() {
+        // One fp32 vocab row of Llama-8B is ~513 KB; a 4 KiB chunk budget
+        // used to yield 1-row tiles whose tile_bytes exceed the budget.
+        let v = 128_256;
+        let silent = plan_logits(16_000, v, 4096);
+        assert_eq!(silent.rows_per_tile, 1);
+        assert!(silent.tile_bytes > 4096, "{}", silent.tile_bytes);
+        let err = plan_logits_checked(16_000, v, 4096).unwrap_err();
+        assert!(err.to_string().contains("vocab row"), "{err}");
+        // the boundary case (budget == exactly one row) is accepted
+        let one = plan_logits_checked(16_000, v, 4 * v as u64).unwrap();
+        assert_eq!(one.rows_per_tile, 1);
+        assert!(one.tile_bytes <= 2 * 4 * v as u64);
+    }
+
+    #[test]
+    fn savings_and_explicit_rows_match_chunk_plan() {
+        let by_chunk = plan_logits(32_768, 128_256, GIB);
+        let by_rows = plan_logits_rows(32_768, 128_256, by_chunk.rows_per_tile);
+        assert_eq!(by_rows.n_tiles, by_chunk.n_tiles);
+        assert_eq!(by_rows.tile_bytes, by_chunk.tile_bytes);
+        assert_eq!(
+            by_chunk.savings(),
+            by_chunk.untiled_bytes - by_chunk.tile_bytes
+        );
+        // rows beyond the shard clamp (the 1-tile degenerate sweep)
+        let clamped = plan_logits_rows(100, 512, 4096);
+        assert_eq!((clamped.n_tiles, clamped.rows_per_tile), (1, 100));
     }
 }

@@ -109,6 +109,107 @@ fn attention_agnostic_kernel_swap() {
 }
 
 #[test]
+fn tiled_execution_matches_monolithic_training() {
+    // Tiled loss-head + tiled MLP EXECUTION must reproduce the
+    // monolithic training trajectory (fp tolerance through XLA — the
+    // tile stages re-round reductions; the bit-level contract is pinned
+    // PJRT-free in tests/tiled_exec.rs).
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let man = Manifest::load(&dir).unwrap();
+    if !man.has_tiled_loss() || !man.has_tiled_mlp() {
+        eprintln!("SKIP: artifact predates tile stages — re-run `make artifacts`");
+        return;
+    }
+    let run = |tiled: bool| -> Vec<f32> {
+        let mut t = Trainer::new(
+            &dir,
+            TrainerOptions {
+                seed: 42,
+                checked: true,
+                tiled_loss: tiled,
+                tiled_mlp: tiled,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 41), 2);
+        (0..4)
+            .map(|_| {
+                let (ids, _) = dl.next();
+                t.train_step(&ids).expect("step").loss
+            })
+            .collect()
+    };
+    let mono = run(false);
+    let tiled = run(true);
+    for i in 0..4 {
+        assert!(
+            (mono[i] - tiled[i]).abs() < 1e-3,
+            "step {i}: tiled {} vs monolithic {}",
+            tiled[i],
+            mono[i]
+        );
+    }
+}
+
+#[test]
+fn old_manifests_without_tile_stages_still_load() {
+    // Optional-stage compatibility: a manifest stripped of the four
+    // `*_tile` stages (i.e. an old artifact) must still load and train
+    // untiled, and the tiled TrainerOptions must refuse it with a clear
+    // error rather than silently falling back.
+    use alst::util::json::Json;
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let tmp = std::env::temp_dir().join("alst-no-tile-stages");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+    }
+    let mpath = tmp.join("manifest.json");
+    let mut doc = Json::parse(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
+    let Json::Obj(root) = &mut doc else { panic!("manifest root") };
+    let Some(Json::Obj(stages)) = root.get_mut("stages") else {
+        panic!("manifest stages")
+    };
+    if stages.remove("loss_fwd_tile").is_none() {
+        eprintln!("SKIP: artifact predates tile stages — re-run `make artifacts`");
+        return;
+    }
+    stages.remove("loss_bwd_tile");
+    stages.remove("mlp_fwd_tile");
+    stages.remove("mlp_bwd_tile");
+    std::fs::write(&mpath, doc.to_string_pretty()).unwrap();
+
+    // untiled load + step works (backward compat)...
+    let man = Manifest::load(&tmp).unwrap();
+    assert!(!man.has_tiled_loss() && !man.has_tiled_mlp());
+    assert_eq!(man.loss_tile_rows(), None);
+    let mut t = Trainer::new(&tmp, TrainerOptions { seed: 3, ..Default::default() })
+        .unwrap();
+    let mut dl = UlyssesDataLoader::new(MarkovSource::new(512, 256, 0.05, 3), 2);
+    let (ids, _) = dl.next();
+    assert!(t.train_step(&ids).unwrap().loss.is_finite());
+
+    // ...and the tiled options refuse with a pointer at the fix
+    let err = Trainer::new(
+        &tmp,
+        TrainerOptions { tiled_loss: true, ..Default::default() },
+    )
+    .err()
+    .expect("tiled_loss must be refused without tile stages");
+    assert!(format!("{err:#}").contains("loss_fwd_tile"), "{err:#}");
+    let err = Trainer::new(
+        &tmp,
+        TrainerOptions { tiled_mlp: true, ..Default::default() },
+    )
+    .err()
+    .expect("tiled_mlp must be refused without tile stages");
+    assert!(format!("{err:#}").contains("mlp_fwd_tile"), "{err:#}");
+}
+
+#[test]
 fn ckpt_offload_does_not_change_numerics() {
     let Some(dir) = artifacts("tiny", 2, 256) else { return };
     let mut flags_off = FeatureFlags::alst();

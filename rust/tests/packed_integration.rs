@@ -164,6 +164,85 @@ fn packed_step_trains_and_reports_per_document_loss() {
 }
 
 #[test]
+fn tiled_loss_single_pass_per_doc_and_execution_counts() {
+    // ISSUE acceptance: with tiled_loss on, per-document losses come
+    // from ONE tiled sweep — the engine's loss-stage execution count is
+    // sp x n_tiles per pass, NOT n_tiles + n_docs — and training
+    // matches the monolithic path to fp tolerance.
+    use alst::runtime::Engine;
+    use alst::tiling::exec::LOSS_HEAD_TAG;
+    use alst::tiling::plan_logits_rows;
+
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let man = Manifest::load(&dir).unwrap();
+    if !man.has_tiled_loss() {
+        eprintln!("SKIP: artifact predates tile stages — re-run `make artifacts`");
+        return;
+    }
+    let mut t_untiled =
+        Trainer::new(&dir, TrainerOptions { seed: 13, ..Default::default() }).unwrap();
+    let mut t_tiled = Trainer::new(
+        &dir,
+        TrainerOptions { seed: 13, tiled_loss: true, ..Default::default() },
+    )
+    .unwrap();
+    let src = MixedLengthSource::new(512, 16, 200, 9);
+    let mut dl = PackedDataLoader::new(src, 256, 2, 12).unwrap();
+    let p = dl.next_sequence().unwrap();
+
+    let mu = t_untiled.train_step_packed(&p).unwrap();
+    t_tiled.engine.reset_stats();
+    let mt = t_tiled.train_step_packed(&p).unwrap();
+
+    assert!(
+        (mu.metrics.loss - mt.metrics.loss).abs() < 1e-4,
+        "tiled loss {} != monolithic {}",
+        mt.metrics.loss,
+        mu.metrics.loss
+    );
+    assert_eq!(mu.doc_losses.len(), mt.doc_losses.len());
+    for (a, b) in mu.doc_losses.iter().zip(&mt.doc_losses) {
+        assert_eq!(a.doc_id, b.doc_id);
+        assert_eq!(a.tokens, b.tokens);
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4,
+            "doc {}: tiled {} != rerun {}",
+            a.doc_id,
+            b.loss,
+            a.loss
+        );
+    }
+
+    // execution-count contract (one fwd + one bwd sweep, nothing per doc)
+    let sp = t_tiled.sp();
+    let ssh = 256 / sp;
+    let rows = man.loss_tile_rows().unwrap();
+    let n_tiles = ssh.div_ceil(rows.min(ssh));
+    let fwd_key = Engine::stage_key(&t_tiled.manifest, "loss_fwd_tile");
+    let bwd_key = Engine::stage_key(&t_tiled.manifest, "loss_bwd_tile");
+    let mono_key = Engine::stage_key(&t_tiled.manifest, "loss_fwd");
+    assert_eq!(
+        t_tiled.engine.executions_for(&fwd_key),
+        (sp * n_tiles) as u64,
+        "per-doc losses must not re-run the loss head"
+    );
+    assert_eq!(t_tiled.engine.executions_for(&bwd_key), (sp * n_tiles) as u64);
+    assert_eq!(t_tiled.engine.executions_for(&mono_key), 0);
+    assert!(p.n_docs() > 1, "fixture should actually pack documents");
+
+    // measured loss-head peak: tiled == the plan's tile bytes, and far
+    // below the monolithic path's per-step peak
+    let vocab = t_tiled.manifest.config.vocab;
+    let plan = plan_logits_rows(ssh, vocab, rows);
+    assert_eq!(t_tiled.device.tag_peak(LOSS_HEAD_TAG), plan.tile_bytes);
+    assert!(
+        t_untiled.device.tag_peak(LOSS_HEAD_TAG)
+            >= sp as u64 * plan.untiled_bytes,
+        "untiled path must charge the full-shard logits copies"
+    );
+}
+
+#[test]
 fn packed_shards_feed_pipeline_shapes() {
     let Some(dir) = artifacts("tiny", 2, 256) else { return };
     let t = Trainer::new(&dir, TrainerOptions::default()).unwrap();
