@@ -130,7 +130,17 @@ fn main() -> anyhow::Result<()> {
     if !tiled_loss {
         println!("(old artifact without tile stages — training untiled)");
     }
-    let mut trainer = Trainer::new(&dir, TrainerOptions { tiled_loss, ..Default::default() })?;
+    // Trace the run: serial ranks so the attribution table below reads
+    // as a fraction of each step (see DESIGN.md §Observability).
+    let mut trainer = Trainer::new(
+        &dir,
+        TrainerOptions {
+            tiled_loss,
+            trace: true,
+            parallel_ranks: false,
+            ..Default::default()
+        },
+    )?;
     let mut log = RunLog::default();
     for step in 1..=10 {
         // loader sp == trainer sp here, so feed the loader's shard set
@@ -162,6 +172,16 @@ fn main() -> anyhow::Result<()> {
              (tile-sized; per-doc losses cost no extra loss-head runs)",
             trainer.device.tag_peak(LOSS_HEAD_TAG)
         );
+    }
+    // Where each step's wall-clock went, from the same spans a
+    // `trace.json` export would carry.
+    let spans = trainer.tracer().drain();
+    let mem = trainer.device.take_events();
+    let report = alst::obs::AttributionReport::build(&spans, &mem);
+    println!();
+    report.to_table().print();
+    for line in report.summary_lines() {
+        println!("{line}");
     }
     println!("packed_train OK");
     Ok(())

@@ -17,10 +17,12 @@
 //! integer update, so the totals are deterministic under any
 //! interleaving.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::{HostTensor, ScratchArena};
 
 /// Traffic ledger for one process group.
@@ -47,12 +49,28 @@ impl CommStats {
 pub struct Group {
     pub world: usize,
     stats: Mutex<CommStats>,
+    /// Span recorder (the shared disabled handle by default). Every
+    /// ledger increment — a collective performed here or an `account_*`
+    /// call from a data-structure owner — pairs with exactly one
+    /// `Collective` span carrying the same byte count, so the span byte
+    /// sum equals `CommStats::total_bytes()` under tracing.
+    tracer: Arc<Tracer>,
 }
 
 impl Group {
     pub fn new(world: usize) -> Group {
         assert!(world >= 1);
-        Group { world, stats: Mutex::default() }
+        Group { world, stats: Mutex::default(), tracer: Tracer::off() }
+    }
+
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// The group's tracer handle — relayouts and other callers that ledger
+    /// through `account_*` use it to wrap their own timed spans.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     pub fn stats(&self) -> CommStats {
@@ -63,25 +81,54 @@ impl Group {
         *self.stats.lock().unwrap() = CommStats::default();
     }
 
+    // -- silent ledger (no spans; the public surface pairs each increment
+    //    with exactly one Collective span) --------------------------------
+    fn ledger_gather(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.all_gather_bytes += bytes;
+        st.ops += 1;
+    }
+
+    fn ledger_reduce_scatter(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.reduce_scatter_bytes += bytes;
+        st.ops += 1;
+    }
+
+    fn ledger_all_to_all(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.all_to_all_bytes += bytes;
+        st.ops += 1;
+    }
+
+    fn ledger_all_reduce(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.all_reduce_bytes += bytes;
+        st.ops += 1;
+    }
+
     /// All-gather of equal-length f32 shards: each rank contributes its
     /// shard; result is the concatenation (same for all ranks). Wire
     /// volume per rank: (world-1)/world * total (ring), accounted as the
     /// full gathered size for simplicity on the ledger, matching NCCL's
     /// algbw convention.
     pub fn all_gather(&self, shards: &[&[f32]]) -> Vec<f32> {
+        let mut span = self.tracer.span(Category::Collective, "all_gather");
         assert_eq!(shards.len(), self.world);
         let total: usize = shards.iter().map(|s| s.len()).sum();
         let mut out = Vec::with_capacity(total);
         for s in shards {
             out.extend_from_slice(s);
         }
-        self.account_gather((total * 4) as u64);
+        self.ledger_gather((total * 4) as u64);
+        span.set_bytes((total * 4) as u64);
         out
     }
 
     /// `all_gather` into an arena-recycled buffer (allocation-free at
     /// steady state; caller recycles the result when done).
     pub fn all_gather_into(&self, shards: &[&[f32]], arena: &ScratchArena) -> Vec<f32> {
+        let mut span = self.tracer.span(Category::Collective, "all_gather");
         assert_eq!(shards.len(), self.world);
         let total: usize = shards.iter().map(|s| s.len()).sum();
         let mut out = arena.take_f32(total);
@@ -90,7 +137,8 @@ impl Group {
             out[off..off + s.len()].copy_from_slice(s);
             off += s.len();
         }
-        self.account_gather((total * 4) as u64);
+        self.ledger_gather((total * 4) as u64);
+        span.set_bytes((total * 4) as u64);
         out
     }
 
@@ -109,6 +157,7 @@ impl Group {
         fulls: &[&[f32]],
         arena: &ScratchArena,
     ) -> Vec<Vec<f32>> {
+        let mut span = self.tracer.span(Category::Collective, "reduce_scatter");
         assert_eq!(fulls.len(), self.world);
         let total = fulls[0].len();
         assert!(fulls.iter().all(|f| f.len() == total), "ragged reduce-scatter");
@@ -126,7 +175,8 @@ impl Group {
             }
             out.push(dst);
         }
-        self.account_reduce_scatter((total * 4) as u64);
+        self.ledger_reduce_scatter((total * 4) as u64);
+        span.set_bytes((total * 4) as u64);
         out
     }
 
@@ -136,6 +186,7 @@ impl Group {
     /// head/seq-aware relayout lives in `coordinator::ulysses`; this is
     /// the generic primitive. Outputs come from the arena.
     pub fn all_to_all(&self, sends: &[&[f32]], arena: &ScratchArena) -> Vec<Vec<f32>> {
+        let mut span = self.tracer.span(Category::Collective, "all_to_all");
         assert_eq!(sends.len(), self.world);
         let per_rank = sends[0].len();
         assert!(sends.iter().all(|s| s.len() == per_rank), "ragged all-to-all");
@@ -149,7 +200,8 @@ impl Group {
             }
             out.push(dst);
         }
-        self.account_all_to_all((self.world * per_rank * 4) as u64);
+        self.ledger_all_to_all((self.world * per_rank * 4) as u64);
+        span.set_bytes((self.world * per_rank * 4) as u64);
         out
     }
 
@@ -157,10 +209,10 @@ impl Group {
     /// paper specifically replaced `all_reduce_object` with plain
     /// all_reduce to save >3 GiB/GPU (§3.3); we only ever move the scalars.
     pub fn all_reduce_scalars(&self, vals: &[f32]) -> f32 {
+        let mut span = self.tracer.span(Category::Collective, "all_reduce_scalars");
         assert_eq!(vals.len(), self.world);
-        let mut st = self.stats.lock().unwrap();
-        st.all_reduce_bytes += (vals.len() * 4) as u64;
-        st.ops += 1;
+        self.ledger_all_reduce((vals.len() * 4) as u64);
+        span.set_bytes((vals.len() * 4) as u64);
         vals.iter().sum()
     }
 
@@ -178,6 +230,7 @@ impl Group {
         tensors: &[&HostTensor],
         arena: &ScratchArena,
     ) -> Result<HostTensor> {
+        let mut span = self.tracer.span(Category::Collective, "all_reduce_sum");
         assert_eq!(tensors.len(), self.world);
         let shape = tensors[0].shape().to_vec();
         let first = tensors[0].as_f32()?;
@@ -190,34 +243,42 @@ impl Group {
             }
         }
         let out = HostTensor::f32(shape, acc);
-        let mut st = self.stats.lock().unwrap();
         // ring all-reduce moves 2*(w-1)/w * bytes; ledger the logical size
-        st.all_reduce_bytes += out.size_bytes() as u64;
-        st.ops += 1;
+        self.ledger_all_reduce(out.size_bytes() as u64);
+        span.set_bytes(out.size_bytes() as u64);
         Ok(out)
+    }
+
+    /// Zero-duration instant span for an `account_*` ledger entry: the
+    /// data movement happened inside the caller (which wraps its own
+    /// timed span, e.g. a `Relayout`), but the byte must still appear on
+    /// the Collective lane once for ledger parity.
+    fn account_span(&self, name: &'static str, bytes: u64) {
+        if self.tracer.enabled() {
+            let mut span = self.tracer.span(Category::Collective, name);
+            span.set_bytes(bytes);
+            span.set_dur(Duration::ZERO);
+        }
     }
 
     /// Record an all-to-all's traffic (the relayout itself is done by
     /// `coordinator::ulysses`, which owns the head/seq math).
     pub fn account_all_to_all(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
-        st.all_to_all_bytes += bytes;
-        st.ops += 1;
+        self.account_span("all_to_all", bytes);
+        self.ledger_all_to_all(bytes);
     }
 
     /// Ledger an all-gather performed by a data-structure owner (e.g. the
     /// ZeRO store's just-in-time parameter gather).
     pub fn account_gather(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
-        st.all_gather_bytes += bytes;
-        st.ops += 1;
+        self.account_span("all_gather", bytes);
+        self.ledger_gather(bytes);
     }
 
     /// Ledger a reduce-scatter performed by a data-structure owner.
     pub fn account_reduce_scatter(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
-        st.reduce_scatter_bytes += bytes;
-        st.ops += 1;
+        self.account_span("reduce_scatter", bytes);
+        self.ledger_reduce_scatter(bytes);
     }
 }
 
@@ -302,6 +363,35 @@ mod tests {
         // shape mismatch is an error
         let bad = HostTensor::zeros(&[3]);
         assert!(g.all_reduce_sum(&[&a, &b, &bad]).is_err());
+    }
+
+    #[test]
+    fn every_ledger_increment_pairs_one_collective_span() {
+        use crate::obs::{Category, Tracer};
+        let mut g = Group::new(2);
+        let tracer = Arc::new(Tracer::new(true));
+        g.set_tracer(tracer.clone());
+        let arena = ScratchArena::new();
+        let _ = g.all_gather(&[&[1.0], &[2.0]]);
+        let _ = g.all_to_all(&[&[1.0, 2.0], &[3.0, 4.0]], &arena);
+        let _ = g.reduce_scatter(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let _ = g.all_reduce_scalars(&[1.0, 2.0]);
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let _ = g.all_reduce_sum(&[&a, &a]).unwrap();
+        g.account_gather(100);
+        g.account_all_to_all(200);
+        g.account_reduce_scatter(300);
+        let st = g.stats();
+        let spans = tracer.drain();
+        assert!(spans.iter().all(|s| s.cat == Category::Collective));
+        assert_eq!(spans.len() as u64, st.ops, "one span per ledger op");
+        let span_bytes: u64 = spans.iter().map(|s| s.bytes).sum();
+        assert_eq!(span_bytes, st.total_bytes(), "span bytes == ledger bytes");
+        // The account_* instant spans are zero-duration.
+        assert!(spans
+            .iter()
+            .filter(|s| s.bytes >= 100)
+            .all(|s| s.dur_ns == 0));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! are elided. Before this change a 100M-param step re-marshaled every
 //! layer's weights 12x (4 ranks x 3 passes); see EXPERIMENTS.md §Perf.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -30,6 +31,7 @@ use crate::coordinator::tape::CheckpointTape;
 use crate::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
 use crate::coordinator::zero::{init_flat_params, slice_group, GroupGrads, ShardedStore};
 use crate::memory::{HostPool, MemoryTracker};
+use crate::obs::{self, Category, Tracer};
 use crate::runtime::{Engine, HostTensor, Manifest, ScratchArena};
 use crate::tiling::exec::{
     untiled_loss_bwd_bytes, untiled_loss_fwd_bytes, untiled_mlp_fwd_bytes, TiledLossExec,
@@ -51,11 +53,25 @@ where
     F: Fn(usize) -> Result<T> + Sync,
 {
     if !parallel || sp < 2 {
-        return (0..sp).map(f).collect();
+        // tag spans opened inside `f` with the scoped rank (restored on
+        // exit — the serial path reuses one thread for every rank)
+        return (0..sp)
+            .map(|r| {
+                let _rank = obs::rank_scope(r);
+                f(r)
+            })
+            .collect();
     }
     std::thread::scope(|scope| {
         let f = &f;
-        let handles: Vec<_> = (0..sp).map(|r| scope.spawn(move || f(r))).collect();
+        let handles: Vec<_> = (0..sp)
+            .map(|r| {
+                scope.spawn(move || {
+                    let _rank = obs::rank_scope(r);
+                    f(r)
+                })
+            })
+            .collect();
         handles
             .into_iter()
             .map(|h| h.join().map_err(|_| anyhow::anyhow!("rank thread panicked"))?)
@@ -136,6 +152,14 @@ pub struct TrainerOptions {
     /// RMSNorm + SwiGLU MLP — all row-wise) as a row-tiled sweep via
     /// `mlp_fwd_tile`/`mlp_bwd_tile`. Same artifact requirement.
     pub tiled_mlp: bool,
+    /// Record structured spans (`obs::Tracer`) across the engine, the
+    /// collective group, the relayouts, the checkpoint tape, the tile
+    /// sweeps, and the step loop. Off by default: every span site then
+    /// costs one branch on the shared disabled handle (see
+    /// DESIGN.md §Observability for the overhead contract). Drain with
+    /// `Trainer::tracer()` + `Tracer::drain` and export via
+    /// `obs::write_trace` / `obs::AttributionReport`.
+    pub trace: bool,
 }
 
 impl Default for TrainerOptions {
@@ -153,6 +177,7 @@ impl Default for TrainerOptions {
             arena_byte_budget: crate::runtime::tensor::DEFAULT_POOL_BYTE_BUDGET,
             tiled_loss: false,
             tiled_mlp: false,
+            trace: false,
         }
     }
 }
@@ -225,6 +250,9 @@ pub struct Trainer {
     /// after the first forward/backward cycle populates it, the 2×n_layers
     /// relayouts of every later step are allocation-free.
     arena: ScratchArena,
+    /// Step tracer shared with the engine, the group, and the device
+    /// tracker; the global disabled handle unless `TrainerOptions::trace`.
+    tracer: Arc<Tracer>,
 }
 
 impl Trainer {
@@ -232,7 +260,13 @@ impl Trainer {
     pub fn new(artifact_dir: &std::path::Path, opts: TrainerOptions) -> Result<Trainer> {
         let manifest = Manifest::load(artifact_dir)
             .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
+        let tracer = if opts.trace {
+            Arc::new(Tracer::new(true))
+        } else {
+            Tracer::off()
+        };
         let mut engine = Engine::cpu()?;
+        engine.set_tracer(tracer.clone());
         engine.load_manifest(&manifest)?;
 
         // Tiled execution needs the optional tile stages; refusing at
@@ -273,15 +307,20 @@ impl Trainer {
         let grads = ShardedStore::zeros(total, shard_world);
         let opt = AdamW::new(opts.adamw, total, shard_world);
 
+        let mut group = Group::new(sp);
+        group.set_tracer(tracer.clone());
+        let mut device = MemoryTracker::new(opts.device_bytes);
+        device.set_tracer(tracer.clone());
+
         Ok(Trainer {
             manifest,
             engine,
             flags: opts.flags,
-            group: Group::new(sp),
+            group,
             params,
             grads,
             opt,
-            device: MemoryTracker::new(opts.device_bytes),
+            device,
             host: HostPool::new(opts.host_bytes),
             lr_schedule: opts.lr_schedule,
             step: 0,
@@ -293,7 +332,16 @@ impl Trainer {
             loss_tile_rows,
             mlp_tile_rows,
             arena: ScratchArena::with_byte_budget(opts.arena_byte_budget),
+            tracer,
         })
+    }
+
+    /// The step tracer (the shared disabled handle unless
+    /// `TrainerOptions::trace` was set). Drain it between steps or after
+    /// a run to export `obs::write_trace` / build an
+    /// `obs::AttributionReport`.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     pub fn sp(&self) -> usize {
@@ -510,11 +558,14 @@ impl Trainer {
         let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
         let c = &self.manifest.config;
         let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+        let tracer = &self.tracer;
         let mut out = Vec::with_capacity(sp);
         for r in 0..sp {
+            let _rank = obs::rank_scope(r);
             let drv = TiledMlpExec::new(
                 ssh, c.hidden, c.ffn, rows, c.n_q_heads, c.head_dim, arena,
-            )?;
+            )?
+            .with_tracer(tracer.clone());
             let h_out = drv.forward(device, &h_host[r], &o_sh[r], |ht, at| {
                 let hb = engine.to_buffer(ht)?;
                 let ab = engine.to_buffer(at)?;
@@ -547,12 +598,15 @@ impl Trainer {
         let (wo, ln2, wg, wu, wd) = (&lp[4], &lp[5], &lp[6], &lp[7], &lp[8]);
         let c = &self.manifest.config;
         let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+        let tracer = &self.tracer;
         let mut d_h_resid = Vec::with_capacity(sp);
         let mut d_attn = Vec::with_capacity(sp);
         for r in 0..sp {
+            let _rank = obs::rank_scope(r);
             let drv = TiledMlpExec::new(
                 ssh, c.hidden, c.ffn, rows, c.n_q_heads, c.head_dim, arena,
-            )?;
+            )?
+            .with_tracer(tracer.clone());
             let lg = &mut layer_grads[r];
             let (dh, da) = drv.backward(
                 device,
@@ -594,6 +648,9 @@ impl Trainer {
     pub fn train_step_accum(&mut self, micro_batches: &[Vec<i32>]) -> Result<StepMetrics> {
         anyhow::ensure!(!micro_batches.is_empty(), "need at least one micro batch");
         let t0 = Instant::now();
+        // clone first: a guard borrowing `self.tracer` would pin `self`
+        let tracer = self.tracer.clone();
+        let mut span = tracer.span(Category::Step, "train_step");
         self.group.reset_stats();
         self.device.reset_peak();
 
@@ -610,12 +667,18 @@ impl Trainer {
 
         let grad_norm = self.optimizer_step();
         let comm = self.group.stats();
+        let step_time = t0.elapsed();
+        // the span carries the SAME duration `StepMetrics.step_time`
+        // reports — the attribution report reconciles against it exactly
+        span.set_step(self.step);
+        span.set_dur(step_time);
+        drop(span);
         Ok(StepMetrics {
             step: self.step,
             loss: loss_acc,
             grad_norm,
             tokens,
-            step_time: t0.elapsed(),
+            step_time,
             a2a_bytes: comm.all_to_all_bytes,
             gather_bytes: comm.all_gather_bytes,
             reduce_scatter_bytes: comm.reduce_scatter_bytes,
@@ -628,12 +691,16 @@ impl Trainer {
     /// clear them. Returns the pre-clip global gradient norm. Uses the
     /// scheduled learning rate if a schedule is configured.
     pub fn optimizer_step(&mut self) -> f64 {
+        let tracer = self.tracer.clone();
+        let mut span = tracer.span(Category::Optimizer, "optimizer_step");
         if let Some(sched) = &self.lr_schedule {
             self.opt.cfg.lr = sched.lr_at(self.step);
         }
         let norm = self.opt.step(&mut self.params, &self.grads);
         self.grads.zero_fill();
         self.step += 1;
+        // post-increment, matching `StepMetrics::step` and the step span
+        span.set_step(self.step);
         norm
     }
 
@@ -715,7 +782,8 @@ impl Trainer {
             h_host.push(t);
         }
 
-        let mut tape = CheckpointTape::new(n_layers, sp, self.flags.ckpt_offload);
+        let mut tape = CheckpointTape::new(n_layers, sp, self.flags.ckpt_offload)
+            .with_tracer(self.tracer.clone());
         for li in 0..n_layers {
             // run the layer first (the tiled MLP sweep slices row tiles
             // from the live h_host copies), THEN checkpoint the layer
@@ -746,10 +814,13 @@ impl Trainer {
             let rows = self.loss_tile_rows;
             let key = Engine::stage_key(&self.manifest, "loss_fwd_tile");
             let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+            let tracer = &self.tracer;
             let mut sums = Vec::with_capacity(sp);
             let mut cnts = Vec::with_capacity(sp);
             for r in 0..sp {
-                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?;
+                let _rank = obs::rank_scope(r);
+                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?
+                    .with_tracer(tracer.clone());
                 let sweep =
                     drv.forward(device, &h_host[r], &shards[r].labels, |ht, lt| {
                         let hb = engine.to_buffer(ht)?;
@@ -866,8 +937,11 @@ impl Trainer {
             let keep_host = self.tiled_mlp;
             let key = Engine::stage_key(&self.manifest, "loss_bwd_tile");
             let (engine, arena, device) = (&self.engine, &self.arena, &mut self.device);
+            let tracer = &self.tracer;
             for r in 0..sp {
-                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?;
+                let _rank = obs::rank_scope(r);
+                let drv = TiledLossExec::new(ssh, hidden, vocab, rows, ignore, arena)?
+                    .with_tracer(tracer.clone());
                 let g = &mut final_grads[r];
                 anyhow::ensure!(
                     g.entries.len() == 2 && g.entries[0].name == "lnf",
@@ -1229,6 +1303,8 @@ impl Trainer {
         batches: Vec<ShardedBatch>,
         t0: Instant,
     ) -> Result<PackedStepMetrics> {
+        let tracer = self.tracer.clone();
+        let mut span = tracer.span(Category::Step, "packed_step");
         self.group.reset_stats();
         self.device.reset_peak();
 
@@ -1236,6 +1312,10 @@ impl Trainer {
             self.forward_backward_shards(&batches, 1.0, Some(p))?;
         let grad_norm = self.optimizer_step();
         let comm = self.group.stats();
+        let step_time = t0.elapsed();
+        span.set_step(self.step);
+        span.set_dur(step_time);
+        drop(span);
         let real_tokens: usize = p.doc_lengths().iter().sum();
         Ok(PackedStepMetrics {
             metrics: StepMetrics {
@@ -1243,7 +1323,7 @@ impl Trainer {
                 loss,
                 grad_norm,
                 tokens: p.len(),
-                step_time: t0.elapsed(),
+                step_time,
                 a2a_bytes: comm.all_to_all_bytes,
                 gather_bytes: comm.all_gather_bytes,
                 reduce_scatter_bytes: comm.reduce_scatter_bytes,

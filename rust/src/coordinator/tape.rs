@@ -8,9 +8,12 @@
 //! flattens the paper's Figure-7 memory "hill": peak device usage stops
 //! depending on layer count.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::memory::{HostPool, MemoryTracker};
+use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::HostTensor;
 
 /// Where a checkpoint currently resides.
@@ -32,6 +35,7 @@ pub struct CheckpointTape {
     slots: Vec<Vec<Option<Slot>>>, // [layer][rank]
     /// Cumulative device<->host transfer volume this step (both ways).
     pub transfer_bytes: u64,
+    tracer: Arc<Tracer>,
 }
 
 impl CheckpointTape {
@@ -42,7 +46,14 @@ impl CheckpointTape {
                 .map(|_| (0..world).map(|_| None).collect())
                 .collect(),
             transfer_bytes: 0,
+            tracer: Tracer::off(),
         }
+    }
+
+    /// Builder: record `Offload` spans for store/fetch on `tracer`.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> CheckpointTape {
+        self.tracer = tracer;
+        self
     }
 
     /// Store layer `li`'s input for `rank`. Device tracker sees the
@@ -56,6 +67,12 @@ impl CheckpointTape {
         host: &mut HostPool,
     ) -> Result<()> {
         let bytes = tensor.size_bytes() as u64;
+        let mut span = self.tracer.span(
+            Category::Offload,
+            if self.offload { "ckpt_store_host" } else { "ckpt_store_device" },
+        );
+        span.set_rank(rank);
+        span.set_bytes(bytes);
         let residence = if self.offload {
             host.alloc(bytes)?;            // may fail: host RAM is finite
             self.transfer_bytes += bytes;  // device -> host copy
@@ -81,6 +98,15 @@ impl CheckpointTape {
         let slot = self.slots[li][rank]
             .take()
             .ok_or_else(|| anyhow::anyhow!("checkpoint ({li},{rank}) missing"))?;
+        let mut span = self.tracer.span(
+            Category::Offload,
+            match slot.residence {
+                Residence::Host => "ckpt_fetch_host",
+                Residence::Device => "ckpt_fetch_device",
+            },
+        );
+        span.set_rank(rank);
+        span.set_bytes(slot.bytes);
         match slot.residence {
             Residence::Host => {
                 host.free(slot.bytes);
@@ -168,6 +194,24 @@ mod tests {
         tape.store(0, 0, t(100), &mut dev, &mut host).unwrap();
         let err = tape.store(1, 0, t(100), &mut dev, &mut host);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn traced_tape_emits_offload_spans() {
+        use crate::obs::{Category, Tracer};
+        let tracer = Arc::new(Tracer::new(true));
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(1, 1, true).with_tracer(tracer.clone());
+        tape.store(0, 0, t(64), &mut dev, &mut host).unwrap();
+        tape.fetch(0, 0, &mut dev, &mut host).unwrap();
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 2);
+        assert!(spans
+            .iter()
+            .all(|s| s.cat == Category::Offload && s.rank == Some(0) && s.bytes == 256));
+        assert_eq!(spans[0].name, "ckpt_store_host");
+        assert_eq!(spans[1].name, "ckpt_fetch_host");
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! (ascending source rank), so all nonzero results round identically.
 
 use crate::collectives::Group;
+use crate::obs::Category;
 use crate::runtime::tensor::{accumulate_rows, copy_rows, HostTensor, ScratchArena};
 
 /// First global head owned by `rank` when `n_heads` are distributed over
@@ -74,6 +75,10 @@ pub fn a2a_seq_to_head_into(
     shards: &[HostTensor],
     arena: &ScratchArena,
 ) -> Vec<HostTensor> {
+    let tracer = group.tracer();
+    let (hits0, misses0) =
+        if tracer.enabled() { (arena.hits(), arena.misses()) } else { (0, 0) };
+    let mut span = tracer.span(Category::Relayout, "a2a_seq_to_head");
     let sp = shards.len();
     assert_eq!(sp, group.world);
     let dims = shards[0].shape();
@@ -106,6 +111,10 @@ pub fn a2a_seq_to_head_into(
     }
     // Every element of every output crossed the (simulated) wire once.
     group.account_all_to_all((sp * out_len * 4) as u64);
+    span.set_bytes((sp * out_len * 4) as u64);
+    if span.active() {
+        span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
+    }
     out
 }
 
@@ -135,6 +144,10 @@ pub fn a2a_head_to_seq_into(
     sum_replicas: bool,
     arena: &ScratchArena,
 ) -> Vec<HostTensor> {
+    let tracer = group.tracer();
+    let (hits0, misses0) =
+        if tracer.enabled() { (arena.hits(), arena.misses()) } else { (0, 0) };
+    let mut span = tracer.span(Category::Relayout, "a2a_head_to_seq");
     let sp = shards.len();
     assert_eq!(sp, group.world);
     let dims = shards[0].shape();
@@ -153,6 +166,10 @@ pub fn a2a_head_to_seq_into(
         data.copy_from_slice(src);
         out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
         group.account_all_to_all(in_bytes);
+        span.set_bytes(in_bytes);
+        if span.active() {
+            span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
+        }
         return out;
     }
 
@@ -199,6 +216,10 @@ pub fn a2a_head_to_seq_into(
         out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
     }
     group.account_all_to_all(in_bytes);
+    span.set_bytes(in_bytes);
+    if span.active() {
+        span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
+    }
     out
 }
 

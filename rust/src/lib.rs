@@ -20,6 +20,7 @@ pub mod coordinator;
 pub mod packing;
 pub mod tiling;
 pub mod memory;
+pub mod obs;
 pub mod perf;
 pub mod metrics;
 pub mod paper;

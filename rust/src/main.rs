@@ -7,6 +7,9 @@
 //!   ablate    — Table 1 feature-ablation ladder
 //!   estimate  — memory breakdown for a (model, seq, world)
 //!   tables    — regenerate every paper table/figure dataset to CSV
+//!   trace     — run N traced steps, write Chrome trace-event JSON +
+//!               print the per-step attribution table (works without
+//!               artifacts: falls back to a synthetic coordinator step)
 
 use anyhow::{Context, Result};
 
@@ -28,9 +31,10 @@ fn main() -> Result<()> {
         Some("estimate") => cmd_estimate(&args),
         Some("tables") => cmd_tables(&args),
         Some("validate") => cmd_validate(&args),
+        Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: alst <train|search|ablate|estimate|tables|validate> [--key value ...]"
+                "usage: alst <train|search|ablate|estimate|tables|validate|trace> [--key value ...]"
             );
             std::process::exit(2);
         }
@@ -276,6 +280,175 @@ fn cmd_validate(args: &Args) -> Result<()> {
     anyhow::ensure!(failures == 0, "{failures} artifact dir(s) failed validation");
     println!("all artifacts valid");
     Ok(())
+}
+
+/// Run N traced steps and export the two observability artifacts:
+/// Chrome trace-event JSON (`--out`, default trace.json — loads in
+/// Perfetto) and the per-step attribution table on stdout. With compiled
+/// artifacts present the steps are real PJRT train steps; without them
+/// (CI, fresh checkouts) a synthetic coordinator-only step exercises
+/// every traced subsystem so the emitted trace is still representative.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let config = args.get_or("config", "tiny");
+    let sp = args.usize("sp", 2);
+    let seq = args.usize("seq", 256);
+    let steps = args.usize("steps", 2);
+    let out = args.get_or("out", "trace.json");
+    let out_path = std::path::PathBuf::from(&out);
+
+    let dir = alst::runtime::Manifest::artifact_dir(&root, &config, sp, seq);
+    let (spans, mem) = if dir.join("manifest.json").exists() {
+        println!("tracing {steps} PJRT train steps from {}", dir.display());
+        let opts = TrainerOptions {
+            flags: flags_from_args(args),
+            seed: args.usize("seed", 0) as u64,
+            trace: true,
+            // serial ranks: per-rank spans don't overlap in wall time, so
+            // the attribution table reads as a fraction of the step
+            parallel_ranks: false,
+            tiled_loss: args.flag("tiled-loss"),
+            tiled_mlp: args.flag("tiled-mlp"),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&dir, opts)?;
+        let vocab = trainer.manifest.config.vocab;
+        let mut loader =
+            UlyssesDataLoader::new(MarkovSource::new(vocab, seq, 0.05, 1), sp);
+        for _ in 0..steps {
+            let (ids, _) = loader.next();
+            let m = trainer.train_step_accum(&[ids])?;
+            println!(
+                "step {:>4}  loss {:.4}  {:.1}ms",
+                m.step,
+                m.loss,
+                m.step_time.as_secs_f64() * 1e3
+            );
+        }
+        let spans = trainer.tracer().drain();
+        let mem = trainer.device.take_events();
+        (spans, mem)
+    } else {
+        println!(
+            "no artifacts at {} — tracing the synthetic coordinator step \
+             (relayouts, collectives, checkpoint tape, tiled loss sweep, marshal)",
+            dir.display()
+        );
+        synthetic_trace(sp, steps)?
+    };
+
+    let doc = alst::obs::trace_events(&spans, &mem);
+    alst::obs::validate_trace(&doc).context("emitted trace failed validation")?;
+    std::fs::write(&out_path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!(
+        "wrote {} ({} spans, {} memory events)",
+        out_path.display(),
+        spans.len(),
+        mem.len()
+    );
+
+    let report = alst::obs::AttributionReport::build(&spans, &mem);
+    report.to_table().print();
+    for line in report.summary_lines() {
+        println!("{line}");
+    }
+    Ok(())
+}
+
+/// The artifact-free traced workload: per step, a Step span wrapping
+/// relayout cycles (Relayout + Collective spans and the byte ledger),
+/// checkpoint store/fetch through an offloading tape (Offload spans and
+/// `MemoryTracker` events), real `Engine::to_buffer` uploads (Marshal
+/// spans), and a tiled loss sweep over the host reference head (Tile
+/// spans, per-rank via `rank_scope`).
+fn synthetic_trace(
+    sp: usize,
+    steps: usize,
+) -> Result<(Vec<alst::obs::Span>, Vec<alst::obs::MemEvent>)> {
+    use alst::coordinator::dataloader::IGNORE_INDEX;
+    use alst::coordinator::tape::CheckpointTape;
+    use alst::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
+    use alst::obs::{Category, Tracer};
+    use alst::tiling::exec::{HostLossHead, TiledLossExec};
+    use std::sync::Arc;
+
+    let fast = alst::util::bench::fast_mode();
+    let (ssh, n_q, d) = if fast { (256, 8, 16) } else { (1024, 16, 32) };
+    let (hidden, vocab, rows) = if fast { (32, 64, 64) } else { (64, 256, 256) };
+    let n_layers = 2;
+
+    let tracer = Arc::new(Tracer::new(true));
+    let mut engine = alst::runtime::Engine::cpu()?;
+    engine.set_tracer(tracer.clone());
+    let mut group = alst::collectives::Group::new(sp);
+    group.set_tracer(tracer.clone());
+    let mut device = alst::memory::MemoryTracker::new(1 << 40);
+    device.set_tracer(tracer.clone());
+    let mut host = alst::memory::HostPool::new(1 << 40);
+    let arena = alst::runtime::ScratchArena::new();
+    let mut rng = alst::util::rng::Rng::new(7);
+
+    let q: Vec<alst::runtime::HostTensor> = (0..sp)
+        .map(|_| {
+            alst::runtime::HostTensor::f32(
+                vec![ssh, n_q, d],
+                rng.normal_vec(ssh * n_q * d, 1.0),
+            )
+        })
+        .collect();
+    let head = HostLossHead::new(
+        hidden,
+        vocab,
+        IGNORE_INDEX,
+        vec![1.0; hidden],
+        rng.normal_vec(hidden * vocab, 0.02),
+    )?;
+    let h = alst::runtime::HostTensor::f32(
+        vec![ssh, hidden],
+        rng.normal_vec(ssh * hidden, 1.0),
+    );
+    let labels: Vec<i32> = (0..ssh).map(|i| (i % vocab) as i32).collect();
+
+    for step in 0..steps as u64 {
+        let mut step_span = tracer.span(Category::Step, "trace_step");
+        step_span.set_step(step + 1);
+
+        for _ in 0..n_layers {
+            let full = a2a_seq_to_head_into(&group, &q, &arena);
+            let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+            arena.recycle_all(full);
+            arena.recycle_all(back);
+        }
+
+        let mut tape =
+            CheckpointTape::new(n_layers, sp, true).with_tracer(tracer.clone());
+        for li in 0..n_layers {
+            for r in 0..sp {
+                let t = alst::runtime::HostTensor::zeros(&[ssh, hidden]);
+                tape.store(li, r, t, &mut device, &mut host)?;
+            }
+        }
+        for li in (0..n_layers).rev() {
+            for r in 0..sp {
+                let t = tape.fetch(li, r, &mut device, &mut host)?;
+                // marshal: a real host->device literal build on the CPU client
+                std::hint::black_box(engine.to_buffer(&t)?);
+            }
+        }
+
+        for r in 0..sp {
+            let _rank = alst::obs::rank_scope(r);
+            let drv = TiledLossExec::new(ssh, hidden, vocab, rows, IGNORE_INDEX, &arena)?
+                .with_tracer(tracer.clone());
+            let sweep = drv.forward(&mut device, &h, &labels, |ht, lt| {
+                let losses = head.per_row_losses(ht.as_f32()?, lt.as_i32()?)?;
+                Ok(alst::runtime::HostTensor::f32(vec![losses.len()], losses))
+            })?;
+            arena.recycle_f32(sweep.per_row_loss);
+        }
+    }
+    Ok((tracer.drain(), device.take_events()))
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

@@ -6,8 +6,10 @@
 //! expandable-segments allocator is enabled (§3.3).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::GIB;
+use crate::obs::{self, MemEvent, Tracer};
 
 #[derive(Debug, Clone)]
 pub struct DeviceModel {
@@ -78,6 +80,11 @@ pub struct MemoryTracker {
     tag_peaks: BTreeMap<String, u64>,
     /// (time-ordered) samples of `current` for timeline plots.
     pub timeline: Vec<u64>,
+    /// Span correlation: when an enabled tracer is attached, every
+    /// alloc/free also records a [`MemEvent`] naming the innermost open
+    /// span, so a memory peak can name the span that caused it.
+    tracer: Option<Arc<Tracer>>,
+    events: Vec<MemEvent>,
 }
 
 impl MemoryTracker {
@@ -89,7 +96,41 @@ impl MemoryTracker {
             by_tag: BTreeMap::new(),
             tag_peaks: BTreeMap::new(),
             timeline: Vec::new(),
+            tracer: None,
+            events: Vec::new(),
         }
+    }
+
+    /// Attach a tracer for span-correlated memory events. With the shared
+    /// disabled tracer (or none) the alloc/free hot path is unchanged.
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    fn record_event(&mut self, tag: &str, delta: i64) {
+        if let Some(t) = &self.tracer {
+            if t.enabled() {
+                obs::note_mem(delta);
+                self.events.push(MemEvent {
+                    ts_ns: t.now_ns(),
+                    span_id: obs::current_span(),
+                    tag: tag.to_string(),
+                    delta,
+                    current: self.current,
+                });
+            }
+        }
+    }
+
+    /// Span-correlated events recorded since construction (or the last
+    /// `take_events`). Unlike `timeline`, these survive `reset_peak` so a
+    /// multi-step traced run keeps its full memory history.
+    pub fn events(&self) -> &[MemEvent] {
+        &self.events
+    }
+
+    pub fn take_events(&mut self) -> Vec<MemEvent> {
+        std::mem::take(&mut self.events)
     }
 
     pub fn from_model(m: &DeviceModel) -> MemoryTracker {
@@ -97,7 +138,10 @@ impl MemoryTracker {
     }
 
     pub fn alloc(&mut self, bytes: u64, tag: &str) -> Result<(), anyhow::Error> {
-        if self.current + bytes > self.usable {
+        // checked_add: a u64 overflow must OOM, not wrap past the check
+        // (same hazard as `HostPool::alloc`, fixed in PR 2).
+        let want = self.current.checked_add(bytes);
+        if !want.is_some_and(|w| w <= self.usable) {
             return Err(OomError {
                 requested: bytes,
                 in_use: self.current,
@@ -106,7 +150,7 @@ impl MemoryTracker {
             }
             .into());
         }
-        self.current += bytes;
+        self.current = want.unwrap();
         self.peak = self.peak.max(self.current);
         let cur_tag = self.by_tag.entry(tag.to_string()).or_insert(0);
         *cur_tag += bytes;
@@ -114,6 +158,7 @@ impl MemoryTracker {
         let tag_peak = self.tag_peaks.entry(tag.to_string()).or_insert(0);
         *tag_peak = (*tag_peak).max(cur_tag);
         self.timeline.push(self.current);
+        self.record_event(tag, bytes as i64);
         Ok(())
     }
 
@@ -124,6 +169,7 @@ impl MemoryTracker {
             *v = v.saturating_sub(bytes);
         }
         self.timeline.push(self.current);
+        self.record_event(tag, -(bytes as i64));
     }
 
     pub fn current(&self) -> u64 {
@@ -216,6 +262,52 @@ mod tests {
         let err = t.alloc(20, "act").unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("act"), "{msg}");
+    }
+
+    #[test]
+    fn overflow_sized_alloc_reports_oom_not_wraparound() {
+        let mut t = MemoryTracker::new(u64::MAX);
+        t.alloc(u64::MAX - 10, "w").unwrap();
+        // current + bytes would wrap u64 and skip the OOM check.
+        let err = t.alloc(u64::MAX, "huge").unwrap_err();
+        assert!(format!("{err}").contains("huge"));
+        assert_eq!(t.current(), u64::MAX - 10, "current not corrupted");
+        assert_eq!(t.peak(), u64::MAX - 10);
+    }
+
+    #[test]
+    fn events_correlate_allocs_to_open_span() {
+        use crate::obs::{Category, Tracer};
+        let tracer = Arc::new(Tracer::new(true));
+        let mut t = MemoryTracker::new(10_000);
+        t.set_tracer(tracer.clone());
+        let sweep_id = {
+            let g = tracer.span(Category::Tile, "sweep");
+            t.alloc(600, "loss_head").unwrap();
+            t.free(600, "loss_head");
+            g.id()
+        };
+        t.alloc(100, "ckpt").unwrap();
+        let events = t.take_events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].span_id, Some(sweep_id));
+        assert_eq!(events[0].delta, 600);
+        assert_eq!(events[0].current, 600);
+        assert_eq!(events[1].delta, -600);
+        assert_eq!(events[2].span_id, None, "alloc outside any span");
+        // The sweep span carries the net device delta seen while open.
+        let sweep = tracer.drain().into_iter().find(|s| s.name == "sweep").unwrap();
+        assert_eq!(sweep.mem_delta, 0, "alloc+free cancel");
+        assert!(t.events().is_empty(), "take_events drains");
+    }
+
+    #[test]
+    fn disabled_tracer_records_no_events() {
+        let mut t = MemoryTracker::new(1000);
+        t.set_tracer(Tracer::off());
+        t.alloc(100, "a").unwrap();
+        t.free(100, "a");
+        assert!(t.events().is_empty());
     }
 
     #[test]

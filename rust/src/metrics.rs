@@ -111,14 +111,15 @@ impl RunLog {
         self.steps.iter().map(|s| s.tokens).sum()
     }
 
-    /// CSV: step,loss,grad_norm,ms,a2a_bytes,gather_bytes,rs_bytes,ckpt_bytes
+    /// CSV: step,loss,grad_norm,ms,a2a_bytes,gather_bytes,rs_bytes,
+    /// ckpt_bytes,device_peak_bytes
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "step,loss,grad_norm,step_ms,a2a_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes\n",
+            "step,loss,grad_norm,step_ms,a2a_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes,device_peak_bytes\n",
         );
         for m in &self.steps {
             s.push_str(&format!(
-                "{},{:.6},{:.4},{:.1},{},{},{},{}\n",
+                "{},{:.6},{:.4},{:.1},{},{},{},{},{}\n",
                 m.step,
                 m.loss,
                 m.grad_norm,
@@ -127,6 +128,7 @@ impl RunLog {
                 m.gather_bytes,
                 m.reduce_scatter_bytes,
                 m.ckpt_transfer_bytes,
+                m.device_peak_bytes,
             ));
         }
         s
@@ -198,10 +200,20 @@ mod tests {
     #[test]
     fn csv_has_header_and_rows() {
         let mut log = RunLog::default();
-        log.push(step(1, 2.5));
+        let mut m = step(1, 2.5);
+        m.device_peak_bytes = 123_456;
+        log.push(m);
         let csv = log.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert_eq!(csv.lines().count(), 2);
+        // every StepMetrics field the CSV promises is present, including
+        // the measured device peak
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("device_peak_bytes"));
+        assert_eq!(header.split(',').count(), 9);
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').count(), 9);
+        assert!(row.ends_with(",123456"));
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Chrome trace-event JSON export (loads in `chrome://tracing` and
+//! Perfetto). Mapping: pid = simulated rank (coordinator work gets pid 0,
+//! rank r gets pid r+1), tid = subsystem (`Category::tid`), ts in
+//! microseconds since the tracer epoch. Spans are emitted as `B`/`E`
+//! duration-event pairs per (pid, tid) lane — the format the CI validator
+//! checks: every `B` closed by a matching `E`, ts monotonic per lane.
+//! `MemoryTracker` events additionally become `C` counter events so the
+//! device-byte curve renders under the coordinator process.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::tracer::{MemEvent, Span};
+use crate::util::json::Json;
+
+/// pid of coordinator-side (rank-less) spans.
+pub const COORD_PID: u64 = 0;
+
+/// tid of the memory counter lane (outside `Category::tid` range).
+const MEM_TID: u64 = 99;
+
+fn pid_of(rank: Option<usize>) -> u64 {
+    match rank {
+        Some(r) => r as u64 + 1,
+        None => COORD_PID,
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn ts_us(ts_ns: u64) -> Json {
+    Json::Num(ts_ns as f64 / 1000.0)
+}
+
+fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.into()))])),
+    ])
+}
+
+fn begin_event(pid: u64, tid: u64, s: &Span) -> Json {
+    let mut args: Vec<(&str, Json)> = vec![("span_id", Json::Num(s.id as f64))];
+    if s.bytes > 0 {
+        args.push(("bytes", Json::Num(s.bytes as f64)));
+    }
+    if let Some(step) = s.step {
+        args.push(("step", Json::Num(step as f64)));
+    }
+    if s.arena_hits > 0 || s.arena_misses > 0 {
+        args.push(("arena_hits", Json::Num(s.arena_hits as f64)));
+        args.push(("arena_misses", Json::Num(s.arena_misses as f64)));
+    }
+    if s.mem_delta != 0 {
+        args.push(("mem_delta", Json::Num(s.mem_delta as f64)));
+    }
+    obj(vec![
+        ("ph", Json::Str("B".into())),
+        ("name", Json::Str(s.name.clone())),
+        ("cat", Json::Str(s.cat.as_str().into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", ts_us(s.start_ns)),
+        ("args", obj(args)),
+    ])
+}
+
+fn end_event(pid: u64, tid: u64, name: &str, ts_ns: u64) -> Json {
+    obj(vec![
+        ("ph", Json::Str("E".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", ts_us(ts_ns)),
+    ])
+}
+
+/// Build the trace document: `{"traceEvents": [...]}`.
+///
+/// Spans recorded by one logical actor are sequential or properly nested,
+/// so each (pid, tid) lane is emitted with a stack walk: sort by
+/// (start, longest-first), close stacked spans that end before the next
+/// span opens, flush the rest at the end. End timestamps are clamped to
+/// the lane cursor so ts stays monotonic even for degenerate input.
+pub fn trace_events(spans: &[Span], mem: &[MemEvent]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    let mut lanes: BTreeMap<(u64, u64), Vec<&Span>> = BTreeMap::new();
+    for s in spans {
+        lanes.entry((pid_of(s.rank), s.cat.tid())).or_default().push(s);
+    }
+
+    // Metadata: name every process and lane up front.
+    let mut pids: Vec<u64> = lanes.keys().map(|&(p, _)| p).collect();
+    if !mem.is_empty() {
+        pids.push(COORD_PID);
+    }
+    pids.sort_unstable();
+    pids.dedup();
+    for &pid in &pids {
+        let pname = if pid == COORD_PID {
+            "coordinator".to_string()
+        } else {
+            format!("rank {}", pid - 1)
+        };
+        events.push(meta_event("process_name", pid, 0, &pname));
+    }
+    for (&(pid, tid), lane) in &lanes {
+        events.push(meta_event("thread_name", pid, tid, lane[0].cat.as_str()));
+    }
+    if !mem.is_empty() {
+        events.push(meta_event("thread_name", COORD_PID, MEM_TID, "device memory"));
+    }
+
+    for ((pid, tid), mut lane) in lanes {
+        lane.sort_by_key(|s| (s.start_ns, std::cmp::Reverse(s.dur_ns), s.id));
+        let mut stack: Vec<&Span> = Vec::new();
+        let mut cursor = 0u64;
+        for s in lane {
+            while let Some(&top) = stack.last() {
+                if top.end_ns() <= s.start_ns {
+                    cursor = cursor.max(top.end_ns());
+                    events.push(end_event(pid, tid, &top.name, cursor));
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            cursor = cursor.max(s.start_ns);
+            events.push(begin_event(pid, tid, s));
+            stack.push(s);
+        }
+        while let Some(top) = stack.pop() {
+            cursor = cursor.max(top.end_ns());
+            events.push(end_event(pid, tid, &top.name, cursor));
+        }
+    }
+
+    for e in mem {
+        events.push(obj(vec![
+            ("ph", Json::Str("C".into())),
+            ("name", Json::Str("device_bytes".into())),
+            ("pid", Json::Num(COORD_PID as f64)),
+            ("tid", Json::Num(MEM_TID as f64)),
+            ("ts", ts_us(e.ts_ns)),
+            ("args", obj(vec![("bytes", Json::Num(e.current as f64))])),
+        ]));
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Write the trace document to `path`.
+pub fn write_trace(path: &Path, spans: &[Span], mem: &[MemEvent]) -> Result<()> {
+    let doc = trace_events(spans, mem);
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// Validate a trace-event document: known phases only, every event carries
+/// pid/tid/ts, timestamps are monotonic (non-decreasing) per (pid, tid)
+/// lane, and every `B` is closed by an `E` with the same name (LIFO).
+/// This is the contract the CI bench-smoke job checks on `trace.json`.
+pub fn validate_trace(doc: &Json) -> Result<()> {
+    let events = doc
+        .field("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("traceEvents is not an array"))?;
+    ensure!(!events.is_empty(), "traceEvents is empty");
+
+    // Per-lane state: (last ts, stack of open B names).
+    let mut lanes: BTreeMap<(i64, i64), (f64, Vec<String>)> = BTreeMap::new();
+    let mut durations = 0usize;
+    for e in events {
+        let ph = e.str_field("ph")?;
+        if ph == "M" {
+            continue;
+        }
+        if !matches!(ph, "B" | "E" | "C" | "i") {
+            bail!("unknown event phase `{ph}`");
+        }
+        let pid = e
+            .field("pid")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("pid is not a number"))?;
+        let tid = e
+            .field("tid")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("tid is not a number"))?;
+        let ts = e.f64_field("ts")?;
+        ensure!(ts >= 0.0, "negative ts");
+        let lane = lanes.entry((pid, tid)).or_insert((f64::NEG_INFINITY, Vec::new()));
+        ensure!(
+            ts >= lane.0,
+            "ts not monotonic in lane pid={pid} tid={tid}: {ts} < {}",
+            lane.0
+        );
+        lane.0 = ts;
+        match ph {
+            "B" => {
+                lane.1.push(e.str_field("name")?.to_string());
+                durations += 1;
+            }
+            "E" => {
+                let open = lane
+                    .1
+                    .pop()
+                    .ok_or_else(|| anyhow::anyhow!("E without open B in lane pid={pid} tid={tid}"))?;
+                if let Some(name) = e.get("name").and_then(|n| n.as_str()) {
+                    ensure!(
+                        name == open,
+                        "E name `{name}` does not close B `{open}` in lane pid={pid} tid={tid}"
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((pid, tid), (_, open)) in lanes {
+        ensure!(
+            open.is_empty(),
+            "unclosed B [{}] in lane pid={pid} tid={tid}",
+            open.join(", ")
+        );
+    }
+    ensure!(durations > 0, "trace contains no duration events");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::{Category, Tracer};
+
+    fn sample_spans() -> Vec<Span> {
+        let t = Tracer::new(true);
+        {
+            let mut step = t.span(Category::Step, "train_step");
+            step.set_step(1);
+            {
+                let mut g = t.span(Category::Exec, "tiny-sp2-seq256/attn_fwd");
+                g.set_rank(0);
+                g.set_bytes(4096);
+            }
+            {
+                let mut g = t.span(Category::Collective, "all_gather");
+                g.set_rank(1);
+                g.set_bytes(24);
+                g.set_dur(std::time::Duration::ZERO);
+            }
+        }
+        t.drain()
+    }
+
+    #[test]
+    fn export_passes_validator() {
+        let spans = sample_spans();
+        let mem = vec![MemEvent {
+            ts_ns: 10,
+            span_id: Some(spans[0].id),
+            tag: "mlp".into(),
+            delta: 1024,
+            current: 1024,
+        }];
+        let doc = trace_events(&spans, &mem);
+        validate_trace(&doc).unwrap();
+        // Round-trips through the in-tree parser.
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        validate_trace(&parsed).unwrap();
+    }
+
+    #[test]
+    fn pid_maps_rank_and_coordinator() {
+        assert_eq!(pid_of(None), COORD_PID);
+        assert_eq!(pid_of(Some(0)), 1);
+        assert_eq!(pid_of(Some(7)), 8);
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_and_nonmonotonic() {
+        // Unclosed B.
+        let doc = Json::parse(
+            r#"{"traceEvents": [{"ph": "B", "name": "x", "pid": 0, "tid": 0, "ts": 1}]}"#,
+        )
+        .unwrap();
+        assert!(validate_trace(&doc).is_err());
+        // E without B.
+        let doc = Json::parse(
+            r#"{"traceEvents": [{"ph": "E", "name": "x", "pid": 0, "tid": 0, "ts": 1}]}"#,
+        )
+        .unwrap();
+        assert!(validate_trace(&doc).is_err());
+        // Non-monotonic ts within one lane.
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "B", "name": "x", "pid": 0, "tid": 0, "ts": 5},
+                {"ph": "E", "name": "x", "pid": 0, "tid": 0, "ts": 3}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_trace(&doc).is_err());
+        // Balanced + monotonic passes.
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "B", "name": "x", "pid": 0, "tid": 0, "ts": 3},
+                {"ph": "E", "name": "x", "pid": 0, "tid": 0, "ts": 5}
+            ]}"#,
+        )
+        .unwrap();
+        validate_trace(&doc).unwrap();
+    }
+
+    #[test]
+    fn zero_duration_spans_emit_balanced_pairs() {
+        let t = Tracer::new(true);
+        for i in 0..3 {
+            let mut g = t.span(Category::Collective, "account");
+            g.set_bytes(i);
+            g.set_dur(std::time::Duration::ZERO);
+        }
+        let doc = trace_events(&t.drain(), &[]);
+        validate_trace(&doc).unwrap();
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: the unified step tracer.
+//!
+//! The repo's four telemetry surfaces (`EngineStats`, `CommStats`,
+//! `MemoryTracker`, arena hit/miss) are scalar ledgers — they say *how
+//! much* but never *when* or *which rank*. This module adds the missing
+//! timeline: structured spans recorded by a lock-sharded [`Tracer`],
+//! exported as Chrome trace-event JSON ([`chrome`]) and summarized as a
+//! per-step attribution table ([`report`]) whose category sums reconcile
+//! with the existing ledgers (see `tests/obs_trace.rs`).
+//!
+//! Everything hangs off one `Arc<Tracer>` created by the `Trainer` when
+//! `TrainerOptions::trace` is set (or by the `trace` subcommand) and
+//! installed into the engine, the collectives group, the memory tracker,
+//! the checkpoint tape, and the tile drivers. When tracing is off the
+//! shared [`Tracer::off`] handle is installed instead and every span site
+//! costs one branch — no allocation, no clock read, no lock (pinned by
+//! the `span site (tracer disabled)` row in `BENCH_pipeline.json`).
+
+pub mod chrome;
+pub mod report;
+pub mod tracer;
+
+pub use chrome::{trace_events, validate_trace, write_trace, COORD_PID};
+pub use report::{AttributionReport, CatTotals, MemPeak, StepAttribution};
+pub use tracer::{
+    current_rank, current_span, note_mem, rank_scope, set_current_rank, Category, MemEvent,
+    RankScope, Span, SpanGuard, Tracer,
+};

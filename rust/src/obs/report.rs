@@ -1,0 +1,288 @@
+//! Per-step attribution: where did the step's wall-clock go?
+//!
+//! Each `Step` span defines a window; every *leaf* span (exec, marshal,
+//! relayout, collective, offload, optimizer) that starts inside the window
+//! is summed into its category. Container spans (`Step`, `Tile`) are
+//! excluded so a tile sweep's time is not counted twice alongside the
+//! exec spans it encloses. The "untracked" column is
+//! `max(0, step_time - sum(leaf durations))` — the gap no span explains.
+//!
+//! Attribution reads as a *fraction of the step* only when rank work does
+//! not overlap in time (`parallel_ranks: false`, the `trace` subcommand's
+//! default); under threaded ranks the leaf sums can legitimately exceed
+//! step_time because concurrent spans stack.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::bench::Table;
+
+use super::tracer::{Category, MemEvent, Span};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CatTotals {
+    pub dur: Duration,
+    pub bytes: u64,
+    pub spans: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepAttribution {
+    /// The step span's `step` attribute (optimizer step counter).
+    pub step: Option<u64>,
+    /// The step span's duration — set from the exact `Duration` stored in
+    /// `StepMetrics::step_time`, so the two agree bit-for-bit.
+    pub step_time: Duration,
+    /// Leaf categories only.
+    pub by_cat: BTreeMap<Category, CatTotals>,
+    pub untracked: Duration,
+}
+
+impl StepAttribution {
+    pub fn cat(&self, c: Category) -> CatTotals {
+        self.by_cat.get(&c).copied().unwrap_or_default()
+    }
+
+    /// Sum of all leaf-category durations in this step.
+    pub fn tracked(&self) -> Duration {
+        self.by_cat.values().map(|t| t.dur).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MemPeak {
+    pub bytes: u64,
+    pub span_id: Option<u64>,
+    /// Name of the span that was open when the peak was reached, or
+    /// `"(no span)"` when the peak happened outside any span.
+    pub span_name: String,
+    pub tag: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct AttributionReport {
+    pub steps: Vec<StepAttribution>,
+    /// Per-category totals over *all* spans in the trace (every category,
+    /// in- and outside step windows) — the reconciliation surface:
+    /// exec/marshal totals equal `EngineStats` times exactly, collective
+    /// bytes equal the `CommStats` ledger.
+    pub totals: BTreeMap<Category, CatTotals>,
+    pub mem_peak: Option<MemPeak>,
+}
+
+fn acc(map: &mut BTreeMap<Category, CatTotals>, s: &Span) {
+    let t = map.entry(s.cat).or_default();
+    t.dur += s.dur();
+    t.bytes += s.bytes;
+    t.spans += 1;
+}
+
+impl AttributionReport {
+    pub fn build(spans: &[Span], mem: &[MemEvent]) -> AttributionReport {
+        let mut totals = BTreeMap::new();
+        for s in spans {
+            acc(&mut totals, s);
+        }
+
+        let mut step_spans: Vec<&Span> =
+            spans.iter().filter(|s| s.cat == Category::Step).collect();
+        step_spans.sort_by_key(|s| (s.start_ns, s.id));
+
+        let mut steps = Vec::new();
+        for ss in &step_spans {
+            let mut by_cat = BTreeMap::new();
+            for s in spans {
+                if s.cat.is_leaf() && s.start_ns >= ss.start_ns && s.start_ns < ss.end_ns() {
+                    acc(&mut by_cat, s);
+                }
+            }
+            let step_time = ss.dur();
+            let tracked: Duration = by_cat.values().map(|t: &CatTotals| t.dur).sum();
+            steps.push(StepAttribution {
+                step: ss.step,
+                step_time,
+                by_cat,
+                untracked: step_time.saturating_sub(tracked),
+            });
+        }
+
+        let mem_peak = mem.iter().max_by_key(|e| e.current).map(|e| {
+            let span_name = e
+                .span_id
+                .and_then(|id| spans.iter().find(|s| s.id == id))
+                .map(|s| s.name.clone())
+                .unwrap_or_else(|| "(no span)".to_string());
+            MemPeak {
+                bytes: e.current,
+                span_id: e.span_id,
+                span_name,
+                tag: e.tag.clone(),
+            }
+        });
+
+        AttributionReport { steps, totals, mem_peak }
+    }
+
+    pub fn total(&self, c: Category) -> CatTotals {
+        self.totals.get(&c).copied().unwrap_or_default()
+    }
+
+    /// The ASCII attribution table (milliseconds per category per step).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "per-step attribution (ms)",
+            &[
+                "step",
+                "total",
+                "exec",
+                "marshal",
+                "relayout",
+                "collective",
+                "offload",
+                "optimizer",
+                "untracked",
+            ],
+        );
+        let ms = |d: Duration| format!("{:.3}", d.as_secs_f64() * 1e3);
+        for s in &self.steps {
+            t.row(&[
+                s.step.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+                ms(s.step_time),
+                ms(s.cat(Category::Exec).dur),
+                ms(s.cat(Category::Marshal).dur),
+                ms(s.cat(Category::Relayout).dur),
+                ms(s.cat(Category::Collective).dur),
+                ms(s.cat(Category::Offload).dur),
+                ms(s.cat(Category::Optimizer).dur),
+                ms(s.untracked),
+            ]);
+        }
+        t
+    }
+
+    /// Byte-ledger and memory-peak summary lines printed under the table.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for c in Category::ALL {
+            let t = self.total(c);
+            if t.spans > 0 {
+                out.push(format!(
+                    "  {:<10} {:>6} spans  {:>12} bytes  {:>10.3} ms",
+                    c.as_str(),
+                    t.spans,
+                    t.bytes,
+                    t.dur.as_secs_f64() * 1e3
+                ));
+            }
+        }
+        if let Some(p) = &self.mem_peak {
+            out.push(format!(
+                "  memory peak: {} bytes (tag `{}`) inside span `{}`",
+                p.bytes, p.tag, p.span_name
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::Tracer;
+
+    fn span(
+        t: &Tracer,
+        cat: Category,
+        name: &str,
+        dur_ns: u64,
+        bytes: u64,
+        step: Option<u64>,
+    ) {
+        let mut g = t.span(cat, name);
+        g.set_dur(Duration::from_nanos(dur_ns));
+        g.set_bytes(bytes);
+        if let Some(s) = step {
+            g.set_step(s);
+        }
+    }
+
+    #[test]
+    fn untracked_gap_is_step_minus_leaf_sum() {
+        let t = Tracer::new(true);
+        // A wide synthetic window: the leaf guards below are created some
+        // real microseconds after the step span opens and must land inside.
+        let step_time = Duration::from_secs(1);
+        {
+            let mut stp = t.span(Category::Step, "train_step");
+            stp.set_dur(step_time);
+            stp.set_step(1);
+            span(&t, Category::Exec, "fwd", 300, 0, None);
+            span(&t, Category::Marshal, "upload", 100, 64, None);
+            span(&t, Category::Collective, "a2a", 50, 128, None);
+            // Containers never enter the sums.
+            span(&t, Category::Tile, "sweep", 400, 0, None);
+        }
+        let rep = AttributionReport::build(&t.drain(), &[]);
+        assert_eq!(rep.steps.len(), 1);
+        let s = &rep.steps[0];
+        assert_eq!(s.step, Some(1));
+        assert_eq!(s.step_time, step_time);
+        assert_eq!(s.tracked(), Duration::from_nanos(450));
+        assert_eq!(s.untracked, step_time - Duration::from_nanos(450));
+        assert_eq!(s.cat(Category::Exec).dur, Duration::from_nanos(300));
+        assert_eq!(s.cat(Category::Collective).bytes, 128);
+        assert!(s.by_cat.get(&Category::Tile).is_none());
+    }
+
+    #[test]
+    fn spans_outside_step_windows_count_only_in_totals() {
+        let t = Tracer::new(true);
+        span(&t, Category::Marshal, "warmup", 10, 32, None);
+        // Ensure the step window opens strictly after the warmup span.
+        std::thread::sleep(Duration::from_millis(1));
+        {
+            let mut stp = t.span(Category::Step, "train_step");
+            stp.set_dur(Duration::from_secs(1));
+            span(&t, Category::Exec, "fwd", 40, 0, None);
+        }
+        let rep = AttributionReport::build(&t.drain(), &[]);
+        assert_eq!(rep.steps.len(), 1);
+        assert_eq!(rep.steps[0].cat(Category::Marshal).spans, 0);
+        assert_eq!(rep.total(Category::Marshal).bytes, 32);
+        assert_eq!(rep.total(Category::Exec).spans, 1);
+    }
+
+    #[test]
+    fn mem_peak_names_causing_span() {
+        let t = Tracer::new(true);
+        let id = {
+            let mut g = t.span(Category::Tile, "loss_fwd_tiles");
+            g.set_dur(Duration::from_nanos(10));
+            g.id()
+        };
+        let mem = vec![
+            MemEvent { ts_ns: 1, span_id: Some(id), tag: "loss_head".into(), delta: 512, current: 512 },
+            MemEvent { ts_ns: 2, span_id: None, tag: "mlp".into(), delta: 128, current: 128 },
+        ];
+        let rep = AttributionReport::build(&t.drain(), &mem);
+        let p = rep.mem_peak.unwrap();
+        assert_eq!(p.bytes, 512);
+        assert_eq!(p.span_name, "loss_fwd_tiles");
+        assert_eq!(p.tag, "loss_head");
+    }
+
+    #[test]
+    fn table_has_one_row_per_step() {
+        let t = Tracer::new(true);
+        for i in 0..3u64 {
+            let mut stp = t.span(Category::Step, "train_step");
+            stp.set_dur(Duration::from_nanos(100));
+            stp.set_step(i + 1);
+        }
+        let rep = AttributionReport::build(&t.drain(), &[]);
+        let table = rep.to_table();
+        assert_eq!(table.rows.len(), 3);
+        assert_eq!(table.header.len(), 9);
+        assert!(table.to_csv().starts_with("step,total,exec"));
+    }
+}

@@ -1,0 +1,515 @@
+//! The span recorder. One `Tracer` per run, shared as `Arc<Tracer>` by the
+//! engine, collectives group, memory tracker, tape, and tile drivers.
+//!
+//! Disabled-mode contract: a span site costs one branch and constructs a
+//! stack-only inert guard — no heap allocation, no clock read, no lock.
+//! The `String` for a span's name is allocated only when the span is
+//! actually recorded (guard drop on an enabled tracer).
+//!
+//! Concurrency: recording is lock-sharded — span ids come from one atomic
+//! counter and each span lands in `shards[id % N]`, so scoped rank threads
+//! rarely contend on the same mutex. Rank attribution rides a thread-local
+//! set by `run_ranks` around every rank closure (serial and threaded), the
+//! same pattern that makes the `CommStats` ledger interleaving-proof: what
+//! is recorded per span is order-independent, so the threaded and serial
+//! schedules produce the same span multiset.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Span taxonomy. `Step` and `Tile` are *containers*: they enclose leaf
+/// spans (a tile sweep contains the per-tile exec spans) and are excluded
+/// from per-step attribution sums so time is not double-counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    Step,
+    Exec,
+    Marshal,
+    Relayout,
+    Collective,
+    Offload,
+    Optimizer,
+    Tile,
+}
+
+impl Category {
+    pub const ALL: [Category; 8] = [
+        Category::Step,
+        Category::Exec,
+        Category::Marshal,
+        Category::Relayout,
+        Category::Collective,
+        Category::Offload,
+        Category::Optimizer,
+        Category::Tile,
+    ];
+
+    /// Leaf categories enter the attribution sums; containers do not.
+    pub const LEAVES: [Category; 6] = [
+        Category::Exec,
+        Category::Marshal,
+        Category::Relayout,
+        Category::Collective,
+        Category::Offload,
+        Category::Optimizer,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Step => "step",
+            Category::Exec => "exec",
+            Category::Marshal => "marshal",
+            Category::Relayout => "relayout",
+            Category::Collective => "collective",
+            Category::Offload => "offload",
+            Category::Optimizer => "optimizer",
+            Category::Tile => "tile",
+        }
+    }
+
+    /// Stable Chrome-trace thread id (tid=subsystem lane).
+    pub fn tid(self) -> u64 {
+        match self {
+            Category::Step => 0,
+            Category::Exec => 1,
+            Category::Marshal => 2,
+            Category::Relayout => 3,
+            Category::Collective => 4,
+            Category::Offload => 5,
+            Category::Optimizer => 6,
+            Category::Tile => 7,
+        }
+    }
+
+    pub fn is_leaf(self) -> bool {
+        !matches!(self, Category::Step | Category::Tile)
+    }
+}
+
+/// One recorded span. Timestamps are nanoseconds since the tracer's epoch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u64,
+    pub name: String,
+    pub cat: Category,
+    /// Simulated rank, from `set_rank` or the `run_ranks` thread-local;
+    /// `None` for coordinator-side work (uploads, optimizer bookkeeping).
+    pub rank: Option<usize>,
+    pub step: Option<u64>,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Bytes moved (ledger parity with `CommStats` / `EngineStats`).
+    pub bytes: u64,
+    pub arena_hits: u64,
+    pub arena_misses: u64,
+    /// Net tracked device bytes allocated minus freed while the span was
+    /// open on its thread (see [`note_mem`]).
+    pub mem_delta: i64,
+}
+
+impl Span {
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns + self.dur_ns
+    }
+
+    pub fn dur(&self) -> Duration {
+        Duration::from_nanos(self.dur_ns)
+    }
+}
+
+/// One `MemoryTracker` alloc/free event, correlated to the innermost open
+/// span on the recording thread so a memory peak can name its cause.
+#[derive(Debug, Clone)]
+pub struct MemEvent {
+    pub ts_ns: u64,
+    pub span_id: Option<u64>,
+    pub tag: String,
+    /// Signed byte delta: positive for alloc, negative for free.
+    pub delta: i64,
+    /// Tracked bytes in use immediately after the event.
+    pub current: u64,
+}
+
+const SHARDS: usize = 8;
+
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    epoch: Instant,
+    next_id: AtomicU64,
+    /// Empty when disabled (a disabled tracer allocates nothing).
+    shards: Vec<Mutex<Vec<Span>>>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Tracer {
+        let shards = if enabled {
+            (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect()
+        } else {
+            Vec::new()
+        };
+        Tracer { enabled, epoch: Instant::now(), next_id: AtomicU64::new(1), shards }
+    }
+
+    /// The process-wide disabled tracer: the default handle installed into
+    /// `Engine` / `Group` / drivers so every span site stays a single
+    /// branch when tracing is off, with no per-object allocation.
+    pub fn off() -> Arc<Tracer> {
+        static OFF: OnceLock<Arc<Tracer>> = OnceLock::new();
+        OFF.get_or_init(|| Arc::new(Tracer::new(false))).clone()
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Nanoseconds since this tracer's epoch (the run start).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span. The guard records on drop; the disabled path returns
+    /// an inert guard without touching the clock or the heap.
+    pub fn span<'t>(&'t self, cat: Category, name: &'t str) -> SpanGuard<'t> {
+        if !self.enabled {
+            return SpanGuard {
+                tracer: None,
+                id: 0,
+                name,
+                cat,
+                start_ns: 0,
+                start: None,
+                dur: None,
+                rank: None,
+                step: None,
+                bytes: 0,
+                arena_hits: 0,
+                arena_misses: 0,
+                mem0: 0,
+            };
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let start_ns = self.now_ns();
+        push_span_stack(id);
+        SpanGuard {
+            tracer: Some(self),
+            id,
+            name,
+            cat,
+            start_ns,
+            start: Some(Instant::now()),
+            dur: None,
+            rank: None,
+            step: None,
+            bytes: 0,
+            arena_hits: 0,
+            arena_misses: 0,
+            mem0: mem_counter(),
+        }
+    }
+
+    fn push(&self, span: Span) {
+        let shard = (span.id as usize) % self.shards.len();
+        self.shards[shard].lock().unwrap().push(span);
+    }
+
+    /// Remove and return all recorded spans, sorted by (start, id).
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.append(&mut s.lock().unwrap());
+        }
+        out.sort_by_key(|s| (s.start_ns, s.id));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// RAII span handle. Attributes default to empty; set what applies before
+/// the guard drops. `set_dur` overrides the measured elapsed time with an
+/// externally timed duration so span sums can reconcile *exactly* with a
+/// ledger that accumulated the same `Duration` (e.g. `EngineStats`).
+pub struct SpanGuard<'t> {
+    tracer: Option<&'t Tracer>,
+    id: u64,
+    name: &'t str,
+    cat: Category,
+    start_ns: u64,
+    start: Option<Instant>,
+    dur: Option<Duration>,
+    rank: Option<usize>,
+    step: Option<u64>,
+    bytes: u64,
+    arena_hits: u64,
+    arena_misses: u64,
+    mem0: i64,
+}
+
+impl SpanGuard<'_> {
+    /// True when the span will actually be recorded.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Span id (0 for an inert guard).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    #[inline]
+    pub fn set_bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+
+    #[inline]
+    pub fn add_bytes(&mut self, bytes: u64) {
+        self.bytes += bytes;
+    }
+
+    #[inline]
+    pub fn set_rank(&mut self, rank: usize) {
+        self.rank = Some(rank);
+    }
+
+    #[inline]
+    pub fn set_step(&mut self, step: u64) {
+        self.step = Some(step);
+    }
+
+    #[inline]
+    pub fn set_dur(&mut self, dur: Duration) {
+        self.dur = Some(dur);
+    }
+
+    #[inline]
+    pub fn set_arena_delta(&mut self, hits: u64, misses: u64) {
+        self.arena_hits = hits;
+        self.arena_misses = misses;
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(t) = self.tracer else { return };
+        pop_span_stack(self.id);
+        let dur = self
+            .dur
+            .unwrap_or_else(|| self.start.map(|s| s.elapsed()).unwrap_or(Duration::ZERO));
+        t.push(Span {
+            id: self.id,
+            name: self.name.to_string(),
+            cat: self.cat,
+            rank: self.rank.or_else(current_rank),
+            step: self.step,
+            start_ns: self.start_ns,
+            dur_ns: dur.as_nanos() as u64,
+            bytes: self.bytes,
+            arena_hits: self.arena_hits,
+            arena_misses: self.arena_misses,
+            mem_delta: mem_counter() - self.mem0,
+        });
+    }
+}
+
+thread_local! {
+    static CURRENT_RANK: Cell<Option<usize>> = const { Cell::new(None) };
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    static MEM_COUNTER: Cell<i64> = const { Cell::new(0) };
+}
+
+/// The rank tag for spans recorded on this thread, if any.
+pub fn current_rank() -> Option<usize> {
+    CURRENT_RANK.with(|c| c.get())
+}
+
+/// Install this thread's rank tag; returns the previous value so callers
+/// can restore it. `run_ranks` brackets every rank closure with this (in
+/// both the serial and the scoped-thread path).
+pub fn set_current_rank(rank: Option<usize>) -> Option<usize> {
+    CURRENT_RANK.with(|c| c.replace(rank))
+}
+
+/// RAII rank tag for serial per-rank loops on the coordinator thread.
+pub struct RankScope {
+    prev: Option<usize>,
+}
+
+pub fn rank_scope(rank: usize) -> RankScope {
+    RankScope { prev: set_current_rank(Some(rank)) }
+}
+
+impl Drop for RankScope {
+    fn drop(&mut self) {
+        set_current_rank(self.prev);
+    }
+}
+
+/// Innermost live span on this thread; memory events attach to it.
+pub fn current_span() -> Option<u64> {
+    SPAN_STACK.with(|s| s.borrow().last().copied())
+}
+
+fn push_span_stack(id: u64) {
+    SPAN_STACK.with(|s| s.borrow_mut().push(id));
+}
+
+fn pop_span_stack(id: u64) {
+    SPAN_STACK.with(|s| {
+        let mut st = s.borrow_mut();
+        // Guards drop LIFO in practice; tolerate out-of-order drops.
+        if let Some(pos) = st.iter().rposition(|&x| x == id) {
+            st.remove(pos);
+        }
+    });
+}
+
+/// Accumulate a tracked device-byte delta on this thread; open spans
+/// snapshot the counter at open and close to derive their `mem_delta`.
+/// Called by `MemoryTracker` only while an enabled tracer is attached.
+pub fn note_mem(delta: i64) {
+    MEM_COUNTER.with(|c| c.set(c.get() + delta));
+}
+
+fn mem_counter() -> i64 {
+    MEM_COUNTER.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_allocates_nothing() {
+        let t = Tracer::new(false);
+        {
+            let mut g = t.span(Category::Exec, "noop");
+            g.set_bytes(123);
+            assert!(!g.active());
+            assert_eq!(g.id(), 0);
+        }
+        assert!(t.is_empty());
+        assert!(t.drain().is_empty());
+        // A disabled tracer has no shard storage at all.
+        assert_eq!(t.shards.len(), 0);
+    }
+
+    #[test]
+    fn enabled_span_records_attributes() {
+        let t = Tracer::new(true);
+        {
+            let mut g = t.span(Category::Collective, "all_gather");
+            g.set_bytes(4096);
+            g.set_rank(3);
+            g.set_arena_delta(2, 1);
+        }
+        let spans = t.drain();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.name, "all_gather");
+        assert_eq!(s.cat, Category::Collective);
+        assert_eq!(s.bytes, 4096);
+        assert_eq!(s.rank, Some(3));
+        assert_eq!((s.arena_hits, s.arena_misses), (2, 1));
+        assert!(t.is_empty(), "drain removes spans");
+    }
+
+    #[test]
+    fn set_dur_overrides_measured_elapsed() {
+        let t = Tracer::new(true);
+        {
+            let mut g = t.span(Category::Exec, "stage");
+            std::thread::sleep(Duration::from_millis(2));
+            g.set_dur(Duration::from_nanos(777));
+        }
+        assert_eq!(t.drain()[0].dur_ns, 777);
+    }
+
+    #[test]
+    fn rank_comes_from_thread_local_when_unset() {
+        let t = Tracer::new(true);
+        {
+            let _scope = rank_scope(5);
+            let _g = t.span(Category::Relayout, "a2a");
+        }
+        {
+            let _g = t.span(Category::Marshal, "upload");
+        }
+        let spans = t.drain();
+        let a2a = spans.iter().find(|s| s.name == "a2a").unwrap();
+        let up = spans.iter().find(|s| s.name == "upload").unwrap();
+        assert_eq!(a2a.rank, Some(5));
+        assert_eq!(up.rank, None);
+        assert_eq!(current_rank(), None, "rank scope restored");
+    }
+
+    #[test]
+    fn span_stack_tracks_nesting() {
+        let t = Tracer::new(true);
+        assert_eq!(current_span(), None);
+        {
+            let outer = t.span(Category::Step, "step");
+            assert_eq!(current_span(), Some(outer.id()));
+            {
+                let inner = t.span(Category::Exec, "stage");
+                assert_eq!(current_span(), Some(inner.id()));
+            }
+            assert_eq!(current_span(), Some(outer.id()));
+        }
+        assert_eq!(current_span(), None);
+        let spans = t.drain();
+        assert_eq!(spans.len(), 2);
+        // Sorted by start: the step span opened first.
+        assert_eq!(spans[0].cat, Category::Step);
+        assert!(spans[0].start_ns <= spans[1].start_ns);
+    }
+
+    #[test]
+    fn mem_counter_attributes_delta_to_open_span() {
+        let t = Tracer::new(true);
+        {
+            let _g = t.span(Category::Tile, "sweep");
+            note_mem(1024);
+            note_mem(-256);
+        }
+        let s = t.drain().pop().unwrap();
+        assert_eq!(s.mem_delta, 768);
+        // Counter is cumulative per-thread; neutralize for other tests.
+        note_mem(-768);
+    }
+
+    #[test]
+    fn ids_are_unique_across_threads() {
+        let t = Tracer::new(true);
+        std::thread::scope(|scope| {
+            for r in 0..4 {
+                let t = &t;
+                scope.spawn(move || {
+                    let _s = set_current_rank(Some(r));
+                    for i in 0..50 {
+                        let mut g = t.span(Category::Exec, "work");
+                        g.set_bytes(i);
+                    }
+                    set_current_rank(None);
+                });
+            }
+        });
+        let spans = t.drain();
+        assert_eq!(spans.len(), 200);
+        let mut ids: Vec<u64> = spans.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 200, "span ids unique under concurrency");
+    }
+}

@@ -6,11 +6,12 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::{Category, Tracer};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::HostTensor;
 
@@ -36,12 +37,30 @@ pub struct Engine {
     /// scoped rank threads; every update is a commutative sum, so the
     /// totals are deterministic under any thread interleaving.
     stats: Mutex<EngineStats>,
+    /// Span recorder; the shared disabled handle unless `set_tracer`
+    /// installed a live one. Exec/marshal spans carry the *same*
+    /// `Duration` values the stats ledger accumulates, so span sums
+    /// reconcile with `EngineStats` exactly.
+    tracer: Arc<Tracer>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, executables: HashMap::new(), stats: Mutex::default() })
+        Ok(Engine {
+            client,
+            executables: HashMap::new(),
+            stats: Mutex::default(),
+            tracer: Tracer::off(),
+        })
+    }
+
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     pub fn platform(&self) -> String {
@@ -82,6 +101,7 @@ impl Engine {
     /// instead of twice per stage call (to_literal + execute's internal
     /// device copy).
     pub fn to_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let mut span = self.tracer.span(Category::Marshal, "to_buffer");
         let t0 = Instant::now();
         let buf = match t {
             HostTensor::F32 { shape, data } => {
@@ -91,9 +111,12 @@ impl Engine {
                 self.client.buffer_from_host_buffer(data, shape, None)?
             }
         };
+        let marshal = t0.elapsed();
         let mut s = self.stats.lock().unwrap();
-        s.marshal_time += t0.elapsed();
+        s.marshal_time += marshal;
         s.bytes_in += t.size_bytes() as u64;
+        span.set_dur(marshal);
+        span.set_bytes(t.size_bytes() as u64);
         Ok(buf)
     }
 
@@ -107,6 +130,7 @@ impl Engine {
             .executables
             .get(key)
             .ok_or_else(|| anyhow::anyhow!("stage `{key}` not loaded"))?;
+        let mut span = self.tracer.span(Category::Exec, key);
         let t1 = Instant::now();
         let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
         let mut tuple = result[0][0].to_literal_sync()?;
@@ -118,12 +142,15 @@ impl Engine {
             .iter()
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
+        let bytes_out = outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
 
         let mut s = self.stats.lock().unwrap();
         s.executions += 1;
         *s.per_stage.entry(key.to_string()).or_insert(0) += 1;
         s.exec_time += exec;
-        s.bytes_out += outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
+        s.bytes_out += bytes_out;
+        span.set_dur(exec);
+        span.set_bytes(bytes_out);
         Ok(outputs)
     }
 

@@ -42,9 +42,12 @@
 //! [`MLP_TAG`] with the gate/up/down working set, doubled in backward
 //! (the estimator's `bwd_factor`).
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::memory::MemoryTracker;
+use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::{copy_rows, HostTensor, ScratchArena};
 use crate::tiling::{plan_logits_rows, plan_mlp_rows, TilePlan};
 
@@ -95,6 +98,7 @@ pub struct TiledLossExec<'a> {
     hidden: usize,
     ignore_index: i32,
     arena: &'a ScratchArena,
+    tracer: Arc<Tracer>,
 }
 
 impl<'a> TiledLossExec<'a> {
@@ -115,7 +119,24 @@ impl<'a> TiledLossExec<'a> {
             hidden,
             ignore_index,
             arena,
+            tracer: Tracer::off(),
         })
+    }
+
+    /// Builder: record a `Tile` container span per sweep on `tracer`.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> TiledLossExec<'a> {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Open the per-sweep container span (inert when tracing is off).
+    fn sweep_span(&self, name: &'static str) -> (crate::obs::SpanGuard<'_>, u64, u64) {
+        let (hits0, misses0) = if self.tracer.enabled() {
+            (self.arena.hits(), self.arena.misses())
+        } else {
+            (0, 0)
+        };
+        (self.tracer.span(Category::Tile, name), hits0, misses0)
     }
 
     /// Slice the `[lo, hi)` row range of `(h, labels)` into a padded
@@ -160,6 +181,7 @@ impl<'a> TiledLossExec<'a> {
             h.shape()
         );
         ensure!(labels.len() == s, "tiled loss: {} labels != {s}", labels.len());
+        let (mut span, hits0, misses0) = self.sweep_span("loss_fwd_tiles");
         let hs = h.as_f32()?;
         let mut per_row = self.arena.take_f32(s);
         // one fp32 [T, vocab] logits copy lives during a forward tile
@@ -192,6 +214,10 @@ impl<'a> TiledLossExec<'a> {
                 loss_sum += per_row[i];
                 count += 1.0;
             }
+        }
+        span.set_bytes(fwd_bytes * self.plan.n_tiles as u64);
+        if span.active() {
+            span.set_arena_delta(self.arena.hits() - hits0, self.arena.misses() - misses0);
         }
         Ok(LossFwdSweep {
             per_row_loss: per_row,
@@ -227,6 +253,7 @@ impl<'a> TiledLossExec<'a> {
         );
         ensure!(labels.len() == s, "tiled loss bwd: {} labels != {s}", labels.len());
         ensure!(d_lnf.len() == hd, "d_lnf accumulator length");
+        let (mut span, hits0, misses0) = self.sweep_span("loss_bwd_tiles");
         let hs = h.as_f32()?;
         let mut d_h = self.arena.take_f32(s * hd);
         // logits + d_logits fp32 copies live during a backward tile
@@ -262,6 +289,10 @@ impl<'a> TiledLossExec<'a> {
             self.arena.recycle(dw);
             self.arena.recycle(dht);
         }
+        span.set_bytes(bwd_bytes * self.plan.n_tiles as u64);
+        if span.active() {
+            span.set_arena_delta(self.arena.hits() - hits0, self.arena.misses() - misses0);
+        }
         Ok(HostTensor::f32(vec![s, hd], d_h))
     }
 }
@@ -279,6 +310,7 @@ pub struct TiledMlpExec<'a> {
     /// Tile shape of the attn input, `[rows, n_q_heads, head_dim]`.
     attn_tile_shape: Vec<usize>,
     arena: &'a ScratchArena,
+    tracer: Arc<Tracer>,
 }
 
 impl<'a> TiledMlpExec<'a> {
@@ -303,7 +335,24 @@ impl<'a> TiledMlpExec<'a> {
             attn_block: n_q_heads * head_dim,
             attn_tile_shape: vec![rows, n_q_heads, head_dim],
             arena,
+            tracer: Tracer::off(),
         })
+    }
+
+    /// Builder: record a `Tile` container span per sweep on `tracer`.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> TiledMlpExec<'a> {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Open the per-sweep container span (inert when tracing is off).
+    fn sweep_span(&self, name: &'static str) -> (crate::obs::SpanGuard<'_>, u64, u64) {
+        let (hits0, misses0) = if self.tracer.enabled() {
+            (self.arena.hits(), self.arena.misses())
+        } else {
+            (0, 0)
+        };
+        (self.tracer.span(Category::Tile, name), hits0, misses0)
     }
 
     fn slice_pair(
@@ -357,6 +406,7 @@ impl<'a> TiledMlpExec<'a> {
         F: FnMut(&HostTensor, &HostTensor) -> Result<HostTensor>,
     {
         self.check_inputs(h_in, attn)?;
+        let (mut span, hits0, misses0) = self.sweep_span("mlp_fwd_tiles");
         let (s, hd, rows) = (self.seqlen, self.hidden, self.plan.rows_per_tile);
         let (hs, ats) = (h_in.as_f32()?, attn.as_f32()?);
         let mut h_out = self.arena.take_f32(s * hd);
@@ -377,6 +427,10 @@ impl<'a> TiledMlpExec<'a> {
             );
             copy_rows(&mut h_out, lo * hd, hd, out.as_f32()?, 0, hd, hi - lo, hd);
             self.arena.recycle(out);
+        }
+        span.set_bytes(self.plan.tile_bytes * self.plan.n_tiles as u64);
+        if span.active() {
+            span.set_arena_delta(self.arena.hits() - hits0, self.arena.misses() - misses0);
         }
         Ok(HostTensor::f32(vec![s, hd], h_out))
     }
@@ -406,6 +460,7 @@ impl<'a> TiledMlpExec<'a> {
             "tiled MLP bwd: d_out shape {:?} != [{s}, {hd}]",
             d_out.shape()
         );
+        let (mut span, hits0, misses0) = self.sweep_span("mlp_bwd_tiles");
         let (hs, ats, dos) = (h_in.as_f32()?, attn.as_f32()?, d_out.as_f32()?);
         let mut d_h_in = self.arena.take_f32(s * hd);
         let mut d_attn = self.arena.take_f32(s * ab);
@@ -441,6 +496,10 @@ impl<'a> TiledMlpExec<'a> {
             copy_rows(&mut d_attn, lo * ab, ab, da_t.as_f32()?, 0, ab, n, ab);
             self.arena.recycle(dh_t);
             self.arena.recycle(da_t);
+        }
+        span.set_bytes(2 * self.plan.tile_bytes * self.plan.n_tiles as u64);
+        if span.active() {
+            span.set_arena_delta(self.arena.hits() - hits0, self.arena.misses() - misses0);
         }
         let mut attn_shape = self.attn_tile_shape.clone();
         attn_shape[0] = s;

@@ -1,0 +1,291 @@
+//! Tier-1 tests for the observability subsystem (`src/obs/`).
+//!
+//! Artifact-free sections always run: span-multiset parity between serial
+//! and threaded `run_ranks`, exact span/ledger reconciliation for the
+//! marshal and collective paths, and a full synthetic traced "step"
+//! (relayouts + tape offload + tiled loss sweep + real marshals) whose
+//! Chrome export passes the CI validator. The end-to-end PJRT section
+//! gates on `artifacts/` like the rest of the integration suite.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alst::collectives::Group;
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader, IGNORE_INDEX};
+use alst::coordinator::pipeline::{run_ranks, Trainer, TrainerOptions};
+use alst::coordinator::tape::CheckpointTape;
+use alst::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
+use alst::memory::{HostPool, MemoryTracker};
+use alst::obs::{
+    rank_scope, trace_events, validate_trace, AttributionReport, Category, Span, Tracer,
+};
+use alst::runtime::{Engine, HostTensor, Manifest, ScratchArena};
+use alst::tiling::exec::{HostLossHead, TiledLossExec};
+use alst::util::rng::Rng;
+
+fn artifacts(config: &str, sp: usize, seq: usize) -> Option<PathBuf> {
+    let dir = Manifest::artifact_dir(Path::new("artifacts"), config, sp, seq);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {} missing — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+/// The per-rank traced workload used by the parity test: a couple of
+/// hand-opened spans plus a ledgered instant collective, all tagged with
+/// the scoped rank by `run_ranks`.
+fn traced_rank_run(sp: usize, parallel: bool) -> Vec<Span> {
+    let tracer = Arc::new(Tracer::new(true));
+    let mut group = Group::new(sp);
+    group.set_tracer(tracer.clone());
+    let (t, g) = (&tracer, &group);
+    run_ranks(sp, parallel, |r| {
+        {
+            let mut s = t.span(Category::Exec, "stage_a");
+            s.set_bytes((r as u64 + 1) * 64);
+        }
+        g.account_all_to_all((r as u64 + 1) * 8);
+        {
+            let mut s = t.span(Category::Marshal, "upload");
+            s.set_bytes(32);
+        }
+        Ok(())
+    })
+    .unwrap();
+    tracer.drain()
+}
+
+/// ISSUE 6 satellite: `parallel_ranks: true` vs `false` must record the
+/// same span multiset — names, categories, ranks, byte attributes —
+/// timestamps excluded (the same contract the CommStats byte ledger pins
+/// in relayout_equiv.rs).
+#[test]
+fn threaded_and_serial_ranks_record_the_same_span_multiset() {
+    let sp = 4;
+    let key = |spans: &[Span]| -> Vec<(String, Category, Option<usize>, u64)> {
+        let mut v: Vec<_> = spans
+            .iter()
+            .map(|s| (s.name.clone(), s.cat, s.rank, s.bytes))
+            .collect();
+        v.sort();
+        v
+    };
+    let serial = traced_rank_run(sp, false);
+    let threaded = traced_rank_run(sp, true);
+    assert_eq!(serial.len(), 3 * sp);
+    assert_eq!(key(&serial), key(&threaded));
+    // every span carries its scoped rank, under both executors
+    assert!(serial.iter().all(|s| s.rank.is_some()));
+    assert!(threaded.iter().all(|s| s.rank.is_some()));
+}
+
+/// Marshal spans carry the SAME `Duration` values `EngineStats`
+/// accumulates — sums agree bit-for-bit, not within tolerance.
+#[test]
+fn marshal_spans_reconcile_with_engine_stats_exactly() {
+    let tracer = Arc::new(Tracer::new(true));
+    let mut engine = Engine::cpu().unwrap();
+    engine.set_tracer(tracer.clone());
+    for i in 1..=5usize {
+        let t = HostTensor::zeros(&[64 * i]);
+        engine.to_buffer(&t).unwrap();
+    }
+    let st = engine.stats();
+    let spans = tracer.drain();
+    let marshal: Vec<&Span> =
+        spans.iter().filter(|s| s.cat == Category::Marshal).collect();
+    assert_eq!(marshal.len(), 5);
+    let dur: Duration = marshal.iter().map(|s| s.dur()).sum();
+    assert_eq!(dur, st.marshal_time);
+    let bytes: u64 = marshal.iter().map(|s| s.bytes).sum();
+    assert_eq!(bytes, st.bytes_in);
+}
+
+/// Relayouts emit one Relayout span per call plus the nested instant
+/// collective spans; the collective span bytes sum to the CommStats
+/// ledger exactly.
+#[test]
+fn relayout_and_collective_spans_reconcile_with_comm_ledger() {
+    let (sp, ssh, n_q, d) = (4usize, 64usize, 8usize, 16usize);
+    let tracer = Arc::new(Tracer::new(true));
+    let mut group = Group::new(sp);
+    group.set_tracer(tracer.clone());
+    let arena = ScratchArena::new();
+    let mut rng = Rng::new(3);
+    let q: Vec<HostTensor> = (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, n_q, d], rng.normal_vec(ssh * n_q * d, 1.0)))
+        .collect();
+
+    let full = a2a_seq_to_head_into(&group, &q, &arena);
+    let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+    arena.recycle_all(full);
+    arena.recycle_all(back);
+
+    let st = group.stats();
+    let spans = tracer.drain();
+    let relayout: Vec<&Span> =
+        spans.iter().filter(|s| s.cat == Category::Relayout).collect();
+    assert_eq!(relayout.len(), 2);
+    assert_eq!(relayout[0].name, "a2a_seq_to_head");
+    assert_eq!(relayout[1].name, "a2a_head_to_seq");
+    // each relayout span's byte attribute is the volume it ledgered
+    let relayout_bytes: u64 = relayout.iter().map(|s| s.bytes).sum();
+    assert_eq!(relayout_bytes, st.all_to_all_bytes);
+    // the nested instant collective spans sum to the same ledger
+    let coll_bytes: u64 = spans
+        .iter()
+        .filter(|s| s.cat == Category::Collective)
+        .map(|s| s.bytes)
+        .sum();
+    assert_eq!(coll_bytes, st.total_bytes());
+}
+
+/// The full artifact-free traced step: relayout cycle, offloading
+/// checkpoint tape, real `to_buffer` marshals, and a tiled loss sweep
+/// over the host reference head — the same workload the `trace`
+/// subcommand falls back to in CI. The export must pass the validator
+/// and the attribution report must tie memory peaks to spans.
+#[test]
+fn synthetic_traced_step_exports_valid_chrome_trace() {
+    let (sp, ssh, n_q, d) = (2usize, 128usize, 4usize, 8usize);
+    let (hidden, vocab, rows) = (16usize, 32usize, 32usize);
+    let tracer = Arc::new(Tracer::new(true));
+    let mut engine = Engine::cpu().unwrap();
+    engine.set_tracer(tracer.clone());
+    let mut group = Group::new(sp);
+    group.set_tracer(tracer.clone());
+    let mut device = MemoryTracker::new(1 << 40);
+    device.set_tracer(tracer.clone());
+    let mut host = HostPool::new(1 << 40);
+    let arena = ScratchArena::new();
+    let mut rng = Rng::new(9);
+
+    let q: Vec<HostTensor> = (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, n_q, d], rng.normal_vec(ssh * n_q * d, 1.0)))
+        .collect();
+    let head = HostLossHead::new(
+        hidden,
+        vocab,
+        IGNORE_INDEX,
+        vec![1.0; hidden],
+        rng.normal_vec(hidden * vocab, 0.02),
+    )
+    .unwrap();
+    let h = HostTensor::f32(vec![ssh, hidden], rng.normal_vec(ssh * hidden, 1.0));
+    let labels: Vec<i32> = (0..ssh).map(|i| (i % vocab) as i32).collect();
+
+    for step in 0..2u64 {
+        let mut step_span = tracer.span(Category::Step, "trace_step");
+        step_span.set_step(step + 1);
+
+        let full = a2a_seq_to_head_into(&group, &q, &arena);
+        let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+        arena.recycle_all(full);
+        arena.recycle_all(back);
+
+        let mut tape = CheckpointTape::new(1, sp, true).with_tracer(tracer.clone());
+        for r in 0..sp {
+            tape.store(0, r, HostTensor::zeros(&[ssh, hidden]), &mut device, &mut host)
+                .unwrap();
+        }
+        for r in 0..sp {
+            let t = tape.fetch(0, r, &mut device, &mut host).unwrap();
+            engine.to_buffer(&t).unwrap();
+        }
+
+        for r in 0..sp {
+            let _rank = rank_scope(r);
+            let drv = TiledLossExec::new(ssh, hidden, vocab, rows, IGNORE_INDEX, &arena)
+                .unwrap()
+                .with_tracer(tracer.clone());
+            let sweep = drv
+                .forward(&mut device, &h, &labels, |ht, lt| {
+                    let losses = head.per_row_losses(ht.as_f32()?, lt.as_i32()?)?;
+                    Ok(HostTensor::f32(vec![losses.len()], losses))
+                })
+                .unwrap();
+            arena.recycle_f32(sweep.per_row_loss);
+        }
+    }
+
+    let spans = tracer.drain();
+    let mem = device.take_events();
+    assert!(!mem.is_empty(), "tiled sweep should emit tracker events");
+    // every traced category but Exec/Optimizer appears in this workload
+    for cat in [
+        Category::Step,
+        Category::Marshal,
+        Category::Relayout,
+        Category::Collective,
+        Category::Offload,
+        Category::Tile,
+    ] {
+        assert!(
+            spans.iter().any(|s| s.cat == cat),
+            "no {cat:?} span recorded"
+        );
+    }
+
+    let doc = trace_events(&spans, &mem);
+    validate_trace(&doc).unwrap();
+
+    let rep = AttributionReport::build(&spans, &mem);
+    assert_eq!(rep.steps.len(), 2);
+    // Tile is a container: it must never enter the per-step leaf sums
+    assert!(rep.steps.iter().all(|s| !s.by_cat.contains_key(&Category::Tile)));
+    let peak = rep.mem_peak.expect("tracker events imply a peak");
+    assert!(peak.bytes > 0);
+    assert_ne!(peak.span_name, "(no span)", "peak should name its span");
+}
+
+/// End-to-end (needs artifacts): a traced 2-step PJRT run. The emitted
+/// trace passes the validator; the attribution report's exec/marshal
+/// sums equal `EngineStats` EXACTLY (same Duration values); each step
+/// span's duration equals the reported `StepMetrics::step_time`.
+#[test]
+fn traced_train_run_reconciles_with_ledgers() {
+    let Some(dir) = artifacts("tiny", 2, 256) else { return };
+    let opts = TrainerOptions {
+        trace: true,
+        parallel_ranks: false,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&dir, opts).unwrap();
+    let vocab = trainer.manifest.config.vocab;
+    let mut loader = UlyssesDataLoader::new(MarkovSource::new(vocab, 256, 0.05, 1), 2);
+    let mut metrics = Vec::new();
+    for _ in 0..2 {
+        let (ids, _) = loader.next();
+        metrics.push(trainer.train_step_accum(&[ids]).unwrap());
+    }
+    let engine_stats = trainer.engine.stats();
+    let spans = trainer.tracer().drain();
+    let mem = trainer.device.take_events();
+
+    // Chrome export passes the CI validator.
+    let doc = trace_events(&spans, &mem);
+    validate_trace(&doc).unwrap();
+
+    let rep = AttributionReport::build(&spans, &mem);
+    assert_eq!(rep.steps.len(), 2);
+
+    // Exec/marshal span totals carry the SAME Duration values the engine
+    // ledger accumulated — bit-for-bit equality, zero tolerance.
+    assert_eq!(rep.total(Category::Exec).dur, engine_stats.exec_time);
+    assert_eq!(rep.total(Category::Marshal).dur, engine_stats.marshal_time);
+    assert_eq!(rep.total(Category::Exec).spans as u64, engine_stats.executions);
+
+    // Each step span reports the exact StepMetrics duration and step id.
+    for (att, m) in rep.steps.iter().zip(&metrics) {
+        assert_eq!(att.step, Some(m.step));
+        assert_eq!(att.step_time, m.step_time);
+        // serial ranks: leaf work is a sub-portion of the wall step
+        assert!(att.tracked() <= att.step_time);
+        // the a2a relayout volume the step reported appears as span bytes
+        let relayout = att.cat(Category::Relayout);
+        assert_eq!(relayout.bytes, m.a2a_bytes);
+    }
+}
