@@ -1,7 +1,9 @@
 //! End-to-end step latency through the real PJRT pipeline (tiny config),
 //! plus the coordinator-side hot path that runs with NO artifacts: the
-//! per-step relayout cycle through the scratch arena, and the scoped-
-//! thread rank executor versus the serial loop.
+//! per-step relayout cycle through the scratch arena, the scoped-thread
+//! rank executor versus the serial loop, and the checkpoint-offload step
+//! cycle through the synchronous (inline) versus async double-buffered
+//! copy engine (stall/copy/overlap extras in the JSON report).
 //!
 //! Always emits repo-root `BENCH_pipeline.json` (schema in DESIGN.md);
 //! the PJRT sections additionally require `make artifacts` and are
@@ -127,6 +129,99 @@ fn main() {
             },
         );
         report.push(&r);
+    }
+
+    // ---- coordinator-only: offload step cycle, sync vs async -------------
+    // The same store/prefetch/fetch schedule the trainer runs, with a
+    // cpu-spin standing in for layer compute. Inline mode runs every copy
+    // on this thread and counts it as stall (the synchronous reference:
+    // stall == copy time); overlap mode runs the copies on the stream
+    // workers behind the spins. CI bench-smoke pins async stall < sync
+    // copy and overlap_frac > 0 on these rows.
+    {
+        use alst::coordinator::offload::{
+            overlap_frac, AsyncOffloadEngine, OffloadConfig, CKPT_TAG,
+        };
+        use alst::memory::{HostPool, MemoryTracker};
+        use std::sync::Arc;
+
+        let fast = alst::util::bench::fast_mode();
+        let (sp_o, ssh_o, hidden_o, layers_o) =
+            if fast { (2usize, 256usize, 64usize, 2usize) } else { (4, 8192, 1024, 2) };
+        let seq_o = sp_o * ssh_o; // 32K acceptance config in full mode
+        let spin_buf = rng.normal_vec(if fast { 1 << 16 } else { 1 << 23 }, 1.0);
+        let spin = || {
+            let mut acc = 0f64;
+            for &x in &spin_buf {
+                acc += (x as f64) * (x as f64);
+            }
+            std::hint::black_box(acc);
+        };
+        let arena_o = Arc::new(ScratchArena::with_byte_budget(2 << 30));
+        let proto =
+            HostTensor::f32(vec![ssh_o, hidden_o], rng.normal_vec(ssh_o * hidden_o, 1.0));
+        let ckpt_bytes = proto.size_bytes() as u64;
+        let cycle_bytes = 2 * (layers_o * sp_o) as u64 * ckpt_bytes; // D2H + H2D
+
+        for (overlap, label) in [(false, "sync(inline)"), (true, "async(overlap)")] {
+            let engine = AsyncOffloadEngine::new(
+                arena_o.clone(),
+                Tracer::off(),
+                OffloadConfig { in_flight_cap: 256 << 20, overlap },
+            );
+            let mut device = MemoryTracker::new(1 << 40);
+            let mut host = HostPool::new(1 << 40);
+            let mut cycle = || {
+                for li in 0..layers_o {
+                    for r in 0..sp_o {
+                        engine
+                            .store(li, r, arena_o.copy_tensor(&proto), &mut host)
+                            .unwrap();
+                    }
+                    spin(); // the layer compute the D2H copies hide behind
+                }
+                engine.prefetch_layer(layers_o - 1, sp_o).unwrap();
+                spin(); // loss head; the top layer's H2D lands behind it
+                for li in (0..layers_o).rev() {
+                    for r in 0..sp_o {
+                        let t = engine.fetch(li, r, &mut device, &mut host).unwrap();
+                        device.free(t.size_bytes() as u64, CKPT_TAG);
+                        arena_o.recycle(t);
+                    }
+                    if li > 0 {
+                        engine.prefetch_layer(li - 1, sp_o).unwrap();
+                    }
+                    spin(); // recompute; the next layer's H2D copies behind it
+                }
+                engine.drain();
+            };
+            cycle(); // warm the arena pool
+            engine.reset_stats();
+            let r = bench(
+                &format!("offload step-cycle sp={sp_o} seq={seq_o} L={layers_o} {label}"),
+                0,
+                5,
+                std::time::Duration::from_secs(1),
+                &mut cycle,
+            );
+            let (stalls, stream) = (engine.stalls(), engine.stream_stats());
+            let per_iter_ms =
+                |d: std::time::Duration| d.as_secs_f64() * 1e3 / r.iters as f64;
+            println!(
+                "    -> stall {:.3}ms copy {:.3}ms per cycle, overlap_frac {:.2}, \
+                 max in-flight {} MiB",
+                per_iter_ms(stalls.total()),
+                per_iter_ms(stream.copy_time()),
+                overlap_frac(&stalls, &stream),
+                stream.max_in_flight >> 20,
+            );
+            let r = r
+                .with_bytes(cycle_bytes)
+                .with_extra("stall_ms", per_iter_ms(stalls.total()))
+                .with_extra("copy_ms", per_iter_ms(stream.copy_time()))
+                .with_extra("overlap_frac", overlap_frac(&stalls, &stream));
+            report.push(&r);
+        }
     }
 
     // ---- PJRT sections (need `make artifacts`) ---------------------------

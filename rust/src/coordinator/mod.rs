@@ -5,11 +5,14 @@
 //! * `zero` — ZeRO-3 flat parameter/gradient sharding (§5.2 baseline).
 //! * `optimizer` — AdamW on the owned shard (optionally host-offloaded).
 //! * `tape` — activation-checkpoint store with CPU offload (§3.3).
+//! * `offload` — async double-buffered D2H/H2D copy streams over the tape
+//!   (FPDT-style prefetch; the stall-free offload path).
 //! * `dataloader` — the UlyssesSPDataLoaderAdapter equivalent (§4.2) with
 //!   pre-shifted labels (§4.3).
 //! * `pipeline` — the distributed fwd/bwd orchestration over PJRT stages.
 
 pub mod dataloader;
+pub mod offload;
 pub mod optimizer;
 pub mod pipeline;
 pub mod snapshot;

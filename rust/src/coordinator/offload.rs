@@ -1,0 +1,841 @@
+//! Async double-buffered offload engine (FPDT-style; PAPERS.md, Yao et
+//! al. 2024): two simulated copy streams — D2H for forward checkpoint
+//! stores, H2D for backward prefetches — each backed by one dedicated
+//! worker thread copying through the shared [`ScratchArena`].
+//!
+//! The sync [`CheckpointTape`] is a passive ledger: store/fetch account
+//! bytes on the step's critical path and move the tensor by value. This
+//! engine makes the traffic *real* (every transfer is an arena-backed
+//! memcpy, so the data path is bit-preserving) and *overlappable*:
+//!
+//! * **Store (forward)** enqueues a non-blocking D2H copy. A
+//!   `tokens_in_flight`-style byte cap bounds copies enqueued but not yet
+//!   staged; the caller blocks only when the window is full (backpressure
+//!   — recorded as a `Stall` span, never silently).
+//! * **Prefetch (backward)** enqueues the H2D restore of layer `li-1`'s
+//!   checkpoint before layer `li`'s recompute begins, when the schedule
+//!   derived from `memory::timeline::prefetch_schedule` says the device
+//!   can hold it. The fetch the paper notes "cannot overlap much" then
+//!   completes behind compute; `fetch` blocks only on a copy that hasn't
+//!   landed (a `Stall` span again).
+//!
+//! Each stream serializes its copies — one worker, one copy at a time —
+//! which is the single-stream invariant the trace validator checks on the
+//! `copy_d2h`/`copy_h2d` lanes. Stall accounting is split per direction
+//! and reconciles exactly with the recorded `Stall` spans; the copy spans
+//! themselves are *excluded* from per-step attribution because they
+//! overlap compute (see `obs::report`).
+//!
+//! Inline mode (`OffloadConfig::overlap = false`) runs the identical copy
+//! code on the caller thread. Every copy is then critical-path time and is
+//! counted as stall, which makes it the fair "synchronous offload"
+//! baseline: `stall(sync) == total copy time`, and the bench's
+//! `overlap_frac = 1 - stall/copy_time` is pinned `> 0` for the async row.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::memory::{HostPool, MemoryTracker};
+use crate::obs::{Category, Tracer};
+use crate::runtime::tensor::{HostTensor, ScratchArena};
+
+use super::tape::CheckpointTape;
+
+/// Device-tracker tag for resident checkpoint bytes (shared with the sync
+/// tape's accounting).
+pub const CKPT_TAG: &str = "ckpt";
+
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    /// Byte cap on D2H copies enqueued but not yet staged host-side (the
+    /// paper's tokens-in-flight window, in bytes). `store` blocks only
+    /// while the window is full. A single store larger than the cap is
+    /// admitted alone once the window drains (it could otherwise never
+    /// proceed).
+    pub in_flight_cap: u64,
+    /// `true`: copies run on the two stream worker threads and overlap
+    /// compute. `false`: the same copies run inline on the caller thread
+    /// and are counted as stall — the synchronous reference the bench
+    /// compares against.
+    pub overlap: bool,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> OffloadConfig {
+        OffloadConfig { in_flight_cap: 256 << 20, overlap: true }
+    }
+}
+
+/// Time the step spent blocked on the engine, per direction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StallStats {
+    /// Blocked in `store` because the in-flight window was full (plus, in
+    /// inline mode, the D2H copy time itself).
+    pub d2h_wait: Duration,
+    /// Blocked in `fetch` on an H2D copy that had not landed (plus, in
+    /// inline mode, the H2D copy time itself).
+    pub h2d_wait: Duration,
+    pub d2h_events: u64,
+    pub h2d_events: u64,
+}
+
+impl StallStats {
+    pub fn total(&self) -> Duration {
+        self.d2h_wait + self.h2d_wait
+    }
+}
+
+/// What the copy streams did (worker-side ledger).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    pub copy_time_d2h: Duration,
+    pub copy_time_h2d: Duration,
+    pub copies_d2h: u64,
+    pub copies_h2d: u64,
+    /// Bytes moved across both streams — the figure that must equal the
+    /// sync tape's `transfer_bytes` for the same schedule.
+    pub transfer_bytes: u64,
+    /// High-water mark of the D2H in-flight window (never above the cap).
+    pub max_in_flight: u64,
+}
+
+impl StreamStats {
+    pub fn copy_time(&self) -> Duration {
+        self.copy_time_d2h + self.copy_time_h2d
+    }
+}
+
+/// Fraction of copy time hidden behind compute: `1 - stall/copy`,
+/// clamped to [0, 1]. Inline mode yields 0 by construction.
+pub fn overlap_frac(stalls: &StallStats, stream: &StreamStats) -> f64 {
+    let copy = stream.copy_time().as_secs_f64();
+    if copy <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - stalls.total().as_secs_f64() / copy).clamp(0.0, 1.0)
+}
+
+/// A checkpoint's position in the store→stage→restore lifecycle.
+enum SlotState {
+    /// D2H copy enqueued; tensor is with the worker.
+    StoreQueued { bytes: u64 },
+    /// Host-resident (D2H done); `HostPool` holds its byte charge.
+    Staged { tensor: HostTensor, bytes: u64 },
+    /// H2D copy in progress; tensor is with the worker.
+    FetchQueued { bytes: u64 },
+    /// Restored; `fetch` hands it out.
+    Ready { tensor: HostTensor, bytes: u64 },
+}
+
+impl SlotState {
+    fn bytes(&self) -> u64 {
+        match self {
+            SlotState::StoreQueued { bytes }
+            | SlotState::Staged { bytes, .. }
+            | SlotState::FetchQueued { bytes }
+            | SlotState::Ready { bytes, .. } => *bytes,
+        }
+    }
+}
+
+#[derive(Default)]
+struct EngineState {
+    slots: HashMap<(usize, usize), SlotState>,
+    /// True per key once an H2D copy has been enqueued (idempotent
+    /// prefetch; cleared when `fetch` consumes the slot).
+    h2d_queued: HashMap<(usize, usize), bool>,
+    /// Bytes enqueued D2H but not yet staged (the backpressure window).
+    in_flight_d2h: u64,
+    /// Copies enqueued but not yet completed, per stream (`drain` waits
+    /// on both hitting zero).
+    d2h_pending: usize,
+    h2d_pending: usize,
+    stream: StreamStats,
+    stalls: StallStats,
+}
+
+struct Shared {
+    arena: Arc<ScratchArena>,
+    tracer: Arc<Tracer>,
+    state: Mutex<EngineState>,
+    cv: Condvar,
+}
+
+struct CopyJob {
+    li: usize,
+    rank: usize,
+    /// `Some` for D2H (the device tensor to stage); `None` for H2D (the
+    /// worker takes the staged tensor out of the slot itself).
+    tensor: Option<HostTensor>,
+    bytes: u64,
+}
+
+/// The async offload engine. One per `Trainer`; shared as
+/// `Arc<AsyncOffloadEngine>` so a step can hold a handle while the trainer
+/// is mutably borrowed for stage execution.
+pub struct AsyncOffloadEngine {
+    shared: Arc<Shared>,
+    d2h_tx: Option<Sender<CopyJob>>,
+    h2d_tx: Option<Sender<CopyJob>>,
+    workers: Vec<JoinHandle<()>>,
+    cap: u64,
+    overlap: bool,
+}
+
+/// Stage one checkpoint host-side: the simulated D2H transfer. Runs on
+/// the D2H worker (overlap) or the caller thread (inline, counted as
+/// stall).
+fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
+    let tensor = job.tensor.expect("d2h job carries the tensor");
+    let mut stall = count_as_stall.then(|| {
+        let mut s = shared.tracer.span(Category::Stall, "stall_d2h");
+        s.set_rank(job.rank);
+        s.set_bytes(job.bytes);
+        s
+    });
+    let d = {
+        let mut span = shared.tracer.span(Category::CopyD2H, "d2h_copy");
+        span.set_bytes(job.bytes);
+        let t0 = Instant::now();
+        let staged = shared.arena.copy_tensor(&tensor);
+        shared.arena.recycle(tensor);
+        let d = t0.elapsed();
+        span.set_dur(d);
+        // Publish before the span guard drops so end_ns <= the state
+        // update the in-flight reconstruction reads the copy span for.
+        let mut st = shared.state.lock().unwrap();
+        st.slots
+            .insert((job.li, job.rank), SlotState::Staged { tensor: staged, bytes: job.bytes });
+        st.in_flight_d2h -= job.bytes;
+        st.d2h_pending -= 1;
+        st.stream.copies_d2h += 1;
+        st.stream.copy_time_d2h += d;
+        st.stream.transfer_bytes += job.bytes;
+        if count_as_stall {
+            st.stalls.d2h_wait += d;
+            st.stalls.d2h_events += 1;
+        }
+        shared.cv.notify_all();
+        d
+    };
+    if let Some(s) = &mut stall {
+        s.set_dur(d);
+    }
+}
+
+/// Restore one staged checkpoint: the simulated H2D transfer. Waits for
+/// the D2H stage to land first (the streams chain per slot), then copies
+/// outside the lock.
+fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
+    let key = (job.li, job.rank);
+    let (staged, bytes) = {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            match st.slots.get(&key) {
+                Some(SlotState::Staged { .. }) => break,
+                Some(_) => st = shared.cv.wait(st).unwrap(),
+                None => {
+                    // Slot vanished (aborted step). Retire the job.
+                    st.h2d_pending -= 1;
+                    shared.cv.notify_all();
+                    return;
+                }
+            }
+        }
+        let Some(SlotState::Staged { tensor, bytes }) =
+            st.slots.insert(key, SlotState::FetchQueued { bytes: 0 })
+        else {
+            unreachable!("checked Staged under the same lock");
+        };
+        st.slots.insert(key, SlotState::FetchQueued { bytes });
+        (tensor, bytes)
+    };
+    let mut stall = count_as_stall.then(|| {
+        let mut s = shared.tracer.span(Category::Stall, "stall_h2d");
+        s.set_rank(job.rank);
+        s.set_bytes(bytes);
+        s
+    });
+    let mut span = shared.tracer.span(Category::CopyH2D, "h2d_copy");
+    span.set_bytes(bytes);
+    let t0 = Instant::now();
+    let restored = shared.arena.copy_tensor(&staged);
+    shared.arena.recycle(staged);
+    let d = t0.elapsed();
+    span.set_dur(d);
+    drop(span);
+    if let Some(s) = &mut stall {
+        s.set_dur(d);
+    }
+    drop(stall);
+    let mut st = shared.state.lock().unwrap();
+    st.slots.insert(key, SlotState::Ready { tensor: restored, bytes });
+    st.h2d_pending -= 1;
+    st.stream.copies_h2d += 1;
+    st.stream.copy_time_h2d += d;
+    st.stream.transfer_bytes += bytes;
+    if count_as_stall {
+        st.stalls.h2d_wait += d;
+        st.stalls.h2d_events += 1;
+    }
+    shared.cv.notify_all();
+}
+
+impl AsyncOffloadEngine {
+    pub fn new(arena: Arc<ScratchArena>, tracer: Arc<Tracer>, cfg: OffloadConfig) -> Self {
+        let shared = Arc::new(Shared {
+            arena,
+            tracer,
+            state: Mutex::new(EngineState::default()),
+            cv: Condvar::new(),
+        });
+        let (mut d2h_tx, mut h2d_tx, mut workers) = (None, None, Vec::new());
+        if cfg.overlap {
+            let spawn = |name: &str,
+                         sh: Arc<Shared>,
+                         rx: Receiver<CopyJob>,
+                         f: fn(&Shared, CopyJob, bool)|
+             -> JoinHandle<()> {
+                std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(move || {
+                        for job in rx {
+                            f(&sh, job, false);
+                        }
+                    })
+                    .expect("spawning offload stream worker")
+            };
+            let (tx, rx) = mpsc::channel();
+            workers.push(spawn("alst-offload-d2h", shared.clone(), rx, d2h_copy));
+            d2h_tx = Some(tx);
+            let (tx, rx) = mpsc::channel();
+            workers.push(spawn("alst-offload-h2d", shared.clone(), rx, h2d_copy));
+            h2d_tx = Some(tx);
+        }
+        AsyncOffloadEngine {
+            shared,
+            d2h_tx,
+            h2d_tx,
+            workers,
+            cap: cfg.in_flight_cap.max(1),
+            overlap: cfg.overlap,
+        }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// Enqueue the D2H store of layer `li`'s checkpoint for `rank`.
+    /// Non-blocking unless the in-flight window is full (backpressure,
+    /// recorded as a `stall_d2h` span). Host capacity is charged here,
+    /// synchronously, so exhaustion surfaces at the same point as on the
+    /// sync tape.
+    pub fn store(
+        &self,
+        li: usize,
+        rank: usize,
+        tensor: HostTensor,
+        host: &mut HostPool,
+    ) -> Result<()> {
+        let bytes = tensor.size_bytes() as u64;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            ensure!(
+                !st.slots.contains_key(&(li, rank)),
+                "checkpoint ({li},{rank}) already stored"
+            );
+            host.alloc(bytes)?;
+            if st.in_flight_d2h > 0 && st.in_flight_d2h.saturating_add(bytes) > self.cap {
+                let mut stall = self.shared.tracer.span(Category::Stall, "stall_d2h");
+                stall.set_rank(rank);
+                stall.set_bytes(bytes);
+                let t0 = Instant::now();
+                while st.in_flight_d2h > 0
+                    && st.in_flight_d2h.saturating_add(bytes) > self.cap
+                {
+                    st = self.shared.cv.wait(st).unwrap();
+                }
+                let d = t0.elapsed();
+                stall.set_dur(d);
+                st.stalls.d2h_wait += d;
+                st.stalls.d2h_events += 1;
+            }
+            st.in_flight_d2h += bytes;
+            st.stream.max_in_flight = st.stream.max_in_flight.max(st.in_flight_d2h);
+            st.d2h_pending += 1;
+            st.slots.insert((li, rank), SlotState::StoreQueued { bytes });
+        }
+        // Instant marker at enqueue time: the +bytes edge the in-flight
+        // reconstruction test pairs with the d2h_copy span's -bytes edge.
+        {
+            let mut sp = self.shared.tracer.span(Category::Offload, "ckpt_store_async");
+            sp.set_rank(rank);
+            sp.set_bytes(bytes);
+            sp.set_dur(Duration::ZERO);
+        }
+        let job = CopyJob { li, rank, tensor: Some(tensor), bytes };
+        match &self.d2h_tx {
+            Some(tx) => tx.send(job).ok().context("d2h stream worker is gone")?,
+            None => d2h_copy(&self.shared, job, true),
+        }
+        Ok(())
+    }
+
+    /// Enqueue the H2D restore of `(li, rank)` so it lands before the
+    /// recompute needs it. Idempotent; errors if the slot was never
+    /// stored (or already fetched).
+    pub fn prefetch(&self, li: usize, rank: usize) -> Result<()> {
+        let key = (li, rank);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.slots.contains_key(&key) {
+                bail!("checkpoint ({li},{rank}) missing");
+            }
+            if st.h2d_queued.contains_key(&key) {
+                return Ok(());
+            }
+            st.h2d_queued.insert(key, true);
+            st.h2d_pending += 1;
+        }
+        let job = CopyJob { li, rank, tensor: None, bytes: 0 };
+        match &self.h2d_tx {
+            Some(tx) => tx.send(job).ok().context("h2d stream worker is gone")?,
+            None => h2d_copy(&self.shared, job, true),
+        }
+        Ok(())
+    }
+
+    /// Prefetch layer `li`'s checkpoint for every rank in `0..world`.
+    pub fn prefetch_layer(&self, li: usize, world: usize) -> Result<()> {
+        for rank in 0..world {
+            self.prefetch(li, rank)?;
+        }
+        Ok(())
+    }
+
+    /// Take the restored checkpoint, blocking on the H2D copy if it has
+    /// not landed (a `stall_h2d` span — zero at steady state when the
+    /// prefetch schedule hid it behind compute). Accounting matches
+    /// `CheckpointTape::fetch`: the host charge is released and `bytes`
+    /// is charged to the device `ckpt` tag until the caller frees it.
+    pub fn fetch(
+        &self,
+        li: usize,
+        rank: usize,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+    ) -> Result<HostTensor> {
+        self.prefetch(li, rank)?;
+        let key = (li, rank);
+        let (tensor, bytes) = {
+            let mut st = self.shared.state.lock().unwrap();
+            if !matches!(st.slots.get(&key), Some(SlotState::Ready { .. })) {
+                let mut stall = self.shared.tracer.span(Category::Stall, "stall_h2d");
+                stall.set_rank(rank);
+                let t0 = Instant::now();
+                while !matches!(st.slots.get(&key), Some(SlotState::Ready { .. })) {
+                    st = self.shared.cv.wait(st).unwrap();
+                }
+                let d = t0.elapsed();
+                stall.set_dur(d);
+                stall.set_bytes(st.slots[&key].bytes());
+                st.stalls.h2d_wait += d;
+                st.stalls.h2d_events += 1;
+            }
+            let Some(SlotState::Ready { tensor, bytes }) = st.slots.remove(&key) else {
+                unreachable!("waited for Ready under the same lock");
+            };
+            st.h2d_queued.remove(&key);
+            (tensor, bytes)
+        };
+        if let Err(e) = device.alloc(bytes, CKPT_TAG) {
+            // Put the slot back so abort/retry sees consistent ledgers.
+            let mut st = self.shared.state.lock().unwrap();
+            st.slots.insert(key, SlotState::Ready { tensor, bytes });
+            st.h2d_queued.insert(key, true);
+            return Err(e);
+        }
+        host.free(bytes);
+        {
+            let mut sp = self.shared.tracer.span(Category::Offload, "ckpt_fetch_async");
+            sp.set_rank(rank);
+            sp.set_bytes(bytes);
+            sp.set_dur(Duration::ZERO);
+        }
+        Ok(tensor)
+    }
+
+    /// Block until both streams are idle (no copy enqueued or running).
+    pub fn drain(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.d2h_pending > 0 || st.h2d_pending > 0 {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Deterministic mid-step teardown: drain both streams, then discard
+    /// every remaining slot — host charges released, staged buffers
+    /// recycled into the arena. Leaves the engine reusable for the next
+    /// step. (Device charges for already-fetched checkpoints are the
+    /// caller's to release; `StepTape::abort` does both.)
+    pub fn abort_step(&self, host: &mut HostPool) {
+        self.drain();
+        let mut st = self.shared.state.lock().unwrap();
+        for (_, slot) in st.slots.drain() {
+            match slot {
+                SlotState::Staged { tensor, bytes } | SlotState::Ready { tensor, bytes } => {
+                    host.free(bytes);
+                    self.shared.arena.recycle(tensor);
+                }
+                // Unreachable after drain: no copy is queued or running.
+                SlotState::StoreQueued { .. } | SlotState::FetchQueued { .. } => {}
+            }
+        }
+        st.h2d_queued.clear();
+        st.in_flight_d2h = 0;
+    }
+
+    /// Checkpoints currently held by the engine (any lifecycle state).
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().slots.len()
+    }
+
+    pub fn stalls(&self) -> StallStats {
+        self.shared.state.lock().unwrap().stalls
+    }
+
+    pub fn stream_stats(&self) -> StreamStats {
+        self.shared.state.lock().unwrap().stream
+    }
+
+    /// Cumulative bytes moved across both streams since construction (or
+    /// the last `reset_stats`).
+    pub fn transfer_bytes(&self) -> u64 {
+        self.shared.state.lock().unwrap().stream.transfer_bytes
+    }
+
+    /// Zero the stall/stream ledgers (per-bench-row isolation). Slots in
+    /// flight are unaffected.
+    pub fn reset_stats(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.stream = StreamStats::default();
+        st.stalls = StallStats::default();
+    }
+
+    #[cfg(test)]
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, EngineState> {
+        self.shared.state.lock().unwrap()
+    }
+}
+
+impl Drop for AsyncOffloadEngine {
+    fn drop(&mut self) {
+        // Closing the channels ends the worker loops.
+        self.d2h_tx.take();
+        self.h2d_tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StepTape: one step's checkpoint traffic, sync or async
+// ---------------------------------------------------------------------------
+
+enum TapeKind {
+    Sync(CheckpointTape),
+    Async { engine: Arc<AsyncOffloadEngine>, start_transfer: u64 },
+}
+
+/// The pipeline's per-step view over either checkpoint path. Also owns
+/// the *fetched-outstanding* ledger: bytes of restored checkpoints that
+/// are device-charged (`ckpt` tag) until the recompute recycles them —
+/// the accounting rule both paths now share — so the mid-step error path
+/// can release exactly what is still held.
+pub struct StepTape {
+    kind: TapeKind,
+    fetched_outstanding: u64,
+}
+
+impl StepTape {
+    pub fn sync(tape: CheckpointTape) -> StepTape {
+        StepTape { kind: TapeKind::Sync(tape), fetched_outstanding: 0 }
+    }
+
+    pub fn with_engine(engine: Arc<AsyncOffloadEngine>) -> StepTape {
+        let start_transfer = engine.transfer_bytes();
+        StepTape { kind: TapeKind::Async { engine, start_transfer }, fetched_outstanding: 0 }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self.kind, TapeKind::Async { .. })
+    }
+
+    pub fn store(
+        &mut self,
+        li: usize,
+        rank: usize,
+        tensor: HostTensor,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+    ) -> Result<()> {
+        match &mut self.kind {
+            TapeKind::Sync(t) => t.store(li, rank, tensor, device, host),
+            TapeKind::Async { engine, .. } => engine.store(li, rank, tensor, host),
+        }
+    }
+
+    /// Hint that layer `li`'s checkpoints (all `world` ranks) will be
+    /// fetched soon. No-op on the sync tape.
+    pub fn prefetch_layer(&self, li: usize, world: usize) -> Result<()> {
+        match &self.kind {
+            TapeKind::Sync(_) => Ok(()),
+            TapeKind::Async { engine, .. } => engine.prefetch_layer(li, world),
+        }
+    }
+
+    pub fn fetch(
+        &mut self,
+        li: usize,
+        rank: usize,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+    ) -> Result<HostTensor> {
+        let t = match &mut self.kind {
+            TapeKind::Sync(tape) => tape.fetch(li, rank, device, host)?,
+            TapeKind::Async { engine, .. } => engine.fetch(li, rank, device, host)?,
+        };
+        self.fetched_outstanding += t.size_bytes() as u64;
+        Ok(t)
+    }
+
+    /// Release the device charge of fetched checkpoints the recompute has
+    /// recycled (end of each backward layer).
+    pub fn release_fetched(&mut self, bytes: u64, device: &mut MemoryTracker) {
+        debug_assert!(bytes <= self.fetched_outstanding, "releasing more than fetched");
+        if bytes > 0 {
+            device.free(bytes, CKPT_TAG);
+            self.fetched_outstanding = self.fetched_outstanding.saturating_sub(bytes);
+        }
+    }
+
+    /// Device/host transfer volume this step (both directions).
+    pub fn transfer_bytes(&self) -> u64 {
+        match &self.kind {
+            TapeKind::Sync(t) => t.transfer_bytes,
+            TapeKind::Async { engine, start_transfer } => {
+                engine.transfer_bytes() - start_transfer
+            }
+        }
+    }
+
+    /// Mid-step error teardown: drain the streams, drop the un-fetched
+    /// slots (host charges released, buffers recycled), and release the
+    /// device charge of checkpoints that were fetched but whose backward
+    /// never finished. After this, no pool holds phantom bytes and no
+    /// arena buffer is leaked.
+    pub fn abort(
+        &mut self,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+        arena: &ScratchArena,
+    ) {
+        if self.fetched_outstanding > 0 {
+            device.free(self.fetched_outstanding, CKPT_TAG);
+            self.fetched_outstanding = 0;
+        }
+        match &mut self.kind {
+            TapeKind::Sync(t) => t.clear(device, host, arena),
+            TapeKind::Async { engine, .. } => engine.abort_step(host),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor(rng: &mut Rng, n: usize) -> HostTensor {
+        HostTensor::f32(vec![n], rng.normal_vec(n, 1.0))
+    }
+
+    /// The trainer shares `&self` (holding an `Arc` of the engine) across
+    /// `run_ranks` scoped threads, so the engine must be `Send + Sync` —
+    /// true on stable since `mpsc::Sender: Sync` (Rust 1.72); this pins it
+    /// at compile time.
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<AsyncOffloadEngine>();
+        assert_send_sync::<StepTape>();
+    }
+
+    fn engine(overlap: bool, cap: u64) -> AsyncOffloadEngine {
+        AsyncOffloadEngine::new(
+            Arc::new(ScratchArena::new()),
+            Tracer::off(),
+            OffloadConfig { in_flight_cap: cap, overlap },
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical_both_modes() {
+        for overlap in [false, true] {
+            let eng = engine(overlap, 1 << 30);
+            let mut dev = MemoryTracker::new(1 << 30);
+            let mut host = HostPool::new(1 << 30);
+            let mut rng = Rng::new(7);
+            let originals: Vec<HostTensor> =
+                (0..3).map(|_| tensor(&mut rng, 128)).collect();
+            for (li, t) in originals.iter().enumerate() {
+                eng.store(li, 0, t.clone(), &mut host).unwrap();
+            }
+            eng.drain();
+            assert_eq!(host.current(), 3 * 512, "staged bytes charged to host");
+            for li in (0..3).rev() {
+                let got = eng.fetch(li, 0, &mut dev, &mut host).unwrap();
+                for (a, b) in got
+                    .as_f32()
+                    .unwrap()
+                    .iter()
+                    .zip(originals[li].as_f32().unwrap())
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                dev.free(got.size_bytes() as u64, CKPT_TAG);
+            }
+            assert_eq!(eng.pending(), 0);
+            assert_eq!(host.current(), 0);
+            assert_eq!(dev.current(), 0);
+            // Both directions moved every byte once.
+            assert_eq!(eng.transfer_bytes(), 2 * 3 * 512);
+        }
+    }
+
+    #[test]
+    fn inline_mode_counts_copies_as_stall() {
+        let eng = engine(false, 1 << 30);
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(3);
+        eng.store(0, 0, tensor(&mut rng, 4096), &mut host).unwrap();
+        let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+        let (stalls, stream) = (eng.stalls(), eng.stream_stats());
+        assert_eq!(stalls.d2h_events, 1);
+        assert_eq!(stalls.h2d_events, 1);
+        // Inline: every copied nanosecond is stalled — the sync baseline.
+        assert_eq!(stalls.d2h_wait, stream.copy_time_d2h);
+        assert_eq!(stalls.h2d_wait, stream.copy_time_h2d);
+        assert_eq!(overlap_frac(&stalls, &stream), 0.0);
+    }
+
+    #[test]
+    fn duplicate_store_and_missing_fetch_error() {
+        let eng = engine(true, 1 << 30);
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(1);
+        eng.store(0, 0, tensor(&mut rng, 16), &mut host).unwrap();
+        assert!(eng.store(0, 0, tensor(&mut rng, 16), &mut host).is_err());
+        assert!(eng.fetch(5, 0, &mut dev, &mut host).is_err());
+        assert!(eng.prefetch(5, 0).is_err());
+        // The failed duplicate must not have leaked a host charge.
+        let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+        assert_eq!(host.current(), 0);
+    }
+
+    #[test]
+    fn host_exhaustion_surfaces_at_store() {
+        let eng = engine(true, 1 << 30);
+        let mut host = HostPool::new(100);
+        let mut rng = Rng::new(1);
+        assert!(eng.store(0, 0, tensor(&mut rng, 64), &mut host).is_err());
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(host.current(), 0);
+    }
+
+    #[test]
+    fn oversized_store_is_admitted_alone() {
+        // A store above the cap waits for an empty window, then proceeds;
+        // it must not deadlock.
+        let eng = engine(true, 64);
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(2);
+        eng.store(0, 0, tensor(&mut rng, 1024), &mut host).unwrap(); // 4 KiB > 64 B
+        eng.store(1, 0, tensor(&mut rng, 1024), &mut host).unwrap();
+        eng.drain();
+        for li in (0..2).rev() {
+            let t = eng.fetch(li, 0, &mut dev, &mut host).unwrap();
+            dev.free(t.size_bytes() as u64, CKPT_TAG);
+        }
+        assert_eq!(host.current(), 0);
+    }
+
+    #[test]
+    fn abort_step_leaves_engine_reusable() {
+        let eng = engine(true, 1 << 30);
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(9);
+        for li in 0..3 {
+            eng.store(li, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        }
+        eng.prefetch(2, 0).unwrap();
+        eng.abort_step(&mut host);
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(host.current(), 0, "no phantom host bytes after abort");
+        assert_eq!(host.underflow_events(), 0);
+        {
+            let st = eng.lock_state();
+            assert_eq!((st.d2h_pending, st.h2d_pending, st.in_flight_d2h), (0, 0, 0));
+        }
+        // Next step works on the same engine.
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+        assert_eq!((host.current(), dev.current()), (0, 0));
+    }
+
+    #[test]
+    fn step_tape_abort_releases_fetched_device_charge() {
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let arena = ScratchArena::new();
+        let eng = Arc::new(engine(true, 1 << 30));
+        let mut tape = StepTape::with_engine(eng);
+        let mut rng = Rng::new(4);
+        tape.store(0, 0, tensor(&mut rng, 64), &mut dev, &mut host).unwrap();
+        tape.store(1, 0, tensor(&mut rng, 64), &mut dev, &mut host).unwrap();
+        let t = tape.fetch(1, 0, &mut dev, &mut host).unwrap();
+        assert_eq!(dev.tag_bytes(CKPT_TAG), 256);
+        arena.recycle(t); // the recompute consumed it; step then errors
+        tape.abort(&mut dev, &mut host, &arena);
+        assert_eq!(dev.tag_bytes(CKPT_TAG), 0, "fetched charge released");
+        assert_eq!(host.current(), 0);
+        assert_eq!(dev.underflow_events() + host.underflow_events(), 0);
+    }
+
+    #[test]
+    fn overlap_frac_clamps() {
+        let mut stalls = StallStats::default();
+        let mut stream = StreamStats::default();
+        assert_eq!(overlap_frac(&stalls, &stream), 0.0, "no copies: nothing hidden");
+        stream.copy_time_d2h = Duration::from_millis(10);
+        assert_eq!(overlap_frac(&stalls, &stream), 1.0);
+        stalls.d2h_wait = Duration::from_millis(4);
+        assert!((overlap_frac(&stalls, &stream) - 0.6).abs() < 1e-9);
+        stalls.d2h_wait = Duration::from_millis(40);
+        assert_eq!(overlap_frac(&stalls, &stream), 0.0);
+    }
+}

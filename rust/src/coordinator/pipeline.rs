@@ -26,11 +26,12 @@ use crate::collectives::Group;
 use crate::config::FeatureFlags;
 use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX};
 use crate::packing::{shard_packed, PackedSequence};
+use crate::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, StepTape};
 use crate::coordinator::optimizer::{AdamW, AdamWConfig};
 use crate::coordinator::tape::CheckpointTape;
 use crate::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
 use crate::coordinator::zero::{init_flat_params, slice_group, GroupGrads, ShardedStore};
-use crate::memory::{HostPool, MemoryTracker};
+use crate::memory::{prefetch_schedule, HostPool, MemoryTracker};
 use crate::obs::{self, Category, Tracer};
 use crate::runtime::{Engine, HostTensor, Manifest, ScratchArena};
 use crate::tiling::exec::{
@@ -152,6 +153,16 @@ pub struct TrainerOptions {
     /// RMSNorm + SwiGLU MLP — all row-wise) as a row-tiled sweep via
     /// `mlp_fwd_tile`/`mlp_bwd_tile`. Same artifact requirement.
     pub tiled_mlp: bool,
+    /// Run checkpoint offload through the async double-buffered engine
+    /// (`coordinator::offload`): forward stores become non-blocking D2H
+    /// copies bounded by the config's in-flight byte cap, and backward
+    /// H2D restores are prefetched one phase early wherever the
+    /// `memory::prefetch_schedule` says the device has headroom. Requires
+    /// `flags.ckpt_offload` (there is nothing to overlap on the
+    /// device-resident tape). `None` keeps the synchronous
+    /// [`CheckpointTape`] — the reference path the async engine must
+    /// match bit-for-bit (losses) and byte-for-byte (`transfer_bytes`).
+    pub async_offload: Option<OffloadConfig>,
     /// Record structured spans (`obs::Tracer`) across the engine, the
     /// collective group, the relayouts, the checkpoint tape, the tile
     /// sweeps, and the step loop. Off by default: every span site then
@@ -177,6 +188,7 @@ impl Default for TrainerOptions {
             arena_byte_budget: crate::runtime::tensor::DEFAULT_POOL_BYTE_BUDGET,
             tiled_loss: false,
             tiled_mlp: false,
+            async_offload: None,
             trace: false,
         }
     }
@@ -248,8 +260,17 @@ pub struct Trainer {
     mlp_tile_rows: usize,
     /// Scratch-buffer pool the step loop's relayouts ping-pong through:
     /// after the first forward/backward cycle populates it, the 2×n_layers
-    /// relayouts of every later step are allocation-free.
-    arena: ScratchArena,
+    /// relayouts of every later step are allocation-free. `Arc` so the
+    /// offload engine's copy-stream workers share the same pool (deref
+    /// keeps every `&self.arena` call site unchanged).
+    arena: Arc<ScratchArena>,
+    /// The async offload engine (`TrainerOptions::async_offload`); `None`
+    /// runs the synchronous tape.
+    offload: Option<Arc<AsyncOffloadEngine>>,
+    /// Per-layer H2D prefetch schedule (`memory::prefetch_schedule`),
+    /// derived once at construction from the artifact's shard shapes and
+    /// the device budget; consulted only on the async path.
+    prefetch_ok: Vec<bool>,
     /// Step tracer shared with the engine, the group, and the device
     /// tracker; the global disabled handle unless `TrainerOptions::trace`.
     tracer: Arc<Tracer>,
@@ -312,6 +333,35 @@ impl Trainer {
         let mut device = MemoryTracker::new(opts.device_bytes);
         device.set_tracer(tracer.clone());
 
+        let arena = Arc::new(ScratchArena::with_byte_budget(opts.arena_byte_budget));
+        let (offload, prefetch_ok) = if let Some(cfg) = &opts.async_offload {
+            anyhow::ensure!(
+                opts.flags.ckpt_offload,
+                "TrainerOptions::async_offload requires flags.ckpt_offload — a \
+                 device-resident tape has no host traffic to overlap"
+            );
+            let engine = Arc::new(AsyncOffloadEngine::new(
+                arena.clone(),
+                tracer.clone(),
+                cfg.clone(),
+            ));
+            // Schedule derivation uses the monolithic (untiled) working-set
+            // formulas even when tiled execution is on: the tiled sets are
+            // strictly smaller, so the schedule errs toward fewer early
+            // fetches — never toward device pressure.
+            let c = &manifest.config;
+            let ssh = manifest.seq_shard;
+            let resident =
+                if opts.parallel_ranks && sp > 1 { sp as u64 } else { 1 };
+            let ckpt = (sp * ssh * c.hidden * 4) as u64; // all ranks, one layer
+            let work = resident * untiled_mlp_fwd_bytes(ssh, c.hidden, c.ffn);
+            let head = resident * untiled_loss_bwd_bytes(ssh, c.vocab);
+            let ok = prefetch_schedule(c.n_layers, ckpt, work, head, opts.device_bytes);
+            (Some(engine), ok)
+        } else {
+            (None, Vec::new())
+        };
+
         Ok(Trainer {
             manifest,
             engine,
@@ -331,9 +381,17 @@ impl Trainer {
             tiled_mlp: opts.tiled_mlp,
             loss_tile_rows,
             mlp_tile_rows,
-            arena: ScratchArena::with_byte_budget(opts.arena_byte_budget),
+            arena,
+            offload,
+            prefetch_ok,
             tracer,
         })
+    }
+
+    /// The async offload engine when `TrainerOptions::async_offload` was
+    /// set (stall/stream accounting for benches and tests).
+    pub fn offload_engine(&self) -> Option<&Arc<AsyncOffloadEngine>> {
+        self.offload.as_ref()
     }
 
     /// The step tracer (the shared disabled handle unless
@@ -735,6 +793,34 @@ impl Trainer {
         loss_scale: f32,
         packed: Option<&PackedSequence>,
     ) -> Result<(f32, u64, Vec<DocumentLoss>)> {
+        let mut tape = match &self.offload {
+            Some(engine) => StepTape::with_engine(engine.clone()),
+            None => StepTape::sync(
+                CheckpointTape::new(self.n_layers(), self.manifest.sp, self.flags.ckpt_offload)
+                    .with_tracer(self.tracer.clone()),
+            ),
+        };
+        let out = self.forward_backward_shards_inner(&mut tape, shards, loss_scale, packed);
+        if out.is_err() {
+            // Deterministic mid-step teardown: drain the copy streams,
+            // release every checkpoint charge still held (host-staged and
+            // device-fetched), recycle the buffers. The trainer stays
+            // reusable after a failed step with no phantom pool bytes.
+            tape.abort(&mut self.device, &mut self.host, &self.arena);
+        }
+        out
+    }
+
+    /// The step body `forward_backward_shards` wraps; checkpoint traffic
+    /// goes through `tape` (sync or async), whose cleanup on error is the
+    /// wrapper's job.
+    fn forward_backward_shards_inner(
+        &mut self,
+        tape: &mut StepTape,
+        shards: &[ShardedBatch],
+        loss_scale: f32,
+        packed: Option<&PackedSequence>,
+    ) -> Result<(f32, u64, Vec<DocumentLoss>)> {
         let sp = self.manifest.sp;
         anyhow::ensure!(
             shards.len() == sp,
@@ -782,8 +868,6 @@ impl Trainer {
             h_host.push(t);
         }
 
-        let mut tape = CheckpointTape::new(n_layers, sp, self.flags.ckpt_offload)
-            .with_tracer(self.tracer.clone());
         for li in 0..n_layers {
             // run the layer first (the tiled MLP sweep slices row tiles
             // from the live h_host copies), THEN checkpoint the layer
@@ -797,6 +881,12 @@ impl Trainer {
             self.arena.recycle_all(act.o_sh_host);
             h_host = act.h_out_host;
             h = h_new;
+        }
+        // Async path: the top layer's backward is the first fetch; start
+        // its H2D restore now so it lands behind the loss head (when the
+        // schedule says the device can hold it alongside the logits).
+        if n_layers > 0 && self.prefetch_ok.last() == Some(&true) {
+            tape.prefetch_layer(n_layers - 1, sp)?;
         }
 
         let (lnf, unembed) = (&dev_params.final_[0], &dev_params.final_[1]);
@@ -1024,6 +1114,13 @@ impl Trainer {
             for r in 0..sp {
                 h_in_host.push(tape.fetch(li, r, &mut self.device, &mut self.host)?);
             }
+            // Double-buffer: with this layer's checkpoints in hand, start
+            // layer li-1's H2D restore so it copies behind our recompute
+            // (async path; schedule-gated so the early fetch never
+            // overcommits the device).
+            if li > 0 && self.prefetch_ok.get(li - 1) == Some(&true) {
+                tape.prefetch_layer(li - 1, sp)?;
+            }
             let h_in = self.upload_all(&h_in_host)?;
             // ZeRO-3 re-gathers the layer's params for backward (ledger).
             self.account_bwd_regather(li);
@@ -1158,8 +1255,11 @@ impl Trainer {
             self.grads.reduce_into_range(&self.group, range, &contribs);
             // tape-fetched checkpoints are spent; back to the pool
             // (arena-sourced under tiled_mlp — keeps sweeps
-            // allocation-free at steady state)
+            // allocation-free at steady state), and their device charge
+            // (held since fetch — see `CheckpointTape::fetch`) ends here
+            let fetched: u64 = h_in_host.iter().map(|t| t.size_bytes() as u64).sum();
             self.arena.recycle_all(h_in_host);
+            tape.release_fetched(fetched, &mut self.device);
         }
 
         // embed backward; under tiled_mlp the device d_h is materialized
@@ -1183,7 +1283,7 @@ impl Trainer {
         self.grads
             .reduce_into_range(&self.group, 0..embed_numel, &contribs);
 
-        Ok((loss, tape.transfer_bytes, doc_losses))
+        Ok((loss, tape.transfer_bytes(), doc_losses))
     }
 
     /// One training step on a PACKED batch of variable-length documents

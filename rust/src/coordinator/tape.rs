@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::memory::{HostPool, MemoryTracker};
 use crate::obs::{Category, Tracer};
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{HostTensor, ScratchArena};
 
 /// Where a checkpoint currently resides.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +88,16 @@ impl CheckpointTape {
     /// Fetch layer `li`'s input back for recompute; restores to device
     /// (backward needs it on-GPU — the paper notes this copy cannot
     /// overlap much in backward).
+    ///
+    /// Accounting contract: the restored checkpoint is DEVICE-resident
+    /// until the recompute is done with it, so fetch leaves `bytes`
+    /// charged to the device tracker's `ckpt` tag in both residence modes
+    /// (host-resident slots move their charge host→device here). The
+    /// caller must `device.free(bytes, "ckpt")` when it recycles the
+    /// returned tensor — the pipeline does this at the end of each
+    /// backward layer. (Before this rule, a host-resident checkpoint was
+    /// never charged on fetch and the backward device peak understated
+    /// resident checkpoint bytes.)
     pub fn fetch(
         &mut self,
         li: usize,
@@ -109,12 +119,42 @@ impl CheckpointTape {
         span.set_bytes(slot.bytes);
         match slot.residence {
             Residence::Host => {
+                // Charge the device side first: if it OOMs, put the slot
+                // back so nothing is double-freed or leaked.
+                if let Err(e) = device.alloc(slot.bytes, "ckpt") {
+                    drop(span);
+                    self.slots[li][rank] = Some(slot);
+                    return Err(e);
+                }
                 host.free(slot.bytes);
                 self.transfer_bytes += slot.bytes; // host -> device copy
             }
-            Residence::Device => device.free(slot.bytes, "ckpt"),
+            Residence::Device => {} // already charged since store
         }
         Ok(slot.tensor)
+    }
+
+    /// Drop every remaining slot, releasing its host/device charge and
+    /// recycling its tensor into `arena`. The mid-step error path: after
+    /// a backward stage fails, the un-fetched checkpoints must not leave
+    /// phantom bytes in the pools or leak their buffers.
+    pub fn clear(
+        &mut self,
+        device: &mut MemoryTracker,
+        host: &mut HostPool,
+        arena: &ScratchArena,
+    ) {
+        for layer in &mut self.slots {
+            for slot in layer.iter_mut() {
+                if let Some(s) = slot.take() {
+                    match s.residence {
+                        Residence::Host => host.free(s.bytes),
+                        Residence::Device => device.free(s.bytes, "ckpt"),
+                    }
+                    arena.recycle(s.tensor);
+                }
+            }
+        }
     }
 
     /// Device-resident checkpoint bytes right now (Figure 7's "hill").
@@ -163,10 +203,70 @@ mod tests {
         assert_eq!(tape.device_bytes(), 3 * 1024);
         assert_eq!(dev.current(), 3 * 1024);
         for li in (0..3).rev() {
-            tape.fetch(li, 0, &mut dev, &mut host).unwrap();
+            let ck = tape.fetch(li, 0, &mut dev, &mut host).unwrap();
+            // The restored checkpoint stays device-charged through the
+            // recompute; the caller releases it when done with the tensor.
+            dev.free(ck.size_bytes() as u64, "ckpt");
         }
         assert_eq!(dev.current(), 0);
         assert_eq!(tape.stored(), 0);
+        assert_eq!(dev.underflow_events(), 0);
+    }
+
+    #[test]
+    fn fetch_charges_restored_checkpoint_to_device() {
+        // Regression: a host-resident checkpoint restored for recompute
+        // IS device-resident — fetch must move the charge host→device so
+        // the backward device peak sees it, and the caller frees it when
+        // the recompute recycles the tensor.
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(1, 1, true);
+        tape.store(0, 0, t(256), &mut dev, &mut host).unwrap();
+        assert_eq!((dev.current(), host.current()), (0, 1024));
+        let ck = tape.fetch(0, 0, &mut dev, &mut host).unwrap();
+        assert_eq!(host.current(), 0, "host slot released on fetch");
+        assert_eq!(dev.current(), 1024, "restored checkpoint charged to device");
+        assert_eq!(dev.tag_bytes("ckpt"), 1024);
+        dev.free(ck.size_bytes() as u64, "ckpt");
+        assert_eq!(dev.current(), 0);
+        assert_eq!(tape.transfer_bytes, 2 * 1024, "both copy directions counted");
+    }
+
+    #[test]
+    fn fetch_oom_restores_the_slot() {
+        // Device too small to take the restored checkpoint back: fetch
+        // must fail WITHOUT dropping the checkpoint or corrupting the
+        // host/device ledgers.
+        let mut dev = MemoryTracker::new(100);
+        let mut host = HostPool::new(1 << 30);
+        let mut tape = CheckpointTape::new(1, 1, true);
+        tape.store(0, 0, t(256), &mut dev, &mut host).unwrap();
+        assert!(tape.fetch(0, 0, &mut dev, &mut host).is_err());
+        assert_eq!(tape.stored(), 1, "slot survives the failed fetch");
+        assert_eq!(host.current(), 1024, "host charge untouched");
+        assert_eq!(dev.current(), 0);
+    }
+
+    #[test]
+    fn clear_releases_remaining_slots() {
+        use crate::runtime::tensor::ScratchArena;
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let arena = ScratchArena::new();
+        // One host-resident and one device-resident tape, both mid-step.
+        let mut tape = CheckpointTape::new(2, 1, true);
+        tape.store(0, 0, t(64), &mut dev, &mut host).unwrap();
+        tape.store(1, 0, t(64), &mut dev, &mut host).unwrap();
+        let mut dtape = CheckpointTape::new(1, 1, false);
+        dtape.store(0, 0, t(64), &mut dev, &mut host).unwrap();
+        tape.clear(&mut dev, &mut host, &arena);
+        dtape.clear(&mut dev, &mut host, &arena);
+        assert_eq!((tape.stored(), dtape.stored()), (0, 0));
+        assert_eq!(host.current(), 0, "no phantom host bytes");
+        assert_eq!(dev.current(), 0, "no phantom device bytes");
+        assert_eq!(arena.pooled(), 3, "buffers recycled, not leaked");
+        assert_eq!(host.underflow_events() + dev.underflow_events(), 0);
     }
 
     #[test]

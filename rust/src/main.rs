@@ -300,8 +300,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let dir = alst::runtime::Manifest::artifact_dir(&root, &config, sp, seq);
     let (spans, mem) = if dir.join("manifest.json").exists() {
         println!("tracing {steps} PJRT train steps from {}", dir.display());
+        let flags = flags_from_args(args);
         let opts = TrainerOptions {
-            flags: flags_from_args(args),
+            // whenever checkpoints offload, trace the async engine so the
+            // copy-stream lanes and stall spans appear in the export
+            async_offload: flags
+                .ckpt_offload
+                .then(alst::coordinator::offload::OffloadConfig::default),
+            flags,
             seed: args.usize("seed", 0) as u64,
             trace: true,
             // serial ranks: per-rank spans don't overlap in wall time, so
@@ -358,7 +364,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
 /// The artifact-free traced workload: per step, a Step span wrapping
 /// relayout cycles (Relayout + Collective spans and the byte ledger),
-/// checkpoint store/fetch through an offloading tape (Offload spans and
+/// checkpoint store/prefetch/fetch through the async offload engine
+/// (Offload spans, CopyD2H/CopyH2D stream lanes, Stall spans, and
 /// `MemoryTracker` events), real `Engine::to_buffer` uploads (Marshal
 /// spans), and a tiled loss sweep over the host reference head (Tile
 /// spans, per-rank via `rank_scope`).
@@ -367,7 +374,7 @@ fn synthetic_trace(
     steps: usize,
 ) -> Result<(Vec<alst::obs::Span>, Vec<alst::obs::MemEvent>)> {
     use alst::coordinator::dataloader::IGNORE_INDEX;
-    use alst::coordinator::tape::CheckpointTape;
+    use alst::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, CKPT_TAG};
     use alst::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
     use alst::obs::{Category, Tracer};
     use alst::tiling::exec::{HostLossHead, TiledLossExec};
@@ -386,7 +393,9 @@ fn synthetic_trace(
     let mut device = alst::memory::MemoryTracker::new(1 << 40);
     device.set_tracer(tracer.clone());
     let mut host = alst::memory::HostPool::new(1 << 40);
-    let arena = alst::runtime::ScratchArena::new();
+    let arena = Arc::new(alst::runtime::ScratchArena::new());
+    let offload =
+        AsyncOffloadEngine::new(arena.clone(), tracer.clone(), OffloadConfig::default());
     let mut rng = alst::util::rng::Rng::new(7);
 
     let q: Vec<alst::runtime::HostTensor> = (0..sp)
@@ -421,19 +430,26 @@ fn synthetic_trace(
             arena.recycle_all(back);
         }
 
-        let mut tape =
-            CheckpointTape::new(n_layers, sp, true).with_tracer(tracer.clone());
         for li in 0..n_layers {
             for r in 0..sp {
                 let t = alst::runtime::HostTensor::zeros(&[ssh, hidden]);
-                tape.store(li, r, t, &mut device, &mut host)?;
+                offload.store(li, r, t, &mut host)?;
             }
         }
+        // double-buffered restore: prefetch the top layer, then fetch each
+        // layer while the one below copies behind the marshal work
+        offload.prefetch_layer(n_layers - 1, sp)?;
         for li in (0..n_layers).rev() {
+            if li > 0 {
+                offload.prefetch_layer(li - 1, sp)?;
+            }
             for r in 0..sp {
-                let t = tape.fetch(li, r, &mut device, &mut host)?;
+                let t = offload.fetch(li, r, &mut device, &mut host)?;
                 // marshal: a real host->device literal build on the CPU client
                 std::hint::black_box(engine.to_buffer(&t)?);
+                // fetched checkpoints stay device-charged until consumed
+                device.free(t.size_bytes() as u64, CKPT_TAG);
+                arena.recycle(t);
             }
         }
 

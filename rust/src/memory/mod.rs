@@ -20,5 +20,5 @@ pub use estimator::{
 };
 pub use hostpool::HostPool;
 pub use search::{max_seqlen_search, SearchOutcome};
-pub use timeline::{simulate_step, sparkline, TimelineResult};
+pub use timeline::{prefetch_schedule, simulate_step, sparkline, TimelineResult};
 pub use tracker::{DeviceModel, MemoryTracker, OomError};

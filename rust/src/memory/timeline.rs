@@ -80,6 +80,44 @@ pub fn simulate_step(
     })
 }
 
+/// Derive the async offload engine's per-layer H2D prefetch schedule from
+/// the same backward walk `simulate_step` replays. `ok[li]` means layer
+/// `li`'s checkpoint may be fetched one phase *early* — while the phase
+/// above it is still computing — because the device can hold the extra
+/// resident checkpoint on top of that phase's working set:
+///
+/// - `ok[n_layers-1]`: prefetched during the loss head, which holds
+///   `head_bytes` of logits/loss buffers.
+/// - `ok[li]` (li < n_layers-1): prefetched during layer `li+1`'s
+///   recompute, which holds `2*work_bytes` (recompute + gradient buffers,
+///   the same figure `simulate_step` charges) plus layer `li+1`'s own
+///   restored checkpoint.
+///
+/// When a layer's slot is `false` the engine falls back to fetching at
+/// the start of that layer's backward phase (the stall the paper says
+/// "cannot overlap much" — but only for that layer).
+pub fn prefetch_schedule(
+    n_layers: usize,
+    ckpt_bytes: u64,
+    work_bytes: u64,
+    head_bytes: u64,
+    device_budget: u64,
+) -> Vec<bool> {
+    let mut ok = vec![false; n_layers];
+    if n_layers == 0 {
+        return ok;
+    }
+    // u128 sums: budgets and paper-scale byte counts can legitimately be
+    // near u64 limits in the simulator; the comparison must not wrap.
+    let budget = device_budget as u128;
+    ok[n_layers - 1] = head_bytes as u128 + ckpt_bytes as u128 <= budget;
+    let mid_need = 2 * work_bytes as u128 + 2 * ckpt_bytes as u128;
+    for slot in ok.iter_mut().take(n_layers - 1) {
+        *slot = mid_need <= budget;
+    }
+    ok
+}
+
 /// ASCII sparkline of the timeline (examples/doc output).
 pub fn sparkline(samples: &[u64], width: usize) -> String {
     if samples.is_empty() {
@@ -153,6 +191,26 @@ mod tests {
         let m = preset("llama3-8b").unwrap();
         let err = simulate_step(m, 500_000, 8, &FeatureFlags::baseline(), GIB, 1 << 45);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn prefetch_schedule_tracks_device_headroom() {
+        // Generous budget: every layer prefetches one phase early.
+        assert_eq!(prefetch_schedule(3, 100, 200, 500, 10_000), vec![true; 3]);
+        // Budget fits loss head + one checkpoint (500 + 100) but not a
+        // mid-layer phase with two resident checkpoints (2*200 + 2*100):
+        // only the top layer overlaps its fetch.
+        assert_eq!(prefetch_schedule(3, 100, 200, 500, 650), vec![false, false, true]);
+        // Too tight for anything: the engine degrades to fetch-on-demand.
+        assert_eq!(prefetch_schedule(3, 100, 200, 500, 300), vec![false; 3]);
+        // Degenerate shapes.
+        assert!(prefetch_schedule(0, 100, 200, 500, 1 << 40).is_empty());
+        assert_eq!(prefetch_schedule(1, 100, 0, 0, 99), vec![false]);
+        // Near-u64 inputs must not wrap the comparison into `true`.
+        assert_eq!(
+            prefetch_schedule(2, u64::MAX, u64::MAX, u64::MAX, u64::MAX),
+            vec![false, false]
+        );
     }
 
     #[test]

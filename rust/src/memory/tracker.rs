@@ -85,6 +85,8 @@ pub struct MemoryTracker {
     /// span, so a memory peak can name the span that caused it.
     tracer: Option<Arc<Tracer>>,
     events: Vec<MemEvent>,
+    /// See [`MemoryTracker::underflow_events`].
+    underflow_events: u64,
 }
 
 impl MemoryTracker {
@@ -98,6 +100,7 @@ impl MemoryTracker {
             timeline: Vec::new(),
             tracer: None,
             events: Vec::new(),
+            underflow_events: 0,
         }
     }
 
@@ -163,13 +166,24 @@ impl MemoryTracker {
     }
 
     pub fn free(&mut self, bytes: u64, tag: &str) {
-        debug_assert!(self.current >= bytes, "free underflow");
+        // Same hardening as `HostPool::free`: saturate instead of wrapping,
+        // but count the mismatch so tests can assert clean pairing.
+        if bytes > self.current {
+            debug_assert!(false, "free underflow: {} > {} (`{}`)", bytes, self.current, tag);
+            self.underflow_events += 1;
+        }
         self.current = self.current.saturating_sub(bytes);
         if let Some(v) = self.by_tag.get_mut(tag) {
             *v = v.saturating_sub(bytes);
         }
         self.timeline.push(self.current);
         self.record_event(tag, -(bytes as i64));
+    }
+
+    /// Number of `free` calls that exceeded the live byte count (0 on any
+    /// correct alloc/free pairing).
+    pub fn underflow_events(&self) -> u64 {
+        self.underflow_events
     }
 
     pub fn current(&self) -> u64 {

@@ -169,7 +169,10 @@ pub fn write_trace(path: &Path, spans: &[Span], mem: &[MemEvent]) -> Result<()> 
 
 /// Validate a trace-event document: known phases only, every event carries
 /// pid/tid/ts, timestamps are monotonic (non-decreasing) per (pid, tid)
-/// lane, and every `B` is closed by an `E` with the same name (LIFO).
+/// lane, every `B` is closed by an `E` with the same name (LIFO), and the
+/// offload copy-stream lanes (`cat` `copy_d2h`/`copy_h2d`) never stack:
+/// one worker serializes each stream, so an open copy span when another
+/// begins means two copies overlapped within one stream.
 /// This is the contract the CI bench-smoke job checks on `trace.json`.
 pub fn validate_trace(doc: &Json) -> Result<()> {
     let events = doc
@@ -208,6 +211,14 @@ pub fn validate_trace(doc: &Json) -> Result<()> {
         lane.0 = ts;
         match ph {
             "B" => {
+                if let Some(cat) = e.get("cat").and_then(|c| c.as_str()) {
+                    ensure!(
+                        !(matches!(cat, "copy_d2h" | "copy_h2d") && !lane.1.is_empty()),
+                        "copy-stream span overlaps `{}` in lane pid={pid} tid={tid}: \
+                         one stream must serialize its copies",
+                        lane.1.last().unwrap()
+                    );
+                }
                 lane.1.push(e.str_field("name")?.to_string());
                 durations += 1;
             }
@@ -314,6 +325,45 @@ mod tests {
             r#"{"traceEvents": [
                 {"ph": "B", "name": "x", "pid": 0, "tid": 0, "ts": 3},
                 {"ph": "E", "name": "x", "pid": 0, "tid": 0, "ts": 5}
+            ]}"#,
+        )
+        .unwrap();
+        validate_trace(&doc).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_overlapping_copy_stream_spans() {
+        // Two d2h copies stacked in one lane: a stream cannot run two
+        // copies at once, so validation must fail.
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "B", "name": "d2h_copy", "cat": "copy_d2h", "pid": 0, "tid": 8, "ts": 1},
+                {"ph": "B", "name": "d2h_copy", "cat": "copy_d2h", "pid": 0, "tid": 8, "ts": 2},
+                {"ph": "E", "name": "d2h_copy", "pid": 0, "tid": 8, "ts": 3},
+                {"ph": "E", "name": "d2h_copy", "pid": 0, "tid": 8, "ts": 4}
+            ]}"#,
+        )
+        .unwrap();
+        let err = validate_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("copy-stream"), "{err}");
+        // Back-to-back copies in the same lane are fine.
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "B", "name": "d2h_copy", "cat": "copy_d2h", "pid": 0, "tid": 8, "ts": 1},
+                {"ph": "E", "name": "d2h_copy", "pid": 0, "tid": 8, "ts": 2},
+                {"ph": "B", "name": "d2h_copy", "cat": "copy_d2h", "pid": 0, "tid": 8, "ts": 2},
+                {"ph": "E", "name": "d2h_copy", "pid": 0, "tid": 8, "ts": 3}
+            ]}"#,
+        )
+        .unwrap();
+        validate_trace(&doc).unwrap();
+        // Nesting in a non-copy lane is still allowed (step > exec).
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "B", "name": "step", "cat": "step", "pid": 0, "tid": 0, "ts": 1},
+                {"ph": "B", "name": "fwd", "cat": "step", "pid": 0, "tid": 0, "ts": 2},
+                {"ph": "E", "name": "fwd", "pid": 0, "tid": 0, "ts": 3},
+                {"ph": "E", "name": "step", "pid": 0, "tid": 0, "ts": 4}
             ]}"#,
         )
         .unwrap();

@@ -1,11 +1,15 @@
 //! Per-step attribution: where did the step's wall-clock go?
 //!
 //! Each `Step` span defines a window; every *leaf* span (exec, marshal,
-//! relayout, collective, offload, optimizer) that starts inside the window
-//! is summed into its category. Container spans (`Step`, `Tile`) are
-//! excluded so a tile sweep's time is not counted twice alongside the
-//! exec spans it encloses. The "untracked" column is
-//! `max(0, step_time - sum(leaf durations))` — the gap no span explains.
+//! relayout, collective, offload, optimizer, stall) that starts inside the
+//! window is summed into its category. Container spans (`Step`, `Tile`)
+//! are excluded so a tile sweep's time is not counted twice alongside the
+//! exec spans it encloses, and the offload copy-stream lanes
+//! (`CopyD2H`/`CopyH2D`) are excluded because they overlap compute — the
+//! critical-path cost of a copy is the `Stall` leaf recorded where the
+//! step blocked on it, so "untracked" no longer absorbs copy waits. The
+//! "untracked" column is `max(0, step_time - sum(leaf durations))` — the
+//! gap no span explains.
 //!
 //! Attribution reads as a *fraction of the step* only when rank work does
 //! not overlap in time (`parallel_ranks: false`, the `trace` subcommand's
@@ -140,6 +144,7 @@ impl AttributionReport {
                 "collective",
                 "offload",
                 "optimizer",
+                "stall",
                 "untracked",
             ],
         );
@@ -154,6 +159,7 @@ impl AttributionReport {
                 ms(s.cat(Category::Collective).dur),
                 ms(s.cat(Category::Offload).dur),
                 ms(s.cat(Category::Optimizer).dur),
+                ms(s.cat(Category::Stall).dur),
                 ms(s.untracked),
             ]);
         }
@@ -282,7 +288,37 @@ mod tests {
         let rep = AttributionReport::build(&t.drain(), &[]);
         let table = rep.to_table();
         assert_eq!(table.rows.len(), 3);
-        assert_eq!(table.header.len(), 9);
+        assert_eq!(table.header.len(), 10);
         assert!(table.to_csv().starts_with("step,total,exec"));
+        assert!(table.header.contains(&"stall".to_string()));
+    }
+
+    #[test]
+    fn stall_is_attributed_but_overlapped_copies_are_not() {
+        let t = Tracer::new(true);
+        let step_time = Duration::from_secs(1);
+        {
+            let mut stp = t.span(Category::Step, "train_step");
+            stp.set_dur(step_time);
+            stp.set_step(1);
+            span(&t, Category::Exec, "fwd", 500, 0, None);
+            // The engine blocked 200ns waiting for an H2D copy: that IS
+            // critical-path time and must not land in "untracked".
+            span(&t, Category::Stall, "stall_h2d", 200, 64, None);
+            // The copies themselves ran on the stream workers, overlapped
+            // with the exec above — summing them would double-count.
+            span(&t, Category::CopyD2H, "d2h_copy", 400, 64, None);
+            span(&t, Category::CopyH2D, "h2d_copy", 300, 64, None);
+        }
+        let rep = AttributionReport::build(&t.drain(), &[]);
+        let s = &rep.steps[0];
+        assert_eq!(s.cat(Category::Stall).dur, Duration::from_nanos(200));
+        assert_eq!(s.tracked(), Duration::from_nanos(700));
+        assert_eq!(s.untracked, step_time - Duration::from_nanos(700));
+        assert!(s.by_cat.get(&Category::CopyD2H).is_none());
+        assert!(s.by_cat.get(&Category::CopyH2D).is_none());
+        // Copy lanes still reconcile in the whole-trace totals.
+        assert_eq!(rep.total(Category::CopyD2H).bytes, 64);
+        assert_eq!(rep.total(Category::CopyH2D).spans, 1);
     }
 }

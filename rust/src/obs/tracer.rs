@@ -22,6 +22,10 @@ use std::time::{Duration, Instant};
 /// Span taxonomy. `Step` and `Tile` are *containers*: they enclose leaf
 /// spans (a tile sweep contains the per-tile exec spans) and are excluded
 /// from per-step attribution sums so time is not double-counted.
+/// `CopyD2H`/`CopyH2D` are the offload engine's copy-stream lanes: their
+/// spans run on worker threads *concurrently* with compute, so they are
+/// excluded from the leaf sums too — what the critical path pays for a
+/// copy is the `Stall` span recorded where the step actually blocked.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Category {
     Step,
@@ -32,10 +36,13 @@ pub enum Category {
     Offload,
     Optimizer,
     Tile,
+    CopyD2H,
+    CopyH2D,
+    Stall,
 }
 
 impl Category {
-    pub const ALL: [Category; 8] = [
+    pub const ALL: [Category; 11] = [
         Category::Step,
         Category::Exec,
         Category::Marshal,
@@ -44,16 +51,21 @@ impl Category {
         Category::Offload,
         Category::Optimizer,
         Category::Tile,
+        Category::CopyD2H,
+        Category::CopyH2D,
+        Category::Stall,
     ];
 
-    /// Leaf categories enter the attribution sums; containers do not.
-    pub const LEAVES: [Category; 6] = [
+    /// Leaf categories enter the attribution sums; containers and the
+    /// overlapped copy-stream lanes do not.
+    pub const LEAVES: [Category; 7] = [
         Category::Exec,
         Category::Marshal,
         Category::Relayout,
         Category::Collective,
         Category::Offload,
         Category::Optimizer,
+        Category::Stall,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -66,6 +78,9 @@ impl Category {
             Category::Offload => "offload",
             Category::Optimizer => "optimizer",
             Category::Tile => "tile",
+            Category::CopyD2H => "copy_d2h",
+            Category::CopyH2D => "copy_h2d",
+            Category::Stall => "stall",
         }
     }
 
@@ -80,11 +95,24 @@ impl Category {
             Category::Offload => 5,
             Category::Optimizer => 6,
             Category::Tile => 7,
+            Category::CopyD2H => 8,
+            Category::CopyH2D => 9,
+            Category::Stall => 10,
         }
     }
 
     pub fn is_leaf(self) -> bool {
-        !matches!(self, Category::Step | Category::Tile)
+        !matches!(
+            self,
+            Category::Step | Category::Tile | Category::CopyD2H | Category::CopyH2D
+        )
+    }
+
+    /// True for the offload engine's single-stream copy lanes; within one
+    /// stream copies serialize, so trace validation rejects nested or
+    /// overlapping spans in these lanes.
+    pub fn is_copy_stream(self) -> bool {
+        matches!(self, Category::CopyD2H | Category::CopyH2D)
     }
 }
 
@@ -487,6 +515,25 @@ mod tests {
         assert_eq!(s.mem_delta, 768);
         // Counter is cumulative per-thread; neutralize for other tests.
         note_mem(-768);
+    }
+
+    #[test]
+    fn taxonomy_is_consistent() {
+        // tids are the lane contract for the Chrome export: unique, dense.
+        let mut tids: Vec<u64> = Category::ALL.iter().map(|c| c.tid()).collect();
+        tids.sort_unstable();
+        assert_eq!(tids, (0..Category::ALL.len() as u64).collect::<Vec<_>>());
+        for c in Category::ALL {
+            assert_eq!(c.is_leaf(), Category::LEAVES.contains(&c), "{:?}", c);
+            assert_eq!(
+                c.is_copy_stream(),
+                matches!(c, Category::CopyD2H | Category::CopyH2D)
+            );
+        }
+        // Copy lanes overlap compute; only the stall they induce is a leaf.
+        assert!(!Category::CopyD2H.is_leaf());
+        assert!(!Category::CopyH2D.is_leaf());
+        assert!(Category::Stall.is_leaf());
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub struct BenchResult {
     /// Logical bytes moved per iteration (set with `with_bytes`); powers
     /// the GiB/s column of the JSON report.
     pub bytes_per_iter: Option<u64>,
+    /// Bench-specific numeric fields (set with `with_extra`), serialized
+    /// verbatim into the JSON record — e.g. the offload rows' `stall_ms`
+    /// / `copy_ms` / `overlap_frac` that CI bench-smoke validates.
+    pub extras: BTreeMap<String, f64>,
 }
 
 impl BenchResult {
@@ -40,6 +44,12 @@ impl BenchResult {
     /// Attach the per-iteration data volume (for throughput reporting).
     pub fn with_bytes(mut self, bytes: u64) -> BenchResult {
         self.bytes_per_iter = Some(bytes);
+        self
+    }
+
+    /// Attach a bench-specific numeric field to the JSON record.
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchResult {
+        self.extras.insert(key.to_string(), value);
         self
     }
 
@@ -69,6 +79,9 @@ impl BenchResult {
         }
         if let Some(g) = self.gib_per_s() {
             m.insert("gib_per_s".to_string(), Json::Num(g));
+        }
+        for (k, v) in &self.extras {
+            m.insert(k.clone(), Json::Num(*v));
         }
         Json::Obj(m)
     }
@@ -107,6 +120,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
         p95: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
         min: samples[0],
         bytes_per_iter: None,
+        extras: BTreeMap::new(),
     };
     println!("{}", res.report());
     res
@@ -272,14 +286,20 @@ mod tests {
             p95: Duration::from_nanos(3_000),
             min: Duration::from_nanos(900),
             bytes_per_iter: None,
+            extras: BTreeMap::new(),
         }
-        .with_bytes(1 << 30);
+        .with_bytes(1 << 30)
+        .with_extra("stall_ms", 1.25)
+        .with_extra("overlap_frac", 0.5);
         // 1 GiB in 1000ns -> 1e6 GiB/s
         assert!((r.gib_per_s().unwrap() - 1e6).abs() < 1.0);
         let j = r.to_json();
         assert_eq!(j.str_field("name").unwrap(), "a2a seq->head");
         assert_eq!(j.usize_field("median_ns").unwrap(), 1_000);
         assert_eq!(j.usize_field("bytes_per_iter").unwrap(), 1 << 30);
+        // extras serialize verbatim as numeric fields
+        assert!((j.f64_field("stall_ms").unwrap() - 1.25).abs() < 1e-12);
+        assert!((j.f64_field("overlap_frac").unwrap() - 0.5).abs() < 1e-12);
         // report wraps it with schema metadata and reparses cleanly
         let mut rep = BenchReport::new("ulysses");
         rep.push(&r);

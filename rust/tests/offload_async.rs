@@ -1,0 +1,400 @@
+//! Concurrency suite for the async offload engine (`coordinator/offload`).
+//!
+//! Artifact-free sections always run: threaded-vs-inline bit-identity of
+//! the staged payloads, `transfer_bytes` equality against the sync
+//! `CheckpointTape` on the same schedule, the in-flight byte cap
+//! reconstructed from drained spans, exact stall-span/ledger
+//! reconciliation, single-stream serialization of the copy lanes under
+//! the CI trace validator, and deterministic teardown on a mid-backward
+//! error. The end-to-end trainer section (async path must be bit-identical
+//! to the sync tape in losses, parameters, and transfer volume) gates on
+//! `artifacts/` like the rest of the integration suite.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alst::config::FeatureFlags;
+use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
+use alst::coordinator::offload::{
+    AsyncOffloadEngine, OffloadConfig, StepTape, CKPT_TAG,
+};
+use alst::coordinator::pipeline::{Trainer, TrainerOptions};
+use alst::coordinator::tape::CheckpointTape;
+use alst::memory::{HostPool, MemoryTracker};
+use alst::obs::{trace_events, validate_trace, Category, Span, Tracer};
+use alst::runtime::{HostTensor, Manifest, ScratchArena};
+use alst::util::rng::Rng;
+
+fn artifacts(config: &str, sp: usize, seq: usize) -> Option<PathBuf> {
+    let dir = Manifest::artifact_dir(Path::new("artifacts"), config, sp, seq);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {} missing — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+fn payload(rng: &mut Rng, n: usize) -> HostTensor {
+    HostTensor::f32(vec![n], rng.normal_vec(n, 1.0))
+}
+
+fn engine(overlap: bool, cap: u64, tracer: Arc<Tracer>) -> AsyncOffloadEngine {
+    AsyncOffloadEngine::new(
+        Arc::new(ScratchArena::new()),
+        tracer,
+        OffloadConfig { in_flight_cap: cap, overlap },
+    )
+}
+
+/// Drive one full store→prefetch→fetch schedule (layers-major forward,
+/// reverse backward — the pipeline's order) and return the fetched
+/// payload bit patterns in backward order.
+fn run_schedule(
+    eng: &AsyncOffloadEngine,
+    layers: usize,
+    sp: usize,
+    seed: u64,
+) -> Vec<Vec<u32>> {
+    let mut dev = MemoryTracker::new(1 << 30);
+    let mut host = HostPool::new(1 << 30);
+    let mut rng = Rng::new(seed);
+    for li in 0..layers {
+        for r in 0..sp {
+            eng.store(li, r, payload(&mut rng, 256 + li * sp + r), &mut host)
+                .unwrap();
+        }
+    }
+    eng.prefetch_layer(layers - 1, sp).unwrap();
+    let mut out = Vec::new();
+    for li in (0..layers).rev() {
+        if li > 0 {
+            eng.prefetch_layer(li - 1, sp).unwrap();
+        }
+        for r in 0..sp {
+            let t = eng.fetch(li, r, &mut dev, &mut host).unwrap();
+            out.push(t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect());
+            dev.free(t.size_bytes() as u64, CKPT_TAG);
+        }
+    }
+    eng.drain();
+    assert_eq!(eng.pending(), 0);
+    assert_eq!(host.current(), 0, "all staged bytes released");
+    assert_eq!(dev.current(), 0, "all fetched charges released");
+    out
+}
+
+/// ISSUE satellite: threaded-vs-serial bit-identity. The overlap engine
+/// (two worker threads) and the inline engine (caller thread) must hand
+/// back byte-for-byte identical checkpoints for the same schedule, and
+/// move the same number of bytes.
+#[test]
+fn threaded_and_inline_engines_agree_bitwise() {
+    let (layers, sp) = (3usize, 2usize);
+    let t_eng = engine(true, 1 << 30, Tracer::off());
+    let i_eng = engine(false, 1 << 30, Tracer::off());
+    let threaded = run_schedule(&t_eng, layers, sp, 21);
+    let inline = run_schedule(&i_eng, layers, sp, 21);
+    assert_eq!(threaded, inline, "payload bits differ across modes");
+    assert_eq!(t_eng.transfer_bytes(), i_eng.transfer_bytes());
+    // The threaded run hid at least some copy time; the inline run none.
+    assert!(t_eng.stream_stats().copies_d2h > 0);
+}
+
+/// ISSUE satellite: `transfer_bytes` equality with the sync tape. The
+/// engine's two streams must ledger exactly the bytes the passive
+/// `CheckpointTape` counts for the identical store/fetch schedule.
+#[test]
+fn engine_transfer_bytes_match_sync_tape() {
+    let (layers, sp) = (3usize, 2usize);
+    let eng = engine(true, 1 << 30, Tracer::off());
+    let _ = run_schedule(&eng, layers, sp, 5);
+
+    let mut tape = CheckpointTape::new(layers, sp, true);
+    let mut dev = MemoryTracker::new(1 << 30);
+    let mut host = HostPool::new(1 << 30);
+    let arena = ScratchArena::new();
+    let mut rng = Rng::new(5);
+    for li in 0..layers {
+        for r in 0..sp {
+            tape.store(li, r, payload(&mut rng, 256 + li * sp + r), &mut dev, &mut host)
+                .unwrap();
+        }
+    }
+    for li in (0..layers).rev() {
+        for r in 0..sp {
+            let t = tape.fetch(li, r, &mut dev, &mut host).unwrap();
+            dev.free(t.size_bytes() as u64, CKPT_TAG);
+            arena.recycle(t);
+        }
+    }
+    assert_eq!(
+        eng.transfer_bytes(),
+        tape.transfer_bytes,
+        "async streams must move exactly the sync tape's bytes"
+    );
+}
+
+/// ISSUE satellite: the in-flight cap is never exceeded, asserted from
+/// drained spans. Every `ckpt_store_async` instant span marks a `+bytes`
+/// edge at its end; every `d2h_copy` span marks the `-bytes` edge at its
+/// end (its duration is pinned to the copy via `set_dur`, so the span
+/// ends no later than the window decrement). Replaying the edges — minus
+/// before plus on ties, the conservative order — the running window must
+/// stay within the configured cap.
+#[test]
+fn in_flight_cap_reconstructed_from_spans_stays_bounded() {
+    let n = 384usize; // bytes per checkpoint: 96 f32s
+    let cap = (3 * n) as u64;
+    let tracer = Arc::new(Tracer::new(true));
+    let eng = engine(true, cap, tracer.clone());
+    let mut dev = MemoryTracker::new(1 << 30);
+    let mut host = HostPool::new(1 << 30);
+    let mut rng = Rng::new(11);
+    for li in 0..12 {
+        eng.store(li, 0, payload(&mut rng, n / 4), &mut host).unwrap();
+    }
+    eng.drain();
+    for li in (0..12).rev() {
+        let t = eng.fetch(li, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+    }
+    eng.drain();
+
+    let spans = tracer.drain();
+    // (timestamp, signed delta); minus-first tie-break keeps the replay a
+    // lower bound of the true window, which the engine bounds by `cap`.
+    let mut edges: Vec<(u64, i64)> = Vec::new();
+    for s in &spans {
+        match (s.cat, s.name.as_str()) {
+            (Category::Offload, "ckpt_store_async") => {
+                edges.push((s.end_ns(), s.bytes as i64))
+            }
+            (Category::CopyD2H, "d2h_copy") => {
+                edges.push((s.end_ns(), -(s.bytes as i64)))
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(edges.len(), 24, "12 store edges + 12 copy edges");
+    edges.sort_by_key(|&(ts, delta)| (ts, delta));
+    let (mut window, mut max) = (0i64, 0i64);
+    for (_, delta) in edges {
+        window += delta;
+        max = max.max(window);
+    }
+    assert!(
+        max as u64 <= cap,
+        "span-reconstructed in-flight window {max} exceeds cap {cap}"
+    );
+    let stream = eng.stream_stats();
+    assert!(stream.max_in_flight <= cap, "engine high-water {} > cap", stream.max_in_flight);
+    assert!(stream.max_in_flight > 0);
+}
+
+/// Stall ledger and `Stall` spans carry the SAME `Duration` values —
+/// sums agree bit-for-bit in both modes (inline counts every copy as
+/// stall; threaded counts only real waits).
+#[test]
+fn stall_spans_reconcile_with_stall_stats_exactly() {
+    for overlap in [false, true] {
+        let tracer = Arc::new(Tracer::new(true));
+        let eng = engine(overlap, 1 << 30, tracer.clone());
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(17);
+        for li in 0..4 {
+            eng.store(li, 0, payload(&mut rng, 2048), &mut host).unwrap();
+        }
+        // Fetch straight away — the threaded engine may genuinely stall
+        // here, the inline engine stalls on every copy by definition.
+        for li in (0..4).rev() {
+            let t = eng.fetch(li, 0, &mut dev, &mut host).unwrap();
+            dev.free(t.size_bytes() as u64, CKPT_TAG);
+        }
+        eng.drain();
+        let stalls = eng.stalls();
+        let spans = tracer.drain();
+        let span_stall: Duration = spans
+            .iter()
+            .filter(|s| s.cat == Category::Stall)
+            .map(Span::dur)
+            .sum();
+        assert_eq!(
+            span_stall,
+            stalls.total(),
+            "stall spans must reconcile exactly (overlap={overlap})"
+        );
+        let span_events =
+            spans.iter().filter(|s| s.cat == Category::Stall).count() as u64;
+        assert_eq!(span_events, stalls.d2h_events + stalls.h2d_events);
+        if !overlap {
+            // Inline mode: stall == copy time — the sync baseline.
+            assert_eq!(stalls.total(), eng.stream_stats().copy_time());
+        }
+    }
+}
+
+/// The copy lanes must pass the CI trace validator, and within each
+/// stream the copy spans must serialize — one worker, one copy at a
+/// time, so span intervals never overlap.
+#[test]
+fn copy_lane_spans_validate_and_serialize_per_stream() {
+    let tracer = Arc::new(Tracer::new(true));
+    let eng = engine(true, 1 << 30, tracer.clone());
+    let _ = run_schedule(&eng, 4, 2, 31);
+
+    let spans = tracer.drain();
+    // (Stall is not in this list: whether the threaded engine stalls here
+    // is a race; its spans are pinned deterministically in the inline-mode
+    // reconciliation test.)
+    for cat in [Category::CopyD2H, Category::CopyH2D, Category::Offload] {
+        assert!(spans.iter().any(|s| s.cat == cat), "no {cat:?} span recorded");
+    }
+    let doc = trace_events(&spans, &[]);
+    validate_trace(&doc).unwrap();
+
+    for cat in [Category::CopyD2H, Category::CopyH2D] {
+        let mut lane: Vec<&Span> = spans.iter().filter(|s| s.cat == cat).collect();
+        assert_eq!(lane.len(), 8, "one copy per checkpoint on the {cat:?} lane");
+        lane.sort_by_key(|s| s.start_ns);
+        for w in lane.windows(2) {
+            assert!(
+                w[1].start_ns >= w[0].end_ns(),
+                "{cat:?} copies overlap within one stream"
+            );
+        }
+    }
+}
+
+/// ISSUE satellite: deterministic drain on a mid-backward error. Abort
+/// after a partial backward must leave no phantom tracker bytes, no
+/// leaked host charge, no underflow, and a reusable engine — in both
+/// modes, through the `StepTape` wrapper the pipeline uses.
+#[test]
+fn mid_backward_abort_drains_deterministically() {
+    for overlap in [false, true] {
+        let arena = ScratchArena::new();
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let eng = Arc::new(engine(overlap, 1 << 30, Tracer::off()));
+        let mut tape = StepTape::with_engine(eng.clone());
+        let mut rng = Rng::new(13);
+        for li in 0..4 {
+            for r in 0..2 {
+                tape.store(li, r, payload(&mut rng, 128), &mut dev, &mut host)
+                    .unwrap();
+            }
+        }
+        tape.prefetch_layer(3, 2).unwrap();
+        // Backward gets through layer 3's fetches, then the stage errors
+        // with its checkpoints still device-charged and a prefetch for
+        // layer 2 already in flight.
+        let mut fetched = Vec::new();
+        for r in 0..2 {
+            fetched.push(tape.fetch(3, r, &mut dev, &mut host).unwrap());
+        }
+        tape.prefetch_layer(2, 2).unwrap();
+        assert_eq!(dev.tag_bytes(CKPT_TAG), 2 * 512);
+        arena.recycle_all(fetched); // recompute consumed them before erroring
+
+        tape.abort(&mut dev, &mut host, &arena);
+        assert_eq!(dev.tag_bytes(CKPT_TAG), 0, "no phantom device bytes");
+        assert_eq!(dev.current(), 0);
+        assert_eq!(host.current(), 0, "no phantom host bytes");
+        assert_eq!(dev.underflow_events() + host.underflow_events(), 0);
+        assert_eq!(eng.pending(), 0, "engine drained (overlap={overlap})");
+
+        // The engine survives for the next step on both paths.
+        let mut tape = StepTape::with_engine(eng);
+        tape.store(0, 0, payload(&mut rng, 128), &mut dev, &mut host).unwrap();
+        let t = tape.fetch(0, 0, &mut dev, &mut host).unwrap();
+        let bytes = t.size_bytes() as u64;
+        arena.recycle(t);
+        tape.release_fetched(bytes, &mut dev);
+        assert_eq!((dev.current(), host.current()), (0, 0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end (needs artifacts): async path vs sync tape, bit for bit
+// ---------------------------------------------------------------------------
+
+struct RunOut {
+    losses: Vec<f32>,
+    transfer: Vec<u64>,
+    params: Vec<f32>,
+}
+
+fn run_steps(dir: &Path, sp: usize, steps: usize, opts: TrainerOptions) -> RunOut {
+    let mut t = Trainer::new(dir, opts).expect("trainer");
+    let vocab = t.manifest.config.vocab;
+    let seq = t.manifest.seq;
+    let mut loader =
+        UlyssesDataLoader::new(MarkovSource::new(vocab, seq, 0.05, 7), sp);
+    let mut losses = Vec::new();
+    let mut transfer = Vec::new();
+    for _ in 0..steps {
+        let (ids, _) = loader.next();
+        let m = t.train_step(&ids).expect("step");
+        losses.push(m.loss);
+        transfer.push(m.ckpt_transfer_bytes);
+    }
+    RunOut { losses, transfer, params: t.params.to_flat() }
+}
+
+/// The acceptance contract: with checkpoint offload on, the async engine
+/// (threaded or inline, serial or threaded ranks) must reproduce the
+/// sync `CheckpointTape` run EXACTLY — same per-step losses to the bit,
+/// same final parameters to the bit, same per-step transfer volume.
+#[test]
+fn async_offload_matches_sync_tape_bit_for_bit() {
+    let steps = 3;
+    for sp in [1usize, 2, 4] {
+        let Some(dir) = artifacts("tiny", sp, 256) else { continue };
+        let base = |parallel| TrainerOptions {
+            flags: FeatureFlags::alst(),
+            seed: 9,
+            parallel_ranks: parallel,
+            ..Default::default()
+        };
+        let sync = run_steps(&dir, sp, steps, base(false));
+        assert!(sync.transfer.iter().all(|&b| b > 0), "offload moved bytes");
+
+        let variants = [
+            ("async threaded", true, false),
+            ("async inline", false, false),
+            ("async threaded + threaded ranks", true, true),
+        ];
+        for (label, overlap, parallel) in variants {
+            let opts = TrainerOptions {
+                async_offload: Some(OffloadConfig {
+                    overlap,
+                    ..OffloadConfig::default()
+                }),
+                ..base(parallel)
+            };
+            let got = run_steps(&dir, sp, steps, opts);
+            for (i, (a, b)) in sync.losses.iter().zip(&got.losses).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "sp={sp} {label}: loss diverged at step {i}: {a} vs {b}"
+                );
+            }
+            assert_eq!(
+                sync.transfer, got.transfer,
+                "sp={sp} {label}: transfer_bytes diverged"
+            );
+            assert_eq!(sync.params.len(), got.params.len());
+            for (i, (a, b)) in sync.params.iter().zip(&got.params).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "sp={sp} {label}: param {i} diverged: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
