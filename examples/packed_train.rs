@@ -8,7 +8,7 @@
 //!
 //!     cargo run --release --example packed_train
 
-use alst::config::{preset, ClusterConfig, FeatureFlags, GIB};
+use alst::config::{preset, ClusterConfig, FeatureFlags, PlanKind, GIB};
 use alst::coordinator::pipeline::{Trainer, TrainerOptions};
 use alst::memory::MemoryTracker;
 use alst::metrics::RunLog;
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         model: model.clone(),
         cluster: ClusterConfig::h100(1),
         flags: FeatureFlags::alst(),
+        plan: PlanKind::Ulysses,
     };
     let total = 2_000_000usize;
     let one = iteration_time(&im, total, 8);

@@ -6,7 +6,7 @@
 //! Runs fully offline (no artifacts needed): the packer/adapter are pure
 //! rust, the step times come from the roofline model.
 
-use alst::config::{preset, ClusterConfig, FeatureFlags};
+use alst::config::{preset, ClusterConfig, FeatureFlags, PlanKind};
 use alst::packing::{
     pack_ffd, shard_packed, Document, DocumentSource, MixedLengthSource, PackedSequence,
     PackingStats,
@@ -56,6 +56,7 @@ fn main() {
         model: model.clone(),
         cluster: ClusterConfig::h100(1),
         flags: FeatureFlags::alst(),
+        plan: PlanKind::Ulysses,
     };
     let world = 8usize;
     let capacity = 1_048_576usize; // 1M-token packs

@@ -1,0 +1,183 @@
+//! Ring-vs-Ulysses plan bench: per-layer comm volume and measured
+//! transfer/compute overlap.
+//!
+//! Two row families:
+//!   * `comm cycle` — the wire cost alone, priced by the byte ledgers:
+//!     the ring rotation schedule (`ring_comm_cycle`, fwd + bwd bufs and
+//!     the dKV homing hop) against the Ulysses a2a relayout schedule
+//!     (`relayout_step_cycle`) at the same geometry. Every row carries
+//!     `ring_bytes_per_layer` / `a2a_bytes_per_layer` extras so the
+//!     trajectory records WHO wins at each shape, not just how fast the
+//!     host memcpy was. The acceptance point is the GQA llama shape
+//!     (32K tokens, 32 q / 4 kv heads, d=128, sp=8), where the ring's
+//!     `2(sp-1)/sp` KV volume beats the a2a's full activation volume;
+//!     the MHA row is kept honest — there the ring loses at sp=8.
+//!   * `plan attention` — the full `ParallelPlan` step (forward +
+//!     backward) at a compute-heavy small shape, async double-buffered
+//!     rotation vs the inline baseline, with `overlap_frac`, `stall_ms`
+//!     and `copy_ms` extras MEASURED from `RingStats` (the same worker
+//!     join-wait accounting the trainer reports), plus the Ulysses plan
+//!     on the identical shape for the cross-plan step row.
+//!
+//! Emits repo-root `BENCH_ring.json` (schema in DESIGN.md).
+
+use alst::collectives::Group;
+use alst::config::PlanKind;
+use alst::coordinator::plan::{plan_for, AttnShape, ParallelPlan};
+use alst::coordinator::ring::{ring_comm_cycle, RingPlan};
+use alst::coordinator::ulysses::relayout_step_cycle;
+use alst::runtime::{HostTensor, ScratchArena};
+use alst::util::bench::{fast_mode, quick, BenchReport};
+use alst::util::rng::Rng;
+
+fn shards(rng: &mut Rng, sp: usize, ssh: usize, heads: usize, d: usize) -> Vec<HostTensor> {
+    (0..sp)
+        .map(|_| HostTensor::f32(vec![ssh, heads, d], rng.normal_vec(ssh * heads * d, 1.0)))
+        .collect()
+}
+
+fn main() {
+    println!("bench_ring: ring rotation vs a2a relayout, overlap accounting\n");
+    let mut rng = Rng::new(0);
+    let mut report = BenchReport::new("ring");
+    let fast = fast_mode();
+
+    // ---- comm cycles, ledger-priced ------------------------------------
+    for (sp, seq, n_q, n_kv, d, label) in [
+        (8usize, 32_768usize, 32usize, 4usize, 128usize, "sp=8 llama 32K gqa (acceptance)"),
+        (8, 32_768, 32, 32, 128, "sp=8 llama 32K mha (ring loses)"),
+        (4, 8_192, 8, 2, 64, "sp=4 gqa"),
+    ] {
+        let ssh = seq / sp;
+        let q = shards(&mut rng, sp, ssh, n_q, d);
+        let kv = shards(&mut rng, sp, ssh, n_kv, d);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        // one probe cycle each: per-layer volumes come from the byte
+        // ledgers, so the extras stay consistent with CommStats
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1);
+        let ring_bytes = g.stats().send_recv_bytes;
+        g.reset_stats();
+        relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv);
+        let a2a_bytes = g.stats().all_to_all_bytes;
+        g.reset_stats();
+        // the ledger must agree with the plan's closed-form pricing
+        let shape = AttnShape::new(n_q, n_kv, d);
+        assert_eq!(
+            ring_bytes,
+            RingPlan::new(false).comm_bytes_per_layer(seq, &shape, sp, 4),
+            "ring ledger vs closed form at {label}"
+        );
+        println!(
+            "  {label}: ring {:.3} GiB/layer vs a2a {:.3} GiB/layer ({})",
+            ring_bytes as f64 / (1u64 << 30) as f64,
+            a2a_bytes as f64 / (1u64 << 30) as f64,
+            if ring_bytes < a2a_bytes { "ring wins" } else { "a2a wins" },
+        );
+
+        let r = quick(&format!("ring comm cycle {label}"), || {
+            ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1);
+        })
+        .with_bytes(ring_bytes)
+        .with_extra("ring_bytes_per_layer", ring_bytes as f64)
+        .with_extra("a2a_bytes_per_layer", a2a_bytes as f64);
+        println!("    -> {:.2} GiB/s", r.gib_per_s().unwrap_or(0.0));
+        report.push(&r);
+
+        let r = quick(&format!("a2a relayout cycle {label}"), || {
+            relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv);
+        })
+        .with_bytes(a2a_bytes)
+        .with_extra("ring_bytes_per_layer", ring_bytes as f64)
+        .with_extra("a2a_bytes_per_layer", a2a_bytes as f64);
+        println!("    -> {:.2} GiB/s", r.gib_per_s().unwrap_or(0.0));
+        report.push(&r);
+    }
+
+    // ---- full plan attention step: overlap measured, not asserted ------
+    // Compute-heavy small shape so the fold dominates the block memcpy
+    // and the async worker's transfer genuinely hides behind it.
+    let (sp, seq, n_q, n_kv, d) = if fast {
+        (4usize, 512usize, 4usize, 2usize, 32usize)
+    } else {
+        (4, 2_048, 4, 2, 32)
+    };
+    let ssh = seq / sp;
+    let shape = AttnShape::new(n_q, n_kv, d);
+    let cu = [0i32, seq as i32];
+    let qs = shards(&mut rng, sp, ssh, n_q, d);
+    let ks = shards(&mut rng, sp, ssh, n_kv, d);
+    let vs = shards(&mut rng, sp, ssh, n_kv, d);
+    let dos = shards(&mut rng, sp, ssh, n_q, d);
+    let lbl = format!("{}K q{n_q}/kv{n_kv} d{d} sp{sp}", seq / 1024);
+
+    for (overlap, mode) in [(true, "async"), (false, "inline")] {
+        let plan = RingPlan::new(overlap);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let r = quick(&format!("ring attention fwd+bwd {lbl} {mode}"), || {
+            let (o, saved) = plan
+                .attention_forward(&g, &arena, &qs, &ks, &vs, &shape, &cu)
+                .unwrap();
+            let (dq, dk, dv) = plan
+                .attention_backward(&g, &arena, &qs, &ks, &vs, &dos, &saved, &shape, &cu)
+                .unwrap();
+            saved.recycle(&arena);
+            for t in [o, dq, dk, dv] {
+                arena.recycle_all(t);
+            }
+        });
+        let st = plan.stats();
+        // stats are cumulative over warmup + timed iters; the frac is a
+        // ratio, and the per-iter ms are scaled by the ledger's own
+        // per-iteration wire volume
+        let iters = (g.stats().send_recv_bytes as f64
+            / plan.comm_bytes_per_layer(seq, &shape, sp, 4) as f64)
+            .max(1.0);
+        let r = r
+            .with_bytes((g.stats().send_recv_bytes as f64 / iters) as u64)
+            .with_extra("overlap_frac", st.overlap_frac())
+            .with_extra("stall_ms", st.stall_ns as f64 / 1e6 / iters)
+            .with_extra("copy_ms", st.copy_ns as f64 / 1e6 / iters);
+        println!(
+            "    -> overlap_frac {:.3} (stall {:.3} ms / copy {:.3} ms per step)",
+            st.overlap_frac(),
+            st.stall_ns as f64 / 1e6 / iters,
+            st.copy_ns as f64 / 1e6 / iters,
+        );
+        report.push(&r);
+    }
+
+    // same shape through the Ulysses plan: the cross-plan step row
+    {
+        let plan = plan_for(PlanKind::Ulysses);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let r = quick(&format!("ulysses attention fwd+bwd {lbl}"), || {
+            let (o, saved) = plan
+                .attention_forward(&g, &arena, &qs, &ks, &vs, &shape, &cu)
+                .unwrap();
+            let (dq, dk, dv) = plan
+                .attention_backward(&g, &arena, &qs, &ks, &vs, &dos, &saved, &shape, &cu)
+                .unwrap();
+            saved.recycle(&arena);
+            for t in [o, dq, dk, dv] {
+                arena.recycle_all(t);
+            }
+        })
+        .with_extra(
+            "a2a_bytes_per_layer",
+            plan.comm_bytes_per_layer(seq, &shape, sp, 4) as f64,
+        )
+        .with_extra(
+            "ring_bytes_per_layer",
+            RingPlan::new(false).comm_bytes_per_layer(seq, &shape, sp, 4) as f64,
+        );
+        report.push(&r);
+    }
+
+    match report.write_repo_root() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nFAILED to write BENCH_ring.json: {e}"),
+    }
+}

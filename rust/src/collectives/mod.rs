@@ -32,6 +32,9 @@ pub struct CommStats {
     pub reduce_scatter_bytes: u64,
     pub all_to_all_bytes: u64,
     pub all_reduce_bytes: u64,
+    /// Neighbor-exchange (ring send/recv) traffic — the transport of the
+    /// ring attention plan's rotating KV blocks.
+    pub send_recv_bytes: u64,
     pub ops: u64,
 }
 
@@ -41,6 +44,7 @@ impl CommStats {
             + self.reduce_scatter_bytes
             + self.all_to_all_bytes
             + self.all_reduce_bytes
+            + self.send_recv_bytes
     }
 }
 
@@ -104,6 +108,12 @@ impl Group {
     fn ledger_all_reduce(&self, bytes: u64) {
         let mut st = self.stats.lock().unwrap();
         st.all_reduce_bytes += bytes;
+        st.ops += 1;
+    }
+
+    fn ledger_send_recv(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.send_recv_bytes += bytes;
         st.ops += 1;
     }
 
@@ -205,6 +215,53 @@ impl Group {
         out
     }
 
+    /// Ring neighbor exchange: rank r's buffer is delivered to rank
+    /// `(r + shift) % world`, i.e. `out[d] = sends[(d + world - shift) % world]`.
+    /// Unlike `all_to_all`, per-rank payloads may be ragged or empty — a
+    /// rank with nothing to pass (e.g. the causal-skip ring schedule,
+    /// where fully-masked KV blocks stop travelling) sends `&[]` and its
+    /// neighbor receives an empty buffer at zero wire cost. Ledger volume
+    /// is the sum of payload bytes actually moved.
+    pub fn send_recv(&self, sends: &[&[f32]], shift: usize) -> Vec<Vec<f32>> {
+        let arena = ScratchArena::new(); // one-shot: plain allocations
+        self.send_recv_into(sends, shift, &arena)
+    }
+
+    /// `send_recv` into arena-recycled buffers (empty payloads bypass the
+    /// pool so steady-state hit accounting only counts real traffic).
+    pub fn send_recv_into(
+        &self,
+        sends: &[&[f32]],
+        shift: usize,
+        arena: &ScratchArena,
+    ) -> Vec<Vec<f32>> {
+        let mut span = self.tracer.span(Category::Collective, "send_recv");
+        assert_eq!(sends.len(), self.world);
+        assert!(
+            shift % self.world != 0,
+            "send_recv with shift {} over world {} moves nothing",
+            shift,
+            self.world
+        );
+        let shift = shift % self.world;
+        let mut bytes = 0usize;
+        let mut out = Vec::with_capacity(self.world);
+        for dst in 0..self.world {
+            let src = sends[(dst + self.world - shift) % self.world];
+            if src.is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            let mut buf = arena.take_f32(src.len());
+            buf.copy_from_slice(src);
+            bytes += src.len() * 4;
+            out.push(buf);
+        }
+        self.ledger_send_recv(bytes as u64);
+        span.set_bytes(bytes as u64);
+        out
+    }
+
     /// All-reduce (sum) of scalars — loss_sum/token-count reduction. The
     /// paper specifically replaced `all_reduce_object` with plain
     /// all_reduce to save >3 GiB/GPU (§3.3); we only ever move the scalars.
@@ -279,6 +336,14 @@ impl Group {
     pub fn account_reduce_scatter(&self, bytes: u64) {
         self.account_span("reduce_scatter", bytes);
         self.ledger_reduce_scatter(bytes);
+    }
+
+    /// Ledger a point-to-point exchange performed by a data-structure
+    /// owner (e.g. the ring plan homing completed dKV block partials to
+    /// their owner rank without a full rotation).
+    pub fn account_send_recv(&self, bytes: u64) {
+        self.account_span("send_recv", bytes);
+        self.ledger_send_recv(bytes);
     }
 }
 
@@ -378,9 +443,11 @@ mod tests {
         let _ = g.all_reduce_scalars(&[1.0, 2.0]);
         let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
         let _ = g.all_reduce_sum(&[&a, &a]).unwrap();
+        let _ = g.send_recv(&[&[1.0, 2.0], &[3.0]], 1);
         g.account_gather(100);
         g.account_all_to_all(200);
         g.account_reduce_scatter(300);
+        g.account_send_recv(400);
         let st = g.stats();
         let spans = tracer.drain();
         assert!(spans.iter().all(|s| s.cat == Category::Collective));
@@ -392,6 +459,53 @@ mod tests {
             .iter()
             .filter(|s| s.bytes >= 100)
             .all(|s| s.dur_ns == 0));
+    }
+
+    #[test]
+    fn send_recv_rotates_by_shift() {
+        let g = Group::new(4);
+        let bufs: [&[f32]; 4] = [&[0.0], &[1.0], &[2.0], &[3.0]];
+        let out = g.send_recv(&bufs, 1);
+        // rank r receives rank (r-1)'s payload
+        assert_eq!(out, vec![vec![3.0], vec![0.0], vec![1.0], vec![2.0]]);
+        assert_eq!(g.stats().send_recv_bytes, 16);
+        assert_eq!(g.stats().ops, 1);
+        let out2 = g.send_recv(&bufs, 3);
+        assert_eq!(out2, vec![vec![1.0], vec![2.0], vec![3.0], vec![0.0]]);
+    }
+
+    #[test]
+    fn send_recv_allows_ragged_and_empty_payloads() {
+        let g = Group::new(3);
+        let bufs: [&[f32]; 3] = [&[1.0, 2.0, 3.0], &[], &[4.0]];
+        let out = g.send_recv(&bufs, 1);
+        assert_eq!(out[0], vec![4.0]);
+        assert_eq!(out[1], vec![1.0, 2.0, 3.0]);
+        assert!(out[2].is_empty());
+        // only real payloads hit the wire: (3 + 1) * 4 bytes
+        assert_eq!(g.stats().send_recv_bytes, 16);
+        assert_eq!(g.stats().total_bytes(), 16);
+    }
+
+    #[test]
+    fn send_recv_into_reuses_pooled_buffers() {
+        let g = Group::new(2);
+        let arena = ScratchArena::new();
+        let out = g.send_recv_into(&[&[1.0, 2.0], &[3.0, 4.0]], 1, &arena);
+        assert_eq!(out[0], vec![3.0, 4.0]);
+        assert_eq!(out[1], vec![1.0, 2.0]);
+        for v in out {
+            arena.recycle_f32(v);
+        }
+        let _ = g.send_recv_into(&[&[5.0, 6.0], &[7.0, 8.0]], 1, &arena);
+        assert_eq!((arena.hits(), arena.misses()), (2, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "moves nothing")]
+    fn send_recv_zero_shift_rejected() {
+        let g = Group::new(2);
+        g.send_recv(&[&[1.0], &[2.0]], 2);
     }
 
     #[test]

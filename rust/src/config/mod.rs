@@ -15,4 +15,4 @@ pub mod parallel;
 
 pub use features::{FeatureFlags, Precision};
 pub use model::{preset, ModelPreset, PRESETS};
-pub use parallel::{ClusterConfig, ParallelConfig, GIB};
+pub use parallel::{ClusterConfig, ParallelConfig, PlanKind, GIB};

@@ -1,17 +1,54 @@
 //! Process-grid and cluster descriptions.
 
+/// Which sequence-parallel attention protocol moves data between the sp
+/// ranks of a group. `Ulysses` relayouts seq<->head with all-to-alls and
+/// requires `n_heads >= sp`; `Ring` rotates KV blocks rank-to-rank with
+/// online-softmax accumulation and has no head bound (Liu et al. 2024,
+/// Blockwise RingAttention — see PAPERS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlanKind {
+    #[default]
+    Ulysses,
+    Ring,
+}
+
+impl PlanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanKind::Ulysses => "ulysses",
+            PlanKind::Ring => "ring",
+        }
+    }
+
+    /// Parse a CLI/config spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<PlanKind> {
+        match s {
+            "ulysses" | "a2a" => Some(PlanKind::Ulysses),
+            "ring" => Some(PlanKind::Ring),
+            _ => None,
+        }
+    }
+}
+
 /// DP x SP process grid (paper §7.1: scale beyond the SP head-limit with
 /// more DP replicas — "1024 GPUs = 16 replicas of SP=64").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelConfig {
     pub dp: usize,
     pub sp: usize,
+    /// Attention protocol used inside each SP group.
+    pub plan: PlanKind,
 }
 
 impl ParallelConfig {
     pub fn new(dp: usize, sp: usize) -> Self {
         assert!(dp >= 1 && sp >= 1);
-        ParallelConfig { dp, sp }
+        ParallelConfig { dp, sp, plan: PlanKind::Ulysses }
+    }
+
+    pub fn with_plan(mut self, plan: PlanKind) -> Self {
+        self.plan = plan;
+        self
     }
 
     pub fn world_size(&self) -> usize {
@@ -120,6 +157,21 @@ mod tests {
         let p = ParallelConfig::new(2, 4);
         assert_eq!(p.sp_group(5), vec![4, 5, 6, 7]);
         assert_eq!(p.dp_group(5), vec![1, 5]);
+    }
+
+    #[test]
+    fn plan_kind_defaults_and_parses() {
+        assert_eq!(PlanKind::default(), PlanKind::Ulysses);
+        assert_eq!(ParallelConfig::new(1, 8).plan, PlanKind::Ulysses);
+        assert_eq!(
+            ParallelConfig::new(1, 8).with_plan(PlanKind::Ring).plan,
+            PlanKind::Ring
+        );
+        assert_eq!(PlanKind::parse("ring"), Some(PlanKind::Ring));
+        assert_eq!(PlanKind::parse("ulysses"), Some(PlanKind::Ulysses));
+        assert_eq!(PlanKind::parse("a2a"), Some(PlanKind::Ulysses));
+        assert_eq!(PlanKind::parse("mesh"), None);
+        assert_eq!(PlanKind::Ring.as_str(), "ring");
     }
 
     #[test]

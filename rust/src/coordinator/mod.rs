@@ -1,7 +1,14 @@
 //! The paper's L3 contribution: the Ulysses SP training coordinator.
 //!
+//! * `plan` — the `ParallelPlan` trait: how an SP group moves attention
+//!   data (relayout/attention step API, per-layer comm-byte pricing,
+//!   validity predicate) plus the shared online-softmax block kernels.
 //! * `ulysses` — head-shard math + the seq<->head all-to-all relayouts
-//!   (paper §3.2, §3.2.1), including GQA/MQA kv replication.
+//!   (paper §3.2, §3.2.1), including GQA/MQA kv replication; implements
+//!   the Ulysses `ParallelPlan`.
+//! * `ring` — Blockwise RingAttention plan: KV blocks rotate rank-to-rank
+//!   over `Group::send_recv` with measured transfer/compute overlap; no
+//!   heads >= sp bound.
 //! * `zero` — ZeRO-3 flat parameter/gradient sharding (§5.2 baseline).
 //! * `optimizer` — AdamW on the owned shard (optionally host-offloaded).
 //! * `tape` — activation-checkpoint store with CPU offload (§3.3).
@@ -15,6 +22,8 @@ pub mod dataloader;
 pub mod offload;
 pub mod optimizer;
 pub mod pipeline;
+pub mod plan;
+pub mod ring;
 pub mod snapshot;
 pub mod tape;
 pub mod ulysses;

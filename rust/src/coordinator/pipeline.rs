@@ -23,11 +23,13 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::collectives::Group;
-use crate::config::FeatureFlags;
+use crate::config::{FeatureFlags, PlanKind};
 use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX};
 use crate::packing::{shard_packed, PackedSequence};
 use crate::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, StepTape};
 use crate::coordinator::optimizer::{AdamW, AdamWConfig};
+use crate::coordinator::plan::{plan_for, AttnShape, ParallelPlan, PlanSaved};
+use crate::coordinator::ring::{RingPlan, RingStats};
 use crate::coordinator::tape::CheckpointTape;
 use crate::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
 use crate::coordinator::zero::{init_flat_params, slice_group, GroupGrads, ShardedStore};
@@ -171,6 +173,15 @@ pub struct TrainerOptions {
     /// `Trainer::tracer()` + `Tracer::drain` and export via
     /// `obs::write_trace` / `obs::AttributionReport`.
     pub trace: bool,
+    /// Which `ParallelPlan` moves attention data across the SP group.
+    /// `Ulysses` (default) runs the seq<->head all-to-alls around the
+    /// device `attn_fwd`/`attn_bwd` stages. `Ring` skips the relayouts
+    /// entirely: q/k/v stay sequence-sharded and the host RingAttention
+    /// plan streams KV blocks rank-to-rank over `Group::send_recv` with
+    /// measured transfer/compute overlap — no heads >= sp bound, so sp
+    /// can exceed `n_q_heads`. `Trainer::new` validates the chosen
+    /// plan's predicate against the manifest's head counts.
+    pub plan: PlanKind,
 }
 
 impl Default for TrainerOptions {
@@ -190,6 +201,7 @@ impl Default for TrainerOptions {
             tiled_mlp: false,
             async_offload: None,
             trace: false,
+            plan: PlanKind::Ulysses,
         }
     }
 }
@@ -203,6 +215,9 @@ pub struct StepMetrics {
     pub tokens: usize,
     pub step_time: Duration,
     pub a2a_bytes: u64,
+    /// Ring-wire bytes (`Group::send_recv`) — the ring plan's KV/grad
+    /// rotation traffic; zero under the Ulysses plan.
+    pub send_recv_bytes: u64,
     pub gather_bytes: u64,
     pub reduce_scatter_bytes: u64,
     pub ckpt_transfer_bytes: u64,
@@ -274,6 +289,20 @@ pub struct Trainer {
     /// Step tracer shared with the engine, the group, and the device
     /// tracker; the global disabled handle unless `TrainerOptions::trace`.
     tracer: Arc<Tracer>,
+    /// Which attention `ParallelPlan` the step loop runs (see
+    /// `TrainerOptions::plan`).
+    plan: PlanKind,
+    /// The ring plan instance (owns the overlap-vs-stall accounting);
+    /// only exercised when `plan == PlanKind::Ring`.
+    ring_plan: RingPlan,
+    /// Attention-mask segment boundaries for the ring plan, matching the
+    /// exported `attn_fwd` stage's mask: the device stage computes DENSE
+    /// causal attention (packed segment isolation in this runtime lives
+    /// in the labels/positions, not the attention stage), so the ring
+    /// plan gets the single-segment `[0, seq]` prefix. Segment-aware
+    /// `cu_seqlens` flows are exercised at the plan level
+    /// (`tests/plan_equiv.rs`).
+    step_cu: Vec<i32>,
 }
 
 impl Trainer {
@@ -319,6 +348,15 @@ impl Trainer {
         };
 
         let sp = manifest.sp;
+        // The chosen plan must accept this (heads, sp) combination up
+        // front — the Ulysses predicate's error names the ring plan as
+        // the fix when sp exceeds the head count.
+        let c = &manifest.config;
+        plan_for(opts.plan)
+            .validate(c.n_q_heads, c.n_kv_heads, sp)
+            .with_context(|| {
+                format!("{} plan rejected the manifest", opts.plan.as_str())
+            })?;
         // ZeRO-3 shards over the SP group; without zero3 every rank holds
         // a full replica (world=1 sharding on a shared store).
         let shard_world = if opts.flags.zero3 { sp } else { 1 };
@@ -362,6 +400,7 @@ impl Trainer {
             (None, Vec::new())
         };
 
+        let step_cu = vec![0, manifest.seq as i32];
         Ok(Trainer {
             manifest,
             engine,
@@ -385,7 +424,22 @@ impl Trainer {
             offload,
             prefetch_ok,
             tracer,
+            plan: opts.plan,
+            ring_plan: RingPlan::default(),
+            step_cu,
         })
+    }
+
+    /// The attention plan this trainer runs.
+    pub fn plan_kind(&self) -> PlanKind {
+        self.plan
+    }
+
+    /// Ring-plan transfer/stall accounting (hops, copy/stall ns, bytes),
+    /// cumulative since construction or the last
+    /// [`RingPlan::reset_stats`]; all-zero under the Ulysses plan.
+    pub fn ring_stats(&self) -> RingStats {
+        self.ring_plan.stats()
     }
 
     /// The async offload engine when `TrainerOptions::async_offload` was
@@ -513,37 +567,61 @@ impl Trainer {
             ks.push(k);
             vs.push(v);
         }
-        // Ulysses boundary 1: sequence -> head layout, through the arena:
-        // outputs land in recycled buffers, and both the pre-relayout
-        // shards and the uploaded host copies go straight back to the
-        // pool — the ping-pong that makes steady-state relayout
-        // allocation-free.
-        let q_full = a2a_seq_to_head_into(&self.group, &qs, &self.arena);
-        let k_full = a2a_seq_to_head_into(&self.group, &ks, &self.arena);
-        let v_full = a2a_seq_to_head_into(&self.group, &vs, &self.arena);
-        self.arena.recycle_all(qs);
-        self.arena.recycle_all(ks);
-        self.arena.recycle_all(vs);
-        let q_full_b = self.upload_all(&q_full)?;
-        let k_full_b = self.upload_all(&k_full)?;
-        let v_full_b = self.upload_all(&v_full)?;
-        self.arena.recycle_all(q_full);
-        self.arena.recycle_all(k_full);
-        self.arena.recycle_all(v_full);
+        let (q_full_b, k_full_b, v_full_b, o_sh, q_seq, k_seq, v_seq, ring_saved) =
+            if self.plan == PlanKind::Ring {
+                // Ring plan: NO relayout. q/k/v stay sequence-sharded; the
+                // plan rotates KV blocks rank-to-rank over
+                // `Group::send_recv` (byte-ledgered, overlap measured) and
+                // returns seq-sharded outputs directly. The inputs and the
+                // saved (o, lse) ride the LayerAct: backward reruns the
+                // rotation from them instead of the device `attn_bwd`.
+                let c = &self.manifest.config;
+                let shape = AttnShape::new(c.n_q_heads, c.n_kv_heads, c.head_dim);
+                let (o_sh, saved) = self.ring_plan.attention_forward(
+                    &self.group,
+                    &self.arena,
+                    &qs,
+                    &ks,
+                    &vs,
+                    &shape,
+                    &self.step_cu,
+                )?;
+                (Vec::new(), Vec::new(), Vec::new(), o_sh, qs, ks, vs, Some(saved))
+            } else {
+                // Ulysses boundary 1: sequence -> head layout, through the
+                // arena: outputs land in recycled buffers, and both the
+                // pre-relayout shards and the uploaded host copies go
+                // straight back to the pool — the ping-pong that makes
+                // steady-state relayout allocation-free.
+                let q_full = a2a_seq_to_head_into(&self.group, &qs, &self.arena);
+                let k_full = a2a_seq_to_head_into(&self.group, &ks, &self.arena);
+                let v_full = a2a_seq_to_head_into(&self.group, &vs, &self.arena);
+                self.arena.recycle_all(qs);
+                self.arena.recycle_all(ks);
+                self.arena.recycle_all(vs);
+                let q_full_b = self.upload_all(&q_full)?;
+                let k_full_b = self.upload_all(&k_full)?;
+                let v_full_b = self.upload_all(&v_full)?;
+                self.arena.recycle_all(q_full);
+                self.arena.recycle_all(k_full);
+                self.arena.recycle_all(v_full);
 
-        let o_full = run_ranks(sp, self.parallel_ranks, |r| {
-            let out = self.exec("attn_fwd", &[&q_full_b[r], &k_full_b[r], &v_full_b[r]])?;
-            Ok(out.into_iter().next().unwrap())
-        })?;
-        // Ulysses boundary 2: head -> sequence layout.
-        let o_sh = a2a_head_to_seq_into(
-            &self.group,
-            &o_full,
-            self.manifest.config.n_q_heads,
-            false,
-            &self.arena,
-        );
-        self.arena.recycle_all(o_full);
+                let o_full = run_ranks(sp, self.parallel_ranks, |r| {
+                    let out =
+                        self.exec("attn_fwd", &[&q_full_b[r], &k_full_b[r], &v_full_b[r]])?;
+                    Ok(out.into_iter().next().unwrap())
+                })?;
+                // Ulysses boundary 2: head -> sequence layout.
+                let o_sh = a2a_head_to_seq_into(
+                    &self.group,
+                    &o_full,
+                    self.manifest.config.n_q_heads,
+                    false,
+                    &self.arena,
+                );
+                self.arena.recycle_all(o_full);
+                (q_full_b, k_full_b, v_full_b, o_sh, Vec::new(), Vec::new(), Vec::new(), None)
+            };
 
         let mut h_out = Vec::with_capacity(sp);
         let mut h_out_host = Vec::with_capacity(sp);
@@ -595,8 +673,24 @@ impl Trainer {
                 o_sh: o_sh_b,
                 o_sh_host,
                 h_out_host,
+                q_seq,
+                k_seq,
+                v_seq,
+                ring_saved,
             },
         ))
+    }
+
+    /// Return a `LayerAct`'s ring-plan buffers (seq-sharded q/k/v plus
+    /// the saved (o, lse)) to the arena pool. No-op under the Ulysses
+    /// plan, whose acts keep those fields empty.
+    fn recycle_plan_act(&self, act: &mut LayerAct) {
+        self.arena.recycle_all(std::mem::take(&mut act.q_seq));
+        self.arena.recycle_all(std::mem::take(&mut act.k_seq));
+        self.arena.recycle_all(std::mem::take(&mut act.v_seq));
+        if let Some(saved) = act.ring_saved.take() {
+            saved.recycle(&self.arena);
+        }
     }
 
     /// The tiled post-attention forward sweep: per rank, slice
@@ -738,6 +832,7 @@ impl Trainer {
             tokens,
             step_time,
             a2a_bytes: comm.all_to_all_bytes,
+            send_recv_bytes: comm.send_recv_bytes,
             gather_bytes: comm.all_gather_bytes,
             reduce_scatter_bytes: comm.reduce_scatter_bytes,
             ckpt_transfer_bytes: ckpt_transfer,
@@ -872,12 +967,14 @@ impl Trainer {
             // run the layer first (the tiled MLP sweep slices row tiles
             // from the live h_host copies), THEN checkpoint the layer
             // INPUT (host side, offloadable — §3.3)
-            let (h_new, act) =
+            let (h_new, mut act) =
                 self.layer_forward(&dev_params.layers[li], &h, &h_host, &pos_b)?;
             for (r, hr) in h_host.drain(..).enumerate() {
                 tape.store(li, r, hr, &mut self.device, &mut self.host)?;
             }
             // fwd pass keeps no per-layer hosts: backward recomputes
+            // (the ring plan's saved state included)
+            self.recycle_plan_act(&mut act);
             self.arena.recycle_all(act.o_sh_host);
             h_host = act.h_out_host;
             h = h_new;
@@ -1181,37 +1278,70 @@ impl Trainer {
                 (d_h_resid, d_attn)
             };
 
-            // transposed all-to-all: d_attn (seq layout) -> head layout
-            let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena);
-            self.arena.recycle_all(d_attn);
-            let d_o_full_b = self.upload_all(&d_o_full)?;
-            self.arena.recycle_all(d_o_full);
-            let attn_out = run_ranks(sp, self.parallel_ranks, |r| {
-                let out = self.exec(
-                    "attn_bwd",
-                    &[&act.q_full[r], &act.k_full[r], &act.v_full[r], &d_o_full_b[r]],
+            let (d_q, d_k, d_v) = if self.plan == PlanKind::Ring {
+                // Ring backward: rerun the KV rotation from the
+                // recompute's seq-sharded q/k/v and saved (o, lse) —
+                // d_attn IS the plan's d_o (both seq layout), and the
+                // plan's grads come back seq-sharded, exactly what
+                // `pre_attn_bwd` consumes. No relayout either direction.
+                let c = &self.manifest.config;
+                let shape = AttnShape::new(c.n_q_heads, c.n_kv_heads, c.head_dim);
+                let saved = act
+                    .ring_saved
+                    .take()
+                    .expect("ring recompute must save (o, lse)");
+                let grads = self.ring_plan.attention_backward(
+                    &self.group,
+                    &self.arena,
+                    &act.q_seq,
+                    &act.k_seq,
+                    &act.v_seq,
+                    &d_attn,
+                    &saved,
+                    &shape,
+                    &self.step_cu,
                 )?;
-                let mut it = out.into_iter();
-                Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
-            })?;
-            let mut d_q_full = Vec::with_capacity(sp);
-            let mut d_k_full = Vec::with_capacity(sp);
-            let mut d_v_full = Vec::with_capacity(sp);
-            for (q, k, v) in attn_out {
-                d_q_full.push(q);
-                d_k_full.push(k);
-                d_v_full.push(v);
-            }
-            // inverse a2a; kv grads SUM over replica consumers (fused
-            // copy-first/accumulate-rest pass inside the relayout).
-            let nq = self.manifest.config.n_q_heads;
-            let nkv = self.manifest.config.n_kv_heads;
-            let d_q = a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena);
-            let d_k = a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena);
-            let d_v = a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena);
-            self.arena.recycle_all(d_q_full);
-            self.arena.recycle_all(d_k_full);
-            self.arena.recycle_all(d_v_full);
+                saved.recycle(&self.arena);
+                self.arena.recycle_all(d_attn);
+                grads
+            } else {
+                // transposed all-to-all: d_attn (seq layout) -> head layout
+                let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena);
+                self.arena.recycle_all(d_attn);
+                let d_o_full_b = self.upload_all(&d_o_full)?;
+                self.arena.recycle_all(d_o_full);
+                let attn_out = run_ranks(sp, self.parallel_ranks, |r| {
+                    let out = self.exec(
+                        "attn_bwd",
+                        &[&act.q_full[r], &act.k_full[r], &act.v_full[r], &d_o_full_b[r]],
+                    )?;
+                    let mut it = out.into_iter();
+                    Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+                })?;
+                let mut d_q_full = Vec::with_capacity(sp);
+                let mut d_k_full = Vec::with_capacity(sp);
+                let mut d_v_full = Vec::with_capacity(sp);
+                for (q, k, v) in attn_out {
+                    d_q_full.push(q);
+                    d_k_full.push(k);
+                    d_v_full.push(v);
+                }
+                // inverse a2a; kv grads SUM over replica consumers (fused
+                // copy-first/accumulate-rest pass inside the relayout).
+                let nq = self.manifest.config.n_q_heads;
+                let nkv = self.manifest.config.n_kv_heads;
+                let d_q = a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena);
+                let d_k =
+                    a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena);
+                let d_v =
+                    a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena);
+                self.arena.recycle_all(d_q_full);
+                self.arena.recycle_all(d_k_full);
+                self.arena.recycle_all(d_v_full);
+                (d_q, d_k, d_v)
+            };
+            // spent: the ring inputs/saved state the recompute produced
+            self.recycle_plan_act(&mut act);
 
             // pre_attn backward; d_h = qkv path + residual path
             let pre_out = run_ranks(sp, self.parallel_ranks, |r| {
@@ -1425,6 +1555,7 @@ impl Trainer {
                 tokens: p.len(),
                 step_time,
                 a2a_bytes: comm.all_to_all_bytes,
+                send_recv_bytes: comm.send_recv_bytes,
                 gather_bytes: comm.all_gather_bytes,
                 reduce_scatter_bytes: comm.reduce_scatter_bytes,
                 ckpt_transfer_bytes: ckpt_transfer,
@@ -1478,8 +1609,9 @@ impl Trainer {
             h_host.push(t);
         }
         for li in 0..self.n_layers() {
-            let (h_new, act) =
+            let (h_new, mut act) =
                 self.layer_forward(&dev_params.layers[li], &h, &h_host, &pos_b)?;
+            self.recycle_plan_act(&mut act);
             self.arena.recycle_all(h_host);
             self.arena.recycle_all(act.o_sh_host);
             h_host = act.h_out_host;
@@ -1516,4 +1648,13 @@ struct LayerAct {
     /// otherwise. Recycle into the arena when done.
     o_sh_host: Vec<HostTensor>,
     h_out_host: Vec<HostTensor>,
+    /// Ring plan only: the sequence-sharded q/k/v the plan consumed —
+    /// backward reruns the KV rotation from these (there is no
+    /// head-layout buffer to reuse). Empty under Ulysses. Recycle via
+    /// `Trainer::recycle_plan_act`.
+    q_seq: Vec<HostTensor>,
+    k_seq: Vec<HostTensor>,
+    v_seq: Vec<HostTensor>,
+    /// Ring plan only: the forward's saved (o, lse) per rank.
+    ring_saved: Option<PlanSaved>,
 }

@@ -1,0 +1,546 @@
+//! The `ParallelPlan` trait: how an SP group moves attention data.
+//!
+//! ALST's original protocol (Ulysses) relayouts seq<->head with
+//! all-to-alls and runs dense per-head attention; Blockwise RingAttention
+//! (Liu et al. 2024) instead rotates KV blocks rank-to-rank while each
+//! rank folds online-softmax partials. Both are expressed against this
+//! trait so the trainer, estimator, roofline, and equivalence suite are
+//! plan-generic, and hybrid plans (Ulysses intra-node, ring inter-node)
+//! can slot in later without touching callers.
+//!
+//! ## Summation-order contract
+//!
+//! Floating-point attention is only reproducible modulo a stated
+//! reduction order. The contract pinned by the equivalence suite:
+//!
+//! * Within one KV block, keys fold in ascending global key order
+//!   (two-pass: block max first, then exp/accumulate ascending).
+//! * The dense reference is one block covering the whole sequence, so a
+//!   single-block plan invocation (`sp == 1`, or ring's own-shard hop)
+//!   is **bit-identical** to the reference by construction.
+//! * Across blocks, ring rank `r` folds blocks in *descending* global
+//!   block order (`r, r-1, …, 0` — the causal-skip rotation's arrival
+//!   order), merging running `(m, l, acc)` stats by `exp(m_old - m_new)`
+//!   rescaling. Cross-block merges round differently than the one-block
+//!   reference, so `sp > 1` parity is tolerance-based, not bitwise.
+//! * In backward, a KV block's `dk`/`dv` partials accumulate q-rank
+//!   contributions in ascending global query order (the block visits
+//!   ranks `b, b+1, …, sp-1`), matching the reference's ascending query
+//!   loop; `dq` accumulates locally in the forward's block order.
+
+use anyhow::Result;
+
+use crate::collectives::Group;
+use crate::config::PlanKind;
+use crate::runtime::tensor::{HostTensor, ScratchArena};
+
+/// Attention-problem geometry shared by every plan. `n_q` / `n_kv` are
+/// global head counts (GQA when `n_kv < n_q`), `head_dim` the per-head
+/// width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    pub n_q: usize,
+    pub n_kv: usize,
+    pub head_dim: usize,
+}
+
+impl AttnShape {
+    pub fn new(n_q: usize, n_kv: usize, head_dim: usize) -> AttnShape {
+        assert!(n_q >= 1 && n_kv >= 1 && head_dim >= 1);
+        assert_eq!(n_q % n_kv, 0, "GQA needs n_q divisible by n_kv");
+        AttnShape { n_q, n_kv, head_dim }
+    }
+
+    /// Query heads per KV head (1 for MHA, >1 for GQA/MQA).
+    pub fn q_group(&self) -> usize {
+        self.n_q / self.n_kv
+    }
+
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+}
+
+/// What `attention_forward` saves for `attention_backward`. Each plan
+/// saves what its real protocol would keep resident: Ulysses recomputes
+/// everything from the relayout replay (activation-checkpoint style),
+/// ring keeps the per-row log-sum-exp and output so backward can rebuild
+/// softmax probabilities without a second forward rotation.
+pub enum PlanSaved {
+    Ulysses,
+    Ring {
+        /// Per rank: `[shard_rows, n_q, head_dim]` forward output.
+        o: Vec<HostTensor>,
+        /// Per rank: `[shard_rows, n_q]` log-sum-exp (`m + ln l`).
+        lse: Vec<HostTensor>,
+    },
+}
+
+impl PlanSaved {
+    /// Return any saved buffers to the arena pool.
+    pub fn recycle(self, arena: &ScratchArena) {
+        match self {
+            PlanSaved::Ulysses => {}
+            PlanSaved::Ring { o, lse } => {
+                arena.recycle_all(o);
+                arena.recycle_all(lse);
+            }
+        }
+    }
+}
+
+/// A sequence-parallel attention protocol. Inputs and outputs are
+/// seq-sharded host tensors, one per rank, each `[shard_rows, heads,
+/// head_dim]`; `cu_seqlens` is the packed segment prefix over the
+/// *global* sequence and drives segment-aware causal masking.
+pub trait ParallelPlan: Send + Sync {
+    fn kind(&self) -> PlanKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    /// Can this plan run `(n_q, n_kv)` heads over `sp` ranks? Errors are
+    /// actionable ("sp=16 > 8 heads: use ring plan"), never silent.
+    fn validate(&self, n_q: usize, n_kv: usize, sp: usize) -> Result<()>;
+
+    /// Exact wire bytes this plan's forward+backward moves per layer (the
+    /// closed form the `CommStats` ledger is pinned against).
+    fn comm_bytes_per_layer(
+        &self,
+        seq: usize,
+        shape: &AttnShape,
+        sp: usize,
+        elem_bytes: usize,
+    ) -> u64;
+
+    /// Sequence-parallel attention forward: per-rank `[ssh, n_q, d]`
+    /// outputs plus whatever this plan saves for backward.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_forward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, PlanSaved)>;
+
+    /// Backward: per-rank seq-sharded `(d_q, d_k, d_v)` from the upstream
+    /// `d_o` and the forward's saved state.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_backward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        d_o: &[HostTensor],
+        saved: &PlanSaved,
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>)>;
+}
+
+/// Factory keyed by the config enum.
+pub fn plan_for(kind: PlanKind) -> Box<dyn ParallelPlan> {
+    match kind {
+        PlanKind::Ulysses => Box::new(super::ulysses::UlyssesPlan),
+        PlanKind::Ring => Box::new(super::ring::RingPlan::default()),
+    }
+}
+
+/// Segment id per global token position, from the packed `cu_seqlens`
+/// prefix (`[0, d0, d0+d1, …, seq]`).
+pub fn seg_ids_from_cu(cu: &[i32], seq: usize) -> Vec<usize> {
+    assert!(cu.len() >= 2 && cu[0] == 0, "cu_seqlens must start at 0");
+    assert_eq!(
+        *cu.last().unwrap() as usize,
+        seq,
+        "cu_seqlens must end at the sequence length"
+    );
+    let mut seg = vec![0usize; seq];
+    for (s, w) in cu.windows(2).enumerate() {
+        assert!(w[1] > w[0], "cu_seqlens must be strictly increasing");
+        for t in &mut seg[w[0] as usize..w[1] as usize] {
+            *t = s;
+        }
+    }
+    seg
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Fold one KV block into a block of query rows' online-softmax running
+/// state `(m, l, acc)`. Two passes per (row, head): all causally-allowed
+/// scores into `scores` scratch with the block max, then exp/accumulate
+/// in ascending key order, rescaling the running state by
+/// `exp(m_old - m_new)`. `exp(-inf - m_new) == 0` makes the first fold a
+/// plain overwrite, and a block with no allowed keys for a row leaves
+/// that row's state untouched (avoiding `-inf - -inf` NaNs).
+///
+/// Layouts: `q` is `[q_rows, n_q, d]` starting at global row `q_base`;
+/// `k`/`v` are `[kv_rows, n_kv, d]` starting at `kv_base`; `m`/`l` are
+/// `[q_rows * n_q]`, `acc` `[q_rows * n_q, d]`, `scores` scratch of at
+/// least `kv_rows`.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_block_fold(
+    q: &[f32],
+    q_rows: usize,
+    q_base: usize,
+    k: &[f32],
+    v: &[f32],
+    kv_rows: usize,
+    kv_base: usize,
+    shape: &AttnShape,
+    seg: &[usize],
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut [f32],
+    scores: &mut [f32],
+) {
+    let (nq, nkv, d) = (shape.n_q, shape.n_kv, shape.head_dim);
+    let group = shape.q_group();
+    let scale = shape.scale();
+    for i in 0..q_rows {
+        let gi = q_base + i;
+        for h in 0..nq {
+            let kvh = h / group;
+            let idx = i * nq + h;
+            let qrow = &q[idx * d..(idx + 1) * d];
+            let mut bm = f32::NEG_INFINITY;
+            for j in 0..kv_rows {
+                let gj = kv_base + j;
+                let s = if gj <= gi && seg[gj] == seg[gi] {
+                    scale * dot(qrow, &k[(j * nkv + kvh) * d..(j * nkv + kvh + 1) * d])
+                } else {
+                    f32::NEG_INFINITY
+                };
+                scores[j] = s;
+                if s > bm {
+                    bm = s;
+                }
+            }
+            if bm == f32::NEG_INFINITY {
+                continue;
+            }
+            let m_new = m[idx].max(bm);
+            let c = (m[idx] - m_new).exp();
+            m[idx] = m_new;
+            l[idx] *= c;
+            let arow = &mut acc[idx * d..(idx + 1) * d];
+            if c != 1.0 {
+                for a in arow.iter_mut() {
+                    *a *= c;
+                }
+            }
+            for j in 0..kv_rows {
+                if scores[j] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let e = (scores[j] - m_new).exp();
+                l[idx] += e;
+                let vrow = &v[(j * nkv + kvh) * d..(j * nkv + kvh + 1) * d];
+                for (a, &vv) in arow.iter_mut().zip(vrow) {
+                    *a += e * vv;
+                }
+            }
+        }
+    }
+}
+
+/// Turn completed running stats into the attention output (in place in
+/// `acc`) and the per-row log-sum-exp. Every row must have folded at
+/// least its own key (causal self-attention guarantees this when the
+/// row's own block was processed).
+pub fn finalize_online_softmax(m: &[f32], l: &[f32], acc: &mut [f32], lse: &mut [f32], d: usize) {
+    for (idx, (&mi, &li)) in m.iter().zip(l).enumerate() {
+        assert!(li > 0.0, "attention row {} folded no keys", idx);
+        let inv = 1.0 / li;
+        for a in &mut acc[idx * d..(idx + 1) * d] {
+            *a *= inv;
+        }
+        lse[idx] = mi + li.ln();
+    }
+}
+
+/// Backward fold of one KV block: accumulate `dq` for the query rows and
+/// `dk`/`dv` for the block, given the forward's per-row `lse` and output
+/// `o`. Standard flash-style backward: `D_i = dO·O`, `p = exp(z - lse)`,
+/// `dv += p dO`, `dz = p (dO·v - D_i)`, `dq += dz·scale·k`,
+/// `dk += dz·scale·q`. Query heads fold into their shared GQA KV head in
+/// ascending q-head order.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_block_bwd_fold(
+    q: &[f32],
+    d_o: &[f32],
+    o: &[f32],
+    lse: &[f32],
+    q_rows: usize,
+    q_base: usize,
+    k: &[f32],
+    v: &[f32],
+    kv_rows: usize,
+    kv_base: usize,
+    shape: &AttnShape,
+    seg: &[usize],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let (nq, nkv, d) = (shape.n_q, shape.n_kv, shape.head_dim);
+    let group = shape.q_group();
+    let scale = shape.scale();
+    for i in 0..q_rows {
+        let gi = q_base + i;
+        for h in 0..nq {
+            let kvh = h / group;
+            let idx = i * nq + h;
+            let qrow = &q[idx * d..(idx + 1) * d];
+            let dorow = &d_o[idx * d..(idx + 1) * d];
+            let orow = &o[idx * d..(idx + 1) * d];
+            let di = dot(dorow, orow);
+            let lse_i = lse[idx];
+            for j in 0..kv_rows {
+                let gj = kv_base + j;
+                if gj > gi || seg[gj] != seg[gi] {
+                    continue;
+                }
+                let kv_off = (j * nkv + kvh) * d;
+                let krow = &k[kv_off..kv_off + d];
+                let vrow = &v[kv_off..kv_off + d];
+                let z = scale * dot(qrow, krow);
+                let p = (z - lse_i).exp();
+                let dp = dot(dorow, vrow);
+                let dz = p * (dp - di);
+                for t in 0..d {
+                    dq[idx * d + t] += dz * scale * krow[t];
+                    dk[kv_off + t] += dz * scale * qrow[t];
+                    dv[kv_off + t] += p * dorow[t];
+                }
+            }
+        }
+    }
+}
+
+/// The dense reference: segment-aware causal attention over the whole
+/// sequence as a single KV block. Returns `([seq, n_q, d]` output,
+/// `[seq, n_q]` log-sum-exp)`; both come from the arena.
+pub fn dense_attention(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    shape: &AttnShape,
+    cu: &[i32],
+    arena: &ScratchArena,
+) -> Result<(HostTensor, HostTensor)> {
+    let seq = q.shape()[0];
+    let seg = seg_ids_from_cu(cu, seq);
+    let (qd, kd, vd) = (q.as_f32()?, k.as_f32()?, v.as_f32()?);
+    let n = seq * shape.n_q;
+    let mut m = arena.take_f32(n);
+    m.fill(f32::NEG_INFINITY);
+    let mut l = arena.take_f32(n);
+    l.fill(0.0);
+    let mut acc = arena.take_f32(n * shape.head_dim);
+    acc.fill(0.0);
+    let mut scores = arena.take_f32(seq);
+    attn_block_fold(qd, seq, 0, kd, vd, seq, 0, shape, &seg, &mut m, &mut l, &mut acc, &mut scores);
+    let mut lse = arena.take_f32(n);
+    finalize_online_softmax(&m, &l, &mut acc, &mut lse, shape.head_dim);
+    arena.recycle_f32(m);
+    arena.recycle_f32(l);
+    arena.recycle_f32(scores);
+    Ok((
+        HostTensor::f32(vec![seq, shape.n_q, shape.head_dim], acc),
+        HostTensor::f32(vec![seq, shape.n_q], lse),
+    ))
+}
+
+/// Dense reference backward (single full-range block). Returns
+/// `(d_q, d_k, d_v)` with the input layouts.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_bwd(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    o: &HostTensor,
+    lse: &HostTensor,
+    d_o: &HostTensor,
+    shape: &AttnShape,
+    cu: &[i32],
+    arena: &ScratchArena,
+) -> Result<(HostTensor, HostTensor, HostTensor)> {
+    let seq = q.shape()[0];
+    let seg = seg_ids_from_cu(cu, seq);
+    let mut dq = arena.take_f32(seq * shape.n_q * shape.head_dim);
+    dq.fill(0.0);
+    let mut dk = arena.take_f32(seq * shape.n_kv * shape.head_dim);
+    dk.fill(0.0);
+    let mut dv = arena.take_f32(seq * shape.n_kv * shape.head_dim);
+    dv.fill(0.0);
+    attn_block_bwd_fold(
+        q.as_f32()?,
+        d_o.as_f32()?,
+        o.as_f32()?,
+        lse.as_f32()?,
+        seq,
+        0,
+        k.as_f32()?,
+        v.as_f32()?,
+        seq,
+        0,
+        shape,
+        &seg,
+        &mut dq,
+        &mut dk,
+        &mut dv,
+    );
+    Ok((
+        HostTensor::f32(vec![seq, shape.n_q, shape.head_dim], dq),
+        HostTensor::f32(vec![seq, shape.n_kv, shape.head_dim], dk),
+        HostTensor::f32(vec![seq, shape.n_kv, shape.head_dim], dv),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill (tests must not use RNG state).
+    fn fill(t: &mut [f32], seed: u64) {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        for x in t.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *x = ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+        }
+    }
+
+    fn rand_t(shape: Vec<usize>, seed: u64) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut d = vec![0.0f32; n];
+        fill(&mut d, seed);
+        HostTensor::f32(shape, d)
+    }
+
+    #[test]
+    fn seg_ids_expand_cu_prefix() {
+        assert_eq!(seg_ids_from_cu(&[0, 3, 5], 5), vec![0, 0, 0, 1, 1]);
+        assert_eq!(seg_ids_from_cu(&[0, 4], 4), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "end at the sequence length")]
+    fn seg_ids_reject_short_cu() {
+        seg_ids_from_cu(&[0, 3], 5);
+    }
+
+    #[test]
+    fn dense_first_token_attends_only_itself() {
+        let shape = AttnShape::new(2, 2, 4);
+        let arena = ScratchArena::new();
+        let q = rand_t(vec![6, 2, 4], 1);
+        let k = rand_t(vec![6, 2, 4], 2);
+        let v = rand_t(vec![6, 2, 4], 3);
+        let (o, _lse) = dense_attention(&q, &k, &v, &shape, &[0, 6], &arena).unwrap();
+        // softmax over a single key is exactly that key's value row
+        assert_eq!(o.as_f32().unwrap()[..8], v.as_f32().unwrap()[..8]);
+    }
+
+    #[test]
+    fn dense_masks_across_segment_boundaries() {
+        let shape = AttnShape::new(1, 1, 2);
+        let arena = ScratchArena::new();
+        let q = rand_t(vec![4, 1, 2], 4);
+        let k = rand_t(vec![4, 1, 2], 5);
+        let v = rand_t(vec![4, 1, 2], 6);
+        // packed [0,2,4]: token 2 starts doc 1 and must ignore doc 0
+        let (o, _) = dense_attention(&q, &k, &v, &shape, &[0, 2, 4], &arena).unwrap();
+        assert_eq!(o.as_f32().unwrap()[4..6], v.as_f32().unwrap()[4..6]);
+        // and differs from the unpacked result for the same row
+        let (o_full, _) = dense_attention(&q, &k, &v, &shape, &[0, 4], &arena).unwrap();
+        assert_ne!(o.as_f32().unwrap()[4..6], o_full.as_f32().unwrap()[4..6]);
+    }
+
+    #[test]
+    fn uniform_values_pass_through_softmax() {
+        // When every value row is the same vector, any softmax mix of
+        // them returns that vector (up to rounding).
+        let shape = AttnShape::new(2, 1, 3);
+        let arena = ScratchArena::new();
+        let q = rand_t(vec![5, 2, 3], 7);
+        let k = rand_t(vec![5, 1, 3], 8);
+        let v = HostTensor::f32(vec![5, 1, 3], [2.0f32, -1.0, 0.5].repeat(5));
+        let (o, _) = dense_attention(&q, &k, &v, &shape, &[0, 5], &arena).unwrap();
+        for row in o.as_f32().unwrap().chunks(3) {
+            assert!((row[0] - 2.0).abs() < 1e-5);
+            assert!((row[1] + 1.0).abs() < 1e-5);
+            assert!((row[2] - 0.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dense_backward_matches_finite_differences() {
+        let shape = AttnShape::new(2, 1, 3);
+        let cu = [0, 3, 5];
+        let arena = ScratchArena::new();
+        let q = rand_t(vec![5, 2, 3], 11);
+        let k = rand_t(vec![5, 1, 3], 12);
+        let v = rand_t(vec![5, 1, 3], 13);
+        let w = rand_t(vec![5, 2, 3], 14); // loss = sum(o * w) => d_o = w
+        let loss = |q: &HostTensor, k: &HostTensor, v: &HostTensor| -> f64 {
+            let (o, _) = dense_attention(q, k, v, &shape, &cu, &arena).unwrap();
+            o.as_f32()
+                .unwrap()
+                .iter()
+                .zip(w.as_f32().unwrap())
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let (o, lse) = dense_attention(&q, &k, &v, &shape, &cu, &arena).unwrap();
+        let (dq, dk, dv) =
+            dense_attention_bwd(&q, &k, &v, &o, &lse, &w, &shape, &cu, &arena).unwrap();
+        let eps = 1e-2f32;
+        let check = |t: &HostTensor, g: &HostTensor, which: usize| {
+            let n = t.as_f32().unwrap().len();
+            for idx in (0..n).step_by(7) {
+                let mut bumped = t.as_f32().unwrap().to_vec();
+                bumped[idx] += eps;
+                let tp = HostTensor::f32(t.shape().to_vec(), bumped.clone());
+                bumped[idx] -= 2.0 * eps;
+                let tm = HostTensor::f32(t.shape().to_vec(), bumped);
+                let (lp, lm) = match which {
+                    0 => (loss(&tp, &k, &v), loss(&tm, &k, &v)),
+                    1 => (loss(&q, &tp, &v), loss(&q, &tm, &v)),
+                    _ => (loss(&q, &k, &tp), loss(&q, &k, &tm)),
+                };
+                let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let ana = g.as_f32().unwrap()[idx];
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                    "grad {} idx {}: numeric {} vs analytic {}",
+                    which,
+                    idx,
+                    num,
+                    ana
+                );
+            }
+        };
+        check(&q, &dq, 0);
+        check(&k, &dk, 1);
+        check(&v, &dv, 2);
+    }
+
+    #[test]
+    fn plan_factory_returns_matching_kinds() {
+        assert_eq!(plan_for(PlanKind::Ulysses).kind(), PlanKind::Ulysses);
+        assert_eq!(plan_for(PlanKind::Ring).kind(), PlanKind::Ring);
+        assert_eq!(plan_for(PlanKind::Ring).name(), "ring");
+    }
+}

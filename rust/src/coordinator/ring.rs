@@ -1,0 +1,888 @@
+//! Blockwise RingAttention plan (Liu et al. 2024, PAPERS.md): KV blocks
+//! rotate rank-to-rank over `Group::send_recv` while every rank folds
+//! online-softmax partials for its own query shard. No head bound: `sp`
+//! may exceed `n_heads`, which Ulysses cannot do.
+//!
+//! ## Causal-skip schedule
+//!
+//! Block `b` (rank `b`'s KV shard) is fully masked for every query rank
+//! `< b`, so it never travels there: at hop `t`, rank `r` holds block
+//! `r - t` (nothing once `r < t`), and the transfer into hop `t+1` only
+//! has ranks `t..sp-1` sending to their `+1` neighbor. Each block's last
+//! stop is rank `sp-1`. This halves wire traffic versus the full
+//! rotation: per layer the forward moves `(sp-1)/sp * KV` bytes per rank
+//! (vs the full rotation's `2(sp-1)/sp` priced in `perf/roofline.rs` —
+//! both forms are exposed there), and in total
+//! `sp(sp-1)/2` block hops = `(sp-1) * seq * n_kv * d` elements.
+//!
+//! ## Overlap model
+//!
+//! Hop `t+1`'s transfer runs on a scoped worker thread while the caller
+//! folds hop `t`'s blocks — the offload engine's worker-stream pattern on
+//! the rank-to-rank axis. The time the caller then blocks in `join` is
+//! *measured* stall (a `Stall` span, `RingStats::stall_ns`); with
+//! `overlap: false` the copy runs inline on the caller thread and is
+//! charged entirely as stall, so `overlap_frac == 0` is the honest sync
+//! baseline and anything above it is measured hiding, never asserted.
+//!
+//! Backward re-runs the rotation with `dk`/`dv` partial accumulators
+//! riding along. The K/V leg of each hop overlaps compute as in forward;
+//! the dKV leg cannot (it carries what the fold just produced) and is
+//! charged as stall. Completed dKV blocks all land on rank `sp-1` and
+//! are "homed" to their owner rank in one accounted exchange
+//! (`account_send_recv`). See `plan.rs` for the summation-order contract.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::collectives::Group;
+use crate::config::PlanKind;
+use crate::obs::{Category, Tracer};
+use crate::runtime::tensor::{HostTensor, ScratchArena};
+
+use super::plan::{
+    attn_block_bwd_fold, attn_block_fold, finalize_online_softmax, seg_ids_from_cu, AttnShape,
+    ParallelPlan, PlanSaved,
+};
+
+/// Measured transfer/stall accounting for the ring rotation, mirroring
+/// the offload engine's stall ledger: `copy_ns` is wall time spent inside
+/// `send_recv` (on the worker under overlap, inline otherwise), while
+/// `stall_ns` is the part the critical path actually waited for.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RingStats {
+    /// Rotation hops performed (transfer rounds, forward + backward).
+    pub hops: u64,
+    pub copy_ns: u64,
+    pub stall_ns: u64,
+    pub bytes: u64,
+}
+
+impl RingStats {
+    /// Fraction of transfer time hidden behind block compute. 0 for the
+    /// inline baseline by construction; measured (not asserted) under
+    /// overlap.
+    pub fn overlap_frac(&self) -> f64 {
+        if self.copy_ns == 0 {
+            return 0.0;
+        }
+        (1.0 - self.stall_ns as f64 / self.copy_ns as f64).clamp(0.0, 1.0)
+    }
+}
+
+/// Forward-rotation wire bytes under the causal-skip schedule:
+/// `sp(sp-1)/2` block hops, each moving a K+V block of `(seq/sp) * n_kv
+/// * d` elements. Exact for equal shards (the ledger tests pin that);
+/// with ragged shards the ledger follows the actual block sizes and this
+/// is the balanced-shard price.
+pub fn ring_fwd_bytes(seq: usize, n_kv: usize, head_dim: usize, sp: usize, elem_bytes: usize) -> u64 {
+    if sp <= 1 {
+        return 0;
+    }
+    ((sp - 1) * seq * n_kv * head_dim * elem_bytes) as u64
+}
+
+/// Backward wire bytes: the rotation re-runs with dK/dV riding along
+/// (twice the forward payload), plus homing every completed dKV block
+/// from rank `sp-1` to its owner (all blocks but rank `sp-1`'s own).
+pub fn ring_bwd_bytes(seq: usize, n_kv: usize, head_dim: usize, sp: usize, elem_bytes: usize) -> u64 {
+    if sp <= 1 {
+        return 0;
+    }
+    let home = (2 * (sp - 1) * seq.div_ceil(sp) * n_kv * head_dim * elem_bytes) as u64;
+    2 * ring_fwd_bytes(seq, n_kv, head_dim, sp, elem_bytes) + home
+}
+
+/// One rotating payload: borrowed from the caller's shard at hop 0,
+/// arena-owned once received over the wire.
+enum Payload<'a> {
+    Borrowed(&'a [f32]),
+    Owned(Vec<f32>),
+}
+
+impl Payload<'_> {
+    fn slice(&self) -> &[f32] {
+        match self {
+            Payload::Borrowed(s) => s,
+            Payload::Owned(v) => v,
+        }
+    }
+
+    fn recycle(self, arena: &ScratchArena) {
+        if let Payload::Owned(v) = self {
+            if !v.is_empty() {
+                arena.recycle_f32(v);
+            }
+        }
+    }
+}
+
+/// The KV block a rank currently holds (`idx` = global block id = owner
+/// rank; block rows are the owner's shard rows).
+struct RingBuf<'a> {
+    k: Payload<'a>,
+    v: Payload<'a>,
+    idx: usize,
+}
+
+/// Fold the blocks held at `hop` into every active rank's running state.
+#[allow(clippy::too_many_arguments)]
+fn fold_ranks(
+    hop: usize,
+    cur: &[Option<RingBuf>],
+    qd: &[&[f32]],
+    rows: &[usize],
+    bases: &[usize],
+    shape: &AttnShape,
+    seg: &[usize],
+    m: &mut [Vec<f32>],
+    l: &mut [Vec<f32>],
+    acc: &mut [Vec<f32>],
+    scores: &mut [Vec<f32>],
+    tracer: &Tracer,
+) {
+    for (r, slot) in cur.iter().enumerate().skip(hop) {
+        let Some(buf) = slot else { continue };
+        let b = buf.idx;
+        let mut span = tracer.span(Category::Ring, "ring_fold");
+        span.set_rank(r);
+        attn_block_fold(
+            qd[r],
+            rows[r],
+            bases[r],
+            buf.k.slice(),
+            buf.v.slice(),
+            rows[b],
+            bases[b],
+            shape,
+            seg,
+            &mut m[r],
+            &mut l[r],
+            &mut acc[r],
+            &mut scores[r],
+        );
+    }
+}
+
+/// Backward fold: mutates each active rank's `dq` and the riding
+/// `(dk, dv)` accumulators of the block it holds.
+#[allow(clippy::too_many_arguments)]
+fn fold_ranks_bwd(
+    hop: usize,
+    cur: &[Option<RingBuf>],
+    dkv: &mut [Option<(Vec<f32>, Vec<f32>)>],
+    qd: &[&[f32]],
+    dod: &[&[f32]],
+    od: &[&[f32]],
+    lsed: &[&[f32]],
+    rows: &[usize],
+    bases: &[usize],
+    shape: &AttnShape,
+    seg: &[usize],
+    dq: &mut [Vec<f32>],
+    tracer: &Tracer,
+) {
+    for (r, slot) in cur.iter().enumerate().skip(hop) {
+        let Some(buf) = slot else { continue };
+        let b = buf.idx;
+        let (dk, dv) = dkv[r].as_mut().expect("dkv rides with its kv block");
+        let mut span = tracer.span(Category::Ring, "ring_fold_bwd");
+        span.set_rank(r);
+        attn_block_bwd_fold(
+            qd[r],
+            dod[r],
+            od[r],
+            lsed[r],
+            rows[r],
+            bases[r],
+            buf.k.slice(),
+            buf.v.slice(),
+            rows[b],
+            bases[b],
+            shape,
+            seg,
+            &mut dq[r],
+            dk,
+            dv,
+        );
+    }
+}
+
+/// Blockwise RingAttention behind the [`ParallelPlan`] trait.
+pub struct RingPlan {
+    overlap: bool,
+    stats: Mutex<RingStats>,
+}
+
+impl Default for RingPlan {
+    fn default() -> Self {
+        RingPlan::new(true)
+    }
+}
+
+impl RingPlan {
+    pub fn new(overlap: bool) -> RingPlan {
+        RingPlan { overlap, stats: Mutex::default() }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    pub fn stats(&self) -> RingStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = RingStats::default();
+    }
+
+    fn note_hop(&self, copy: Duration, stall: Duration, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.hops += 1;
+        st.copy_ns += copy.as_nanos() as u64;
+        st.stall_ns += stall.as_nanos() as u64;
+        st.bytes += bytes;
+    }
+
+    /// Rotate the blocks one hop under the causal-skip schedule: ranks
+    /// `hop..sp-1` send to their `+1` neighbor. Returns the received
+    /// (k, v) buffers and the measured in-transfer duration. Under
+    /// `overlap` the caller passes `compute`, which runs on this thread
+    /// while the worker moves data; the join wait is the measured stall.
+    fn rotate_kv<'a, F: FnOnce()>(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        cur: &[Option<RingBuf<'a>>],
+        hop: usize,
+        compute: F,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, u64) {
+        let sp = cur.len();
+        let tracer = group.tracer();
+        let mut ksends: Vec<&[f32]> = vec![&[]; sp];
+        let mut vsends: Vec<&[f32]> = vec![&[]; sp];
+        for r in hop..sp - 1 {
+            if let Some(buf) = &cur[r] {
+                ksends[r] = buf.k.slice();
+                vsends[r] = buf.v.slice();
+            }
+        }
+        let bytes: u64 =
+            ksends.iter().chain(&vsends).map(|s| (s.len() * 4) as u64).sum();
+        if self.overlap {
+            let (kr, vr, copy, stall) = std::thread::scope(|s| {
+                let worker = s.spawn(|| {
+                    let t0 = Instant::now();
+                    let kr = group.send_recv_into(&ksends, 1, arena);
+                    let vr = group.send_recv_into(&vsends, 1, arena);
+                    (kr, vr, t0.elapsed())
+                });
+                compute();
+                let joined = Instant::now();
+                let mut sspan = tracer.span(Category::Stall, "stall_ring");
+                let (kr, vr, copy) = worker.join().expect("ring transfer worker");
+                let stall = joined.elapsed();
+                sspan.set_dur(stall);
+                drop(sspan);
+                (kr, vr, copy, stall)
+            });
+            self.note_hop(copy, stall, bytes);
+            (kr, vr, bytes)
+        } else {
+            compute();
+            let mut sspan = tracer.span(Category::Stall, "stall_ring");
+            let t0 = Instant::now();
+            let kr = group.send_recv_into(&ksends, 1, arena);
+            let vr = group.send_recv_into(&vsends, 1, arena);
+            let copy = t0.elapsed();
+            sspan.set_dur(copy);
+            drop(sspan);
+            // inline: the critical path pays the whole copy
+            self.note_hop(copy, copy, bytes);
+            (kr, vr, bytes)
+        }
+    }
+}
+
+/// Replace the held blocks after the hop `hop -> hop+1` transfer;
+/// returns old owned buffers to the arena.
+fn install<'a>(
+    cur: &mut Vec<Option<RingBuf<'a>>>,
+    kr: Vec<Vec<f32>>,
+    vr: Vec<Vec<f32>>,
+    hop: usize,
+    arena: &ScratchArena,
+) {
+    let sp = cur.len();
+    let mut next: Vec<Option<RingBuf<'a>>> = Vec::with_capacity(sp);
+    for (r, (kb, vb)) in kr.into_iter().zip(vr).enumerate() {
+        if kb.is_empty() {
+            next.push(None);
+        } else {
+            next.push(Some(RingBuf {
+                k: Payload::Owned(kb),
+                v: Payload::Owned(vb),
+                idx: r - hop - 1,
+            }));
+        }
+    }
+    for old in cur.drain(..) {
+        if let Some(b) = old {
+            b.k.recycle(arena);
+            b.v.recycle(arena);
+        }
+    }
+    *cur = next;
+}
+
+impl ParallelPlan for RingPlan {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Ring
+    }
+
+    fn validate(&self, n_q: usize, n_kv: usize, sp: usize) -> Result<()> {
+        anyhow::ensure!(sp >= 1, "sp must be >= 1, got {sp}");
+        anyhow::ensure!(
+            n_q % n_kv == 0,
+            "ring plan: {n_q} query heads not divisible by {n_kv} kv heads \
+             (GQA grouping needs an integer group size)"
+        );
+        // No head bound: every rank keeps all heads of its query shard,
+        // so sp > n_q is fine — the configuration Ulysses rejects.
+        Ok(())
+    }
+
+    fn comm_bytes_per_layer(
+        &self,
+        seq: usize,
+        shape: &AttnShape,
+        sp: usize,
+        elem_bytes: usize,
+    ) -> u64 {
+        ring_fwd_bytes(seq, shape.n_kv, shape.head_dim, sp, elem_bytes)
+            + ring_bwd_bytes(seq, shape.n_kv, shape.head_dim, sp, elem_bytes)
+    }
+
+    fn attention_forward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, PlanSaved)> {
+        let sp = group.world;
+        assert_eq!(q.len(), sp);
+        self.validate(shape.n_q, shape.n_kv, sp)?;
+        let (nq, d) = (shape.n_q, shape.head_dim);
+        let rows: Vec<usize> = q.iter().map(|t| t.shape()[0]).collect();
+        let bases: Vec<usize> = rows
+            .iter()
+            .scan(0usize, |a, r| {
+                let b = *a;
+                *a += r;
+                Some(b)
+            })
+            .collect();
+        let seq: usize = rows.iter().sum();
+        let seg = seg_ids_from_cu(cu_seqlens, seq);
+        let qd: Vec<&[f32]> = q.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let kd: Vec<&[f32]> = k.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let vd: Vec<&[f32]> = v.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+
+        let max_rows = rows.iter().copied().max().unwrap_or(0);
+        let (mut m, mut l, mut acc, mut scores) =
+            (Vec::with_capacity(sp), Vec::with_capacity(sp), Vec::with_capacity(sp), Vec::with_capacity(sp));
+        for r in 0..sp {
+            let n = rows[r] * nq;
+            let mut mr = arena.take_f32(n);
+            mr.fill(f32::NEG_INFINITY);
+            m.push(mr);
+            let mut lr = arena.take_f32(n);
+            lr.fill(0.0);
+            l.push(lr);
+            let mut ar = arena.take_f32(n * d);
+            ar.fill(0.0);
+            acc.push(ar);
+            scores.push(arena.take_f32(max_rows));
+        }
+
+        let mut cur: Vec<Option<RingBuf>> = (0..sp)
+            .map(|r| {
+                Some(RingBuf { k: Payload::Borrowed(kd[r]), v: Payload::Borrowed(vd[r]), idx: r })
+            })
+            .collect();
+
+        let tracer = group.tracer().clone();
+        for hop in 0..sp {
+            if hop + 1 == sp {
+                fold_ranks(
+                    hop, &cur, &qd, &rows, &bases, shape, &seg, &mut m, &mut l, &mut acc,
+                    &mut scores, &tracer,
+                );
+            } else {
+                let (kr, vr, _bytes) = self.rotate_kv(group, arena, &cur, hop, || {
+                    fold_ranks(
+                        hop, &cur, &qd, &rows, &bases, shape, &seg, &mut m, &mut l, &mut acc,
+                        &mut scores, &tracer,
+                    );
+                });
+                install(&mut cur, kr, vr, hop, arena);
+            }
+        }
+        for slot in cur {
+            if let Some(b) = slot {
+                b.k.recycle(arena);
+                b.v.recycle(arena);
+            }
+        }
+
+        let (mut o_out, mut o_saved, mut lse_saved) =
+            (Vec::with_capacity(sp), Vec::with_capacity(sp), Vec::with_capacity(sp));
+        for r in 0..sp {
+            let mut lse = arena.take_f32(rows[r] * nq);
+            let mut acc_r = std::mem::take(&mut acc[r]);
+            finalize_online_softmax(&m[r], &l[r], &mut acc_r, &mut lse, d);
+            let o = HostTensor::f32(vec![rows[r], nq, d], acc_r);
+            // saved copy survives downstream consumption of the output
+            o_saved.push(arena.copy_tensor(&o));
+            lse_saved.push(HostTensor::f32(vec![rows[r], nq], lse));
+            o_out.push(o);
+        }
+        for b in m.into_iter().chain(l).chain(scores) {
+            arena.recycle_f32(b);
+        }
+        Ok((o_out, PlanSaved::Ring { o: o_saved, lse: lse_saved }))
+    }
+
+    fn attention_backward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        d_o: &[HostTensor],
+        saved: &PlanSaved,
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>)> {
+        let PlanSaved::Ring { o, lse } = saved else {
+            anyhow::bail!("ring backward needs ring-saved (o, lse) state")
+        };
+        let sp = group.world;
+        assert_eq!(q.len(), sp);
+        self.validate(shape.n_q, shape.n_kv, sp)?;
+        let (nq, nkv, d) = (shape.n_q, shape.n_kv, shape.head_dim);
+        let rows: Vec<usize> = q.iter().map(|t| t.shape()[0]).collect();
+        let bases: Vec<usize> = rows
+            .iter()
+            .scan(0usize, |a, r| {
+                let b = *a;
+                *a += r;
+                Some(b)
+            })
+            .collect();
+        let seq: usize = rows.iter().sum();
+        let seg = seg_ids_from_cu(cu_seqlens, seq);
+        let qd: Vec<&[f32]> = q.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let kd: Vec<&[f32]> = k.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let vd: Vec<&[f32]> = v.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let dod: Vec<&[f32]> = d_o.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let od: Vec<&[f32]> = o.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+        let lsed: Vec<&[f32]> = lse.iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+
+        let mut dq: Vec<Vec<f32>> = (0..sp)
+            .map(|r| {
+                let mut b = arena.take_f32(rows[r] * nq * d);
+                b.fill(0.0);
+                b
+            })
+            .collect();
+        let mut cur: Vec<Option<RingBuf>> = (0..sp)
+            .map(|r| {
+                Some(RingBuf { k: Payload::Borrowed(kd[r]), v: Payload::Borrowed(vd[r]), idx: r })
+            })
+            .collect();
+        // dkv accumulators ride with the block each rank holds
+        let mut dkv: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..sp)
+            .map(|r| {
+                let n = rows[r] * nkv * d;
+                let mut a = arena.take_f32(n);
+                a.fill(0.0);
+                let mut b = arena.take_f32(n);
+                b.fill(0.0);
+                Some((a, b))
+            })
+            .collect();
+        // finished[b]: block b's completed (dk, dv), captured at rank sp-1
+        let mut finished: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..sp).map(|_| None).collect();
+
+        let tracer = group.tracer().clone();
+        for hop in 0..sp {
+            let last = hop + 1 == sp;
+            if last {
+                fold_ranks_bwd(
+                    hop, &cur, &mut dkv, &qd, &dod, &od, &lsed, &rows, &bases, shape, &seg,
+                    &mut dq, &tracer,
+                );
+            } else {
+                // K/V leg overlaps the fold; the dKV leg below cannot —
+                // it carries what the fold just produced.
+                let (kr, vr, _bytes) = self.rotate_kv(group, arena, &cur, hop, || {
+                    fold_ranks_bwd(
+                        hop, &cur, &mut dkv, &qd, &dod, &od, &lsed, &rows, &bases, shape, &seg,
+                        &mut dq, &tracer,
+                    );
+                });
+                // capture the block whose ride just ended at rank sp-1
+                if let Some(buf) = &cur[sp - 1] {
+                    finished[buf.idx] = dkv[sp - 1].take();
+                }
+                let mut dksends: Vec<&[f32]> = vec![&[]; sp];
+                let mut dvsends: Vec<&[f32]> = vec![&[]; sp];
+                for r in hop..sp - 1 {
+                    if let Some((dk_, dv_)) = &dkv[r] {
+                        dksends[r] = dk_;
+                        dvsends[r] = dv_;
+                    }
+                }
+                let leg_bytes: u64 =
+                    dksends.iter().chain(&dvsends).map(|s| (s.len() * 4) as u64).sum();
+                let mut sspan = tracer.span(Category::Stall, "stall_ring");
+                let t0 = Instant::now();
+                let dkr = group.send_recv_into(&dksends, 1, arena);
+                let dvr = group.send_recv_into(&dvsends, 1, arena);
+                let leg_copy = t0.elapsed();
+                sspan.set_dur(leg_copy);
+                drop(sspan);
+                self.note_hop(leg_copy, leg_copy, leg_bytes);
+                install(&mut cur, kr, vr, hop, arena);
+                // swap in the received dkv accumulators, recycling the sent
+                let mut next_dkv: Vec<Option<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(sp);
+                for (dk_, dv_) in dkr.into_iter().zip(dvr) {
+                    if dk_.is_empty() {
+                        next_dkv.push(None);
+                    } else {
+                        next_dkv.push(Some((dk_, dv_)));
+                    }
+                }
+                for old in dkv.drain(..) {
+                    if let Some((a, b)) = old {
+                        arena.recycle_f32(a);
+                        arena.recycle_f32(b);
+                    }
+                }
+                dkv = next_dkv;
+            }
+        }
+        // after the last fold, rank sp-1 holds the final completed block
+        if let Some(Some(buf)) = cur.get(sp - 1) {
+            finished[buf.idx] = dkv[sp - 1].take();
+        }
+        for slot in cur {
+            if let Some(b) = slot {
+                b.k.recycle(arena);
+                b.v.recycle(arena);
+            }
+        }
+        for slot in dkv.drain(..) {
+            if let Some((a, b)) = slot {
+                arena.recycle_f32(a);
+                arena.recycle_f32(b);
+            }
+        }
+
+        // home each completed dKV block from rank sp-1 to its owner; rank
+        // sp-1's own block is already in place, every other crosses the
+        // wire once
+        let mut home_bytes = 0u64;
+        for (b, slot) in finished.iter().enumerate() {
+            let (dk_, dv_) = slot.as_ref().expect("every block's ride completes");
+            if b != sp - 1 {
+                home_bytes += ((dk_.len() + dv_.len()) * 4) as u64;
+            }
+        }
+        if home_bytes > 0 {
+            group.account_send_recv(home_bytes);
+        }
+
+        let mut d_q = Vec::with_capacity(sp);
+        let mut d_k = Vec::with_capacity(sp);
+        let mut d_v = Vec::with_capacity(sp);
+        for (b, slot) in finished.into_iter().enumerate() {
+            let (dk_, dv_) = slot.unwrap();
+            d_q.push(HostTensor::f32(vec![rows[b], nq, d], std::mem::take(&mut dq[b])));
+            d_k.push(HostTensor::f32(vec![rows[b], nkv, d], dk_));
+            d_v.push(HostTensor::f32(vec![rows[b], nkv, d], dv_));
+        }
+        Ok((d_q, d_k, d_v))
+    }
+}
+
+/// Drive the ring plan's *transfers only* through the arena — the
+/// analogue of `ulysses::relayout_step_cycle` for byte benchmarking at
+/// sequence lengths where the host reference attention itself would be
+/// prohibitive. Performs, per layer, the forward causal-skip rotation
+/// (K+V), the backward rotation (K+V+dK+dV), and the homing exchange,
+/// with the exact ledger of the real plan.
+pub fn ring_comm_cycle(
+    group: &Group,
+    arena: &ScratchArena,
+    rows_per_rank: usize,
+    n_kv: usize,
+    head_dim: usize,
+    n_layers: usize,
+) {
+    let sp = group.world;
+    if sp <= 1 {
+        return;
+    }
+    let blk = rows_per_rank * n_kv * head_dim;
+    let mut proto = arena.take_f32(blk);
+    proto.fill(0.0);
+    for _ in 0..n_layers {
+        for bufs_per_hop in [2usize, 4] {
+            for hop in 0..sp - 1 {
+                for _ in 0..bufs_per_hop {
+                    let mut sends: Vec<&[f32]> = vec![&[]; sp];
+                    for s in sends.iter_mut().take(sp - 1).skip(hop) {
+                        *s = &proto;
+                    }
+                    let recv = group.send_recv_into(&sends, 1, arena);
+                    for b in recv {
+                        if !b.is_empty() {
+                            arena.recycle_f32(b);
+                        }
+                    }
+                }
+            }
+            if bufs_per_hop == 4 {
+                // homing: every completed dKV block but rank sp-1's own
+                group.account_send_recv((2 * (sp - 1) * blk * 4) as u64);
+            }
+        }
+    }
+    arena.recycle_f32(proto);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{dense_attention, plan_for};
+
+    fn fill(t: &mut [f32], seed: u64) {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        for x in t.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *x = ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+        }
+    }
+
+    fn shard(full: &HostTensor, rows: &[usize]) -> Vec<HostTensor> {
+        let dims = full.shape();
+        let stride: usize = dims[1..].iter().product();
+        let data = full.as_f32().unwrap();
+        let mut out = Vec::new();
+        let mut base = 0;
+        for &r in rows {
+            out.push(HostTensor::f32(
+                vec![r, dims[1], dims[2]],
+                data[base * stride..(base + r) * stride].to_vec(),
+            ));
+            base += r;
+        }
+        out
+    }
+
+    fn rand_t(shape: Vec<usize>, seed: u64) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut d = vec![0.0f32; n];
+        fill(&mut d, seed);
+        HostTensor::f32(shape, d)
+    }
+
+    #[test]
+    fn forward_ledger_matches_causal_skip_closed_form() {
+        let (sp, ssh, n_q, n_kv, d) = (4, 4, 4, 2, 8);
+        let seq = sp * ssh;
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let q = shard(&rand_t(vec![seq, n_q, d], 1), &[ssh; 4]);
+        let k = shard(&rand_t(vec![seq, n_kv, d], 2), &[ssh; 4]);
+        let v = shard(&rand_t(vec![seq, n_kv, d], 3), &[ssh; 4]);
+        let plan = RingPlan::new(false);
+        let cu = [0, seq as i32];
+        let (_o, saved) = plan.attention_forward(&g, &arena, &q, &k, &v, &shape, &cu).unwrap();
+        assert_eq!(g.stats().send_recv_bytes, ring_fwd_bytes(seq, n_kv, d, sp, 4));
+        assert_eq!(g.stats().all_to_all_bytes, 0, "ring never uses a2a");
+        saved.recycle(&arena);
+    }
+
+    #[test]
+    fn full_cycle_ledger_matches_comm_bytes_per_layer() {
+        let (sp, ssh, n_q, n_kv, d) = (4, 3, 4, 4, 4);
+        let seq = sp * ssh;
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let q = shard(&rand_t(vec![seq, n_q, d], 4), &[ssh; 4]);
+        let k = shard(&rand_t(vec![seq, n_kv, d], 5), &[ssh; 4]);
+        let v = shard(&rand_t(vec![seq, n_kv, d], 6), &[ssh; 4]);
+        let plan = RingPlan::new(false);
+        let cu = [0, seq as i32];
+        let (o, saved) = plan.attention_forward(&g, &arena, &q, &k, &v, &shape, &cu).unwrap();
+        let _ = plan
+            .attention_backward(&g, &arena, &q, &k, &v, &o, &saved, &shape, &cu)
+            .unwrap();
+        assert_eq!(
+            g.stats().send_recv_bytes,
+            plan.comm_bytes_per_layer(seq, &shape, sp, 4),
+            "ledger must match the closed form"
+        );
+        saved.recycle(&arena);
+    }
+
+    #[test]
+    fn ring_spans_pair_with_ledger_ops() {
+        use std::sync::Arc;
+        let (sp, ssh, n_q, n_kv, d) = (3, 2, 2, 1, 4);
+        let seq = sp * ssh;
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let mut g = Group::new(sp);
+        let tracer = Arc::new(Tracer::new(true));
+        g.set_tracer(tracer.clone());
+        let arena = ScratchArena::new();
+        let q = shard(&rand_t(vec![seq, n_q, d], 7), &[ssh; 3]);
+        let k = shard(&rand_t(vec![seq, n_kv, d], 8), &[ssh; 3]);
+        let v = shard(&rand_t(vec![seq, n_kv, d], 9), &[ssh; 3]);
+        let plan = RingPlan::new(true);
+        let cu = [0, seq as i32];
+        let (o, saved) = plan.attention_forward(&g, &arena, &q, &k, &v, &shape, &cu).unwrap();
+        let _ = plan
+            .attention_backward(&g, &arena, &q, &k, &v, &o, &saved, &shape, &cu)
+            .unwrap();
+        let st = g.stats();
+        let spans = tracer.drain();
+        let coll: Vec<_> = spans.iter().filter(|s| s.cat == Category::Collective).collect();
+        assert_eq!(coll.len() as u64, st.ops, "one Collective span per ledger op");
+        let span_bytes: u64 = coll.iter().map(|s| s.bytes).sum();
+        assert_eq!(span_bytes, st.total_bytes(), "span bytes == ledger bytes");
+        assert!(
+            spans.iter().any(|s| s.cat == Category::Ring),
+            "block folds land on the ring lane"
+        );
+        assert!(
+            spans.iter().any(|s| s.cat == Category::Stall && s.name == "stall_ring"),
+            "transfer waits land on the stall lane"
+        );
+        saved.recycle(&arena);
+    }
+
+    #[test]
+    fn inline_mode_charges_whole_copy_as_stall() {
+        let (sp, ssh, n_q, n_kv, d) = (4, 2, 2, 2, 4);
+        let seq = sp * ssh;
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let q = shard(&rand_t(vec![seq, n_q, d], 10), &[ssh; 4]);
+        let k = shard(&rand_t(vec![seq, n_kv, d], 11), &[ssh; 4]);
+        let v = shard(&rand_t(vec![seq, n_kv, d], 12), &[ssh; 4]);
+        let cu = [0, seq as i32];
+        let plan = RingPlan::new(false);
+        let (_o, saved) = plan.attention_forward(&g, &arena, &q, &k, &v, &shape, &cu).unwrap();
+        let st = plan.stats();
+        assert_eq!(st.hops, (sp - 1) as u64);
+        assert_eq!(st.copy_ns, st.stall_ns, "inline hides nothing");
+        assert_eq!(st.overlap_frac(), 0.0);
+        assert_eq!(st.bytes, ring_fwd_bytes(seq, n_kv, d, sp, 4));
+        saved.recycle(&arena);
+
+        let plan = RingPlan::new(true);
+        let (_o, saved) = plan.attention_forward(&g, &arena, &q, &k, &v, &shape, &cu).unwrap();
+        let st = plan.stats();
+        assert!(st.copy_ns > 0);
+        assert!((0.0..=1.0).contains(&st.overlap_frac()));
+        saved.recycle(&arena);
+    }
+
+    #[test]
+    fn comm_cycle_ledger_matches_plan_closed_form() {
+        let (sp, ssh, n_kv, d, layers) = (4, 8, 2, 16, 3);
+        let seq = sp * ssh;
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers);
+        let shape = AttnShape::new(n_kv, n_kv, d);
+        let per_layer = RingPlan::new(false).comm_bytes_per_layer(seq, &shape, sp, 4);
+        assert_eq!(g.stats().send_recv_bytes, layers as u64 * per_layer);
+        // steady state: a second cycle is served from the pool
+        let misses = arena.misses();
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers);
+        assert_eq!(arena.misses(), misses, "comm cycle allocates only once");
+    }
+
+    #[test]
+    fn plan_factory_ring_has_no_head_bound() {
+        let plan = plan_for(PlanKind::Ring);
+        assert!(plan.validate(4, 2, 16).is_ok(), "sp=16 > 4 heads is fine under ring");
+        assert!(plan.validate(3, 2, 4).is_err(), "GQA grouping still checked");
+        let ulysses = plan_for(PlanKind::Ulysses);
+        assert!(ulysses.validate(4, 2, 16).is_err());
+    }
+
+    #[test]
+    fn ring_comm_beats_a2a_at_the_gqa_acceptance_point() {
+        // The BENCH_ring acceptance geometry: 32K tokens, 32 q heads,
+        // GQA 8:1 (4 kv heads), d=128, sp=8. Ring moves strictly fewer
+        // bytes per layer than the Ulysses a2a cycle. With MHA (n_kv=8+)
+        // the ring actually loses at sp=8 — kept honest in bench rows.
+        use crate::coordinator::ulysses::UlyssesPlan;
+        let shape = AttnShape::new(32, 4, 128);
+        let ring = RingPlan::new(false).comm_bytes_per_layer(32768, &shape, 8, 2);
+        let a2a = UlyssesPlan.comm_bytes_per_layer(32768, &shape, 8, 2);
+        assert!(
+            ring < a2a,
+            "ring {} bytes must undercut a2a {} bytes at the acceptance point",
+            ring,
+            a2a
+        );
+    }
+
+    #[test]
+    fn sp1_forward_is_bit_identical_to_dense_reference() {
+        let (n_q, n_kv, d, seq) = (4, 2, 8, 16);
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let g = Group::new(1);
+        let arena = ScratchArena::new();
+        let q = rand_t(vec![seq, n_q, d], 20);
+        let k = rand_t(vec![seq, n_kv, d], 21);
+        let v = rand_t(vec![seq, n_kv, d], 22);
+        let cu = [0, 7, seq as i32];
+        let plan = RingPlan::default();
+        let (o, saved) = plan
+            .attention_forward(
+                &g,
+                &arena,
+                std::slice::from_ref(&q),
+                std::slice::from_ref(&k),
+                std::slice::from_ref(&v),
+                &shape,
+                &cu,
+            )
+            .unwrap();
+        let (o_ref, lse_ref) = dense_attention(&q, &k, &v, &shape, &cu, &arena).unwrap();
+        assert_eq!(o[0].as_f32().unwrap(), o_ref.as_f32().unwrap(), "sp=1 == dense, bitwise");
+        assert_eq!(g.stats().send_recv_bytes, 0, "sp=1 moves nothing");
+        let PlanSaved::Ring { lse, .. } = &saved else { panic!() };
+        assert_eq!(lse[0].as_f32().unwrap(), lse_ref.as_f32().unwrap());
+        saved.recycle(&arena);
+    }
+}

@@ -25,9 +25,14 @@
 //! way, and the addend ORDER of every replica sum is unchanged
 //! (ascending source rank), so all nonzero results round identically.
 
+use anyhow::Result;
+
 use crate::collectives::Group;
+use crate::config::PlanKind;
 use crate::obs::Category;
 use crate::runtime::tensor::{accumulate_rows, copy_rows, HostTensor, ScratchArena};
+
+use super::plan::{dense_attention, dense_attention_bwd, AttnShape, ParallelPlan, PlanSaved};
 
 /// First global head owned by `rank` when `n_heads` are distributed over
 /// `sp` ranks. Handles both the contiguous-split (n_heads >= sp) and the
@@ -49,11 +54,35 @@ pub fn heads_per_rank(n_heads: usize, sp: usize) -> usize {
 }
 
 /// Validity of an SP degree for a (q, kv) head pair — §7.1 limits.
+/// Boolean back-compat wrapper around [`validate_ulysses`].
 pub fn sp_is_valid(n_q: usize, n_kv: usize, sp: usize) -> bool {
-    sp >= 1
-        && sp <= n_q
-        && n_q % sp == 0
-        && (n_kv >= sp && n_kv % sp == 0 || n_kv < sp)
+    validate_ulysses(n_q, n_kv, sp).is_ok()
+}
+
+/// The §7.1 head limits as actionable errors instead of a silent invalid
+/// config: each message says what failed and what to do about it (pick a
+/// divisor sp, or switch to the ring plan, which has no head bound).
+pub fn validate_ulysses(n_q: usize, n_kv: usize, sp: usize) -> Result<()> {
+    anyhow::ensure!(sp >= 1, "sp must be >= 1, got {sp}");
+    anyhow::ensure!(
+        sp <= n_q,
+        "ulysses plan: sp={sp} > {n_q} query heads — every rank needs at \
+         least one query head; use the ring plan, which has no head bound"
+    );
+    anyhow::ensure!(
+        n_q % sp == 0,
+        "ulysses plan: {n_q} query heads not divisible by sp={sp}; pick sp \
+         from the divisors of {n_q} or use the ring plan"
+    );
+    if n_kv >= sp {
+        anyhow::ensure!(
+            n_kv % sp == 0,
+            "ulysses plan: {n_kv} kv heads not divisible by sp={sp} (kv \
+             replication only applies when n_kv < sp); pick sp from the \
+             divisors of {n_kv} or use the ring plan"
+        );
+    }
+    Ok(())
 }
 
 /// seq->head all-to-all (one-shot buffers; see `a2a_seq_to_head_into`).
@@ -299,6 +328,135 @@ pub fn a2a_bytes_per_block(
     ((q + kv + o) * elem_bytes) as u64
 }
 
+/// The Ulysses protocol behind the [`ParallelPlan`] trait: a2a seq->head
+/// relayouts, dense per-head-shard attention (the shared reference
+/// kernel), a2a head->seq back. Backward replays the forward relayouts
+/// (activation-checkpoint recompute, exactly the trainer's schedule) so
+/// the plan's `CommStats` ledger matches `relayout_step_cycle`'s.
+pub struct UlyssesPlan;
+
+impl UlyssesPlan {
+    /// Per-rank dense attention over `[seq, q_sh, d]` head shards. The
+    /// local GQA mapping `h_local / (q_sh / kv_sh)` agrees with the
+    /// global `h / (n_q / n_kv)` in both the partitioned and the
+    /// replicated (`kv_sh == 1`) regime because head blocks are
+    /// contiguous per rank.
+    fn local_shape(&self, shape: &AttnShape, sp: usize) -> AttnShape {
+        AttnShape::new(
+            heads_per_rank(shape.n_q, sp),
+            heads_per_rank(shape.n_kv, sp),
+            shape.head_dim,
+        )
+    }
+}
+
+impl ParallelPlan for UlyssesPlan {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Ulysses
+    }
+
+    fn validate(&self, n_q: usize, n_kv: usize, sp: usize) -> Result<()> {
+        validate_ulysses(n_q, n_kv, sp)
+    }
+
+    /// fwd: q/k/v seq->head + o head->seq; bwd: relayout replay
+    /// (recompute) + d_o seq->head + dq/dk/dv head->seq.
+    fn comm_bytes_per_layer(
+        &self,
+        seq: usize,
+        shape: &AttnShape,
+        sp: usize,
+        elem_bytes: usize,
+    ) -> u64 {
+        let q_vol =
+            (seq * heads_per_rank(shape.n_q, sp) * shape.head_dim * sp * elem_bytes) as u64;
+        let kv_vol =
+            (seq * heads_per_rank(shape.n_kv, sp) * shape.head_dim * sp * elem_bytes) as u64;
+        let fwd = a2a_bytes_per_block(seq, shape.n_q, shape.n_kv, shape.head_dim, sp, elem_bytes);
+        // bwd = forward replay + d_o in + (dq, dk, dv) out
+        2 * fwd + 2 * q_vol + 2 * kv_vol
+    }
+
+    fn attention_forward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, PlanSaved)> {
+        let sp = group.world;
+        self.validate(shape.n_q, shape.n_kv, sp)?;
+        let local = self.local_shape(shape, sp);
+        let qf = a2a_seq_to_head_into(group, q, arena);
+        let kf = a2a_seq_to_head_into(group, k, arena);
+        let vf = a2a_seq_to_head_into(group, v, arena);
+        let mut o_full = Vec::with_capacity(sp);
+        for r in 0..sp {
+            let (o, lse) = dense_attention(&qf[r], &kf[r], &vf[r], &local, cu_seqlens, arena)?;
+            arena.recycle(lse);
+            o_full.push(o);
+        }
+        let o = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena);
+        arena.recycle_all(qf);
+        arena.recycle_all(kf);
+        arena.recycle_all(vf);
+        arena.recycle_all(o_full);
+        Ok((o, PlanSaved::Ulysses))
+    }
+
+    fn attention_backward(
+        &self,
+        group: &Group,
+        arena: &ScratchArena,
+        q: &[HostTensor],
+        k: &[HostTensor],
+        v: &[HostTensor],
+        d_o: &[HostTensor],
+        _saved: &PlanSaved,
+        shape: &AttnShape,
+        cu_seqlens: &[i32],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>)> {
+        let sp = group.world;
+        self.validate(shape.n_q, shape.n_kv, sp)?;
+        let local = self.local_shape(shape, sp);
+        // recompute replay of the forward, as the checkpointed trainer does
+        let qf = a2a_seq_to_head_into(group, q, arena);
+        let kf = a2a_seq_to_head_into(group, k, arena);
+        let vf = a2a_seq_to_head_into(group, v, arena);
+        let mut o_full = Vec::with_capacity(sp);
+        let mut lse_full = Vec::with_capacity(sp);
+        for r in 0..sp {
+            let (o, lse) = dense_attention(&qf[r], &kf[r], &vf[r], &local, cu_seqlens, arena)?;
+            o_full.push(o);
+            lse_full.push(lse);
+        }
+        let o_replay = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena);
+        arena.recycle_all(o_replay);
+        let d_of = a2a_seq_to_head_into(group, d_o, arena);
+        let (mut dqf, mut dkf, mut dvf) =
+            (Vec::with_capacity(sp), Vec::with_capacity(sp), Vec::with_capacity(sp));
+        for r in 0..sp {
+            let (dq, dk, dv) = dense_attention_bwd(
+                &qf[r], &kf[r], &vf[r], &o_full[r], &lse_full[r], &d_of[r], &local, cu_seqlens,
+                arena,
+            )?;
+            dqf.push(dq);
+            dkf.push(dk);
+            dvf.push(dv);
+        }
+        let d_q = a2a_head_to_seq_into(group, &dqf, shape.n_q, true, arena);
+        let d_k = a2a_head_to_seq_into(group, &dkf, shape.n_kv, true, arena);
+        let d_v = a2a_head_to_seq_into(group, &dvf, shape.n_kv, true, arena);
+        for bufs in [qf, kf, vf, o_full, lse_full, d_of, dqf, dkf, dvf] {
+            arena.recycle_all(bufs);
+        }
+        Ok((d_q, d_k, d_v))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,5 +592,44 @@ mod tests {
         // each direction moves seq*heads*d floats total across ranks
         let logical = (sp * ssh * heads * d * 4) as u64;
         assert_eq!(g.stats().all_to_all_bytes, 2 * logical);
+    }
+
+    #[test]
+    fn validate_ulysses_errors_are_actionable() {
+        assert!(validate_ulysses(32, 8, 8).is_ok());
+        assert!(validate_ulysses(8, 4, 16).is_ok(), "kv replication regime");
+        let err = validate_ulysses(8, 8, 16).unwrap_err().to_string();
+        assert!(err.contains("sp=16 > 8 query heads"), "{err}");
+        assert!(err.contains("ring plan"), "must point at the fix: {err}");
+        let err = validate_ulysses(9, 3, 8).unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "{err}");
+        assert!(err.contains("ring"), "{err}");
+    }
+
+    #[test]
+    fn ulysses_plan_ledger_matches_comm_closed_form() {
+        use crate::coordinator::plan::AttnShape;
+        let (sp, ssh, n_q, n_kv, d) = (4, 4, 8, 2, 8);
+        let seq = sp * ssh;
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let q = mk(sp, ssh, n_q, d);
+        let k = mk(sp, ssh, n_kv, d);
+        let v = mk(sp, ssh, n_kv, d);
+        let plan = UlyssesPlan;
+        let cu = [0, seq as i32];
+        let (o, saved) = plan
+            .attention_forward(&g, &arena, &q, &k, &v, &shape, &cu)
+            .unwrap();
+        let _ = plan
+            .attention_backward(&g, &arena, &q, &k, &v, &o, &saved, &shape, &cu)
+            .unwrap();
+        assert_eq!(
+            g.stats().all_to_all_bytes,
+            plan.comm_bytes_per_layer(seq, &shape, sp, 4),
+            "ledger must match the closed form"
+        );
+        assert_eq!(g.stats().send_recv_bytes, 0, "ulysses never uses the ring wire");
     }
 }

@@ -13,7 +13,7 @@
 
 use anyhow::{Context, Result};
 
-use alst::config::{preset, ClusterConfig, FeatureFlags, GIB};
+use alst::config::{preset, ClusterConfig, FeatureFlags, PlanKind, GIB};
 use alst::coordinator::dataloader::{MarkovSource, UlyssesDataLoader};
 use alst::coordinator::pipeline::{Trainer, TrainerOptions};
 use alst::memory::{max_seqlen_search, Estimator};
@@ -69,6 +69,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let dir = alst::runtime::Manifest::artifact_dir(&root, &config, sp, seq);
     println!("loading artifacts from {}", dir.display());
 
+    // --plan ring swaps the attention relayout protocol: KV-block
+    // rotation over send_recv instead of the seq<->head all-to-alls
+    // (lifts the heads >= sp bound; see coordinator::ring)
+    let plan_arg = args.get_or("plan", "ulysses");
+    let plan = PlanKind::parse(&plan_arg)
+        .ok_or_else(|| anyhow::anyhow!("unknown --plan {plan_arg} (ulysses|ring)"))?;
     let mut opts = TrainerOptions {
         flags: flags_from_args(args),
         seed,
@@ -76,6 +82,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // tiled EXECUTION (requires artifacts with the *_tile stages)
         tiled_loss: args.flag("tiled-loss"),
         tiled_mlp: args.flag("tiled-mlp"),
+        plan,
         ..Default::default()
     };
     opts.adamw.lr = args.f64("lr", opts.adamw.lr as f64) as f32;
@@ -130,12 +137,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         let m = trainer.train_step_accum(&batches)?;
         if step % args.usize("log-every", 1) == 0 {
             println!(
-                "step {:>4}  loss {:.4}  gnorm {:.3}  {:.1}ms  a2a {:.1}MiB",
+                "step {:>4}  loss {:.4}  gnorm {:.3}  {:.1}ms  a2a {:.1}MiB  ring {:.1}MiB",
                 m.step,
                 m.loss,
                 m.grad_norm,
                 m.step_time.as_secs_f64() * 1e3,
                 m.a2a_bytes as f64 / (1 << 20) as f64,
+                m.send_recv_bytes as f64 / (1 << 20) as f64,
             );
         }
         log.push(m);
@@ -165,6 +173,7 @@ fn cmd_search(args: &Args) -> Result<()> {
             model: model.clone(),
             cluster: ClusterConfig::h100(nodes),
             flags,
+            plan: PlanKind::Ulysses,
         },
         out.max_seqlen.max(1),
         world,
@@ -337,7 +346,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
     } else {
         println!(
             "no artifacts at {} — tracing the synthetic coordinator step \
-             (relayouts, collectives, checkpoint tape, tiled loss sweep, marshal)",
+             (relayouts, collectives, ring rotation, checkpoint tape, tiled \
+             loss sweep, marshal)",
             dir.display()
         );
         synthetic_trace(sp, steps)?
@@ -363,7 +373,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
 }
 
 /// The artifact-free traced workload: per step, a Step span wrapping
-/// relayout cycles (Relayout + Collective spans and the byte ledger),
+/// relayout cycles (Relayout + Collective spans and the byte ledger), a
+/// ring-plan forward/backward (per-rank Ring fold lanes, `send_recv`
+/// Collective spans, and the rotation's overlap Stall span),
 /// checkpoint store/prefetch/fetch through the async offload engine
 /// (Offload spans, CopyD2H/CopyH2D stream lanes, Stall spans, and
 /// `MemoryTracker` events), real `Engine::to_buffer` uploads (Marshal
@@ -375,6 +387,8 @@ fn synthetic_trace(
 ) -> Result<(Vec<alst::obs::Span>, Vec<alst::obs::MemEvent>)> {
     use alst::coordinator::dataloader::IGNORE_INDEX;
     use alst::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, CKPT_TAG};
+    use alst::coordinator::plan::{AttnShape, ParallelPlan};
+    use alst::coordinator::ring::RingPlan;
     use alst::coordinator::ulysses::{a2a_head_to_seq_into, a2a_seq_to_head_into};
     use alst::obs::{Category, Tracer};
     use alst::tiling::exec::{HostLossHead, TiledLossExec};
@@ -419,6 +433,25 @@ fn synthetic_trace(
     );
     let labels: Vec<i32> = (0..ssh).map(|i| (i % vocab) as i32).collect();
 
+    // Ring-plan inputs (smaller than the relayout tensors — the host
+    // reference attention is O(seq^2 d) per head, the rotation spans are
+    // what the trace needs, not the flops)
+    let ring = RingPlan::default();
+    let (rsh, rq, rd) = if fast { (64, 2, 8) } else { (128, 4, 16) };
+    let rshape = AttnShape::new(rq, rq, rd);
+    let rcu = vec![0, (rsh * sp) as i32];
+    let mut ring_in = || -> Vec<alst::runtime::HostTensor> {
+        (0..sp)
+            .map(|_| {
+                alst::runtime::HostTensor::f32(
+                    vec![rsh, rq, rd],
+                    rng.normal_vec(rsh * rq * rd, 1.0),
+                )
+            })
+            .collect()
+    };
+    let (rqs, rks, rvs) = (ring_in(), ring_in(), ring_in());
+
     for step in 0..steps as u64 {
         let mut step_span = tracer.span(Category::Step, "trace_step");
         step_span.set_step(step + 1);
@@ -429,6 +462,20 @@ fn synthetic_trace(
             arena.recycle_all(full);
             arena.recycle_all(back);
         }
+
+        // Ring plan forward + backward: the KV rotation's send_recv
+        // Collective spans, the per-rank Ring fold lanes, and the
+        // measured-overlap Stall span all land in the export
+        let (ro, rsaved) =
+            ring.attention_forward(&group, &arena, &rqs, &rks, &rvs, &rshape, &rcu)?;
+        let (rdq, rdk, rdv) = ring.attention_backward(
+            &group, &arena, &rqs, &rks, &rvs, &ro, &rsaved, &rshape, &rcu,
+        )?;
+        rsaved.recycle(&arena);
+        arena.recycle_all(ro);
+        arena.recycle_all(rdq);
+        arena.recycle_all(rdk);
+        arena.recycle_all(rdv);
 
         for li in 0..n_layers {
             for r in 0..sp {

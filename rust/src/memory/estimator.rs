@@ -13,7 +13,7 @@
 //! which term binds in which ablation row, the crossovers, near-linear
 //! GPU scaling — is structural.
 
-use crate::config::{ClusterConfig, FeatureFlags, ModelPreset, Precision, GIB};
+use crate::config::{ClusterConfig, FeatureFlags, ModelPreset, PlanKind, Precision, GIB};
 use crate::coordinator::ulysses::heads_per_rank;
 use crate::tiling::{plan_logits, plan_mlp, TilePlan};
 
@@ -106,6 +106,8 @@ pub struct Estimator {
     pub flags: FeatureFlags,
     pub precision: Precision,
     pub cal: Calibration,
+    /// Which `ParallelPlan` the attention phase is priced for.
+    pub plan: PlanKind,
 }
 
 impl Estimator {
@@ -116,13 +118,24 @@ impl Estimator {
             flags,
             precision: Precision::Bf16Mixed,
             cal: Calibration::default(),
+            plan: PlanKind::Ulysses,
         }
+    }
+
+    pub fn with_plan(mut self, plan: PlanKind) -> Estimator {
+        self.plan = plan;
+        self
     }
 
     /// Effective SP degree for a given world size under the flags.
     pub fn sp_degree(&self, world: usize) -> usize {
         if !self.flags.ulysses_sp {
             return 1;
+        }
+        // Ring has no heads >= sp bound: every rank keeps all heads of
+        // its query shard, so the full world is always a valid degree.
+        if self.plan == PlanKind::Ring {
+            return world;
         }
         // Largest valid SP degree <= world (paper uses SP = world in eval).
         self.model
@@ -178,7 +191,9 @@ impl Estimator {
         let h = m.hidden as u64;
         let layers = m.n_layers as u64;
         let d = m.head_dim as u64;
-        let (q_sh, kv_sh) = if sp > 1 {
+        // Head shards only exist under Ulysses; ring keeps all heads
+        // local (and its sp need not divide the head counts at all).
+        let (q_sh, kv_sh) = if sp > 1 && self.plan == PlanKind::Ulysses {
             (
                 heads_per_rank(m.n_q_heads, sp) as u64,
                 heads_per_rank(m.n_kv_heads, sp) as u64,
@@ -202,15 +217,31 @@ impl Estimator {
             (ckpt, 0)
         };
 
-        // attention phase: a2a send (seq-layout, all heads) + recv
-        // (head-layout, full seq) + o + o send-back; bwd doubles it.
+        // attention phase, priced per plan:
+        //  * ulysses: a2a send (seq-layout, all heads) + recv (head-layout,
+        //    full seq) + o + o send-back; bwd doubles it.
+        //  * ring: the rank never holds the full sequence — q + o shards
+        //    (all heads) plus two double-buffered in-flight KV blocks
+        //    (block i compute + block i+1 transfer) and the m/l running
+        //    stats. Everything scales with t_r, not seq: this is why ring
+        //    keeps working where the a2a recv buffer would not fit.
         let nq = m.n_q_heads as u64;
         let nkv = m.n_kv_heads as u64;
-        let send = t_r as u64 * (nq + 2 * nkv) * d;
-        let recv = seq as u64 * (q_sh + 2 * kv_sh) * d;
-        let o = seq as u64 * q_sh * d;
-        let o_send = t_r as u64 * nq * d;
-        let attn_fwd = (send + recv + o + o_send) * act_b;
+        let attn_fwd = match self.plan {
+            PlanKind::Ulysses => {
+                let send = t_r as u64 * (nq + 2 * nkv) * d;
+                let recv = seq as u64 * (q_sh + 2 * kv_sh) * d;
+                let o = seq as u64 * q_sh * d;
+                let o_send = t_r as u64 * nq * d;
+                (send + recv + o + o_send) * act_b
+            }
+            PlanKind::Ring => {
+                let q_o = 2 * t_r as u64 * nq * d;
+                let kv_blocks = 4 * t_r as u64 * nkv * d; // 2 blocks x (k+v)
+                let stats = 2 * t_r as u64 * nq; // m + l per (row, head)
+                (q_o + kv_blocks + stats) * act_b
+            }
+        };
         let attn_work = (attn_fwd as f64 * self.cal.bwd_factor) as u64;
 
         // MLP phase: priced from the SAME TilePlan the execution driver
@@ -523,6 +554,47 @@ mod tests {
         f.ckpt_offload = true;
         let co = est(f).breakdown(500_000, 8);
         assert_eq!(co.acts.ckpt_device, 0);
+    }
+
+    #[test]
+    fn ring_plan_lifts_the_sp_head_bound() {
+        // llama3-8b has 32 q heads, so Ulysses tops out at sp=32 (§7.1);
+        // ring scales to the full world — including worlds that don't
+        // divide the head counts.
+        let ul = est(FeatureFlags::alst());
+        assert_eq!(ul.sp_degree(64), 32);
+        let ring = est(FeatureFlags::alst()).with_plan(PlanKind::Ring);
+        assert_eq!(ring.sp_degree(64), 64);
+        assert_eq!(ring.sp_degree(24), 24, "non-divisor worlds are fine");
+        // pricing at a non-divisor world must not panic
+        let _ = ring.breakdown(120_000, 24);
+    }
+
+    #[test]
+    fn ring_attention_working_set_scales_with_shard_not_seq() {
+        // At matched sp=8 ring undercuts the a2a send+recv staging; the
+        // structural win is that ring keeps dividing by sp past the head
+        // bound (64 ranks: ~8x below its own sp=8 set, a regime Ulysses
+        // cannot even configure for this model).
+        let ul = est(FeatureFlags::alst());
+        let ring = est(FeatureFlags::alst()).with_plan(PlanKind::Ring);
+        let b_ul = ul.breakdown(1_000_000, 8);
+        let b_ring = ring.breakdown(1_000_000, 8);
+        assert!(b_ring.acts.attn_work < b_ul.acts.attn_work);
+        let b_ring64 = ring.breakdown(1_000_000, 64);
+        assert!(b_ring64.acts.attn_work < b_ring.acts.attn_work / 7);
+    }
+
+    #[test]
+    fn default_plan_pricing_is_unchanged() {
+        // Plan-generic refactor must not move the Ulysses numbers.
+        let e = est(FeatureFlags::alst());
+        assert_eq!(e.plan, PlanKind::Ulysses);
+        let explicit = est(FeatureFlags::alst()).with_plan(PlanKind::Ulysses);
+        assert_eq!(
+            e.breakdown(500_000, 8).device_total(),
+            explicit.breakdown(500_000, 8).device_total()
+        );
     }
 
     #[test]

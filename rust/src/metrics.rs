@@ -111,20 +111,21 @@ impl RunLog {
         self.steps.iter().map(|s| s.tokens).sum()
     }
 
-    /// CSV: step,loss,grad_norm,ms,a2a_bytes,gather_bytes,rs_bytes,
-    /// ckpt_bytes,device_peak_bytes
+    /// CSV: step,loss,grad_norm,ms,a2a_bytes,send_recv_bytes,
+    /// gather_bytes,rs_bytes,ckpt_bytes,device_peak_bytes
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "step,loss,grad_norm,step_ms,a2a_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes,device_peak_bytes\n",
+            "step,loss,grad_norm,step_ms,a2a_bytes,send_recv_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes,device_peak_bytes\n",
         );
         for m in &self.steps {
             s.push_str(&format!(
-                "{},{:.6},{:.4},{:.1},{},{},{},{},{}\n",
+                "{},{:.6},{:.4},{:.1},{},{},{},{},{},{}\n",
                 m.step,
                 m.loss,
                 m.grad_norm,
                 m.step_time.as_secs_f64() * 1e3,
                 m.a2a_bytes,
+                m.send_recv_bytes,
                 m.gather_bytes,
                 m.reduce_scatter_bytes,
                 m.ckpt_transfer_bytes,
@@ -180,6 +181,7 @@ mod tests {
             tokens: 128,
             step_time: Duration::from_millis(10),
             a2a_bytes: 0,
+            send_recv_bytes: 0,
             gather_bytes: 0,
             reduce_scatter_bytes: 0,
             ckpt_transfer_bytes: 0,
@@ -210,9 +212,9 @@ mod tests {
         // the measured device peak
         let header = csv.lines().next().unwrap();
         assert!(header.ends_with("device_peak_bytes"));
-        assert_eq!(header.split(',').count(), 9);
+        assert_eq!(header.split(',').count(), 10);
         let row = csv.lines().nth(1).unwrap();
-        assert_eq!(row.split(',').count(), 9);
+        assert_eq!(row.split(',').count(), 10);
         assert!(row.ends_with(",123456"));
     }
 

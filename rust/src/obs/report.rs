@@ -144,6 +144,7 @@ impl AttributionReport {
                 "collective",
                 "offload",
                 "optimizer",
+                "ring",
                 "stall",
                 "untracked",
             ],
@@ -159,6 +160,7 @@ impl AttributionReport {
                 ms(s.cat(Category::Collective).dur),
                 ms(s.cat(Category::Offload).dur),
                 ms(s.cat(Category::Optimizer).dur),
+                ms(s.cat(Category::Ring).dur),
                 ms(s.cat(Category::Stall).dur),
                 ms(s.untracked),
             ]);
@@ -288,7 +290,7 @@ mod tests {
         let rep = AttributionReport::build(&t.drain(), &[]);
         let table = rep.to_table();
         assert_eq!(table.rows.len(), 3);
-        assert_eq!(table.header.len(), 10);
+        assert_eq!(table.header.len(), 11);
         assert!(table.to_csv().starts_with("step,total,exec"));
         assert!(table.header.contains(&"stall".to_string()));
     }

@@ -39,10 +39,15 @@ pub enum Category {
     CopyD2H,
     CopyH2D,
     Stall,
+    /// Ring attention plan work: per-hop block-kernel compute on the
+    /// rotating KV schedule. Transfers themselves appear on the
+    /// `Collective` lane (`send_recv`); the time the ring critical path
+    /// spends waiting on a transfer is a `Stall` span.
+    Ring,
 }
 
 impl Category {
-    pub const ALL: [Category; 11] = [
+    pub const ALL: [Category; 12] = [
         Category::Step,
         Category::Exec,
         Category::Marshal,
@@ -54,11 +59,12 @@ impl Category {
         Category::CopyD2H,
         Category::CopyH2D,
         Category::Stall,
+        Category::Ring,
     ];
 
     /// Leaf categories enter the attribution sums; containers and the
     /// overlapped copy-stream lanes do not.
-    pub const LEAVES: [Category; 7] = [
+    pub const LEAVES: [Category; 8] = [
         Category::Exec,
         Category::Marshal,
         Category::Relayout,
@@ -66,6 +72,7 @@ impl Category {
         Category::Offload,
         Category::Optimizer,
         Category::Stall,
+        Category::Ring,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -81,6 +88,7 @@ impl Category {
             Category::CopyD2H => "copy_d2h",
             Category::CopyH2D => "copy_h2d",
             Category::Stall => "stall",
+            Category::Ring => "ring",
         }
     }
 
@@ -98,6 +106,7 @@ impl Category {
             Category::CopyD2H => 8,
             Category::CopyH2D => 9,
             Category::Stall => 10,
+            Category::Ring => 11,
         }
     }
 

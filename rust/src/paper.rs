@@ -7,7 +7,7 @@
 //! the asserted properties are the *shapes*: who wins, by what order of
 //! magnitude, where the binding constraint moves.
 
-use crate::config::{preset, ClusterConfig, FeatureFlags, ModelPreset, GIB};
+use crate::config::{preset, ClusterConfig, FeatureFlags, ModelPreset, PlanKind, GIB};
 use crate::memory::{max_seqlen_search, Estimator};
 use crate::perf::{iteration_time, IterationModel};
 use crate::tiling::{plan_logits, plan_mlp};
@@ -44,7 +44,7 @@ fn search_row(model: &ModelPreset, world: usize, flags: FeatureFlags) -> (usize,
     let est = Estimator::new(model, cluster.clone(), flags);
     let out = max_seqlen_search(&est, world);
     let perf = iteration_time(
-        &IterationModel { model: model.clone(), cluster, flags },
+        &IterationModel { model: model.clone(), cluster, flags, plan: PlanKind::Ulysses },
         out.max_seqlen.max(1_000),
         world,
     );
@@ -247,6 +247,7 @@ pub fn comm_sensitivity_table() -> Table {
                 model: model.clone(),
                 cluster,
                 flags: FeatureFlags::alst(),
+                plan: PlanKind::Ulysses,
             },
             15_000_000,
             32,

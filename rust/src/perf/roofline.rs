@@ -7,7 +7,8 @@
 //! We use eff(s) = EFF_MAX * s / (s + S_HALF), calibrated on Table 1
 //! (EFF_MAX 0.6 ~= 590/989 plateau; S_HALF 50K reproduces the 32K row).
 
-use crate::config::{ClusterConfig, FeatureFlags, ModelPreset};
+use crate::config::{ClusterConfig, FeatureFlags, ModelPreset, PlanKind};
+use crate::coordinator::ring::{ring_bwd_bytes, ring_fwd_bytes};
 use crate::coordinator::ulysses::a2a_bytes_per_block;
 use crate::perf::flos::{train_flos, train_flos_packed, FlosBreakdown};
 
@@ -26,6 +27,46 @@ pub struct IterationModel {
     pub model: ModelPreset,
     pub cluster: ClusterConfig,
     pub flags: FeatureFlags,
+    /// Which `ParallelPlan` the attention comm term prices.
+    pub plan: PlanKind,
+}
+
+/// Ring rotation wire time, intra- and inter-node legs priced
+/// separately. Within a node the neighbor exchange rides NVLink; once the
+/// ring spans nodes, the node-boundary links ride the fabric and — since
+/// every hop advances at the pace of its slowest link — they gate the
+/// rotation. `exposed()` is therefore the max of the legs, and a hybrid
+/// plan (Ulysses intra-node, ring inter-node) would re-price the intra
+/// leg on this same struct without touching callers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RingCommCost {
+    pub intra_s: f64,
+    pub inter_s: f64,
+}
+
+impl RingCommCost {
+    pub fn exposed(&self) -> f64 {
+        self.intra_s.max(self.inter_s)
+    }
+}
+
+/// Price `per_rank_bytes` of ring neighbor-exchange traffic on the
+/// cluster: all-NVLink when the ring fits in one node, both legs when it
+/// spans nodes.
+pub fn ring_comm_seconds(
+    cluster: &ClusterConfig,
+    sp: usize,
+    per_rank_bytes: f64,
+) -> RingCommCost {
+    if sp <= 1 {
+        return RingCommCost::default();
+    }
+    let intra_s = per_rank_bytes / cluster.intra_bw_bytes_per_s;
+    if sp <= cluster.gpus_per_node {
+        RingCommCost { intra_s, inter_s: 0.0 }
+    } else {
+        RingCommCost { intra_s, inter_s: per_rank_bytes / cluster.inter_bw_bytes_per_s }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -74,10 +115,13 @@ fn iteration_with_flos(
     flos: &FlosBreakdown,
     eff_seq: f64,
 ) -> PerfResult {
-    let sp = if m.flags.ulysses_sp {
-        m.model.valid_sp_degrees(world).into_iter().max().unwrap_or(1)
-    } else {
+    let sp = if !m.flags.ulysses_sp {
         1
+    } else if m.plan == PlanKind::Ring {
+        // ring has no heads >= sp bound: the whole world participates
+        world
+    } else {
+        m.model.valid_sp_degrees(world).into_iter().max().unwrap_or(1)
     };
     let per_gpu_flos = flos.forward_total() / sp as f64;
     let eff = efficiency(eff_seq);
@@ -90,10 +134,23 @@ fn iteration_with_flos(
         compute_s += 4.0 * w_bytes / m.cluster.pcie_bw_bytes_per_s;
     }
 
-    // Ulysses all-to-alls: cannot overlap with compute (§3.2: "they have
-    // to be really fast"). 2 per attention forward; backward re-runs the
-    // forward pair (recompute) + 2 transposed = 3x the fwd volume.
-    let a2a_s = if sp > 1 {
+    // Attention comm, priced per plan. Ulysses all-to-alls cannot overlap
+    // with compute (§3.2: "they have to be really fast"): 2 per attention
+    // forward; backward re-runs the forward pair (recompute) + 2
+    // transposed = 3x the fwd volume, moving the full activation volume.
+    // The ring plan instead rotates only KV blocks — (sp-1)/sp of the KV
+    // bytes per rank per direction under the causal-skip schedule, far
+    // below the a2a activation volume — priced on the neighbor links
+    // (intra- and inter-node legs separately; the slowest leg is exposed).
+    let a2a_s = if sp <= 1 {
+        0.0
+    } else if m.plan == PlanKind::Ring {
+        let per_layer = (ring_fwd_bytes(seq, m.model.n_kv_heads, m.model.head_dim, sp, 2)
+            + ring_bwd_bytes(seq, m.model.n_kv_heads, m.model.head_dim, sp, 2))
+            as f64;
+        let per_rank = per_layer * m.model.n_layers as f64 / sp as f64;
+        ring_comm_seconds(&m.cluster, sp, per_rank).exposed()
+    } else {
         let per_block = a2a_bytes_per_block(
             seq,
             m.model.n_q_heads,
@@ -104,8 +161,6 @@ fn iteration_with_flos(
         ) as f64;
         let vol = per_block * m.model.n_layers as f64 * 3.0 / sp as f64;
         vol / m.cluster.collective_bw(sp)
-    } else {
-        0.0
     };
 
     // ZeRO-3 param gathers (fwd + bwd regather) + grad reduce-scatter;
@@ -155,7 +210,12 @@ mod tests {
             model: preset("llama3-8b").unwrap().clone(),
             cluster: ClusterConfig::h100(nodes),
             flags,
+            plan: PlanKind::Ulysses,
         }
+    }
+
+    fn ring_model(flags: FeatureFlags, nodes: usize) -> IterationModel {
+        IterationModel { plan: PlanKind::Ring, ..model(flags, nodes) }
     }
 
     #[test]
@@ -242,5 +302,42 @@ mod tests {
             iteration_time(&model(FeatureFlags::baseline(), 1), 500_000, 8);
         assert!(with.a2a_s > 0.0);
         assert_eq!(without.a2a_s, 0.0);
+    }
+
+    #[test]
+    fn ring_legs_price_intra_vs_inter_separately() {
+        let c = ClusterConfig::h100(2);
+        let fits = ring_comm_seconds(&c, 8, 1e9);
+        assert_eq!(fits.inter_s, 0.0, "one-node ring rides NVLink only");
+        assert!(fits.intra_s > 0.0);
+        assert_eq!(fits.exposed(), fits.intra_s);
+        let spans = ring_comm_seconds(&c, 16, 1e9);
+        assert!(spans.inter_s > spans.intra_s, "fabric leg gates the rotation");
+        assert_eq!(spans.exposed(), spans.inter_s);
+        assert_eq!(ring_comm_seconds(&c, 1, 1e9).exposed(), 0.0);
+    }
+
+    #[test]
+    fn ring_comm_undercuts_a2a_within_a_node() {
+        // Same geometry, same node: ring rotates only KV blocks while the
+        // a2a moves the full q+kv+o activation volume.
+        let ul = iteration_time(&model(FeatureFlags::alst(), 1), 1_000_000, 8);
+        let ring = iteration_time(&ring_model(FeatureFlags::alst(), 1), 1_000_000, 8);
+        assert_eq!(ul.sp, 8);
+        assert_eq!(ring.sp, 8);
+        assert!(ring.a2a_s > 0.0);
+        assert!(ring.a2a_s < ul.a2a_s, "{} !< {}", ring.a2a_s, ul.a2a_s);
+    }
+
+    #[test]
+    fn ring_scales_sp_past_the_head_bound() {
+        // llama3-8b caps Ulysses at sp=32; a 64-GPU ring uses all ranks,
+        // and the model still prices an iteration (no panics, no silent
+        // fallback).
+        let ul = iteration_time(&model(FeatureFlags::alst(), 8), 3_200_000, 64);
+        assert_eq!(ul.sp, 32);
+        let ring = iteration_time(&ring_model(FeatureFlags::alst(), 8), 3_200_000, 64);
+        assert_eq!(ring.sp, 64);
+        assert!(ring.compute_s < ul.compute_s, "64-way sharding beats 32-way");
     }
 }

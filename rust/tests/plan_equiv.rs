@@ -1,0 +1,437 @@
+//! Plan-generic attention equivalence suite.
+//!
+//! Both `ParallelPlan` implementations (Ulysses all-to-all, Blockwise
+//! RingAttention) must produce the dense reference's forward output and
+//! gradients under the summation-order contract documented in
+//! `coordinator::plan`:
+//!
+//! * Ulysses forward is **bit-identical** to the reference for every
+//!   valid (sp, heads) regime — the relayouts are pure copies and each
+//!   head's fold is the same single-block arithmetic.
+//! * Ring at `sp == 1` is bit-identical (one full-range block IS the
+//!   reference); at `sp > 1` cross-block `(m, l, acc)` merges round
+//!   differently, so parity is tolerance-based.
+//! * Backward `dk`/`dv` are bit-identical for Ulysses only without kv
+//!   replication (`n_kv >= sp`); replication reorders the per-head
+//!   accumulation across ranks, so GQA backward parity is tolerance-based
+//!   everywhere.
+//!
+//! Also pinned here: ring configs Ulysses cannot run (`sp > n_heads`,
+//! ragged shards, single-token shards), packed `cu_seqlens` flows
+//! including a document spanning every rank's shard, the plan-level
+//! ledger/closed-form agreement, and measured overlap accounting.
+
+use alst::collectives::Group;
+use alst::config::PlanKind;
+use alst::coordinator::plan::{
+    dense_attention, dense_attention_bwd, plan_for, AttnShape, ParallelPlan, PlanSaved,
+};
+use alst::coordinator::ring::RingPlan;
+use alst::coordinator::ulysses::UlyssesPlan;
+use alst::runtime::{HostTensor, ScratchArena};
+
+/// Deterministic pseudo-random fill (tests must not use RNG state).
+fn fill(t: &mut [f32], seed: u64) {
+    let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+    for x in t.iter_mut() {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x = ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+    }
+}
+
+fn rand_t(shape: Vec<usize>, seed: u64) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let mut d = vec![0.0f32; n];
+    fill(&mut d, seed);
+    HostTensor::f32(shape, d)
+}
+
+/// Row-split a `[seq, h, d]` tensor into per-rank seq shards.
+fn shard(full: &HostTensor, rows: &[usize]) -> Vec<HostTensor> {
+    let dims = full.shape();
+    let (h, d) = (dims[1], dims[2]);
+    let data = full.as_f32().unwrap();
+    let mut out = Vec::with_capacity(rows.len());
+    let mut base = 0usize;
+    for &r in rows {
+        out.push(HostTensor::f32(
+            vec![r, h, d],
+            data[base * h * d..(base + r) * h * d].to_vec(),
+        ));
+        base += r;
+    }
+    assert_eq!(base, dims[0], "shard rows must cover the sequence");
+    out
+}
+
+/// Concatenate per-rank seq shards back into one `[seq, h, d]` tensor.
+fn gather(shards: &[HostTensor]) -> HostTensor {
+    let dims = shards[0].shape();
+    let (h, d) = (dims[1], dims[2]);
+    let mut data = Vec::new();
+    let mut seq = 0usize;
+    for s in shards {
+        assert_eq!(&s.shape()[1..], &[h, d]);
+        seq += s.shape()[0];
+        data.extend_from_slice(s.as_f32().unwrap());
+    }
+    HostTensor::f32(vec![seq, h, d], data)
+}
+
+fn equal_rows(seq: usize, sp: usize) -> Vec<usize> {
+    assert_eq!(seq % sp, 0);
+    vec![seq / sp; sp]
+}
+
+fn assert_bit_identical(a: &HostTensor, b: &HostTensor, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (i, (x, y)) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+fn assert_close(a: &HostTensor, b: &HostTensor, tol: f32, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (i, (x, y)) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()).enumerate() {
+        let bound = tol * (1.0 + x.abs().max(y.abs()));
+        assert!(
+            (x - y).abs() <= bound,
+            "{ctx}: elem {i}: {x} vs {y} (tol {bound})"
+        );
+    }
+}
+
+/// The quadratic readout both loss-parity tests use: `sum(o * w)` has
+/// `d_o = w`, so one weight tensor exercises forward AND backward parity.
+fn readout(o: &HostTensor, w: &HostTensor) -> f64 {
+    o.as_f32()
+        .unwrap()
+        .iter()
+        .zip(w.as_f32().unwrap())
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum()
+}
+
+struct Problem {
+    q: HostTensor,
+    k: HostTensor,
+    v: HostTensor,
+    w: HostTensor,
+    shape: AttnShape,
+}
+
+fn problem(seq: usize, n_q: usize, n_kv: usize, d: usize, seed: u64) -> Problem {
+    Problem {
+        q: rand_t(vec![seq, n_q, d], seed),
+        k: rand_t(vec![seq, n_kv, d], seed + 1),
+        v: rand_t(vec![seq, n_kv, d], seed + 2),
+        w: rand_t(vec![seq, n_q, d], seed + 3),
+        shape: AttnShape::new(n_q, n_kv, d),
+    }
+}
+
+/// Run one plan end to end on row-sharded inputs; returns the gathered
+/// forward output and gradients.
+#[allow(clippy::type_complexity)]
+fn run_plan(
+    plan: &dyn ParallelPlan,
+    p: &Problem,
+    rows: &[usize],
+    cu: &[i32],
+) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+    let g = Group::new(rows.len());
+    let arena = ScratchArena::new();
+    let qs = shard(&p.q, rows);
+    let ks = shard(&p.k, rows);
+    let vs = shard(&p.v, rows);
+    let dos = shard(&p.w, rows);
+    let (o, saved) = plan
+        .attention_forward(&g, &arena, &qs, &ks, &vs, &p.shape, cu)
+        .expect("plan forward");
+    let (dq, dk, dv) = plan
+        .attention_backward(&g, &arena, &qs, &ks, &vs, &dos, &saved, &p.shape, cu)
+        .expect("plan backward");
+    let out = (gather(&o), gather(&dq), gather(&dk), gather(&dv));
+    saved.recycle(&arena);
+    out
+}
+
+#[allow(clippy::type_complexity)]
+fn run_dense(p: &Problem, cu: &[i32]) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+    let arena = ScratchArena::new();
+    let (o, lse) = dense_attention(&p.q, &p.k, &p.v, &p.shape, cu, &arena).unwrap();
+    let (dq, dk, dv) =
+        dense_attention_bwd(&p.q, &p.k, &p.v, &o, &lse, &p.w, &p.shape, cu, &arena).unwrap();
+    (o, dq, dk, dv)
+}
+
+// ---------------------------------------------------------------------------
+// Dense-reference parity across sp and head regimes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn both_plans_match_the_dense_reference_across_sp_and_heads() {
+    let seq = 16usize;
+    let d = 4usize;
+    for sp in [1usize, 2, 4, 8] {
+        for (n_q, n_kv) in [(8usize, 8usize), (8, 4), (8, 2), (4, 1)] {
+            let p = problem(seq, n_q, n_kv, d, 1000 + (sp * 10 + n_kv) as u64);
+            let cu = [0, seq as i32];
+            let rows = equal_rows(seq, sp);
+            let (o_ref, dq_ref, dk_ref, dv_ref) = run_dense(&p, &cu);
+
+            let ring = plan_for(PlanKind::Ring);
+            let (o, dq, dk, dv) = run_plan(ring.as_ref(), &p, &rows, &cu);
+            let ctx = format!("ring sp={sp} n_q={n_q} n_kv={n_kv}");
+            if sp == 1 {
+                // single block == the reference, by construction
+                assert_bit_identical(&o, &o_ref, &ctx);
+            } else {
+                assert_close(&o, &o_ref, 5e-5, &ctx);
+            }
+            assert_close(&dq, &dq_ref, 2e-4, &ctx);
+            assert_close(&dk, &dk_ref, 2e-4, &ctx);
+            assert_close(&dv, &dv_ref, 2e-4, &ctx);
+
+            if UlyssesPlan.validate(n_q, n_kv, sp).is_ok() {
+                let ul = plan_for(PlanKind::Ulysses);
+                let (o, dq, dk, dv) = run_plan(ul.as_ref(), &p, &rows, &cu);
+                let ctx = format!("ulysses sp={sp} n_q={n_q} n_kv={n_kv}");
+                // per-head arithmetic is the reference's: bitwise forward
+                assert_bit_identical(&o, &o_ref, &ctx);
+                assert_bit_identical(&dq, &dq_ref, &ctx);
+                if n_kv >= sp {
+                    // no kv replication: one rank owns each kv head, same
+                    // accumulation order as the reference
+                    assert_bit_identical(&dk, &dk_ref, &ctx);
+                    assert_bit_identical(&dv, &dv_ref, &ctx);
+                } else {
+                    // replica-summed kv grads reorder the per-head adds
+                    assert_close(&dk, &dk_ref, 2e-4, &ctx);
+                    assert_close(&dv, &dv_ref, 2e-4, &ctx);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed cu_seqlens, including a document spanning every rank's shard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_segments_match_dense_including_rank_spanning_docs() {
+    let (seq, n_q, n_kv, d, sp) = (8usize, 4usize, 2usize, 3usize, 4usize);
+    let rows = equal_rows(seq, sp);
+    // [0,1,8]: document 1 covers rows 1..8 — every rank's shard overlaps
+    // it, so every rotation hop carries cross-rank same-segment keys
+    for cu in [vec![0i32, 1, 8], vec![0, 2, 4, 6, 8], vec![0, 8]] {
+        let p = problem(seq, n_q, n_kv, d, 7 + cu.len() as u64);
+        let (o_ref, dq_ref, dk_ref, dv_ref) = run_dense(&p, &cu);
+        let ring = plan_for(PlanKind::Ring);
+        let (o, dq, dk, dv) = run_plan(ring.as_ref(), &p, &rows, &cu);
+        let ctx = format!("ring packed cu={cu:?}");
+        assert_close(&o, &o_ref, 5e-5, &ctx);
+        assert_close(&dq, &dq_ref, 2e-4, &ctx);
+        assert_close(&dk, &dk_ref, 2e-4, &ctx);
+        assert_close(&dv, &dv_ref, 2e-4, &ctx);
+
+        let ul = plan_for(PlanKind::Ulysses);
+        let (o_u, dq_u, dk_u, dv_u) = run_plan(ul.as_ref(), &p, &rows, &cu);
+        let ctx = format!("ulysses packed cu={cu:?}");
+        assert_bit_identical(&o_u, &o_ref, &ctx);
+        assert_close(&dq_u, &dq_ref, 2e-4, &ctx);
+        assert_close(&dk_u, &dk_ref, 2e-4, &ctx);
+        assert_close(&dv_u, &dv_ref, 2e-4, &ctx);
+
+        // loss parity between the plans under the quadratic readout
+        let lr = readout(&o, &p.w);
+        let lu = readout(&o_u, &p.w);
+        assert!(
+            (lr - lu).abs() <= 1e-5 * (1.0 + lu.abs()),
+            "loss parity cu={cu:?}: ring {lr} vs ulysses {lu}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring-only regimes: ragged shards, single-token shards, sp > n_heads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_handles_ragged_and_single_token_shards() {
+    // ragged: [3, 3, 2, 2] rows (Ulysses' relayout requires equal shards)
+    let (n_q, n_kv, d) = (4usize, 2usize, 3usize);
+    for cu in [vec![0i32, 10], vec![0, 4, 10]] {
+        let p = problem(10, n_q, n_kv, d, 31 + cu.len() as u64);
+        let (o_ref, dq_ref, dk_ref, dv_ref) = run_dense(&p, &cu);
+        let ring = plan_for(PlanKind::Ring);
+        let (o, dq, dk, dv) = run_plan(ring.as_ref(), &p, &[3, 3, 2, 2], &cu);
+        let ctx = format!("ring ragged cu={cu:?}");
+        assert_close(&o, &o_ref, 5e-5, &ctx);
+        assert_close(&dq, &dq_ref, 2e-4, &ctx);
+        assert_close(&dk, &dk_ref, 2e-4, &ctx);
+        assert_close(&dv, &dv_ref, 2e-4, &ctx);
+    }
+
+    // seq == sp: every shard is a single token (one row per block)
+    let p = problem(4, 2, 1, 4, 53);
+    let cu = [0, 4];
+    let (o_ref, dq_ref, dk_ref, dv_ref) = run_dense(&p, &cu);
+    let ring = plan_for(PlanKind::Ring);
+    let (o, dq, dk, dv) = run_plan(ring.as_ref(), &p, &[1, 1, 1, 1], &cu);
+    assert_close(&o, &o_ref, 5e-5, "single-token shards");
+    assert_close(&dq, &dq_ref, 2e-4, "single-token shards dq");
+    assert_close(&dk, &dk_ref, 2e-4, "single-token shards dk");
+    assert_close(&dv, &dv_ref, 2e-4, "single-token shards dv");
+}
+
+#[test]
+fn sp_beyond_the_head_bound_runs_on_ring_and_errors_actionably_on_ulysses() {
+    // sp=8 over 4 query heads: Ulysses cannot express this (a head can't
+    // split across ranks); ring runs it end to end — the bound the plan
+    // trait was introduced to lift
+    let (seq, sp) = (16usize, 8usize);
+    for (n_q, n_kv) in [(4usize, 4usize), (4, 1)] {
+        let p = problem(seq, n_q, n_kv, 4, 71 + n_kv as u64);
+        let cu = [0, seq as i32];
+        let rows = equal_rows(seq, sp);
+        let (o_ref, dq_ref, dk_ref, dv_ref) = run_dense(&p, &cu);
+        let ring = plan_for(PlanKind::Ring);
+        assert!(ring.validate(n_q, n_kv, sp).is_ok());
+        let (o, dq, dk, dv) = run_plan(ring.as_ref(), &p, &rows, &cu);
+        let ctx = format!("ring sp=8 n_q={n_q} n_kv={n_kv}");
+        assert_close(&o, &o_ref, 5e-5, &ctx);
+        assert_close(&dq, &dq_ref, 2e-4, &ctx);
+        assert_close(&dk, &dk_ref, 2e-4, &ctx);
+        assert_close(&dv, &dv_ref, 2e-4, &ctx);
+
+        let err = UlyssesPlan.validate(n_q, n_kv, sp).unwrap_err().to_string();
+        assert!(
+            err.contains("ring"),
+            "ulysses rejection must point at the ring plan: {err}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ledger, overlap accounting, and arena stability at the suite level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_ledger_matches_the_closed_form_and_overlap_is_measured() {
+    let (seq, n_q, n_kv, d, sp) = (16usize, 4usize, 2usize, 4usize, 4usize);
+    let p = problem(seq, n_q, n_kv, d, 91);
+    let cu = [0, seq as i32];
+    let rows = equal_rows(seq, sp);
+    let shape = p.shape;
+
+    for overlap in [true, false] {
+        let plan = RingPlan::new(overlap);
+        let g = Group::new(sp);
+        let arena = ScratchArena::new();
+        let qs = shard(&p.q, &rows);
+        let ks = shard(&p.k, &rows);
+        let vs = shard(&p.v, &rows);
+        let dos = shard(&p.w, &rows);
+        let (o, saved) = plan
+            .attention_forward(&g, &arena, &qs, &ks, &vs, &shape, &cu)
+            .unwrap();
+        let (dq, dk, dv) = plan
+            .attention_backward(&g, &arena, &qs, &ks, &vs, &dos, &saved, &shape, &cu)
+            .unwrap();
+        let want = plan.comm_bytes_per_layer(seq, &shape, sp, 4);
+        assert_eq!(
+            g.stats().send_recv_bytes,
+            want,
+            "wire ledger vs closed form (overlap={overlap})"
+        );
+        assert_eq!(g.stats().all_to_all_bytes, 0, "ring never uses the a2a wire");
+        let st = plan.stats();
+        assert!(st.hops > 0 && st.copy_ns > 0);
+        let frac = st.overlap_frac();
+        if overlap {
+            assert!((0.0..=1.0).contains(&frac), "overlap_frac {frac}");
+        } else {
+            // inline baseline: the whole copy is stall, by construction
+            assert_eq!(st.copy_ns, st.stall_ns);
+            assert_eq!(frac, 0.0);
+        }
+        saved.recycle(&arena);
+        for t in [o, dq, dk, dv] {
+            arena.recycle_all(t);
+        }
+    }
+}
+
+#[test]
+fn repeated_ring_cycles_reuse_the_arena_pool() {
+    // After the first forward/backward populates the pool, later cycles
+    // must not grow it: the rotation's receive buffers and running-state
+    // scratch all ping-pong through the arena.
+    let (seq, n_q, n_kv, d, sp) = (16usize, 4usize, 2usize, 4usize, 4usize);
+    let p = problem(seq, n_q, n_kv, d, 113);
+    let cu = [0, seq as i32];
+    let rows = equal_rows(seq, sp);
+    let plan = plan_for(PlanKind::Ring);
+    let g = Group::new(sp);
+    let arena = ScratchArena::new();
+    let qs = shard(&p.q, &rows);
+    let ks = shard(&p.k, &rows);
+    let vs = shard(&p.v, &rows);
+    let dos = shard(&p.w, &rows);
+    let mut misses = Vec::new();
+    for _ in 0..3 {
+        let (o, saved) = plan
+            .attention_forward(&g, &arena, &qs, &ks, &vs, &p.shape, &cu)
+            .unwrap();
+        let (dq, dk, dv) = plan
+            .attention_backward(&g, &arena, &qs, &ks, &vs, &dos, &saved, &p.shape, &cu)
+            .unwrap();
+        saved.recycle(&arena);
+        for t in [o, dq, dk, dv] {
+            arena.recycle_all(t);
+        }
+        misses.push(arena.misses());
+    }
+    assert!(misses[0] > 0, "first cycle must populate the pool");
+    assert_eq!(misses[1], misses[2], "cycle 3 allocated: pool not at steady state");
+}
+
+// ---------------------------------------------------------------------------
+// The saved-state contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_saved_state_carries_forward_output_and_lse() {
+    let (seq, sp) = (8usize, 2usize);
+    let p = problem(seq, 2, 2, 4, 131);
+    let cu = [0, seq as i32];
+    let rows = equal_rows(seq, sp);
+    let plan = plan_for(PlanKind::Ring);
+    let g = Group::new(sp);
+    let arena = ScratchArena::new();
+    let qs = shard(&p.q, &rows);
+    let ks = shard(&p.k, &rows);
+    let vs = shard(&p.v, &rows);
+    let (o, saved) = plan
+        .attention_forward(&g, &arena, &qs, &ks, &vs, &p.shape, &cu)
+        .unwrap();
+    match &saved {
+        PlanSaved::Ring { o: so, lse } => {
+            // the saved output is the forward output (backward rebuilds
+            // softmax probabilities from it + lse without a re-forward)
+            for (r, (a, b)) in o.iter().zip(so).enumerate() {
+                assert_bit_identical(a, b, &format!("saved o rank {r}"));
+            }
+            assert_eq!(lse.len(), sp);
+            for (r, t) in lse.iter().enumerate() {
+                assert_eq!(t.shape(), &[rows[r], p.shape.n_q], "lse shape rank {r}");
+                assert!(t.as_f32().unwrap().iter().all(|x| x.is_finite()));
+            }
+        }
+        PlanSaved::Ulysses => panic!("ring must save Ring state"),
+    }
+    saved.recycle(&arena);
+    arena.recycle_all(o);
+}

@@ -275,6 +275,58 @@ fn packed_shard_adapter_inputs_relayout_identically() {
 }
 
 // ---------------------------------------------------------------------------
+// The ParallelPlan trait over the same relayouts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ulysses_plan_is_the_manual_relayout_dense_composition() {
+    // The plan-trait entry point must be exactly the composition this
+    // suite already pins piecewise: reference seq->head relayout, per-rank
+    // dense attention over the head shard, reference head->seq relayout.
+    // Bit-identical — the trait refactor is behavior-preserving.
+    use alst::config::PlanKind;
+    use alst::coordinator::plan::{dense_attention, plan_for, AttnShape};
+
+    let mut rng = Rng::new(61);
+    for (sp, n_q, n_kv) in [(2usize, 4usize, 4usize), (4, 8, 2), (8, 8, 8)] {
+        let (ssh, d) = (3usize, 4usize);
+        let seq = ssh * sp;
+        let cu = [0, seq as i32];
+        let qs = random_shards(&mut rng, sp, ssh, n_q, d);
+        let ks = random_shards(&mut rng, sp, ssh, n_kv, d);
+        let vs = random_shards(&mut rng, sp, ssh, n_kv, d);
+
+        // manual composition from this suite's reference relayouts
+        let local = AttnShape::new(heads_per_rank(n_q, sp), heads_per_rank(n_kv, sp), d);
+        let arena = ScratchArena::new();
+        let q_full = ref_a2a_seq_to_head(&qs);
+        let k_full = ref_a2a_seq_to_head(&ks);
+        let v_full = ref_a2a_seq_to_head(&vs);
+        let o_head: Vec<HostTensor> = (0..sp)
+            .map(|r| {
+                dense_attention(&q_full[r], &k_full[r], &v_full[r], &local, &cu, &arena)
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let want = ref_a2a_head_to_seq(&o_head, n_q, false);
+
+        let plan = plan_for(PlanKind::Ulysses);
+        let g = Group::new(sp);
+        let shape = AttnShape::new(n_q, n_kv, d);
+        let (got, saved) = plan
+            .attention_forward(&g, &arena, &qs, &ks, &vs, &shape, &cu)
+            .unwrap();
+        assert_bit_identical(
+            &want,
+            &got,
+            &format!("plan vs manual composition sp={sp} n_q={n_q} n_kv={n_kv}"),
+        );
+        saved.recycle(&arena);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Steady-state allocation freedom (acceptance criterion)
 // ---------------------------------------------------------------------------
 
