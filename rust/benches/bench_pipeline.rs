@@ -41,7 +41,7 @@ fn main() {
     let arena = ScratchArena::with_byte_budget(4 << 30);
     // warm one cycle: populates the pool AND measures the exact ledgered
     // wire volume of a cycle (the GiB/s denominator)
-    relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv);
+    relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv).unwrap();
     let cycle_bytes = g.stats().all_to_all_bytes;
     g.reset_stats();
     let r = bench(
@@ -49,7 +49,7 @@ fn main() {
         1,
         10,
         std::time::Duration::from_secs(2),
-        || relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv),
+        || relayout_step_cycle(&g, &arena, &q, &kv, n_layers, n_q, n_kv).unwrap(),
     )
     .with_bytes(cycle_bytes);
     println!(
@@ -66,13 +66,13 @@ fn main() {
     let tracer = std::sync::Arc::new(Tracer::new(true));
     let mut gt = Group::new(sp);
     gt.set_tracer(tracer.clone());
-    relayout_step_cycle(&gt, &arena, &q, &kv, n_layers, n_q, n_kv); // warm
+    relayout_step_cycle(&gt, &arena, &q, &kv, n_layers, n_q, n_kv).unwrap(); // warm
     let r = bench(
         &format!("relayout step-cycle sp={sp} seq={seq} L={n_layers} traced"),
         1,
         10,
         std::time::Duration::from_secs(2),
-        || relayout_step_cycle(&gt, &arena, &q, &kv, n_layers, n_q, n_kv),
+        || relayout_step_cycle(&gt, &arena, &q, &kv, n_layers, n_q, n_kv).unwrap(),
     )
     .with_bytes(cycle_bytes);
     println!(
@@ -222,6 +222,84 @@ fn main() {
                 .with_extra("overlap_frac", overlap_frac(&stalls, &stream));
             report.push(&r);
         }
+    }
+
+    // ---- resilience: snapshot cadence cost + recovery latency ------------
+    // The chaos harness's unfaulted step is the denominator; the snapshot
+    // row carries the amortized per-step overhead for each cadence K, and
+    // the recovery row prices a full abort + CRC-checked snapshot load +
+    // re-shard restore against one step.
+    {
+        use alst::config::PlanKind;
+        use alst::coordinator::recover::{ChaosConfig, ChaosHarness, Recoverable};
+
+        let fast = alst::util::bench::fast_mode();
+        let cfg = ChaosConfig {
+            sp: if fast { 2 } else { 4 },
+            seq: if fast { 16 } else { 64 },
+            n_layers: 2,
+            plan: PlanKind::Ulysses,
+            threaded: true,
+            trace: false,
+            fault_plan: None,
+        };
+        let sp_c = cfg.sp;
+        let mut h = ChaosHarness::new(cfg).unwrap();
+        h.step_once().unwrap(); // warm the arena pool and copy streams
+        let r_step = bench(
+            &format!("chaos harness step sp={sp_c} unfaulted"),
+            1,
+            5,
+            std::time::Duration::from_secs(1),
+            || {
+                h.step_once().unwrap();
+            },
+        );
+        let step_ms = r_step.mean.as_secs_f64() * 1e3;
+        report.push(&r_step);
+
+        let snap = std::env::temp_dir().join("alst-bench-snapshot.alst");
+        let r_save = bench(
+            "recovery snapshot write (atomic + crc)",
+            1,
+            5,
+            std::time::Duration::from_millis(500),
+            || {
+                h.save_snapshot(&snap).unwrap();
+            },
+        );
+        let snap_ms = r_save.mean.as_secs_f64() * 1e3;
+        let mut r_save = r_save.with_extra("step_ms", step_ms);
+        for k in [1u64, 2, 4, 8] {
+            // per-step overhead of snapshotting every K steps
+            r_save = r_save.with_extra(&format!("amortized_ms_k{k}"), snap_ms / k as f64);
+        }
+        println!(
+            "    -> snapshot {snap_ms:.3}ms vs step {step_ms:.3}ms \
+             ({:.1}% of a step at K=4)",
+            100.0 * snap_ms / (4.0 * step_ms.max(1e-9)),
+        );
+        report.push(&r_save);
+
+        let r_rec = bench(
+            "recovery restore (abort + load + re-shard)",
+            1,
+            5,
+            std::time::Duration::from_millis(500),
+            || {
+                h.abort_inflight();
+                h.restore_snapshot(&snap).unwrap();
+            },
+        );
+        let rec_ms = r_rec.mean.as_secs_f64() * 1e3;
+        let r_rec = r_rec
+            .with_extra("step_ms", step_ms)
+            .with_extra("recovery_vs_step", rec_ms / step_ms.max(1e-9));
+        println!(
+            "    -> recovery {rec_ms:.3}ms = {:.2} steps of lost work ceiling",
+            rec_ms / step_ms.max(1e-9),
+        );
+        report.push(&r_rec);
     }
 
     // ---- PJRT sections (need `make artifacts`) ---------------------------

@@ -55,10 +55,10 @@ fn main() {
         let arena = ScratchArena::new();
         // one probe cycle each: per-layer volumes come from the byte
         // ledgers, so the extras stay consistent with CommStats
-        ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1);
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1).unwrap();
         let ring_bytes = g.stats().send_recv_bytes;
         g.reset_stats();
-        relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv);
+        relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv).unwrap();
         let a2a_bytes = g.stats().all_to_all_bytes;
         g.reset_stats();
         // the ledger must agree with the plan's closed-form pricing
@@ -76,7 +76,7 @@ fn main() {
         );
 
         let r = quick(&format!("ring comm cycle {label}"), || {
-            ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1);
+            ring_comm_cycle(&g, &arena, ssh, n_kv, d, 1).unwrap();
         })
         .with_bytes(ring_bytes)
         .with_extra("ring_bytes_per_layer", ring_bytes as f64)
@@ -85,7 +85,7 @@ fn main() {
         report.push(&r);
 
         let r = quick(&format!("a2a relayout cycle {label}"), || {
-            relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv);
+            relayout_step_cycle(&g, &arena, &q, &kv, 1, n_q, n_kv).unwrap();
         })
         .with_bytes(a2a_bytes)
         .with_extra("ring_bytes_per_layer", ring_bytes as f64)

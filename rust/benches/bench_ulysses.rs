@@ -44,16 +44,16 @@ fn main() {
         // probe call each), so the GiB/s denominators stay consistent
         // with CommStats even in the kv-replicated regime, where output
         // and input volumes differ
-        let full = a2a_seq_to_head(&g, &input);
+        let full = a2a_seq_to_head(&g, &input).unwrap();
         let s2h_bytes = g.stats().all_to_all_bytes;
         g.reset_stats();
-        let _ = a2a_head_to_seq(&g, &full, heads, false);
+        let _ = a2a_head_to_seq(&g, &full, heads, false).unwrap();
         let h2s_bytes = g.stats().all_to_all_bytes;
         g.reset_stats();
 
         // ---- seq->head: fresh-alloc baseline vs pooled ------------------
         let r = quick(&format!("a2a seq->head {label} fresh-alloc"), || {
-            let out = a2a_seq_to_head(&g, &input);
+            let out = a2a_seq_to_head(&g, &input).unwrap();
             std::hint::black_box(&out);
         })
         .with_bytes(s2h_bytes);
@@ -62,7 +62,7 @@ fn main() {
 
         let arena = ScratchArena::new();
         let r = quick(&format!("a2a seq->head {label} pooled"), || {
-            let out = a2a_seq_to_head_into(&g, &input, &arena);
+            let out = a2a_seq_to_head_into(&g, &input, &arena).unwrap();
             std::hint::black_box(&out);
             arena.recycle_all(out);
         })
@@ -76,7 +76,7 @@ fn main() {
 
         // ---- head->seq over the forward output --------------------------
         let r = quick(&format!("a2a head->seq {label} fresh-alloc"), || {
-            let out = a2a_head_to_seq(&g, &full, heads, false);
+            let out = a2a_head_to_seq(&g, &full, heads, false).unwrap();
             std::hint::black_box(&out);
         })
         .with_bytes(h2s_bytes);
@@ -85,7 +85,7 @@ fn main() {
 
         let arena = ScratchArena::new();
         let r = quick(&format!("a2a head->seq {label} pooled"), || {
-            let out = a2a_head_to_seq_into(&g, &full, heads, false, &arena);
+            let out = a2a_head_to_seq_into(&g, &full, heads, false, &arena).unwrap();
             std::hint::black_box(&out);
             arena.recycle_all(out);
         })
@@ -106,11 +106,11 @@ fn main() {
                 .collect();
             let arena = ScratchArena::new();
             g.reset_stats();
-            let _ = a2a_head_to_seq_into(&g, &kv, heads, true, &arena);
+            let _ = a2a_head_to_seq_into(&g, &kv, heads, true, &arena).unwrap();
             let rs_bytes = g.stats().all_to_all_bytes;
             g.reset_stats();
             let r = quick(&format!("a2a head->seq {label} replica-sum pooled"), || {
-                let out = a2a_head_to_seq_into(&g, &kv, heads, true, &arena);
+                let out = a2a_head_to_seq_into(&g, &kv, heads, true, &arena).unwrap();
                 std::hint::black_box(&out);
                 arena.recycle_all(out);
             })

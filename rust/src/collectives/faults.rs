@@ -1,0 +1,567 @@
+//! Typed fault taxonomy, deterministic fault injection, and the retry
+//! policy behind resilient training (DESIGN.md §Fault model & recovery).
+//!
+//! The headline multi-million-token runs take minutes per step; a rank
+//! failure mid-step must unwind as a *value*, not a poison cascade. This
+//! module provides the three pieces everything else builds on:
+//!
+//! * [`AlstError`] — the typed failure set. Collective ops, offload
+//!   copies, and stage executions return these (wrapped in `anyhow`) so a
+//!   supervisor can `downcast_ref::<AlstError>()` and decide: retryable
+//!   faults ([`AlstError::is_retryable`]) are absorbed in place with
+//!   exponential backoff; `LostRank` aborts the step and restores from the
+//!   last snapshot (`coordinator::recover`).
+//! * [`FaultInjector`] — a deterministic, seeded chaos source. A
+//!   [`FaultPlan`] names one site class (Nth collective op / Nth offload
+//!   copy on a rank / Nth stage exec on a rank) and a [`FaultKind`]; the
+//!   injector fires exactly once at that index, so a faulted run is
+//!   reproducible and the retry that follows deterministically succeeds.
+//!   `CorruptPayload` faults are *real*: the op's output bytes are
+//!   corrupted post-compute and must be caught by the per-transfer
+//!   checksum ([`checksum_f32s`]) before the retry.
+//! * [`lock_clean`] — poison-recovering lock access for the shared
+//!   ledgers (`CommStats`, `EngineStats`, tracer shards, offload state).
+//!   Every guarded update in this codebase is a commutative increment or
+//!   a whole-value swap, so the data is consistent even if the holder
+//!   panicked mid-critical-section; recovering the guard lets the panic
+//!   surface once, as a typed `RankPanic`, instead of cascading poison
+//!   panics through every other rank's ledger access.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::obs::{Category, Tracer};
+use crate::runtime::tensor::HostTensor;
+
+/// Lock a mutex, recovering from poisoning. See the module docs for why
+/// this is sound for every ledger in this crate: guarded state is either
+/// a commutative counter or replaced wholesale, never left half-built.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Where in a step a fault can strike.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// A `Group` collective (direct op or `account_*` ledger entry).
+    /// Collectives are group-wide: the op index alone selects the fault.
+    Collective,
+    /// One D2H/H2D copy in the async offload engine (indexed per rank).
+    OffloadCopy,
+    /// One stage execution on a rank (indexed per rank).
+    StageExec,
+}
+
+impl FaultSite {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::Collective => "collective",
+            FaultSite::OffloadCopy => "offload_copy",
+            FaultSite::StageExec => "stage_exec",
+        }
+    }
+}
+
+/// What kind of failure the injector produces at the chosen site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A transient transport hiccup: the op fails before moving data and
+    /// succeeds on retry. Absorbed by backoff; never reaches a supervisor.
+    Transient,
+    /// The rank is gone. Non-retryable: the step aborts and recovery
+    /// restores from the last snapshot (optionally at a degraded world).
+    LostRank,
+    /// In-flight payload corruption: the op completes but its output
+    /// bytes are damaged; the per-transfer checksum catches the mismatch
+    /// and the op retransmits. Retryable.
+    CorruptPayload,
+}
+
+/// The typed failure set. Implements `std::error::Error`, so `?` lifts
+/// these into `anyhow::Error` and supervisors recover them with
+/// `err.downcast_ref::<AlstError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlstError {
+    /// Transient transport failure (escapes only when retries exhaust).
+    Transient { site: FaultSite, rank: usize, attempt: u32 },
+    /// A rank died; the in-flight step cannot complete.
+    LostRank { site: FaultSite, rank: usize },
+    /// Per-transfer checksum mismatch (escapes only when retries exhaust).
+    CorruptPayload { site: FaultSite, rank: usize, expect: u64, got: u64 },
+    /// A rank closure panicked inside `run_ranks`; the payload message is
+    /// preserved so the panic surfaces once, typed, instead of poisoning
+    /// every shared ledger.
+    RankPanic { rank: usize, msg: String },
+    /// An offload stream worker is gone (channel closed or died on a
+    /// non-retryable fault recorded in the engine state).
+    WorkerDead { stream: &'static str },
+}
+
+impl AlstError {
+    /// Build the error a fired fault maps to. Gate-style sites (no real
+    /// payload at hand, e.g. `account_*` ledger entries) model a
+    /// `CorruptPayload` as a receiver-side checksum failure with unknown
+    /// digests.
+    pub fn from_kind(kind: FaultKind, site: FaultSite, rank: usize) -> AlstError {
+        match kind {
+            FaultKind::Transient => AlstError::Transient { site, rank, attempt: 0 },
+            FaultKind::LostRank => AlstError::LostRank { site, rank },
+            FaultKind::CorruptPayload => {
+                AlstError::CorruptPayload { site, rank, expect: 0, got: 0 }
+            }
+        }
+    }
+
+    /// Retry-with-backoff absorbs these; everything else unwinds the step.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, AlstError::Transient { .. } | AlstError::CorruptPayload { .. })
+    }
+
+    /// The rank the failure is attributed to.
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            AlstError::Transient { rank, .. }
+            | AlstError::LostRank { rank, .. }
+            | AlstError::CorruptPayload { rank, .. }
+            | AlstError::RankPanic { rank, .. } => Some(*rank),
+            AlstError::WorkerDead { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for AlstError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlstError::Transient { site, rank, attempt } => write!(
+                f,
+                "transient fault at {} (rank {rank}, attempt {attempt})",
+                site.as_str()
+            ),
+            AlstError::LostRank { site, rank } => {
+                write!(f, "rank {rank} lost at {}", site.as_str())
+            }
+            AlstError::CorruptPayload { site, rank, expect, got } => write!(
+                f,
+                "payload checksum mismatch at {} (rank {rank}): expect {expect:#018x}, got {got:#018x}",
+                site.as_str()
+            ),
+            AlstError::RankPanic { rank, msg } => {
+                write!(f, "rank {rank} panicked: {msg}")
+            }
+            AlstError::WorkerDead { stream } => {
+                write!(f, "{stream} stream worker is gone")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AlstError {}
+
+/// Exponential backoff schedule for retryable faults. The simulated wire
+/// uses sub-millisecond delays so chaos tests stay fast; a real transport
+/// would scale `base` up, not change the shape.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base: Duration,
+    pub multiplier: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 4, base: Duration::from_micros(200), multiplier: 2 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): `base * mult^attempt`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        self.base * self.multiplier.saturating_pow(attempt)
+    }
+}
+
+/// Point-in-time view of the injector's event counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults actually fired (0 or 1 per one-shot plan).
+    pub injected: u64,
+    /// Retry attempts taken after retryable faults.
+    pub retries: u64,
+    /// Snapshot restores performed by a supervisor.
+    pub recoveries: u64,
+}
+
+/// One deterministic fault: fire `kind` at the `at_op`-th operation of
+/// `site`'s class. For the per-rank sites (`OffloadCopy`, `StageExec`) the
+/// index counts only `rank`'s operations, so the trigger point is
+/// deterministic under threaded ranks; collectives are group-wide and
+/// totally ordered, so their global index suffices (`rank` then names the
+/// rank the failure is attributed to).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub rank: usize,
+    /// Zero-based operation index at which the fault fires (one-shot).
+    pub at_op: u64,
+    /// Seeds the corrupted-bit choice for `CorruptPayload`.
+    pub seed: u64,
+}
+
+/// The deterministic chaos source, shared (`Arc`) by the collectives
+/// group, the offload engine, and the execution engine. One-shot: after
+/// the planned fault fires, every later check passes — which is exactly
+/// what makes the retry deterministic.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    armed: AtomicBool,
+    fired: AtomicBool,
+    /// Op counters per (site, rank-key); Collective uses key 0.
+    counters: Mutex<HashMap<(FaultSite, usize), u64>>,
+    injected: AtomicU64,
+    retries: AtomicU64,
+    recoveries: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            plan,
+            armed: AtomicBool::new(true),
+            fired: AtomicBool::new(false),
+            counters: Mutex::new(HashMap::new()),
+            injected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+        })
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Count one operation of `site`'s class and decide whether the
+    /// planned fault fires here. `rank` is required for the per-rank
+    /// sites; `None` is the group-wide collective path.
+    pub fn check(&self, site: FaultSite, rank: Option<usize>) -> Option<FaultKind> {
+        let key_rank = match site {
+            FaultSite::Collective => 0,
+            _ => rank.unwrap_or(0),
+        };
+        let idx = {
+            let mut c = lock_clean(&self.counters);
+            let seen = c.entry((site, key_rank)).or_insert(0);
+            let idx = *seen;
+            *seen += 1;
+            idx
+        };
+        if site != self.plan.site
+            || (site != FaultSite::Collective && rank != Some(self.plan.rank))
+            || idx != self.plan.at_op
+            || !self.armed.load(Ordering::SeqCst)
+        {
+            return None;
+        }
+        if self.fired.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        self.injected.fetch_add(1, Ordering::SeqCst);
+        Some(self.plan.kind)
+    }
+
+    /// Stop injecting (supervisors disarm before replaying recovered
+    /// steps; the one-shot `fired` latch already guarantees this, the
+    /// disarm makes it explicit).
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn note_recovery(&self) {
+        self.recoveries.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.injected.load(Ordering::SeqCst),
+            retries: self.retries.load(Ordering::SeqCst),
+            recoveries: self.recoveries.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Re-arm and zero the counters (fresh run on the same plan).
+    pub fn reset(&self) {
+        lock_clean(&self.counters).clear();
+        self.fired.store(false, Ordering::SeqCst);
+        self.armed.store(true, Ordering::SeqCst);
+        self.injected.store(0, Ordering::SeqCst);
+        self.retries.store(0, Ordering::SeqCst);
+        self.recoveries.store(0, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-transfer checksums
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Continue an FNV-1a digest over one f32 slice's little-endian bytes.
+pub fn checksum_chain(mut h: u64, xs: &[f32]) -> u64 {
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// FNV-1a digest of one f32 payload — the per-transfer integrity check
+/// a `CorruptPayload` fault must be caught by. Bit-exact: distinguishes
+/// `-0.0` from `+0.0` and every NaN payload.
+pub fn checksum_f32s(xs: &[f32]) -> u64 {
+    checksum_chain(FNV_OFFSET, xs)
+}
+
+/// Digest of a host tensor's payload (either dtype).
+pub fn checksum_tensor(t: &HostTensor) -> u64 {
+    match t.as_f32() {
+        Ok(xs) => checksum_f32s(xs),
+        Err(_) => {
+            let mut h = FNV_OFFSET;
+            if let Ok(xs) = t.as_i32() {
+                for x in xs {
+                    for b in x.to_le_bytes() {
+                        h ^= b as u64;
+                        h = h.wrapping_mul(FNV_PRIME);
+                    }
+                }
+            }
+            h
+        }
+    }
+}
+
+/// Simulated in-flight corruption: flip the low bit of one seeded element.
+/// Guaranteed to change the payload's bit pattern (and so its checksum).
+pub fn corrupt_f32s(xs: &mut [f32], seed: u64) {
+    if xs.is_empty() {
+        return;
+    }
+    let i = (seed as usize) % xs.len();
+    xs[i] = f32::from_bits(xs[i].to_bits() ^ 1);
+}
+
+// ---------------------------------------------------------------------------
+// Shared retry gate for the per-rank sites
+// ---------------------------------------------------------------------------
+
+/// Record one retry on the `Fault` trace lane and sleep out the backoff.
+pub fn retry_pause(
+    tracer: &Tracer,
+    injector: &FaultInjector,
+    retry: &RetryPolicy,
+    rank: Option<usize>,
+    attempt: u32,
+) {
+    injector.note_retry();
+    let backoff = retry.backoff(attempt);
+    {
+        let mut sp = tracer.span(Category::Fault, "retry_backoff");
+        if let Some(r) = rank.or(Some(injector.plan().rank)) {
+            sp.set_rank(r);
+        }
+        sp.set_dur(backoff);
+    }
+    std::thread::sleep(backoff);
+}
+
+/// Gate one operation of a per-rank site (`StageExec` / `OffloadCopy`)
+/// on the injector, absorbing retryable faults with backoff. Returns the
+/// typed error for non-retryable faults. Used by `Engine::execute_buffers`
+/// and the chaos harness's rank closures; the offload copy streams inline
+/// the same logic around their real corrupt-then-verify copies.
+pub fn site_gate(
+    injector: &Option<Arc<FaultInjector>>,
+    site: FaultSite,
+    rank: usize,
+    retry: &RetryPolicy,
+    tracer: &Tracer,
+) -> Result<(), AlstError> {
+    let Some(inj) = injector else { return Ok(()) };
+    let mut attempt = 0u32;
+    loop {
+        match inj.check(site, Some(rank)) {
+            None => return Ok(()),
+            Some(FaultKind::LostRank) => {
+                return Err(AlstError::LostRank { site, rank });
+            }
+            Some(kind) => {
+                if attempt >= retry.max_retries {
+                    return Err(AlstError::from_kind(kind, site, rank));
+                }
+                retry_pause(tracer, inj, retry, Some(rank), attempt);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(site: FaultSite, kind: FaultKind, rank: usize, at_op: u64) -> FaultPlan {
+        FaultPlan { site, kind, rank, at_op, seed: 7 }
+    }
+
+    #[test]
+    fn checksum_is_bit_exact_and_corruption_is_caught() {
+        let a = vec![1.0f32, -0.0, f32::NAN, 3.5];
+        let b = vec![1.0f32, 0.0, f32::NAN, 3.5];
+        assert_ne!(checksum_f32s(&a), checksum_f32s(&b), "-0.0 != +0.0 bitwise");
+        assert_eq!(checksum_f32s(&a), checksum_f32s(&a.clone()));
+        let mut c = a.clone();
+        corrupt_f32s(&mut c, 123);
+        assert_ne!(checksum_f32s(&a), checksum_f32s(&c), "one flipped bit changes the digest");
+        // exactly one element differs, by exactly one bit
+        let diffs: Vec<u32> = a
+            .iter()
+            .zip(&c)
+            .map(|(x, y)| (x.to_bits() ^ y.to_bits()).count_ones())
+            .collect();
+        assert_eq!(diffs.iter().sum::<u32>(), 1);
+        // chaining over slices equals the digest of the concatenation
+        let h = checksum_chain(checksum_chain(FNV_OFFSET, &a[..2]), &a[2..]);
+        assert_eq!(h, checksum_f32s(&a));
+    }
+
+    #[test]
+    fn corrupt_empty_is_noop() {
+        let mut e: Vec<f32> = Vec::new();
+        corrupt_f32s(&mut e, 5);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn injector_fires_once_at_the_planned_index() {
+        let inj = FaultInjector::new(plan(FaultSite::Collective, FaultKind::Transient, 1, 2));
+        assert_eq!(inj.check(FaultSite::Collective, None), None); // op 0
+        assert_eq!(inj.check(FaultSite::StageExec, Some(1)), None); // other site
+        assert_eq!(inj.check(FaultSite::Collective, None), None); // op 1
+        assert_eq!(inj.check(FaultSite::Collective, None), Some(FaultKind::Transient)); // op 2
+        assert_eq!(inj.check(FaultSite::Collective, None), None, "one-shot");
+        assert!(inj.fired());
+        assert_eq!(inj.stats().injected, 1);
+        inj.reset();
+        assert!(!inj.fired());
+        assert_eq!(inj.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn per_rank_sites_count_each_rank_independently() {
+        let inj = FaultInjector::new(plan(FaultSite::StageExec, FaultKind::LostRank, 1, 1));
+        // rank 0's ops never trigger a rank-1 plan, and don't advance
+        // rank 1's counter
+        assert_eq!(inj.check(FaultSite::StageExec, Some(0)), None);
+        assert_eq!(inj.check(FaultSite::StageExec, Some(0)), None);
+        assert_eq!(inj.check(FaultSite::StageExec, Some(1)), None); // rank1 op 0
+        assert_eq!(
+            inj.check(FaultSite::StageExec, Some(1)),
+            Some(FaultKind::LostRank) // rank1 op 1
+        );
+    }
+
+    #[test]
+    fn disarm_suppresses_injection() {
+        let inj = FaultInjector::new(plan(FaultSite::Collective, FaultKind::LostRank, 0, 0));
+        inj.disarm();
+        assert_eq!(inj.check(FaultSite::Collective, None), None);
+        assert!(!inj.fired());
+    }
+
+    #[test]
+    fn error_taxonomy_classifies_retryability() {
+        let t = AlstError::Transient { site: FaultSite::Collective, rank: 2, attempt: 1 };
+        let c = AlstError::CorruptPayload {
+            site: FaultSite::OffloadCopy,
+            rank: 0,
+            expect: 1,
+            got: 2,
+        };
+        let l = AlstError::LostRank { site: FaultSite::StageExec, rank: 3 };
+        let p = AlstError::RankPanic { rank: 1, msg: "boom".into() };
+        assert!(t.is_retryable() && c.is_retryable());
+        assert!(!l.is_retryable() && !p.is_retryable());
+        assert_eq!(l.rank(), Some(3));
+        // Display carries the site and rank; anyhow round-trips the type.
+        let any: anyhow::Error = l.clone().into();
+        assert_eq!(any.downcast_ref::<AlstError>(), Some(&l));
+        assert!(any.to_string().contains("rank 3 lost at stage_exec"));
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_exponential() {
+        let r = RetryPolicy { max_retries: 3, base: Duration::from_micros(100), multiplier: 2 };
+        assert_eq!(r.backoff(0), Duration::from_micros(100));
+        assert_eq!(r.backoff(1), Duration::from_micros(200));
+        assert_eq!(r.backoff(3), Duration::from_micros(800));
+    }
+
+    #[test]
+    fn site_gate_absorbs_transients_and_surfaces_lost_rank() {
+        let retry = RetryPolicy { base: Duration::from_micros(10), ..Default::default() };
+        let tracer = Tracer::off();
+
+        let inj = Some(FaultInjector::new(plan(
+            FaultSite::StageExec,
+            FaultKind::Transient,
+            0,
+            0,
+        )));
+        site_gate(&inj, FaultSite::StageExec, 0, &retry, &tracer).unwrap();
+        let stats = inj.as_ref().unwrap().stats();
+        assert_eq!((stats.injected, stats.retries), (1, 1));
+
+        let inj = Some(FaultInjector::new(plan(
+            FaultSite::StageExec,
+            FaultKind::LostRank,
+            0,
+            0,
+        )));
+        let err = site_gate(&inj, FaultSite::StageExec, 0, &retry, &tracer).unwrap_err();
+        assert_eq!(err, AlstError::LostRank { site: FaultSite::StageExec, rank: 0 });
+        assert!(!err.is_retryable());
+
+        // no injector: free pass
+        site_gate(&None, FaultSite::StageExec, 0, &retry, &tracer).unwrap();
+    }
+
+    #[test]
+    fn lock_clean_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex is poisoned");
+        let mut g = lock_clean(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+}

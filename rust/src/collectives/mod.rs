@@ -15,12 +15,32 @@
 //! sequence throughput). The ledger sits behind a `Mutex` so a `Group`
 //! can be shared with the scoped rank threads; each op is one commutative
 //! integer update, so the totals are deterministic under any
-//! interleaving.
+//! interleaving, and access is poison-recovering ([`faults::lock_clean`])
+//! so one rank's panic cannot cascade through the others' ledger calls.
+//!
+//! Fault semantics (DESIGN.md §Fault model & recovery): every op is
+//! fallible. With no [`faults::FaultInjector`] installed the ops cannot
+//! fail (beyond their existing shape `assert!`s) and cost one extra
+//! branch. With an injector armed, the planned operation runs the
+//! wire-failure protocol: a `Transient` fault aborts the attempt before
+//! data moves; a `CorruptPayload` fault *really* flips a bit in the
+//! computed output, which the sender-side checksum / receiver-side verify
+//! pair must catch. Both are retried in place with exponential backoff. A
+//! `LostRank` fault escapes as a typed [`faults::AlstError`] for the
+//! resilient supervisor. Failed attempts ledger nothing and emit no
+//! `Collective` span (only a `Fault`-lane retry span), so the pinned
+//! span==ledger pairing survives chaos runs bit-exactly.
+
+pub mod faults;
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
+
+pub use faults::{AlstError, FaultInjector, FaultKind, FaultPlan, FaultSite, RetryPolicy};
+
+use faults::{checksum_chain, checksum_f32s, corrupt_f32s, lock_clean};
 
 use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::{HostTensor, ScratchArena};
@@ -59,12 +79,22 @@ pub struct Group {
     /// `Collective` span carrying the same byte count, so the span byte
     /// sum equals `CommStats::total_bytes()` under tracing.
     tracer: Arc<Tracer>,
+    /// Chaos source; `None` (the default) means ops cannot fault and
+    /// checksums are never computed.
+    injector: Option<Arc<FaultInjector>>,
+    retry: RetryPolicy,
 }
 
 impl Group {
     pub fn new(world: usize) -> Group {
         assert!(world >= 1);
-        Group { world, stats: Mutex::default(), tracer: Tracer::off() }
+        Group {
+            world,
+            stats: Mutex::default(),
+            tracer: Tracer::off(),
+            injector: None,
+            retry: RetryPolicy::default(),
+        }
     }
 
     pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
@@ -77,42 +107,168 @@ impl Group {
         &self.tracer
     }
 
+    /// Arm deterministic fault injection on this group's collectives.
+    pub fn set_injector(&mut self, injector: Arc<FaultInjector>) {
+        self.injector = Some(injector);
+    }
+
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
     pub fn stats(&self) -> CommStats {
-        self.stats.lock().unwrap().clone()
+        lock_clean(&self.stats).clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = CommStats::default();
+        *lock_clean(&self.stats) = CommStats::default();
+    }
+
+    // -- fault plumbing ---------------------------------------------------
+
+    /// Drive one collective through the retry loop: each attempt sees
+    /// whether the injector fired at this op index; retryable failures
+    /// (transient, checksum mismatch) back off exponentially on the
+    /// `Fault` lane and re-run; everything else propagates typed.
+    fn with_faults<T>(&self, mut attempt: impl FnMut(Option<FaultKind>) -> Result<T>) -> Result<T> {
+        let Some(inj) = &self.injector else {
+            return attempt(None);
+        };
+        let mut tries = 0u32;
+        loop {
+            let kind = inj.check(FaultSite::Collective, None);
+            match attempt(kind) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let retryable = e
+                        .downcast_ref::<AlstError>()
+                        .is_some_and(AlstError::is_retryable);
+                    if !retryable || tries >= self.retry.max_retries {
+                        return Err(e);
+                    }
+                    faults::retry_pause(&self.tracer, inj, &self.retry, None, tries);
+                    tries += 1;
+                }
+            }
+        }
+    }
+
+    fn fault_rank(&self) -> usize {
+        self.injector.as_ref().map_or(0, |i| i.plan().rank)
+    }
+
+    fn fault_seed(&self) -> u64 {
+        self.injector.as_ref().map_or(0, |i| i.plan().seed)
+    }
+
+    /// Faults that strike *before* any data moves. `CorruptPayload` is
+    /// not one of them — it damages the payload post-compute and is
+    /// handled by the checksum verify.
+    fn gate(&self, fault: Option<FaultKind>) -> Result<(), AlstError> {
+        match fault {
+            Some(FaultKind::Transient) => Err(AlstError::Transient {
+                site: FaultSite::Collective,
+                rank: self.fault_rank(),
+                attempt: 0,
+            }),
+            Some(FaultKind::LostRank) => {
+                Err(AlstError::LostRank { site: FaultSite::Collective, rank: self.fault_rank() })
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Sender-checksum → seeded wire corruption → receiver-verify over one
+    /// payload. Only runs when this attempt's fault is `CorruptPayload`;
+    /// an unfaulted op never pays for a digest.
+    fn verify_payload(&self, fault: Option<FaultKind>, payload: &mut [f32]) -> Result<(), AlstError> {
+        if fault != Some(FaultKind::CorruptPayload) {
+            return Ok(());
+        }
+        let expect = checksum_f32s(payload);
+        corrupt_f32s(payload, self.fault_seed());
+        let got = checksum_f32s(payload);
+        if got == expect {
+            return Ok(()); // empty payload: nothing to corrupt
+        }
+        Err(AlstError::CorruptPayload {
+            site: FaultSite::Collective,
+            rank: self.fault_rank(),
+            expect,
+            got,
+        })
+    }
+
+    /// `verify_payload` for multi-buffer outputs: one digest chains over
+    /// all buffers; corruption lands in the faulted rank's buffer.
+    fn verify_payloads(&self, fault: Option<FaultKind>, outs: &mut [Vec<f32>]) -> Result<(), AlstError> {
+        if fault != Some(FaultKind::CorruptPayload) {
+            return Ok(());
+        }
+        let digest =
+            |bufs: &[Vec<f32>]| bufs.iter().fold(checksum_f32s(&[]), |h, b| checksum_chain(h, b));
+        let expect = digest(outs);
+        let n = outs.len();
+        if let Some(target) = (0..n)
+            .map(|i| (self.fault_rank() + i) % n)
+            .find(|&i| !outs[i].is_empty())
+        {
+            corrupt_f32s(&mut outs[target], self.fault_seed());
+        }
+        let got = digest(outs);
+        if got == expect {
+            return Ok(());
+        }
+        Err(AlstError::CorruptPayload {
+            site: FaultSite::Collective,
+            rank: self.fault_rank(),
+            expect,
+            got,
+        })
+    }
+
+    /// Recycle a failed attempt's pooled output buffers (empty payloads
+    /// never came from the pool and stay out of it).
+    fn recycle_failed(arena: &ScratchArena, outs: Vec<Vec<f32>>) {
+        for buf in outs {
+            if !buf.is_empty() {
+                arena.recycle_f32(buf);
+            }
+        }
     }
 
     // -- silent ledger (no spans; the public surface pairs each increment
     //    with exactly one Collective span) --------------------------------
     fn ledger_gather(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.all_gather_bytes += bytes;
         st.ops += 1;
     }
 
     fn ledger_reduce_scatter(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.reduce_scatter_bytes += bytes;
         st.ops += 1;
     }
 
     fn ledger_all_to_all(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.all_to_all_bytes += bytes;
         st.ops += 1;
     }
 
     fn ledger_all_reduce(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.all_reduce_bytes += bytes;
         st.ops += 1;
     }
 
     fn ledger_send_recv(&self, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.send_recv_bytes += bytes;
         st.ops += 1;
     }
@@ -122,41 +278,56 @@ impl Group {
     /// volume per rank: (world-1)/world * total (ring), accounted as the
     /// full gathered size for simplicity on the ledger, matching NCCL's
     /// algbw convention.
-    pub fn all_gather(&self, shards: &[&[f32]]) -> Vec<f32> {
-        let mut span = self.tracer.span(Category::Collective, "all_gather");
+    pub fn all_gather(&self, shards: &[&[f32]]) -> Result<Vec<f32>> {
         assert_eq!(shards.len(), self.world);
         let total: usize = shards.iter().map(|s| s.len()).sum();
-        let mut out = Vec::with_capacity(total);
-        for s in shards {
-            out.extend_from_slice(s);
-        }
-        self.ledger_gather((total * 4) as u64);
-        span.set_bytes((total * 4) as u64);
-        out
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "all_gather");
+            let mut out = Vec::with_capacity(total);
+            for s in shards {
+                out.extend_from_slice(s);
+            }
+            if let Err(e) = self.verify_payload(fault, &mut out) {
+                span.cancel();
+                return Err(e.into());
+            }
+            self.ledger_gather((total * 4) as u64);
+            span.set_bytes((total * 4) as u64);
+            Ok(out)
+        })
     }
 
     /// `all_gather` into an arena-recycled buffer (allocation-free at
     /// steady state; caller recycles the result when done).
-    pub fn all_gather_into(&self, shards: &[&[f32]], arena: &ScratchArena) -> Vec<f32> {
-        let mut span = self.tracer.span(Category::Collective, "all_gather");
+    pub fn all_gather_into(&self, shards: &[&[f32]], arena: &ScratchArena) -> Result<Vec<f32>> {
         assert_eq!(shards.len(), self.world);
         let total: usize = shards.iter().map(|s| s.len()).sum();
-        let mut out = arena.take_f32(total);
-        let mut off = 0;
-        for s in shards {
-            out[off..off + s.len()].copy_from_slice(s);
-            off += s.len();
-        }
-        self.ledger_gather((total * 4) as u64);
-        span.set_bytes((total * 4) as u64);
-        out
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "all_gather");
+            let mut out = arena.take_f32(total);
+            let mut off = 0;
+            for s in shards {
+                out[off..off + s.len()].copy_from_slice(s);
+                off += s.len();
+            }
+            if let Err(e) = self.verify_payload(fault, &mut out) {
+                span.cancel();
+                arena.recycle_f32(out);
+                return Err(e.into());
+            }
+            self.ledger_gather((total * 4) as u64);
+            span.set_bytes((total * 4) as u64);
+            Ok(out)
+        })
     }
 
     /// Reduce-scatter (sum): input is one full-length gradient per rank;
     /// output is rank r's reduced shard. Shard boundaries are equal
     /// `total/world` splits (caller pads to divisibility). Accumulation
     /// is in place: rank 0's slice seeds the output, the rest add.
-    pub fn reduce_scatter(&self, fulls: &[&[f32]]) -> Vec<Vec<f32>> {
+    pub fn reduce_scatter(&self, fulls: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let arena = ScratchArena::new(); // one-shot: plain allocations
         self.reduce_scatter_into(fulls, &arena)
     }
@@ -166,28 +337,36 @@ impl Group {
         &self,
         fulls: &[&[f32]],
         arena: &ScratchArena,
-    ) -> Vec<Vec<f32>> {
-        let mut span = self.tracer.span(Category::Collective, "reduce_scatter");
+    ) -> Result<Vec<Vec<f32>>> {
         assert_eq!(fulls.len(), self.world);
         let total = fulls[0].len();
         assert!(fulls.iter().all(|f| f.len() == total), "ragged reduce-scatter");
         assert_eq!(total % self.world, 0, "reduce-scatter needs padded input");
         let shard = total / self.world;
-        let mut out = Vec::with_capacity(self.world);
-        for r in 0..self.world {
-            let base = r * shard;
-            let mut dst = arena.take_f32(shard);
-            dst.copy_from_slice(&fulls[0][base..base + shard]);
-            for f in &fulls[1..] {
-                for (d, s) in dst.iter_mut().zip(&f[base..base + shard]) {
-                    *d += s;
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "reduce_scatter");
+            let mut out = Vec::with_capacity(self.world);
+            for r in 0..self.world {
+                let base = r * shard;
+                let mut dst = arena.take_f32(shard);
+                dst.copy_from_slice(&fulls[0][base..base + shard]);
+                for f in &fulls[1..] {
+                    for (d, s) in dst.iter_mut().zip(&f[base..base + shard]) {
+                        *d += s;
+                    }
                 }
+                out.push(dst);
             }
-            out.push(dst);
-        }
-        self.ledger_reduce_scatter((total * 4) as u64);
-        span.set_bytes((total * 4) as u64);
-        out
+            if let Err(e) = self.verify_payloads(fault, &mut out) {
+                span.cancel();
+                Group::recycle_failed(arena, out);
+                return Err(e.into());
+            }
+            self.ledger_reduce_scatter((total * 4) as u64);
+            span.set_bytes((total * 4) as u64);
+            Ok(out)
+        })
     }
 
     /// All-to-all of equal blocks: `sends[r]` holds `world` contiguous
@@ -195,24 +374,32 @@ impl Group {
     /// `sends[r]`'s block `d` (NCCL `ncclAllToAll` semantics). The
     /// head/seq-aware relayout lives in `coordinator::ulysses`; this is
     /// the generic primitive. Outputs come from the arena.
-    pub fn all_to_all(&self, sends: &[&[f32]], arena: &ScratchArena) -> Vec<Vec<f32>> {
-        let mut span = self.tracer.span(Category::Collective, "all_to_all");
+    pub fn all_to_all(&self, sends: &[&[f32]], arena: &ScratchArena) -> Result<Vec<Vec<f32>>> {
         assert_eq!(sends.len(), self.world);
         let per_rank = sends[0].len();
         assert!(sends.iter().all(|s| s.len() == per_rank), "ragged all-to-all");
         assert_eq!(per_rank % self.world, 0, "all-to-all needs equal blocks");
         let blk = per_rank / self.world;
-        let mut out = Vec::with_capacity(self.world);
-        for d in 0..self.world {
-            let mut dst = arena.take_f32(per_rank);
-            for (r, s) in sends.iter().enumerate() {
-                dst[r * blk..(r + 1) * blk].copy_from_slice(&s[d * blk..(d + 1) * blk]);
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "all_to_all");
+            let mut out = Vec::with_capacity(self.world);
+            for d in 0..self.world {
+                let mut dst = arena.take_f32(per_rank);
+                for (r, s) in sends.iter().enumerate() {
+                    dst[r * blk..(r + 1) * blk].copy_from_slice(&s[d * blk..(d + 1) * blk]);
+                }
+                out.push(dst);
             }
-            out.push(dst);
-        }
-        self.ledger_all_to_all((self.world * per_rank * 4) as u64);
-        span.set_bytes((self.world * per_rank * 4) as u64);
-        out
+            if let Err(e) = self.verify_payloads(fault, &mut out) {
+                span.cancel();
+                Group::recycle_failed(arena, out);
+                return Err(e.into());
+            }
+            self.ledger_all_to_all((self.world * per_rank * 4) as u64);
+            span.set_bytes((self.world * per_rank * 4) as u64);
+            Ok(out)
+        })
     }
 
     /// Ring neighbor exchange: rank r's buffer is delivered to rank
@@ -222,7 +409,7 @@ impl Group {
     /// where fully-masked KV blocks stop travelling) sends `&[]` and its
     /// neighbor receives an empty buffer at zero wire cost. Ledger volume
     /// is the sum of payload bytes actually moved.
-    pub fn send_recv(&self, sends: &[&[f32]], shift: usize) -> Vec<Vec<f32>> {
+    pub fn send_recv(&self, sends: &[&[f32]], shift: usize) -> Result<Vec<Vec<f32>>> {
         let arena = ScratchArena::new(); // one-shot: plain allocations
         self.send_recv_into(sends, shift, &arena)
     }
@@ -234,8 +421,7 @@ impl Group {
         sends: &[&[f32]],
         shift: usize,
         arena: &ScratchArena,
-    ) -> Vec<Vec<f32>> {
-        let mut span = self.tracer.span(Category::Collective, "send_recv");
+    ) -> Result<Vec<Vec<f32>>> {
         assert_eq!(sends.len(), self.world);
         assert!(
             shift % self.world != 0,
@@ -244,33 +430,50 @@ impl Group {
             self.world
         );
         let shift = shift % self.world;
-        let mut bytes = 0usize;
-        let mut out = Vec::with_capacity(self.world);
-        for dst in 0..self.world {
-            let src = sends[(dst + self.world - shift) % self.world];
-            if src.is_empty() {
-                out.push(Vec::new());
-                continue;
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "send_recv");
+            let mut bytes = 0usize;
+            let mut out = Vec::with_capacity(self.world);
+            for dst in 0..self.world {
+                let src = sends[(dst + self.world - shift) % self.world];
+                if src.is_empty() {
+                    out.push(Vec::new());
+                    continue;
+                }
+                let mut buf = arena.take_f32(src.len());
+                buf.copy_from_slice(src);
+                bytes += src.len() * 4;
+                out.push(buf);
             }
-            let mut buf = arena.take_f32(src.len());
-            buf.copy_from_slice(src);
-            bytes += src.len() * 4;
-            out.push(buf);
-        }
-        self.ledger_send_recv(bytes as u64);
-        span.set_bytes(bytes as u64);
-        out
+            if let Err(e) = self.verify_payloads(fault, &mut out) {
+                span.cancel();
+                Group::recycle_failed(arena, out);
+                return Err(e.into());
+            }
+            self.ledger_send_recv(bytes as u64);
+            span.set_bytes(bytes as u64);
+            Ok(out)
+        })
     }
 
     /// All-reduce (sum) of scalars — loss_sum/token-count reduction. The
     /// paper specifically replaced `all_reduce_object` with plain
     /// all_reduce to save >3 GiB/GPU (§3.3); we only ever move the scalars.
-    pub fn all_reduce_scalars(&self, vals: &[f32]) -> f32 {
-        let mut span = self.tracer.span(Category::Collective, "all_reduce_scalars");
+    pub fn all_reduce_scalars(&self, vals: &[f32]) -> Result<f32> {
         assert_eq!(vals.len(), self.world);
-        self.ledger_all_reduce((vals.len() * 4) as u64);
-        span.set_bytes((vals.len() * 4) as u64);
-        vals.iter().sum()
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "all_reduce_scalars");
+            let mut sum = [vals.iter().sum::<f32>()];
+            if let Err(e) = self.verify_payload(fault, &mut sum) {
+                span.cancel();
+                return Err(e.into());
+            }
+            self.ledger_all_reduce((vals.len() * 4) as u64);
+            span.set_bytes((vals.len() * 4) as u64);
+            Ok(sum[0])
+        })
     }
 
     /// All-reduce (sum) of one tensor per rank: returns the summed tensor
@@ -287,23 +490,49 @@ impl Group {
         tensors: &[&HostTensor],
         arena: &ScratchArena,
     ) -> Result<HostTensor> {
-        let mut span = self.tracer.span(Category::Collective, "all_reduce_sum");
         assert_eq!(tensors.len(), self.world);
         let shape = tensors[0].shape().to_vec();
-        let first = tensors[0].as_f32()?;
-        let mut acc = arena.take_f32(first.len());
-        acc.copy_from_slice(first);
-        for t in &tensors[1..] {
-            anyhow::ensure!(t.shape() == shape.as_slice(), "shape mismatch in add");
-            for (d, s) in acc.iter_mut().zip(t.as_f32()?) {
-                *d += s;
+        self.with_faults(|fault| {
+            self.gate(fault)?;
+            let mut span = self.tracer.span(Category::Collective, "all_reduce_sum");
+            let first = match tensors[0].as_f32() {
+                Ok(f) => f,
+                Err(e) => {
+                    span.cancel();
+                    return Err(e);
+                }
+            };
+            let mut acc = arena.take_f32(first.len());
+            acc.copy_from_slice(first);
+            for t in &tensors[1..] {
+                let src = if t.shape() != shape.as_slice() {
+                    Err(anyhow::anyhow!("shape mismatch in add"))
+                } else {
+                    t.as_f32()
+                };
+                let src = match src {
+                    Ok(s) => s,
+                    Err(e) => {
+                        span.cancel();
+                        arena.recycle_f32(acc);
+                        return Err(e);
+                    }
+                };
+                for (d, s) in acc.iter_mut().zip(src) {
+                    *d += s;
+                }
             }
-        }
-        let out = HostTensor::f32(shape, acc);
-        // ring all-reduce moves 2*(w-1)/w * bytes; ledger the logical size
-        self.ledger_all_reduce(out.size_bytes() as u64);
-        span.set_bytes(out.size_bytes() as u64);
-        Ok(out)
+            if let Err(e) = self.verify_payload(fault, &mut acc) {
+                span.cancel();
+                arena.recycle_f32(acc);
+                return Err(e.into());
+            }
+            let out = HostTensor::f32(shape.clone(), acc);
+            // ring all-reduce moves 2*(w-1)/w * bytes; ledger the logical size
+            self.ledger_all_reduce(out.size_bytes() as u64);
+            span.set_bytes(out.size_bytes() as u64);
+            Ok(out)
+        })
     }
 
     /// Zero-duration instant span for an `account_*` ledger entry: the
@@ -318,32 +547,50 @@ impl Group {
         }
     }
 
+    /// One fault-gated ledger entry on behalf of a data-structure owner.
+    /// The payload lives in the caller, so every fault kind gates the
+    /// attempt up front (`CorruptPayload` models the receiver-side verify
+    /// failing); on success the increment and its instant span land once.
+    fn account_collective(
+        &self,
+        name: &'static str,
+        bytes: u64,
+        ledger: fn(&Group, u64),
+    ) -> Result<()> {
+        self.with_faults(|fault| {
+            if let Some(kind) = fault {
+                return Err(
+                    AlstError::from_kind(kind, FaultSite::Collective, self.fault_rank()).into()
+                );
+            }
+            self.account_span(name, bytes);
+            ledger(self, bytes);
+            Ok(())
+        })
+    }
+
     /// Record an all-to-all's traffic (the relayout itself is done by
     /// `coordinator::ulysses`, which owns the head/seq math).
-    pub fn account_all_to_all(&self, bytes: u64) {
-        self.account_span("all_to_all", bytes);
-        self.ledger_all_to_all(bytes);
+    pub fn account_all_to_all(&self, bytes: u64) -> Result<()> {
+        self.account_collective("all_to_all", bytes, Group::ledger_all_to_all)
     }
 
     /// Ledger an all-gather performed by a data-structure owner (e.g. the
     /// ZeRO store's just-in-time parameter gather).
-    pub fn account_gather(&self, bytes: u64) {
-        self.account_span("all_gather", bytes);
-        self.ledger_gather(bytes);
+    pub fn account_gather(&self, bytes: u64) -> Result<()> {
+        self.account_collective("all_gather", bytes, Group::ledger_gather)
     }
 
     /// Ledger a reduce-scatter performed by a data-structure owner.
-    pub fn account_reduce_scatter(&self, bytes: u64) {
-        self.account_span("reduce_scatter", bytes);
-        self.ledger_reduce_scatter(bytes);
+    pub fn account_reduce_scatter(&self, bytes: u64) -> Result<()> {
+        self.account_collective("reduce_scatter", bytes, Group::ledger_reduce_scatter)
     }
 
     /// Ledger a point-to-point exchange performed by a data-structure
     /// owner (e.g. the ring plan homing completed dKV block partials to
     /// their owner rank without a full rotation).
-    pub fn account_send_recv(&self, bytes: u64) {
-        self.account_span("send_recv", bytes);
-        self.ledger_send_recv(bytes);
+    pub fn account_send_recv(&self, bytes: u64) -> Result<()> {
+        self.account_collective("send_recv", bytes, Group::ledger_send_recv)
     }
 }
 
@@ -351,10 +598,27 @@ impl Group {
 mod tests {
     use super::*;
 
+    fn faulted(world: usize, kind: FaultKind, at_op: u64) -> (Group, Arc<FaultInjector>) {
+        let mut g = Group::new(world);
+        let inj = FaultInjector::new(FaultPlan {
+            site: FaultSite::Collective,
+            kind,
+            rank: 1 % world,
+            at_op,
+            seed: 11,
+        });
+        g.set_injector(inj.clone());
+        g.set_retry_policy(RetryPolicy {
+            base: std::time::Duration::from_micros(10),
+            ..Default::default()
+        });
+        (g, inj)
+    }
+
     #[test]
     fn all_gather_concatenates_in_rank_order() {
         let g = Group::new(3);
-        let out = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let out = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(g.stats().all_gather_bytes, 24);
     }
@@ -363,10 +627,10 @@ mod tests {
     fn all_gather_into_reuses_pooled_buffers() {
         let g = Group::new(2);
         let arena = ScratchArena::new();
-        let out = g.all_gather_into(&[&[1.0, 2.0], &[3.0, 4.0]], &arena);
+        let out = g.all_gather_into(&[&[1.0, 2.0], &[3.0, 4.0]], &arena).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
         arena.recycle_f32(out);
-        let out2 = g.all_gather_into(&[&[5.0, 6.0], &[7.0, 8.0]], &arena);
+        let out2 = g.all_gather_into(&[&[5.0, 6.0], &[7.0, 8.0]], &arena).unwrap();
         assert_eq!(out2, vec![5.0, 6.0, 7.0, 8.0]);
         assert_eq!((arena.hits(), arena.misses()), (1, 1));
     }
@@ -376,7 +640,7 @@ mod tests {
         let g = Group::new(2);
         let a = vec![1.0f32, 2.0, 3.0, 4.0];
         let b = vec![10.0f32, 20.0, 30.0, 40.0];
-        let out = g.reduce_scatter(&[&a, &b]);
+        let out = g.reduce_scatter(&[&a, &b]).unwrap();
         assert_eq!(out[0], vec![11.0, 22.0]);
         assert_eq!(out[1], vec![33.0, 44.0]);
         assert_eq!(g.stats().reduce_scatter_bytes, 16);
@@ -386,8 +650,8 @@ mod tests {
     fn gather_then_scatter_identity() {
         // reduce_scatter(all_gather(x) replicated) == world * x shards
         let g = Group::new(2);
-        let full = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]);
-        let out = g.reduce_scatter(&[&full, &full]);
+        let full = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let out = g.reduce_scatter(&[&full, &full]).unwrap();
         assert_eq!(out[0], vec![2.0, 4.0]);
         assert_eq!(out[1], vec![6.0, 8.0]);
     }
@@ -397,7 +661,9 @@ mod tests {
         let g = Group::new(2);
         let arena = ScratchArena::new();
         // rank 0 sends [1,2 | 3,4]; rank 1 sends [5,6 | 7,8]
-        let out = g.all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena);
+        let out = g
+            .all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena)
+            .unwrap();
         assert_eq!(out[0], vec![1.0, 2.0, 5.0, 6.0]);
         assert_eq!(out[1], vec![3.0, 4.0, 7.0, 8.0]);
         assert_eq!(g.stats().all_to_all_bytes, 32);
@@ -405,7 +671,7 @@ mod tests {
         for v in out {
             arena.recycle_f32(v);
         }
-        let _ = g.all_to_all(&[&[0.0; 4], &[0.0; 4]], &arena);
+        let _ = g.all_to_all(&[&[0.0; 4], &[0.0; 4]], &arena).unwrap();
         assert_eq!(arena.misses(), 2);
         assert_eq!(arena.hits(), 2);
     }
@@ -413,7 +679,7 @@ mod tests {
     #[test]
     fn scalar_all_reduce() {
         let g = Group::new(4);
-        assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]), 10.0);
+        assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]).unwrap(), 10.0);
     }
 
     #[test]
@@ -437,17 +703,17 @@ mod tests {
         let tracer = Arc::new(Tracer::new(true));
         g.set_tracer(tracer.clone());
         let arena = ScratchArena::new();
-        let _ = g.all_gather(&[&[1.0], &[2.0]]);
-        let _ = g.all_to_all(&[&[1.0, 2.0], &[3.0, 4.0]], &arena);
-        let _ = g.reduce_scatter(&[&[1.0, 2.0], &[3.0, 4.0]]);
-        let _ = g.all_reduce_scalars(&[1.0, 2.0]);
+        let _ = g.all_gather(&[&[1.0], &[2.0]]).unwrap();
+        let _ = g.all_to_all(&[&[1.0, 2.0], &[3.0, 4.0]], &arena).unwrap();
+        let _ = g.reduce_scatter(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let _ = g.all_reduce_scalars(&[1.0, 2.0]).unwrap();
         let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
         let _ = g.all_reduce_sum(&[&a, &a]).unwrap();
-        let _ = g.send_recv(&[&[1.0, 2.0], &[3.0]], 1);
-        g.account_gather(100);
-        g.account_all_to_all(200);
-        g.account_reduce_scatter(300);
-        g.account_send_recv(400);
+        let _ = g.send_recv(&[&[1.0, 2.0], &[3.0]], 1).unwrap();
+        g.account_gather(100).unwrap();
+        g.account_all_to_all(200).unwrap();
+        g.account_reduce_scatter(300).unwrap();
+        g.account_send_recv(400).unwrap();
         let st = g.stats();
         let spans = tracer.drain();
         assert!(spans.iter().all(|s| s.cat == Category::Collective));
@@ -465,12 +731,12 @@ mod tests {
     fn send_recv_rotates_by_shift() {
         let g = Group::new(4);
         let bufs: [&[f32]; 4] = [&[0.0], &[1.0], &[2.0], &[3.0]];
-        let out = g.send_recv(&bufs, 1);
+        let out = g.send_recv(&bufs, 1).unwrap();
         // rank r receives rank (r-1)'s payload
         assert_eq!(out, vec![vec![3.0], vec![0.0], vec![1.0], vec![2.0]]);
         assert_eq!(g.stats().send_recv_bytes, 16);
         assert_eq!(g.stats().ops, 1);
-        let out2 = g.send_recv(&bufs, 3);
+        let out2 = g.send_recv(&bufs, 3).unwrap();
         assert_eq!(out2, vec![vec![1.0], vec![2.0], vec![3.0], vec![0.0]]);
     }
 
@@ -478,7 +744,7 @@ mod tests {
     fn send_recv_allows_ragged_and_empty_payloads() {
         let g = Group::new(3);
         let bufs: [&[f32]; 3] = [&[1.0, 2.0, 3.0], &[], &[4.0]];
-        let out = g.send_recv(&bufs, 1);
+        let out = g.send_recv(&bufs, 1).unwrap();
         assert_eq!(out[0], vec![4.0]);
         assert_eq!(out[1], vec![1.0, 2.0, 3.0]);
         assert!(out[2].is_empty());
@@ -491,13 +757,13 @@ mod tests {
     fn send_recv_into_reuses_pooled_buffers() {
         let g = Group::new(2);
         let arena = ScratchArena::new();
-        let out = g.send_recv_into(&[&[1.0, 2.0], &[3.0, 4.0]], 1, &arena);
+        let out = g.send_recv_into(&[&[1.0, 2.0], &[3.0, 4.0]], 1, &arena).unwrap();
         assert_eq!(out[0], vec![3.0, 4.0]);
         assert_eq!(out[1], vec![1.0, 2.0]);
         for v in out {
             arena.recycle_f32(v);
         }
-        let _ = g.send_recv_into(&[&[5.0, 6.0], &[7.0, 8.0]], 1, &arena);
+        let _ = g.send_recv_into(&[&[5.0, 6.0], &[7.0, 8.0]], 1, &arena).unwrap();
         assert_eq!((arena.hits(), arena.misses()), (2, 2));
     }
 
@@ -505,7 +771,7 @@ mod tests {
     #[should_panic(expected = "moves nothing")]
     fn send_recv_zero_shift_rejected() {
         let g = Group::new(2);
-        g.send_recv(&[&[1.0], &[2.0]], 2);
+        let _ = g.send_recv(&[&[1.0], &[2.0]], 2);
     }
 
     #[test]
@@ -514,6 +780,91 @@ mod tests {
         let g = Group::new(2);
         let a = vec![1.0f32; 4];
         let b = vec![1.0f32; 2];
-        g.reduce_scatter(&[&a, &b]);
+        let _ = g.reduce_scatter(&[&a, &b]);
+    }
+
+    // -- fault injection --------------------------------------------------
+
+    #[test]
+    fn transient_fault_is_absorbed_and_ledger_matches_unfaulted() {
+        use crate::obs::Tracer;
+        let (mut g, inj) = faulted(2, FaultKind::Transient, 1);
+        let tracer = Arc::new(Tracer::new(true));
+        g.set_tracer(tracer.clone());
+        let clean = Group::new(2);
+        for _ in 0..3 {
+            let a = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+            let b = clean.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+            assert_eq!(a, b, "retry reproduces the unfaulted payload");
+        }
+        assert_eq!(g.stats(), clean.stats(), "failed attempts ledger nothing");
+        let stats = inj.stats();
+        assert_eq!((stats.injected, stats.retries), (1, 1));
+        let spans = tracer.drain();
+        let collectives = spans.iter().filter(|s| s.cat == Category::Collective).count();
+        let faults: Vec<_> = spans.iter().filter(|s| s.cat == Category::Fault).collect();
+        assert_eq!(collectives as u64, g.stats().ops, "span==ledger pairing holds");
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].name, "retry_backoff");
+        assert!(faults[0].dur_ns > 0, "backoff time is real critical-path time");
+    }
+
+    #[test]
+    fn corrupt_payload_is_caught_by_checksum_and_retried() {
+        let (g, inj) = faulted(2, FaultKind::CorruptPayload, 0);
+        let arena = ScratchArena::new();
+        let clean = Group::new(2);
+        let ca = ScratchArena::new();
+        let out = g.all_gather_into(&[&[1.0, 2.0], &[3.0, 4.0]], &arena).unwrap();
+        let want = clean.all_gather_into(&[&[1.0, 2.0], &[3.0, 4.0]], &ca).unwrap();
+        assert_eq!(out, want, "corrupted attempt never escapes");
+        assert_eq!(inj.stats().retries, 1);
+        // the failed attempt's buffer went back to the pool: 1 miss, 1 hit
+        assert_eq!((arena.hits(), arena.misses()), (1, 1));
+        assert_eq!(g.stats().ops, 1, "only the clean attempt ledgers");
+    }
+
+    #[test]
+    fn corrupt_multi_buffer_outputs_are_verified_and_recycled() {
+        let (g, inj) = faulted(2, FaultKind::CorruptPayload, 0);
+        let arena = ScratchArena::new();
+        let out = g
+            .all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena)
+            .unwrap();
+        assert_eq!(out[0], vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(out[1], vec![3.0, 4.0, 7.0, 8.0]);
+        assert_eq!(inj.stats().retries, 1);
+        // first attempt took 2 buffers (misses) and recycled both; the
+        // retry took them back as hits
+        assert_eq!((arena.hits(), arena.misses()), (2, 2));
+    }
+
+    #[test]
+    fn lost_rank_escapes_typed_with_clean_ledger() {
+        let (g, inj) = faulted(4, FaultKind::LostRank, 0);
+        let err = g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]).unwrap_err();
+        match err.downcast_ref::<AlstError>() {
+            Some(AlstError::LostRank { site: FaultSite::Collective, rank: 1 }) => {}
+            other => panic!("expected typed LostRank, got {other:?}"),
+        }
+        assert_eq!(g.stats().ops, 0, "failed op ledgers nothing");
+        assert_eq!(inj.stats().retries, 0, "lost rank is not retried");
+        // the injector is one-shot: the group keeps working after recovery
+        assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]).unwrap(), 10.0);
+        assert_eq!(g.stats().ops, 1);
+    }
+
+    #[test]
+    fn account_entries_are_fault_gated_too() {
+        let (g, inj) = faulted(2, FaultKind::Transient, 0);
+        g.account_gather(64).unwrap();
+        assert_eq!(inj.stats().retries, 1, "gate fault absorbed by retry");
+        assert_eq!(g.stats().all_gather_bytes, 64);
+        assert_eq!(g.stats().ops, 1);
+
+        let (g, _) = faulted(2, FaultKind::LostRank, 0);
+        let err = g.account_send_recv(128).unwrap_err();
+        assert!(err.downcast_ref::<AlstError>().is_some());
+        assert_eq!(g.stats().ops, 0);
     }
 }

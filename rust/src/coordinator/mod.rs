@@ -17,12 +17,16 @@
 //! * `dataloader` — the UlyssesSPDataLoaderAdapter equivalent (§4.2) with
 //!   pre-shifted labels (§4.3).
 //! * `pipeline` — the distributed fwd/bwd orchestration over PJRT stages.
+//! * `recover` — the resilient-training supervisor: snapshot cadence,
+//!   typed fault recovery (restore + replay, optional world degrade), and
+//!   the chaos harness that pins the bit-identity recovery contract.
 
 pub mod dataloader;
 pub mod offload;
 pub mod optimizer;
 pub mod pipeline;
 pub mod plan;
+pub mod recover;
 pub mod ring;
 pub mod snapshot;
 pub mod tape;

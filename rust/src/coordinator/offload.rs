@@ -34,12 +34,15 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::collectives::faults::{
+    self, lock_clean, AlstError, FaultInjector, FaultKind, FaultSite, RetryPolicy,
+};
 use crate::memory::{HostPool, MemoryTracker};
 use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::{HostTensor, ScratchArena};
@@ -130,6 +133,9 @@ enum SlotState {
     FetchQueued { bytes: u64 },
     /// Restored; `fetch` hands it out.
     Ready { tensor: HostTensor, bytes: u64 },
+    /// The copy died on a non-retryable fault. The buffer is recycled but
+    /// the host charge is kept so `abort_step` balances the ledger.
+    Failed { bytes: u64 },
 }
 
 impl SlotState {
@@ -138,7 +144,8 @@ impl SlotState {
             SlotState::StoreQueued { bytes }
             | SlotState::Staged { bytes, .. }
             | SlotState::FetchQueued { bytes }
-            | SlotState::Ready { bytes, .. } => *bytes,
+            | SlotState::Ready { bytes, .. }
+            | SlotState::Failed { bytes } => *bytes,
         }
     }
 }
@@ -157,6 +164,10 @@ struct EngineState {
     h2d_pending: usize,
     stream: StreamStats,
     stalls: StallStats,
+    /// First non-retryable copy fault. Latches until `abort_step`; every
+    /// API call fails fast with a clone while set, which is how a dead
+    /// stream surfaces as a typed error instead of a silent hang.
+    failed: Option<AlstError>,
 }
 
 struct Shared {
@@ -164,6 +175,19 @@ struct Shared {
     tracer: Arc<Tracer>,
     state: Mutex<EngineState>,
     cv: Condvar,
+    /// Chaos-run fault injector (None in production). Behind a mutex so it
+    /// can be installed after the engine is Arc-shared with its workers.
+    injector: Mutex<Option<Arc<FaultInjector>>>,
+    retry: RetryPolicy,
+}
+
+/// Poison-recovering condvar wait (see `faults::lock_clean` for why the
+/// guarded state stays sound after a panicking holder).
+fn wait_clean<'a>(
+    cv: &Condvar,
+    g: MutexGuard<'a, EngineState>,
+) -> MutexGuard<'a, EngineState> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 struct CopyJob {
@@ -187,9 +211,66 @@ pub struct AsyncOffloadEngine {
     overlap: bool,
 }
 
+/// The arena copy behind both streams, run through the fault gate: a
+/// transient gate fault backs off and retries; a corrupt wire is caught
+/// by comparing the source checksum against the landed copy's, which is
+/// then recycled and re-copied; a lost rank propagates typed. The source
+/// tensor stays with the caller either way.
+fn checked_copy(shared: &Shared, src: &HostTensor, rank: usize) -> Result<HostTensor, AlstError> {
+    let injector = lock_clean(&shared.injector).clone();
+    let Some(inj) = injector else {
+        return Ok(shared.arena.copy_tensor(src));
+    };
+    let mut attempt = 0u32;
+    loop {
+        match inj.check(FaultSite::OffloadCopy, Some(rank)) {
+            None => return Ok(shared.arena.copy_tensor(src)),
+            Some(FaultKind::LostRank) => {
+                return Err(AlstError::LostRank { site: FaultSite::OffloadCopy, rank });
+            }
+            Some(FaultKind::Transient) => {
+                if attempt >= shared.retry.max_retries {
+                    return Err(AlstError::Transient {
+                        site: FaultSite::OffloadCopy,
+                        rank,
+                        attempt,
+                    });
+                }
+                faults::retry_pause(&shared.tracer, &inj, &shared.retry, Some(rank), attempt);
+                attempt += 1;
+            }
+            Some(FaultKind::CorruptPayload) => {
+                let expect = faults::checksum_tensor(src);
+                let mut copy = shared.arena.copy_tensor(src);
+                if let Ok(d) = copy.as_f32_mut() {
+                    faults::corrupt_f32s(d, inj.plan().seed);
+                }
+                let got = faults::checksum_tensor(&copy);
+                if got == expect {
+                    // empty payload: the bit flip had nothing to land on
+                    return Ok(copy);
+                }
+                shared.arena.recycle(copy);
+                if attempt >= shared.retry.max_retries {
+                    return Err(AlstError::CorruptPayload {
+                        site: FaultSite::OffloadCopy,
+                        rank,
+                        expect,
+                        got,
+                    });
+                }
+                faults::retry_pause(&shared.tracer, &inj, &shared.retry, Some(rank), attempt);
+                attempt += 1;
+            }
+        }
+    }
+}
+
 /// Stage one checkpoint host-side: the simulated D2H transfer. Runs on
 /// the D2H worker (overlap) or the caller thread (inline, counted as
-/// stall).
+/// stall). A non-retryable fault marks the slot `Failed` (host charge
+/// kept for `abort_step`), latches the engine error, and wakes every
+/// waiter — no counter is left dangling.
 fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
     let tensor = job.tensor.expect("d2h job carries the tensor");
     let mut stall = count_as_stall.then(|| {
@@ -202,24 +283,35 @@ fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
         let mut span = shared.tracer.span(Category::CopyD2H, "d2h_copy");
         span.set_bytes(job.bytes);
         let t0 = Instant::now();
-        let staged = shared.arena.copy_tensor(&tensor);
+        let copied = checked_copy(shared, &tensor, job.rank);
         shared.arena.recycle(tensor);
         let d = t0.elapsed();
-        span.set_dur(d);
         // Publish before the span guard drops so end_ns <= the state
         // update the in-flight reconstruction reads the copy span for.
-        let mut st = shared.state.lock().unwrap();
-        st.slots
-            .insert((job.li, job.rank), SlotState::Staged { tensor: staged, bytes: job.bytes });
+        let mut st = lock_clean(&shared.state);
+        match copied {
+            Ok(staged) => {
+                span.set_dur(d);
+                st.slots.insert(
+                    (job.li, job.rank),
+                    SlotState::Staged { tensor: staged, bytes: job.bytes },
+                );
+                st.stream.copies_d2h += 1;
+                st.stream.copy_time_d2h += d;
+                st.stream.transfer_bytes += job.bytes;
+                if count_as_stall {
+                    st.stalls.d2h_wait += d;
+                    st.stalls.d2h_events += 1;
+                }
+            }
+            Err(e) => {
+                span.cancel();
+                st.slots.insert((job.li, job.rank), SlotState::Failed { bytes: job.bytes });
+                st.failed.get_or_insert(e);
+            }
+        }
         st.in_flight_d2h -= job.bytes;
         st.d2h_pending -= 1;
-        st.stream.copies_d2h += 1;
-        st.stream.copy_time_d2h += d;
-        st.stream.transfer_bytes += job.bytes;
-        if count_as_stall {
-            st.stalls.d2h_wait += d;
-            st.stalls.d2h_events += 1;
-        }
         shared.cv.notify_all();
         d
     };
@@ -234,11 +326,17 @@ fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
 fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
     let key = (job.li, job.rank);
     let (staged, bytes) = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_clean(&shared.state);
         loop {
             match st.slots.get(&key) {
                 Some(SlotState::Staged { .. }) => break,
-                Some(_) => st = shared.cv.wait(st).unwrap(),
+                Some(SlotState::Failed { .. }) => {
+                    // The D2H leg already died. Retire the job.
+                    st.h2d_pending -= 1;
+                    shared.cv.notify_all();
+                    return;
+                }
+                Some(_) => st = wait_clean(&shared.cv, st),
                 None => {
                     // Slot vanished (aborted step). Retire the job.
                     st.h2d_pending -= 1;
@@ -264,26 +362,40 @@ fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
     let mut span = shared.tracer.span(Category::CopyH2D, "h2d_copy");
     span.set_bytes(bytes);
     let t0 = Instant::now();
-    let restored = shared.arena.copy_tensor(&staged);
+    let copied = checked_copy(shared, &staged, job.rank);
     shared.arena.recycle(staged);
     let d = t0.elapsed();
-    span.set_dur(d);
-    drop(span);
-    if let Some(s) = &mut stall {
-        s.set_dur(d);
+    match copied {
+        Ok(restored) => {
+            span.set_dur(d);
+            drop(span);
+            if let Some(s) = &mut stall {
+                s.set_dur(d);
+            }
+            drop(stall);
+            let mut st = lock_clean(&shared.state);
+            st.slots.insert(key, SlotState::Ready { tensor: restored, bytes });
+            st.h2d_pending -= 1;
+            st.stream.copies_h2d += 1;
+            st.stream.copy_time_h2d += d;
+            st.stream.transfer_bytes += bytes;
+            if count_as_stall {
+                st.stalls.h2d_wait += d;
+                st.stalls.h2d_events += 1;
+            }
+            shared.cv.notify_all();
+        }
+        Err(e) => {
+            span.cancel();
+            drop(span);
+            drop(stall);
+            let mut st = lock_clean(&shared.state);
+            st.slots.insert(key, SlotState::Failed { bytes });
+            st.failed.get_or_insert(e);
+            st.h2d_pending -= 1;
+            shared.cv.notify_all();
+        }
     }
-    drop(stall);
-    let mut st = shared.state.lock().unwrap();
-    st.slots.insert(key, SlotState::Ready { tensor: restored, bytes });
-    st.h2d_pending -= 1;
-    st.stream.copies_h2d += 1;
-    st.stream.copy_time_h2d += d;
-    st.stream.transfer_bytes += bytes;
-    if count_as_stall {
-        st.stalls.h2d_wait += d;
-        st.stalls.h2d_events += 1;
-    }
-    shared.cv.notify_all();
 }
 
 impl AsyncOffloadEngine {
@@ -293,6 +405,8 @@ impl AsyncOffloadEngine {
             tracer,
             state: Mutex::new(EngineState::default()),
             cv: Condvar::new(),
+            injector: Mutex::new(None),
+            retry: RetryPolicy::default(),
         });
         let (mut d2h_tx, mut h2d_tx, mut workers) = (None, None, Vec::new());
         if cfg.overlap {
@@ -331,6 +445,18 @@ impl AsyncOffloadEngine {
         self.overlap
     }
 
+    /// Install a chaos-run fault injector into both copy streams. Safe
+    /// after the engine is shared: the injector slot is its own lock.
+    pub fn set_injector(&self, injector: Arc<FaultInjector>) {
+        *lock_clean(&self.shared.injector) = Some(injector);
+    }
+
+    /// The latched non-retryable fault, if a copy stream died. Cleared by
+    /// `abort_step`.
+    pub fn failed(&self) -> Option<AlstError> {
+        lock_clean(&self.shared.state).failed.clone()
+    }
+
     /// Enqueue the D2H store of layer `li`'s checkpoint for `rank`.
     /// Non-blocking unless the in-flight window is full (backpressure,
     /// recorded as a `stall_d2h` span). Host capacity is charged here,
@@ -345,7 +471,10 @@ impl AsyncOffloadEngine {
     ) -> Result<()> {
         let bytes = tensor.size_bytes() as u64;
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
+            if let Some(e) = &st.failed {
+                return Err(anyhow::Error::new(e.clone()));
+            }
             ensure!(
                 !st.slots.contains_key(&(li, rank)),
                 "checkpoint ({li},{rank}) already stored"
@@ -356,15 +485,22 @@ impl AsyncOffloadEngine {
                 stall.set_rank(rank);
                 stall.set_bytes(bytes);
                 let t0 = Instant::now();
-                while st.in_flight_d2h > 0
+                while st.failed.is_none()
+                    && st.in_flight_d2h > 0
                     && st.in_flight_d2h.saturating_add(bytes) > self.cap
                 {
-                    st = self.shared.cv.wait(st).unwrap();
+                    st = wait_clean(&self.shared.cv, st);
                 }
                 let d = t0.elapsed();
                 stall.set_dur(d);
                 st.stalls.d2h_wait += d;
                 st.stalls.d2h_events += 1;
+            }
+            if let Some(e) = &st.failed {
+                let e = e.clone();
+                drop(st);
+                host.free(bytes);
+                return Err(anyhow::Error::new(e));
             }
             st.in_flight_d2h += bytes;
             st.stream.max_in_flight = st.stream.max_in_flight.max(st.in_flight_d2h);
@@ -393,7 +529,10 @@ impl AsyncOffloadEngine {
     pub fn prefetch(&self, li: usize, rank: usize) -> Result<()> {
         let key = (li, rank);
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
+            if let Some(e) = &st.failed {
+                return Err(anyhow::Error::new(e.clone()));
+            }
             if !st.slots.contains_key(&key) {
                 bail!("checkpoint ({li},{rank}) missing");
             }
@@ -434,19 +573,24 @@ impl AsyncOffloadEngine {
         self.prefetch(li, rank)?;
         let key = (li, rank);
         let (tensor, bytes) = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
             if !matches!(st.slots.get(&key), Some(SlotState::Ready { .. })) {
                 let mut stall = self.shared.tracer.span(Category::Stall, "stall_h2d");
                 stall.set_rank(rank);
                 let t0 = Instant::now();
-                while !matches!(st.slots.get(&key), Some(SlotState::Ready { .. })) {
-                    st = self.shared.cv.wait(st).unwrap();
+                while st.failed.is_none()
+                    && !matches!(st.slots.get(&key), Some(SlotState::Ready { .. }))
+                {
+                    st = wait_clean(&self.shared.cv, st);
                 }
                 let d = t0.elapsed();
                 stall.set_dur(d);
-                stall.set_bytes(st.slots[&key].bytes());
+                stall.set_bytes(st.slots.get(&key).map_or(0, SlotState::bytes));
                 st.stalls.h2d_wait += d;
                 st.stalls.h2d_events += 1;
+            }
+            if let Some(e) = &st.failed {
+                return Err(anyhow::Error::new(e.clone()));
             }
             let Some(SlotState::Ready { tensor, bytes }) = st.slots.remove(&key) else {
                 unreachable!("waited for Ready under the same lock");
@@ -456,7 +600,7 @@ impl AsyncOffloadEngine {
         };
         if let Err(e) = device.alloc(bytes, CKPT_TAG) {
             // Put the slot back so abort/retry sees consistent ledgers.
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
             st.slots.insert(key, SlotState::Ready { tensor, bytes });
             st.h2d_queued.insert(key, true);
             return Err(e);
@@ -472,10 +616,12 @@ impl AsyncOffloadEngine {
     }
 
     /// Block until both streams are idle (no copy enqueued or running).
+    /// Terminates even after a fault: a failed copy still retires its
+    /// pending count.
     pub fn drain(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         while st.d2h_pending > 0 || st.h2d_pending > 0 {
-            st = self.shared.cv.wait(st).unwrap();
+            st = wait_clean(&self.shared.cv, st);
         }
     }
 
@@ -486,51 +632,54 @@ impl AsyncOffloadEngine {
     /// caller's to release; `StepTape::abort` does both.)
     pub fn abort_step(&self, host: &mut HostPool) {
         self.drain();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         for (_, slot) in st.slots.drain() {
             match slot {
                 SlotState::Staged { tensor, bytes } | SlotState::Ready { tensor, bytes } => {
                     host.free(bytes);
                     self.shared.arena.recycle(tensor);
                 }
+                // A faulted copy recycled its buffer but kept the charge.
+                SlotState::Failed { bytes } => host.free(bytes),
                 // Unreachable after drain: no copy is queued or running.
                 SlotState::StoreQueued { .. } | SlotState::FetchQueued { .. } => {}
             }
         }
         st.h2d_queued.clear();
         st.in_flight_d2h = 0;
+        st.failed = None;
     }
 
     /// Checkpoints currently held by the engine (any lifecycle state).
     pub fn pending(&self) -> usize {
-        self.shared.state.lock().unwrap().slots.len()
+        lock_clean(&self.shared.state).slots.len()
     }
 
     pub fn stalls(&self) -> StallStats {
-        self.shared.state.lock().unwrap().stalls
+        lock_clean(&self.shared.state).stalls
     }
 
     pub fn stream_stats(&self) -> StreamStats {
-        self.shared.state.lock().unwrap().stream
+        lock_clean(&self.shared.state).stream
     }
 
     /// Cumulative bytes moved across both streams since construction (or
     /// the last `reset_stats`).
     pub fn transfer_bytes(&self) -> u64 {
-        self.shared.state.lock().unwrap().stream.transfer_bytes
+        lock_clean(&self.shared.state).stream.transfer_bytes
     }
 
     /// Zero the stall/stream ledgers (per-bench-row isolation). Slots in
     /// flight are unaffected.
     pub fn reset_stats(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         st.stream = StreamStats::default();
         st.stalls = StallStats::default();
     }
 
     #[cfg(test)]
     fn lock_state(&self) -> std::sync::MutexGuard<'_, EngineState> {
-        self.shared.state.lock().unwrap()
+        lock_clean(&self.shared.state)
     }
 }
 
@@ -824,6 +973,67 @@ mod tests {
         assert_eq!(dev.tag_bytes(CKPT_TAG), 0, "fetched charge released");
         assert_eq!(host.current(), 0);
         assert_eq!(dev.underflow_events() + host.underflow_events(), 0);
+    }
+
+    #[test]
+    fn transient_and_corrupt_copy_faults_are_retried_bit_identically() {
+        use crate::collectives::faults::FaultPlan;
+        for kind in [FaultKind::Transient, FaultKind::CorruptPayload] {
+            let eng = engine(true, 1 << 30);
+            let inj = FaultInjector::new(FaultPlan {
+                site: FaultSite::OffloadCopy,
+                kind,
+                rank: 0,
+                at_op: 0,
+                seed: 5,
+            });
+            eng.set_injector(inj.clone());
+            let mut dev = MemoryTracker::new(1 << 30);
+            let mut host = HostPool::new(1 << 30);
+            let mut rng = Rng::new(7);
+            let orig = tensor(&mut rng, 256);
+            eng.store(0, 0, orig.clone(), &mut host).unwrap();
+            let got = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+            for (a, b) in got.as_f32().unwrap().iter().zip(orig.as_f32().unwrap()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            dev.free(got.size_bytes() as u64, CKPT_TAG);
+            assert!(inj.fired(), "the planned fault fired");
+            assert_eq!(inj.stats().retries, 1, "absorbed by exactly one retry");
+            assert!(eng.failed().is_none());
+            assert_eq!((host.current(), dev.current()), (0, 0));
+        }
+    }
+
+    #[test]
+    fn lost_rank_copy_latches_typed_error_and_abort_recovers() {
+        use crate::collectives::faults::FaultPlan;
+        let eng = engine(true, 1 << 30);
+        eng.set_injector(FaultInjector::new(FaultPlan {
+            site: FaultSite::OffloadCopy,
+            kind: FaultKind::LostRank,
+            rank: 0,
+            at_op: 0,
+            seed: 1,
+        }));
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(8);
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        let err = eng.fetch(0, 0, &mut dev, &mut host).unwrap_err();
+        let alst = err.downcast_ref::<AlstError>().expect("typed fault");
+        assert_eq!(*alst, AlstError::LostRank { site: FaultSite::OffloadCopy, rank: 0 });
+        // later calls fail fast on the latched error, without new charges
+        assert!(eng.store(1, 0, tensor(&mut rng, 64), &mut host).is_err());
+        assert_eq!(host.current(), 256, "faulted slot keeps its host charge");
+        eng.abort_step(&mut host);
+        assert!(eng.failed().is_none(), "abort clears the latch");
+        assert_eq!((eng.pending(), host.current()), (0, 0));
+        // the same engine serves the next step cleanly
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+        assert_eq!((host.current(), dev.current()), (0, 0));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::collectives::faults::{AlstError, FaultInjector, FaultPlan, FaultStats};
 use crate::collectives::Group;
 use crate::config::{FeatureFlags, PlanKind};
 use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX};
@@ -77,7 +78,20 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().map_err(|_| anyhow::anyhow!("rank thread panicked"))?)
+            .enumerate()
+            .map(|(r, h)| {
+                h.join().map_err(|payload| {
+                    // a panicking rank thread becomes a typed error the
+                    // supervisor can match on, carrying the panic message
+                    // instead of swallowing it
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    anyhow::Error::new(AlstError::RankPanic { rank: r, msg })
+                })?
+            })
             .collect()
     })
 }
@@ -182,6 +196,12 @@ pub struct TrainerOptions {
     /// can exceed `n_q_heads`. `Trainer::new` validates the chosen
     /// plan's predicate against the manifest's head counts.
     pub plan: PlanKind,
+    /// Deterministic fault injection for chaos/resilience runs: the plan
+    /// fires exactly once (at the Nth operation of its site on its rank),
+    /// and the shared [`FaultInjector`] is installed into the collective
+    /// group, the engine, and the async offload copy streams. `None` (the
+    /// default) adds zero overhead beyond an `Option` check per site.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for TrainerOptions {
@@ -202,6 +222,7 @@ impl Default for TrainerOptions {
             async_offload: None,
             trace: false,
             plan: PlanKind::Ulysses,
+            fault_plan: None,
         }
     }
 }
@@ -222,6 +243,14 @@ pub struct StepMetrics {
     pub reduce_scatter_bytes: u64,
     pub ckpt_transfer_bytes: u64,
     pub device_peak_bytes: u64,
+    /// Cumulative fault-injection retry count (`FaultStats::retries`) at
+    /// the time this step completed; 0 when no injector is installed.
+    pub retries: u64,
+    /// Cumulative recovery count (`FaultStats::recoveries`) — bumped by
+    /// the resilient supervisor (`coordinator::recover`) on each
+    /// snapshot-restore, so a recovered run's metrics show where the
+    /// restore happened.
+    pub recoveries: u64,
 }
 
 /// Loss attributed to one document of a packed batch (`metrics` logs
@@ -295,6 +324,10 @@ pub struct Trainer {
     /// The ring plan instance (owns the overlap-vs-stall accounting);
     /// only exercised when `plan == PlanKind::Ring`.
     ring_plan: RingPlan,
+    /// The shared fault injector when `TrainerOptions::fault_plan` was
+    /// set (installed into group/engine/offload at construction); the
+    /// step loop reads its counters into `StepMetrics`.
+    injector: Option<Arc<FaultInjector>>,
     /// Attention-mask segment boundaries for the ring plan, matching the
     /// exported `attn_fwd` stage's mask: the device stage computes DENSE
     /// causal attention (packed segment isolation in this runtime lives
@@ -368,6 +401,14 @@ impl Trainer {
 
         let mut group = Group::new(sp);
         group.set_tracer(tracer.clone());
+        // One injector instance shared by every gated site, so "fire at
+        // the Nth op" means the Nth across the whole run regardless of
+        // which subsystem performs it.
+        let injector = opts.fault_plan.map(FaultInjector::new);
+        if let Some(inj) = &injector {
+            group.set_injector(inj.clone());
+            engine.set_injector(inj.clone());
+        }
         let mut device = MemoryTracker::new(opts.device_bytes);
         device.set_tracer(tracer.clone());
 
@@ -383,6 +424,9 @@ impl Trainer {
                 tracer.clone(),
                 cfg.clone(),
             ));
+            if let Some(inj) = &injector {
+                engine.set_injector(inj.clone());
+            }
             // Schedule derivation uses the monolithic (untiled) working-set
             // formulas even when tiled execution is on: the tiled sets are
             // strictly smaller, so the schedule errs toward fewer early
@@ -426,8 +470,20 @@ impl Trainer {
             tracer,
             plan: opts.plan,
             ring_plan: RingPlan::default(),
+            injector,
             step_cu,
         })
+    }
+
+    /// The shared fault injector (`TrainerOptions::fault_plan`); the
+    /// resilient supervisor disarms/reads it between steps.
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
+    /// Injection/retry/recovery counters, all-zero without an injector.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.injector.as_ref().map(|i| i.stats()).unwrap_or_default()
     }
 
     /// The attention plan this trainer runs.
@@ -502,26 +558,26 @@ impl Trainer {
     /// explicitly (see `account_bwd_regather`).
     fn build_step_params(&self) -> Result<StepParams> {
         let p = &self.manifest.params;
-        let embed_flat = self.params.gather_range(&self.group, 0..p.embed_numel);
+        let embed_flat = self.params.gather_range(&self.group, 0..p.embed_numel)?;
         let embed = self.upload_all(&slice_group(&embed_flat, &p.embed))?;
         let mut layers = Vec::with_capacity(p.n_layers);
         for li in 0..p.n_layers {
-            let flat = self.params.gather_range(&self.group, p.layer_range(li));
+            let flat = self.params.gather_range(&self.group, p.layer_range(li))?;
             layers.push(self.upload_all(&slice_group(&flat, &p.layer))?);
         }
         let fstart = p.embed_numel + p.n_layers * p.layer_numel;
         let final_flat = self
             .params
-            .gather_range(&self.group, fstart..fstart + p.final_numel);
+            .gather_range(&self.group, fstart..fstart + p.final_numel)?;
         let final_ = self.upload_all(&slice_group(&final_flat, &p.final_))?;
         Ok(StepParams { embed, layers, final_ })
     }
 
     /// Ledger the ZeRO-3 backward re-gather of one layer (the data itself
     /// is served from the step cache on this single-device runtime).
-    fn account_bwd_regather(&self, li: usize) {
+    fn account_bwd_regather(&self, li: usize) -> Result<()> {
         let range = self.manifest.params.layer_range(li);
-        self.group.account_gather(range.len() as u64 * 4);
+        self.group.account_gather(range.len() as u64 * 4)
     }
 
     /// Ranks whose stage working sets are resident at once on the
@@ -593,9 +649,9 @@ impl Trainer {
                 // pre-relayout shards and the uploaded host copies go
                 // straight back to the pool — the ping-pong that makes
                 // steady-state relayout allocation-free.
-                let q_full = a2a_seq_to_head_into(&self.group, &qs, &self.arena);
-                let k_full = a2a_seq_to_head_into(&self.group, &ks, &self.arena);
-                let v_full = a2a_seq_to_head_into(&self.group, &vs, &self.arena);
+                let q_full = a2a_seq_to_head_into(&self.group, &qs, &self.arena)?;
+                let k_full = a2a_seq_to_head_into(&self.group, &ks, &self.arena)?;
+                let v_full = a2a_seq_to_head_into(&self.group, &vs, &self.arena)?;
                 self.arena.recycle_all(qs);
                 self.arena.recycle_all(ks);
                 self.arena.recycle_all(vs);
@@ -618,7 +674,7 @@ impl Trainer {
                     self.manifest.config.n_q_heads,
                     false,
                     &self.arena,
-                );
+                )?;
                 self.arena.recycle_all(o_full);
                 (q_full_b, k_full_b, v_full_b, o_sh, Vec::new(), Vec::new(), Vec::new(), None)
             };
@@ -825,6 +881,7 @@ impl Trainer {
         span.set_step(self.step);
         span.set_dur(step_time);
         drop(span);
+        let fstats = self.fault_stats();
         Ok(StepMetrics {
             step: self.step,
             loss: loss_acc,
@@ -837,6 +894,8 @@ impl Trainer {
             reduce_scatter_bytes: comm.reduce_scatter_bytes,
             ckpt_transfer_bytes: ckpt_transfer,
             device_peak_bytes: self.device.peak(),
+            retries: fstats.retries,
+            recoveries: fstats.recoveries,
         })
     }
 
@@ -1033,8 +1092,8 @@ impl Trainer {
             self.device.free(bytes, LOSS_HEAD_TAG);
             loss_out?.into_iter().unzip()
         };
-        let loss_sum = self.group.all_reduce_scalars(&loss_sums);
-        let count = self.group.all_reduce_scalars(&counts);
+        let loss_sum = self.group.all_reduce_scalars(&loss_sums)?;
+        let count = self.group.all_reduce_scalars(&counts)?;
         // Reachable on packed batches (e.g. every document length 1 =>
         // all labels IGNORE_INDEX): without this check loss is NaN and
         // the backward cotangent 1/count is inf, silently poisoning the
@@ -1201,7 +1260,7 @@ impl Trainer {
             let range = start..start + p.final_numel;
             let contribs: Vec<&[f32]> =
                 final_grads.iter().map(|g| g.flat.as_slice()).collect();
-            self.grads.reduce_into_range(&self.group, range, &contribs);
+            self.grads.reduce_into_range(&self.group, range, &contribs)?;
         }
         drop(h);
 
@@ -1220,7 +1279,7 @@ impl Trainer {
             }
             let h_in = self.upload_all(&h_in_host)?;
             // ZeRO-3 re-gathers the layer's params for backward (ledger).
-            self.account_bwd_regather(li);
+            self.account_bwd_regather(li)?;
             let lp = &dev_params.layers[li];
             // Recompute forward through the layer (activation checkpointing
             // replays the all-to-alls too — the paper's flos model counts
@@ -1306,7 +1365,7 @@ impl Trainer {
                 grads
             } else {
                 // transposed all-to-all: d_attn (seq layout) -> head layout
-                let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena);
+                let d_o_full = a2a_seq_to_head_into(&self.group, &d_attn, &self.arena)?;
                 self.arena.recycle_all(d_attn);
                 let d_o_full_b = self.upload_all(&d_o_full)?;
                 self.arena.recycle_all(d_o_full);
@@ -1330,11 +1389,12 @@ impl Trainer {
                 // copy-first/accumulate-rest pass inside the relayout).
                 let nq = self.manifest.config.n_q_heads;
                 let nkv = self.manifest.config.n_kv_heads;
-                let d_q = a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena);
+                let d_q =
+                    a2a_head_to_seq_into(&self.group, &d_q_full, nq, true, &self.arena)?;
                 let d_k =
-                    a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena);
+                    a2a_head_to_seq_into(&self.group, &d_k_full, nkv, true, &self.arena)?;
                 let d_v =
-                    a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena);
+                    a2a_head_to_seq_into(&self.group, &d_v_full, nkv, true, &self.arena)?;
                 self.arena.recycle_all(d_q_full);
                 self.arena.recycle_all(d_k_full);
                 self.arena.recycle_all(d_v_full);
@@ -1382,7 +1442,7 @@ impl Trainer {
             let contribs: Vec<&[f32]> =
                 layer_grads.iter().map(|g| g.flat.as_slice()).collect();
             let range = self.manifest.params.layer_range(li);
-            self.grads.reduce_into_range(&self.group, range, &contribs);
+            self.grads.reduce_into_range(&self.group, range, &contribs)?;
             // tape-fetched checkpoints are spent; back to the pool
             // (arena-sourced under tiled_mlp — keeps sweeps
             // allocation-free at steady state), and their device charge
@@ -1411,7 +1471,7 @@ impl Trainer {
             embed_grads.iter().map(|g| g.flat.as_slice()).collect();
         let embed_numel = self.manifest.params.embed_numel;
         self.grads
-            .reduce_into_range(&self.group, 0..embed_numel, &contribs);
+            .reduce_into_range(&self.group, 0..embed_numel, &contribs)?;
 
         Ok((loss, tape.transfer_bytes(), doc_losses))
     }
@@ -1547,6 +1607,7 @@ impl Trainer {
         span.set_dur(step_time);
         drop(span);
         let real_tokens: usize = p.doc_lengths().iter().sum();
+        let fstats = self.fault_stats();
         Ok(PackedStepMetrics {
             metrics: StepMetrics {
                 step: self.step,
@@ -1560,6 +1621,8 @@ impl Trainer {
                 reduce_scatter_bytes: comm.reduce_scatter_bytes,
                 ckpt_transfer_bytes: ckpt_transfer,
                 device_peak_bytes: self.device.peak(),
+                retries: fstats.retries,
+                recoveries: fstats.recoveries,
             },
             doc_losses,
             real_tokens,

@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::collectives::faults::{lock_clean, AlstError};
 use crate::collectives::Group;
 use crate::config::PlanKind;
 use crate::obs::{Category, Tracer};
@@ -232,15 +233,15 @@ impl RingPlan {
     }
 
     pub fn stats(&self) -> RingStats {
-        *self.stats.lock().unwrap()
+        *lock_clean(&self.stats)
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = RingStats::default();
+        *lock_clean(&self.stats) = RingStats::default();
     }
 
     fn note_hop(&self, copy: Duration, stall: Duration, bytes: u64) {
-        let mut st = self.stats.lock().unwrap();
+        let mut st = lock_clean(&self.stats);
         st.hops += 1;
         st.copy_ns += copy.as_nanos() as u64;
         st.stall_ns += stall.as_nanos() as u64;
@@ -252,6 +253,9 @@ impl RingPlan {
     /// (k, v) buffers and the measured in-transfer duration. Under
     /// `overlap` the caller passes `compute`, which runs on this thread
     /// while the worker moves data; the join wait is the measured stall.
+    /// A wire fault that survives the group's retry loop (a lost rank)
+    /// propagates typed; a panicked transfer worker surfaces as
+    /// [`AlstError::WorkerDead`] instead of poisoning the caller.
     fn rotate_kv<'a, F: FnOnce()>(
         &self,
         group: &Group,
@@ -259,7 +263,7 @@ impl RingPlan {
         cur: &[Option<RingBuf<'a>>],
         hop: usize,
         compute: F,
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, u64) {
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, u64)> {
         let sp = cur.len();
         let tracer = group.tracer();
         let mut ksends: Vec<&[f32]> = vec![&[]; sp];
@@ -273,36 +277,61 @@ impl RingPlan {
         let bytes: u64 =
             ksends.iter().chain(&vsends).map(|s| (s.len() * 4) as u64).sum();
         if self.overlap {
-            let (kr, vr, copy, stall) = std::thread::scope(|s| {
+            let (moved, copy, stall) = std::thread::scope(|s| {
                 let worker = s.spawn(|| {
                     let t0 = Instant::now();
-                    let kr = group.send_recv_into(&ksends, 1, arena);
-                    let vr = group.send_recv_into(&vsends, 1, arena);
-                    (kr, vr, t0.elapsed())
+                    let moved = ring_leg(group, arena, &ksends, &vsends);
+                    (moved, t0.elapsed())
                 });
                 compute();
                 let joined = Instant::now();
                 let mut sspan = tracer.span(Category::Stall, "stall_ring");
-                let (kr, vr, copy) = worker.join().expect("ring transfer worker");
+                let (moved, copy) = worker.join().map_err(|_| {
+                    anyhow::Error::new(AlstError::WorkerDead { stream: "ring transfer" })
+                })?;
                 let stall = joined.elapsed();
                 sspan.set_dur(stall);
                 drop(sspan);
-                (kr, vr, copy, stall)
-            });
+                Ok::<_, anyhow::Error>((moved, copy, stall))
+            })?;
+            let (kr, vr) = moved?;
             self.note_hop(copy, stall, bytes);
-            (kr, vr, bytes)
+            Ok((kr, vr, bytes))
         } else {
             compute();
             let mut sspan = tracer.span(Category::Stall, "stall_ring");
             let t0 = Instant::now();
-            let kr = group.send_recv_into(&ksends, 1, arena);
-            let vr = group.send_recv_into(&vsends, 1, arena);
+            let moved = ring_leg(group, arena, &ksends, &vsends);
             let copy = t0.elapsed();
             sspan.set_dur(copy);
             drop(sspan);
+            let (kr, vr) = moved?;
             // inline: the critical path pays the whole copy
             self.note_hop(copy, copy, bytes);
-            (kr, vr, bytes)
+            Ok((kr, vr, bytes))
+        }
+    }
+}
+
+/// One two-buffer transfer leg (K+V or dK+dV). If the second half
+/// faults, the first half's received buffers go back to the pool before
+/// the error propagates, so a retried or aborted step starts clean.
+fn ring_leg(
+    group: &Group,
+    arena: &ScratchArena,
+    first: &[&[f32]],
+    second: &[&[f32]],
+) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+    let fr = group.send_recv_into(first, 1, arena)?;
+    match group.send_recv_into(second, 1, arena) {
+        Ok(sr) => Ok((fr, sr)),
+        Err(e) => {
+            for b in fr {
+                if !b.is_empty() {
+                    arena.recycle_f32(b);
+                }
+            }
+            Err(e)
         }
     }
 }
@@ -431,7 +460,7 @@ impl ParallelPlan for RingPlan {
                         hop, &cur, &qd, &rows, &bases, shape, &seg, &mut m, &mut l, &mut acc,
                         &mut scores, &tracer,
                     );
-                });
+                })?;
                 install(&mut cur, kr, vr, hop, arena);
             }
         }
@@ -539,7 +568,7 @@ impl ParallelPlan for RingPlan {
                         hop, &cur, &mut dkv, &qd, &dod, &od, &lsed, &rows, &bases, shape, &seg,
                         &mut dq, &tracer,
                     );
-                });
+                })?;
                 // capture the block whose ride just ended at rank sp-1
                 if let Some(buf) = &cur[sp - 1] {
                     finished[buf.idx] = dkv[sp - 1].take();
@@ -556,11 +585,11 @@ impl ParallelPlan for RingPlan {
                     dksends.iter().chain(&dvsends).map(|s| (s.len() * 4) as u64).sum();
                 let mut sspan = tracer.span(Category::Stall, "stall_ring");
                 let t0 = Instant::now();
-                let dkr = group.send_recv_into(&dksends, 1, arena);
-                let dvr = group.send_recv_into(&dvsends, 1, arena);
+                let moved = ring_leg(group, arena, &dksends, &dvsends);
                 let leg_copy = t0.elapsed();
                 sspan.set_dur(leg_copy);
                 drop(sspan);
+                let (dkr, dvr) = moved?;
                 self.note_hop(leg_copy, leg_copy, leg_bytes);
                 install(&mut cur, kr, vr, hop, arena);
                 // swap in the received dkv accumulators, recycling the sent
@@ -609,7 +638,7 @@ impl ParallelPlan for RingPlan {
             }
         }
         if home_bytes > 0 {
-            group.account_send_recv(home_bytes);
+            group.account_send_recv(home_bytes)?;
         }
 
         let mut d_q = Vec::with_capacity(sp);
@@ -638,10 +667,10 @@ pub fn ring_comm_cycle(
     n_kv: usize,
     head_dim: usize,
     n_layers: usize,
-) {
+) -> Result<()> {
     let sp = group.world;
     if sp <= 1 {
-        return;
+        return Ok(());
     }
     let blk = rows_per_rank * n_kv * head_dim;
     let mut proto = arena.take_f32(blk);
@@ -654,7 +683,13 @@ pub fn ring_comm_cycle(
                     for s in sends.iter_mut().take(sp - 1).skip(hop) {
                         *s = &proto;
                     }
-                    let recv = group.send_recv_into(&sends, 1, arena);
+                    let recv = match group.send_recv_into(&sends, 1, arena) {
+                        Ok(recv) => recv,
+                        Err(e) => {
+                            arena.recycle_f32(proto);
+                            return Err(e);
+                        }
+                    };
                     for b in recv {
                         if !b.is_empty() {
                             arena.recycle_f32(b);
@@ -664,11 +699,15 @@ pub fn ring_comm_cycle(
             }
             if bufs_per_hop == 4 {
                 // homing: every completed dKV block but rank sp-1's own
-                group.account_send_recv((2 * (sp - 1) * blk * 4) as u64);
+                if let Err(e) = group.account_send_recv((2 * (sp - 1) * blk * 4) as u64) {
+                    arena.recycle_f32(proto);
+                    return Err(e);
+                }
             }
         }
     }
     arena.recycle_f32(proto);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -819,13 +858,13 @@ mod tests {
         let seq = sp * ssh;
         let g = Group::new(sp);
         let arena = ScratchArena::new();
-        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers);
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers).unwrap();
         let shape = AttnShape::new(n_kv, n_kv, d);
         let per_layer = RingPlan::new(false).comm_bytes_per_layer(seq, &shape, sp, 4);
         assert_eq!(g.stats().send_recv_bytes, layers as u64 * per_layer);
         // steady state: a second cycle is served from the pool
         let misses = arena.misses();
-        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers);
+        ring_comm_cycle(&g, &arena, ssh, n_kv, d, layers).unwrap();
         assert_eq!(arena.misses(), misses, "comm cycle allocates only once");
     }
 

@@ -1,12 +1,18 @@
 //! Training-state snapshots: save/restore flat parameters + AdamW state +
 //! step counter, so post-training runs can resume (a framework necessity
-//! the paper's ArcticTraining recipes rely on).
+//! the paper's ArcticTraining recipes rely on) and the resilient trainer
+//! can roll back to the last good step after a rank loss.
 //!
-//! Format (little-endian): magic "ALST", u32 version, u64 step,
-//! u64 total_numel, then three f32 arrays (params, adam m, adam v).
+//! Format v2 (little-endian): magic "ALST", u32 version, u64 step,
+//! u64 total_numel, three f32 arrays (params, adam m, adam v), then a
+//! CRC32 (IEEE) footer over every preceding byte. Writes go to a sibling
+//! temp file and land via atomic rename, so a crash mid-save can never
+//! destroy the previous good snapshot. Loads verify the checksum and
+//! reject trailing junk; v1 files (no footer) still load.
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
@@ -14,13 +20,72 @@ use crate::coordinator::optimizer::AdamW;
 use crate::coordinator::zero::ShardedStore;
 
 const MAGIC: &[u8; 4] = b"ALST";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Bytes before the f32 arrays: magic + version + step + total.
+const HEADER_LEN: usize = 4 + 4 + 8 + 8;
 
 pub struct Snapshot {
     pub step: u64,
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib/PNG polynomial), table built at first use
+// ---------------------------------------------------------------------------
+
+/// Advance the raw CRC register (init `0xffff_ffff`, finalize with `!`).
+fn crc32_update(mut crc: u32, bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    crc
+}
+
+/// CRC32 of a complete byte run (what the footer stores).
+fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(0xffff_ffff, bytes)
+}
+
+/// Write adapter that checksums every byte it forwards.
+struct Crc32Writer<W: Write> {
+    inner: W,
+    crc: u32,
+}
+
+impl<W: Write> Crc32Writer<W> {
+    fn new(inner: W) -> Self {
+        Crc32Writer { inner, crc: 0xffff_ffff }
+    }
+
+    fn sum(&self) -> u32 {
+        !self.crc
+    }
+}
+
+impl<W: Write> Write for Crc32Writer<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.inner.write_all(buf)?;
+        self.crc = crc32_update(self.crc, buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
@@ -36,59 +101,103 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
+fn parse_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect())
+        .collect()
 }
 
-/// Save (params, optimizer, step) to `path`.
+/// Save (params, optimizer, step) to `path`: write `<path>.tmp`, then
+/// atomically rename over the target. A crash mid-write leaves at worst a
+/// stale temp file; the previous snapshot at `path` survives intact.
 pub fn save(path: &Path, step: u64, params: &ShardedStore, opt: &AdamW) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&step.to_le_bytes())?;
-    f.write_all(&(params.total as u64).to_le_bytes())?;
-    write_f32s(&mut f, &params.to_flat())?;
-    write_f32s(&mut f, &opt.m.to_flat())?;
-    write_f32s(&mut f, &opt.v.to_flat())?;
+    let Some(name) = path.file_name() else {
+        bail!("snapshot path {} has no file name", path.display());
+    };
+    let mut tmp_name = name.to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut f = Crc32Writer::new(std::io::BufWriter::new(file));
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&step.to_le_bytes())?;
+        f.write_all(&(params.total as u64).to_le_bytes())?;
+        write_f32s(&mut f, &params.to_flat())?;
+        write_f32s(&mut f, &opt.m.to_flat())?;
+        write_f32s(&mut f, &opt.v.to_flat())?;
+        // footer goes through the inner writer: the CRC covers everything
+        // before it, not itself
+        let crc = f.sum();
+        f.inner.write_all(&crc.to_le_bytes())?;
+        f.inner.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
 }
 
 /// Load a snapshot; caller re-shards it for the current world size (the
 /// snapshot is world-agnostic — resume on a different SP degree works).
+/// v2 files are checksum-verified and must end exactly at the footer;
+/// v1 files (pre-footer format) load without verification.
 pub fn load(path: &Path) -> Result<Snapshot> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut data)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if data.len() < HEADER_LEN {
+        bail!("snapshot truncated (only {} bytes)", data.len());
+    }
+    if &data[..4] != MAGIC {
         bail!("not an ALST snapshot (bad magic)");
     }
-    let mut u32b = [0u8; 4];
-    f.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
-    if version != VERSION {
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version == 0 || version > VERSION {
         bail!("unsupported snapshot version {version}");
     }
-    let mut u64b = [0u8; 8];
-    f.read_exact(&mut u64b)?;
-    let step = u64::from_le_bytes(u64b);
-    f.read_exact(&mut u64b)?;
-    let total = u64::from_le_bytes(u64b) as usize;
-    let params = read_f32s(&mut f, total)?;
-    let m = read_f32s(&mut f, total)?;
-    let v = read_f32s(&mut f, total)?;
+    let step = u64::from_le_bytes(data[8..16].try_into().unwrap());
+    let total = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
+    let body = HEADER_LEN + 3 * total * 4;
+    let expect_len = if version >= 2 { body + 4 } else { body };
+    if data.len() < expect_len {
+        bail!(
+            "snapshot truncated: {} bytes, {} arrays need {}",
+            data.len(),
+            total,
+            expect_len
+        );
+    }
+    if version >= 2 {
+        if data.len() > expect_len {
+            bail!(
+                "snapshot has {} bytes of trailing junk",
+                data.len() - expect_len
+            );
+        }
+        let stored = u32::from_le_bytes(data[body..body + 4].try_into().unwrap());
+        let computed = crc32(&data[..body]);
+        if stored != computed {
+            bail!(
+                "snapshot CRC mismatch: stored {stored:#010x}, computed {computed:#010x} \
+                 (corrupt file)"
+            );
+        }
+    }
+    let params = parse_f32s(&data[HEADER_LEN..HEADER_LEN + total * 4]);
+    let m = parse_f32s(&data[HEADER_LEN + total * 4..HEADER_LEN + 2 * total * 4]);
+    let v = parse_f32s(&data[HEADER_LEN + 2 * total * 4..HEADER_LEN + 3 * total * 4]);
     Ok(Snapshot { step, params, m, v })
 }
 
 /// Restore a snapshot into live training state (re-sharding to `world`).
+/// All three arrays are validated against the model's total, so a
+/// snapshot with a consistent param array but torn optimizer state is
+/// rejected instead of silently corrupting Adam moments.
 pub fn restore(
     snap: &Snapshot,
     params: &mut ShardedStore,
@@ -100,6 +209,15 @@ pub fn restore(
             snap.params.len(),
             params.total
         );
+    }
+    for (name, arr) in [("m", &snap.m), ("v", &snap.v)] {
+        if arr.len() != params.total {
+            bail!(
+                "snapshot adam-{name} state has {} entries, model needs {}",
+                arr.len(),
+                params.total
+            );
+        }
     }
     let world = params.world();
     *params = ShardedStore::from_flat(&snap.params, world);
@@ -136,6 +254,9 @@ mod tests {
         assert_eq!(snap.params, flat);
         assert_eq!(snap.m, vec![0.25; 1000]);
 
+        // the temp file was renamed away, not left behind
+        assert!(!path.with_file_name("roundtrip.alst.tmp").exists());
+
         // resume on a DIFFERENT world size
         let mut p2 = ShardedStore::zeros(1000, 8);
         let mut o2 = AdamW::new(AdamWConfig::default(), 1000, 8);
@@ -159,5 +280,67 @@ mod tests {
         let mut wrong = ShardedStore::zeros(20, 2);
         let mut o = AdamW::new(AdamWConfig::default(), 20, 2);
         assert!(restore(&snap, &mut wrong, &mut o).is_err());
+    }
+
+    #[test]
+    fn corrupt_byte_fails_the_crc() {
+        let params = ShardedStore::from_flat(&[3.5; 64], 2);
+        let opt = AdamW::new(AdamWConfig::default(), 64, 2);
+        let path = tmpfile("corrupt.alst");
+        save(&path, 5, &params, &opt).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_LEN + 17] ^= 0x40; // flip one bit mid-params
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn trailing_junk_is_rejected() {
+        let params = ShardedStore::from_flat(&[1.0; 16], 2);
+        let opt = AdamW::new(AdamWConfig::default(), 16, 2);
+        let path = tmpfile("junk.alst");
+        save(&path, 2, &params, &opt).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"extra");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing junk"), "got: {err}");
+    }
+
+    #[test]
+    fn v1_snapshot_without_footer_still_loads() {
+        // hand-build the legacy format: header + arrays, no CRC footer
+        let total = 8usize;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&9u64.to_le_bytes());
+        bytes.extend_from_slice(&(total as u64).to_le_bytes());
+        for arr in 0..3 {
+            for i in 0..total {
+                bytes.extend_from_slice(&((arr * total + i) as f32).to_le_bytes());
+            }
+        }
+        let path = tmpfile("v1.alst");
+        std::fs::write(&path, &bytes).unwrap();
+        let snap = load(&path).unwrap();
+        assert_eq!(snap.step, 9);
+        assert_eq!(snap.params, (0..8).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(snap.v[0], 16.0);
+    }
+
+    #[test]
+    fn restore_rejects_torn_optimizer_state() {
+        let snap = Snapshot {
+            step: 1,
+            params: vec![0.0; 12],
+            m: vec![0.0; 7], // wrong length
+            v: vec![0.0; 12],
+        };
+        let mut p = ShardedStore::zeros(12, 3);
+        let mut o = AdamW::new(AdamWConfig::default(), 12, 3);
+        let err = restore(&snap, &mut p, &mut o).unwrap_err().to_string();
+        assert!(err.contains("adam-m"), "got: {err}");
     }
 }

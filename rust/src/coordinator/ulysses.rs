@@ -86,7 +86,7 @@ pub fn validate_ulysses(n_q: usize, n_kv: usize, sp: usize) -> Result<()> {
 }
 
 /// seq->head all-to-all (one-shot buffers; see `a2a_seq_to_head_into`).
-pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Vec<HostTensor> {
+pub fn a2a_seq_to_head(group: &Group, shards: &[HostTensor]) -> Result<Vec<HostTensor>> {
     a2a_seq_to_head_into(group, shards, &ScratchArena::new())
 }
 
@@ -103,7 +103,7 @@ pub fn a2a_seq_to_head_into(
     group: &Group,
     shards: &[HostTensor],
     arena: &ScratchArena,
-) -> Vec<HostTensor> {
+) -> Result<Vec<HostTensor>> {
     let tracer = group.tracer();
     let (hits0, misses0) =
         if tracer.enabled() { (arena.hits(), arena.misses()) } else { (0, 0) };
@@ -139,12 +139,18 @@ pub fn a2a_seq_to_head_into(
         }
     }
     // Every element of every output crossed the (simulated) wire once.
-    group.account_all_to_all((sp * out_len * 4) as u64);
+    // A faulted wire cancels the relayout span and returns the buffers to
+    // the pool before propagating, so the retry re-runs allocation-free.
+    if let Err(e) = group.account_all_to_all((sp * out_len * 4) as u64) {
+        span.cancel();
+        arena.recycle_all(out);
+        return Err(e);
+    }
     span.set_bytes((sp * out_len * 4) as u64);
     if span.active() {
         span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
     }
-    out
+    Ok(out)
 }
 
 /// head->seq all-to-all (one-shot buffers; see `a2a_head_to_seq_into`).
@@ -153,7 +159,7 @@ pub fn a2a_head_to_seq(
     shards: &[HostTensor],
     n_heads_total: usize,
     sum_replicas: bool,
-) -> Vec<HostTensor> {
+) -> Result<Vec<HostTensor>> {
     a2a_head_to_seq_into(group, shards, n_heads_total, sum_replicas, &ScratchArena::new())
 }
 
@@ -172,7 +178,7 @@ pub fn a2a_head_to_seq_into(
     n_heads_total: usize,
     sum_replicas: bool,
     arena: &ScratchArena,
-) -> Vec<HostTensor> {
+) -> Result<Vec<HostTensor>> {
     let tracer = group.tracer();
     let (hits0, misses0) =
         if tracer.enabled() { (arena.hits(), arena.misses()) } else { (0, 0) };
@@ -194,12 +200,16 @@ pub fn a2a_head_to_seq_into(
         let mut data = arena.take_f32(out_len);
         data.copy_from_slice(src);
         out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
-        group.account_all_to_all(in_bytes);
+        if let Err(e) = group.account_all_to_all(in_bytes) {
+            span.cancel();
+            arena.recycle_all(out);
+            return Err(e);
+        }
         span.set_bytes(in_bytes);
         if span.active() {
             span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
         }
-        return out;
+        return Ok(out);
     }
 
     // With n_heads_total >= sp the source head blocks partition the output
@@ -244,12 +254,16 @@ pub fn a2a_head_to_seq_into(
         }
         out.push(HostTensor::f32(vec![ssh, n_heads_total, d], data));
     }
-    group.account_all_to_all(in_bytes);
+    if let Err(e) = group.account_all_to_all(in_bytes) {
+        span.cancel();
+        arena.recycle_all(out);
+        return Err(e);
+    }
     span.set_bytes(in_bytes);
     if span.active() {
         span.set_arena_delta(arena.hits() - hits0, arena.misses() - misses0);
     }
-    out
+    Ok(out)
 }
 
 /// Drive one train step's worth of relayouts through `arena`, mirroring
@@ -272,12 +286,12 @@ pub fn relayout_step_cycle(
     n_layers: usize,
     n_q: usize,
     n_kv: usize,
-) {
+) -> Result<()> {
     for _ in 0..n_layers {
-        let qf = a2a_seq_to_head_into(group, q_shards, arena);
-        let kf = a2a_seq_to_head_into(group, kv_shards, arena);
-        let vf = a2a_seq_to_head_into(group, kv_shards, arena);
-        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena);
+        let qf = a2a_seq_to_head_into(group, q_shards, arena)?;
+        let kf = a2a_seq_to_head_into(group, kv_shards, arena)?;
+        let vf = a2a_seq_to_head_into(group, kv_shards, arena)?;
+        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena)?;
         arena.recycle_all(qf);
         arena.recycle_all(kf);
         arena.recycle_all(vf);
@@ -286,16 +300,16 @@ pub fn relayout_step_cycle(
     for _ in 0..n_layers {
         // recompute replay of the forward relayouts; qf/kf/vf stay live
         // through attn_bwd, as in the pipeline
-        let qf = a2a_seq_to_head_into(group, q_shards, arena);
-        let kf = a2a_seq_to_head_into(group, kv_shards, arena);
-        let vf = a2a_seq_to_head_into(group, kv_shards, arena);
-        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena);
+        let qf = a2a_seq_to_head_into(group, q_shards, arena)?;
+        let kf = a2a_seq_to_head_into(group, kv_shards, arena)?;
+        let vf = a2a_seq_to_head_into(group, kv_shards, arena)?;
+        let o = a2a_head_to_seq_into(group, &qf, n_q, false, arena)?;
         arena.recycle_all(o);
         // d_attn (q-shaped) seq->head, then dq/dk/dv head->seq
-        let d_o = a2a_seq_to_head_into(group, q_shards, arena);
-        let d_q = a2a_head_to_seq_into(group, &qf, n_q, true, arena);
-        let d_k = a2a_head_to_seq_into(group, &kf, n_kv, true, arena);
-        let d_v = a2a_head_to_seq_into(group, &vf, n_kv, true, arena);
+        let d_o = a2a_seq_to_head_into(group, q_shards, arena)?;
+        let d_q = a2a_head_to_seq_into(group, &qf, n_q, true, arena)?;
+        let d_k = a2a_head_to_seq_into(group, &kf, n_kv, true, arena)?;
+        let d_v = a2a_head_to_seq_into(group, &vf, n_kv, true, arena)?;
         arena.recycle_all(qf);
         arena.recycle_all(kf);
         arena.recycle_all(vf);
@@ -304,6 +318,7 @@ pub fn relayout_step_cycle(
         arena.recycle_all(d_k);
         arena.recycle_all(d_v);
     }
+    Ok(())
 }
 
 /// Per-step all-to-all wire volume for one attention block, in bytes —
@@ -390,16 +405,16 @@ impl ParallelPlan for UlyssesPlan {
         let sp = group.world;
         self.validate(shape.n_q, shape.n_kv, sp)?;
         let local = self.local_shape(shape, sp);
-        let qf = a2a_seq_to_head_into(group, q, arena);
-        let kf = a2a_seq_to_head_into(group, k, arena);
-        let vf = a2a_seq_to_head_into(group, v, arena);
+        let qf = a2a_seq_to_head_into(group, q, arena)?;
+        let kf = a2a_seq_to_head_into(group, k, arena)?;
+        let vf = a2a_seq_to_head_into(group, v, arena)?;
         let mut o_full = Vec::with_capacity(sp);
         for r in 0..sp {
             let (o, lse) = dense_attention(&qf[r], &kf[r], &vf[r], &local, cu_seqlens, arena)?;
             arena.recycle(lse);
             o_full.push(o);
         }
-        let o = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena);
+        let o = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena)?;
         arena.recycle_all(qf);
         arena.recycle_all(kf);
         arena.recycle_all(vf);
@@ -423,9 +438,9 @@ impl ParallelPlan for UlyssesPlan {
         self.validate(shape.n_q, shape.n_kv, sp)?;
         let local = self.local_shape(shape, sp);
         // recompute replay of the forward, as the checkpointed trainer does
-        let qf = a2a_seq_to_head_into(group, q, arena);
-        let kf = a2a_seq_to_head_into(group, k, arena);
-        let vf = a2a_seq_to_head_into(group, v, arena);
+        let qf = a2a_seq_to_head_into(group, q, arena)?;
+        let kf = a2a_seq_to_head_into(group, k, arena)?;
+        let vf = a2a_seq_to_head_into(group, v, arena)?;
         let mut o_full = Vec::with_capacity(sp);
         let mut lse_full = Vec::with_capacity(sp);
         for r in 0..sp {
@@ -433,9 +448,9 @@ impl ParallelPlan for UlyssesPlan {
             o_full.push(o);
             lse_full.push(lse);
         }
-        let o_replay = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena);
+        let o_replay = a2a_head_to_seq_into(group, &o_full, shape.n_q, false, arena)?;
         arena.recycle_all(o_replay);
-        let d_of = a2a_seq_to_head_into(group, d_o, arena);
+        let d_of = a2a_seq_to_head_into(group, d_o, arena)?;
         let (mut dqf, mut dkf, mut dvf) =
             (Vec::with_capacity(sp), Vec::with_capacity(sp), Vec::with_capacity(sp));
         for r in 0..sp {
@@ -447,9 +462,9 @@ impl ParallelPlan for UlyssesPlan {
             dkf.push(dk);
             dvf.push(dv);
         }
-        let d_q = a2a_head_to_seq_into(group, &dqf, shape.n_q, true, arena);
-        let d_k = a2a_head_to_seq_into(group, &dkf, shape.n_kv, true, arena);
-        let d_v = a2a_head_to_seq_into(group, &dvf, shape.n_kv, true, arena);
+        let d_q = a2a_head_to_seq_into(group, &dqf, shape.n_q, true, arena)?;
+        let d_k = a2a_head_to_seq_into(group, &dkf, shape.n_kv, true, arena)?;
+        let d_v = a2a_head_to_seq_into(group, &dvf, shape.n_kv, true, arena)?;
         for bufs in [qf, kf, vf, o_full, lse_full, d_of, dqf, dkf, dvf] {
             arena.recycle_all(bufs);
         }
@@ -484,7 +499,7 @@ mod tests {
     fn seq_to_head_places_rows_globally() {
         let (sp, ssh, heads, d) = (2, 2, 4, 1);
         let g = Group::new(sp);
-        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d));
+        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d)).unwrap();
         // dst rank 1, global seq row 2 (= src rank 1, local row 0), its
         // head block starts at head 2
         let r1 = out[1].as_f32().unwrap();
@@ -502,8 +517,8 @@ mod tests {
             let (ssh, d) = (4, 3);
             let g = Group::new(sp);
             let orig = mk(sp, ssh, heads, d);
-            let full = a2a_seq_to_head(&g, &orig);
-            let back = a2a_head_to_seq(&g, &full, heads, false);
+            let full = a2a_seq_to_head(&g, &orig).unwrap();
+            let back = a2a_head_to_seq(&g, &full, heads, false).unwrap();
             assert_eq!(orig, back, "sp={sp} heads={heads}");
         }
     }
@@ -512,7 +527,7 @@ mod tests {
     fn sp1_passthrough_is_identity_and_accounted() {
         let g = Group::new(1);
         let orig = mk(1, 4, 8, 2);
-        let full = a2a_seq_to_head(&g, &orig);
+        let full = a2a_seq_to_head(&g, &orig).unwrap();
         assert_eq!(full[0].as_f32().unwrap(), orig[0].as_f32().unwrap());
         assert_eq!(full[0].shape(), &[4, 8, 2]);
         assert_eq!(g.stats().all_to_all_bytes, (4 * 8 * 2 * 4) as u64);
@@ -525,8 +540,8 @@ mod tests {
         let arena = ScratchArena::new();
         let input = mk(sp, ssh, heads, d);
         for cycle in 0..3 {
-            let full = a2a_seq_to_head_into(&g, &input, &arena);
-            let back = a2a_head_to_seq_into(&g, &full, heads, false, &arena);
+            let full = a2a_seq_to_head_into(&g, &input, &arena).unwrap();
+            let back = a2a_head_to_seq_into(&g, &full, heads, false, &arena).unwrap();
             arena.recycle_all(full);
             assert_eq!(back, input);
             arena.recycle_all(back);
@@ -544,7 +559,7 @@ mod tests {
         // kv = 2 heads, sp = 4: ranks (0,1) see head 0; (2,3) see head 1
         let (sp, ssh, heads, d) = (4, 2, 2, 1);
         let g = Group::new(sp);
-        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d));
+        let out = a2a_seq_to_head(&g, &mk(sp, ssh, heads, d)).unwrap();
         assert_eq!(out[0], out[1]);
         assert_eq!(out[2], out[3]);
         assert_ne!(out[0], out[2]);
@@ -558,7 +573,7 @@ mod tests {
             .map(|r| HostTensor::f32(vec![seq, 1, d], vec![(r + 1) as f32; seq]))
             .collect();
         let g = Group::new(sp);
-        let back = a2a_head_to_seq(&g, &shards, 2, true);
+        let back = a2a_head_to_seq(&g, &shards, 2, true).unwrap();
         for dst in 0..sp {
             let data = back[dst].as_f32().unwrap();
             // head 0 <- ranks 0+1 = 3; head 1 <- ranks 2+3 = 7
@@ -587,8 +602,8 @@ mod tests {
         let (sp, ssh, heads, d) = (4, 8, 8, 16);
         let g = Group::new(sp);
         let q = mk(sp, ssh, heads, d);
-        let full = a2a_seq_to_head(&g, &q);
-        let _ = a2a_head_to_seq(&g, &full, heads, false);
+        let full = a2a_seq_to_head(&g, &q).unwrap();
+        let _ = a2a_head_to_seq(&g, &full, heads, false).unwrap();
         // each direction moves seq*heads*d floats total across ranks
         let logical = (sp * ssh * heads * d * 4) as u64;
         assert_eq!(g.stats().all_to_all_bytes, 2 * logical);

@@ -61,30 +61,34 @@ impl ShardedStore {
     /// All-gather an arbitrary flat range (just-in-time param gather).
     /// Wire accounting: the gathered bytes, once per participating rank
     /// pair direction (ledgered as logical size, NCCL algbw convention).
-    pub fn gather_range(&self, group: &Group, range: std::ops::Range<usize>) -> Vec<f32> {
+    /// The wire can fault: the ledger entry runs the fault gate, and a
+    /// failed gather drops its local copy before propagating.
+    pub fn gather_range(&self, group: &Group, range: std::ops::Range<usize>) -> Result<Vec<f32>> {
         assert!(range.end <= self.total);
+        // account as an all-gather of the range; gate faults before the
+        // copy so a failed gather leaves nothing behind
+        group.account_gather(range.len() as u64 * 4)?;
         let mut out = vec![0f32; range.len()];
         for (i, idx) in range.clone().enumerate() {
             let (r, off) = (idx / self.shard_len, idx % self.shard_len);
             out[i] = self.shards[r][off];
         }
-        // account as an all-gather of the range
-        let dummy: Vec<&[f32]> = Vec::new();
-        let _ = dummy; // (stats API below)
-        group.account_gather(range.len() as u64 * 4);
-        out
+        Ok(out)
     }
 
     /// Reduce-scatter `world` per-rank contributions covering `range`
     /// into the owning shards: `shard[owner] += sum_r contribs[r]`.
+    /// The wire fault gate runs *before* the accumulation, so a lost rank
+    /// leaves the owning shards untouched (the step aborts cleanly).
     pub fn reduce_into_range(
         &mut self,
         group: &Group,
         range: std::ops::Range<usize>,
         contribs: &[&[f32]],
-    ) {
+    ) -> Result<()> {
         assert_eq!(contribs.len(), self.world());
         assert!(contribs.iter().all(|c| c.len() == range.len()));
+        group.account_reduce_scatter(range.len() as u64 * 4)?;
         for (i, idx) in range.clone().enumerate() {
             let (r, off) = (idx / self.shard_len, idx % self.shard_len);
             let mut acc = 0f32;
@@ -93,7 +97,7 @@ impl ShardedStore {
             }
             self.shards[r][off] += acc;
         }
-        group.account_reduce_scatter(range.len() as u64 * 4);
+        Ok(())
     }
 
     pub fn zero_fill(&mut self) {
@@ -197,7 +201,7 @@ mod tests {
         let flat: Vec<f32> = (0..20).map(|i| i as f32).collect();
         let s = ShardedStore::from_flat(&flat, 3); // shard_len 7
         let g = Group::new(3);
-        assert_eq!(s.gather_range(&g, 5..10), vec![5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(s.gather_range(&g, 5..10).unwrap(), vec![5.0, 6.0, 7.0, 8.0, 9.0]);
         assert_eq!(g.stats().all_gather_bytes, 20);
     }
 
@@ -207,7 +211,7 @@ mod tests {
         let g = Group::new(2);
         let a = vec![1.0f32; 4];
         let b = vec![2.0f32; 4];
-        s.reduce_into_range(&g, 2..6, &[&a, &b]);
+        s.reduce_into_range(&g, 2..6, &[&a, &b]).unwrap();
         let flat = s.to_flat();
         assert_eq!(flat, vec![0.0, 0.0, 3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
     }

@@ -10,6 +10,11 @@
 //!   trace     — run N traced steps, write Chrome trace-event JSON +
 //!               print the per-step attribution table (works without
 //!               artifacts: falls back to a synthetic coordinator step)
+//!   chaos     — fault-injection drill: unfaulted reference run, a
+//!               transient fault absorbed by retry/backoff, and a lost
+//!               rank recovered from snapshot — each checked for
+//!               bit-identity against the reference; exports the traced
+//!               recovery (Fault lane) and the per-step CSV
 
 use anyhow::{Context, Result};
 
@@ -32,9 +37,10 @@ fn main() -> Result<()> {
         Some("tables") => cmd_tables(&args),
         Some("validate") => cmd_validate(&args),
         Some("trace") => cmd_trace(&args),
+        Some("chaos") => cmd_chaos(&args),
         _ => {
             eprintln!(
-                "usage: alst <train|search|ablate|estimate|tables|validate|trace> [--key value ...]"
+                "usage: alst <train|search|ablate|estimate|tables|validate|trace|chaos> [--key value ...]"
             );
             std::process::exit(2);
         }
@@ -457,8 +463,8 @@ fn synthetic_trace(
         step_span.set_step(step + 1);
 
         for _ in 0..n_layers {
-            let full = a2a_seq_to_head_into(&group, &q, &arena);
-            let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+            let full = a2a_seq_to_head_into(&group, &q, &arena)?;
+            let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena)?;
             arena.recycle_all(full);
             arena.recycle_all(back);
         }
@@ -512,6 +518,156 @@ fn synthetic_trace(
         }
     }
     Ok((tracer.drain(), device.take_events()))
+}
+
+/// The fault-injection drill. Three runs of the chaos harness (real
+/// collectives, offload copy streams, per-rank stage gates, a real
+/// `ParallelPlan`): an unfaulted reference; a transient collective fault
+/// that the retry/backoff gates must absorb without a restore; and a
+/// lost rank that the resilient supervisor must recover from snapshot.
+/// Both faulted runs are checked for bit-identical final parameters
+/// against the reference and for balanced host/device ledgers — any
+/// mismatch exits nonzero. The recovered run is traced: the export gets
+/// the `Category::Fault` lane (retry backoff, snapshot saves, the
+/// recovery restore), and `--csv` writes per-step metrics including the
+/// `retries`/`recoveries` columns.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use alst::collectives::faults::{FaultKind, FaultPlan, FaultSite};
+    use alst::coordinator::recover::{
+        run_resilient, ChaosConfig, ChaosHarness, Recoverable, ResilienceOptions,
+    };
+    use alst::obs::Category;
+
+    let fast = alst::util::bench::fast_mode();
+    let sp = args.usize("sp", 4);
+    let steps = args.usize("steps", 4) as u64;
+    let seq = args.usize("seq", if fast { 16 } else { 32 });
+    let n_layers = args.usize("layers", 2);
+    let k = args.usize("k", 2) as u64;
+    let plan_arg = args.get_or("plan", "ulysses");
+    let plan = PlanKind::parse(&plan_arg)
+        .ok_or_else(|| anyhow::anyhow!("unknown --plan {plan_arg} (ulysses|ring)"))?;
+    let out = args.get_or("out", "chaos_trace.json");
+    anyhow::ensure!(steps >= 1, "--steps must be >= 1");
+    let snap_dir = std::env::temp_dir().join("alst-chaos");
+    std::fs::create_dir_all(&snap_dir)?;
+    let base = ChaosConfig {
+        sp,
+        seq,
+        n_layers,
+        plan,
+        threaded: true,
+        trace: false,
+        fault_plan: None,
+    };
+
+    // 1. The unfaulted reference (same supervisor, same snapshot cadence,
+    //    nothing to recover from).
+    let mut reference = ChaosHarness::new(base.clone())?;
+    let opts = ResilienceOptions {
+        snapshot_every: k,
+        ..ResilienceOptions::new(snap_dir.join("ref.alst"))
+    };
+    let ref_report = run_resilient(&mut reference, steps, &opts)?;
+    println!(
+        "reference: {steps} steps, plan {plan_arg}, sp {sp}, final loss {:.4}",
+        ref_report.metrics.last().map(|m| m.loss).unwrap_or(0.0)
+    );
+
+    // 2. A transient collective fault: the per-site retry gate absorbs it
+    //    in place; the supervisor must never see it.
+    let transient = FaultPlan {
+        site: FaultSite::Collective,
+        kind: FaultKind::Transient,
+        rank: 0,
+        at_op: 2,
+        seed: 7,
+    };
+    let mut h = ChaosHarness::new(ChaosConfig {
+        fault_plan: Some(transient),
+        ..base.clone()
+    })?;
+    let opts = ResilienceOptions {
+        snapshot_every: k,
+        ..ResilienceOptions::new(snap_dir.join("transient.alst"))
+    };
+    let rep = run_resilient(&mut h, steps, &opts)?;
+    anyhow::ensure!(
+        rep.fault.injected == 1 && rep.fault.retries >= 1,
+        "transient fault was not injected/retried (stats {:?})",
+        rep.fault
+    );
+    anyhow::ensure!(rep.recoveries == 0, "transient fault must not trigger a restore");
+    anyhow::ensure!(
+        h.params_flat() == reference.params_flat(),
+        "retried run diverged from the unfaulted reference"
+    );
+    println!(
+        "transient: absorbed by {} retry(ies), no restore — bit-identical",
+        rep.fault.retries
+    );
+
+    // 3. A lost rank mid-run: abort, restore from the last snapshot,
+    //    replay. Traced, so the export carries the Fault lane.
+    let target_step = steps.min(3);
+    let lost = FaultPlan {
+        site: FaultSite::StageExec,
+        kind: FaultKind::LostRank,
+        rank: 1 % sp,
+        at_op: (target_step - 1) * n_layers as u64,
+        seed: 13,
+    };
+    let mut h = ChaosHarness::new(ChaosConfig {
+        trace: true,
+        fault_plan: Some(lost),
+        ..base
+    })?;
+    let opts = ResilienceOptions {
+        snapshot_every: k,
+        ..ResilienceOptions::new(snap_dir.join("lost.alst"))
+    };
+    let rep = run_resilient(&mut h, steps, &opts)?;
+    anyhow::ensure!(
+        rep.recoveries == 1,
+        "lost rank must trigger exactly one restore, got {}",
+        rep.recoveries
+    );
+    anyhow::ensure!(
+        h.params_flat() == reference.params_flat(),
+        "recovered run diverged from the unfaulted reference"
+    );
+    anyhow::ensure!(
+        h.host_bytes() == 0 && h.device_bytes() == 0,
+        "ledgers must balance after recovery (host {}, device {})",
+        h.host_bytes(),
+        h.device_bytes()
+    );
+    println!(
+        "lost rank: {} restore at step {target_step} — bit-identical, ledgers clean",
+        rep.recoveries
+    );
+
+    let spans = h.tracer().drain();
+    let fault_spans = spans.iter().filter(|s| s.cat == Category::Fault).count();
+    anyhow::ensure!(
+        fault_spans >= 2,
+        "expected snapshot/restore spans on the Fault lane, got {fault_spans}"
+    );
+    let doc = alst::obs::trace_events(&spans, &[]);
+    alst::obs::validate_trace(&doc).context("chaos trace failed validation")?;
+    std::fs::write(&out, doc.to_string_pretty())
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} ({} spans, {fault_spans} on the fault lane)", spans.len());
+
+    if let Some(path) = args.get("csv") {
+        let mut log = RunLog::default();
+        for m in rep.metrics {
+            log.push(m);
+        }
+        log.write_csv(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

@@ -112,14 +112,16 @@ impl RunLog {
     }
 
     /// CSV: step,loss,grad_norm,ms,a2a_bytes,send_recv_bytes,
-    /// gather_bytes,rs_bytes,ckpt_bytes,device_peak_bytes
+    /// gather_bytes,rs_bytes,ckpt_bytes,device_peak_bytes,retries,
+    /// recoveries (the last two are cumulative fault-injection counters;
+    /// all-zero columns on runs without an injector)
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "step,loss,grad_norm,step_ms,a2a_bytes,send_recv_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes,device_peak_bytes\n",
+            "step,loss,grad_norm,step_ms,a2a_bytes,send_recv_bytes,gather_bytes,reduce_scatter_bytes,ckpt_transfer_bytes,device_peak_bytes,retries,recoveries\n",
         );
         for m in &self.steps {
             s.push_str(&format!(
-                "{},{:.6},{:.4},{:.1},{},{},{},{},{},{}\n",
+                "{},{:.6},{:.4},{:.1},{},{},{},{},{},{},{},{}\n",
                 m.step,
                 m.loss,
                 m.grad_norm,
@@ -130,6 +132,8 @@ impl RunLog {
                 m.reduce_scatter_bytes,
                 m.ckpt_transfer_bytes,
                 m.device_peak_bytes,
+                m.retries,
+                m.recoveries,
             ));
         }
         s
@@ -186,6 +190,8 @@ mod tests {
             reduce_scatter_bytes: 0,
             ckpt_transfer_bytes: 0,
             device_peak_bytes: 0,
+            retries: 0,
+            recoveries: 0,
         }
     }
 
@@ -204,18 +210,20 @@ mod tests {
         let mut log = RunLog::default();
         let mut m = step(1, 2.5);
         m.device_peak_bytes = 123_456;
+        m.retries = 2;
+        m.recoveries = 1;
         log.push(m);
         let csv = log.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert_eq!(csv.lines().count(), 2);
         // every StepMetrics field the CSV promises is present, including
-        // the measured device peak
+        // the measured device peak and the fault counters
         let header = csv.lines().next().unwrap();
-        assert!(header.ends_with("device_peak_bytes"));
-        assert_eq!(header.split(',').count(), 10);
+        assert!(header.ends_with("retries,recoveries"));
+        assert_eq!(header.split(',').count(), 12);
         let row = csv.lines().nth(1).unwrap();
-        assert_eq!(row.split(',').count(), 10);
-        assert!(row.ends_with(",123456"));
+        assert_eq!(row.split(',').count(), 12);
+        assert!(row.ends_with(",123456,2,1"));
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! Each `Step` span defines a window; every *leaf* span (exec, marshal,
 //! relayout, collective, offload, optimizer, stall) that starts inside the
-//! window is summed into its category. Container spans (`Step`, `Tile`)
+//! window is summed into its category (fault-lane spans — retry backoff,
+//! snapshot saves, recovery restores — included, so chaos runs show where
+//! resilience time went). Container spans (`Step`, `Tile`)
 //! are excluded so a tile sweep's time is not counted twice alongside the
 //! exec spans it encloses, and the offload copy-stream lanes
 //! (`CopyD2H`/`CopyH2D`) are excluded because they overlap compute — the
@@ -146,6 +148,7 @@ impl AttributionReport {
                 "optimizer",
                 "ring",
                 "stall",
+                "fault",
                 "untracked",
             ],
         );
@@ -162,6 +165,7 @@ impl AttributionReport {
                 ms(s.cat(Category::Optimizer).dur),
                 ms(s.cat(Category::Ring).dur),
                 ms(s.cat(Category::Stall).dur),
+                ms(s.cat(Category::Fault).dur),
                 ms(s.untracked),
             ]);
         }
@@ -290,9 +294,10 @@ mod tests {
         let rep = AttributionReport::build(&t.drain(), &[]);
         let table = rep.to_table();
         assert_eq!(table.rows.len(), 3);
-        assert_eq!(table.header.len(), 11);
+        assert_eq!(table.header.len(), 12);
         assert!(table.to_csv().starts_with("step,total,exec"));
         assert!(table.header.contains(&"stall".to_string()));
+        assert!(table.header.contains(&"fault".to_string()));
     }
 
     #[test]

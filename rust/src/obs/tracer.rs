@@ -19,6 +19,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::collectives::faults::lock_clean;
+
 /// Span taxonomy. `Step` and `Tile` are *containers*: they enclose leaf
 /// spans (a tile sweep contains the per-tile exec spans) and are excluded
 /// from per-step attribution sums so time is not double-counted.
@@ -44,10 +46,15 @@ pub enum Category {
     /// `Collective` lane (`send_recv`); the time the ring critical path
     /// spends waiting on a transfer is a `Stall` span.
     Ring,
+    /// Resilience events: retry backoffs after transient/corrupt faults,
+    /// snapshot saves on the resilient-loop cadence, and snapshot
+    /// restores after a lost rank. A leaf: recovery time is real
+    /// critical-path time the attribution report must show.
+    Fault,
 }
 
 impl Category {
-    pub const ALL: [Category; 12] = [
+    pub const ALL: [Category; 13] = [
         Category::Step,
         Category::Exec,
         Category::Marshal,
@@ -60,11 +67,12 @@ impl Category {
         Category::CopyH2D,
         Category::Stall,
         Category::Ring,
+        Category::Fault,
     ];
 
     /// Leaf categories enter the attribution sums; containers and the
     /// overlapped copy-stream lanes do not.
-    pub const LEAVES: [Category; 8] = [
+    pub const LEAVES: [Category; 9] = [
         Category::Exec,
         Category::Marshal,
         Category::Relayout,
@@ -73,6 +81,7 @@ impl Category {
         Category::Optimizer,
         Category::Stall,
         Category::Ring,
+        Category::Fault,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -89,6 +98,7 @@ impl Category {
             Category::CopyH2D => "copy_h2d",
             Category::Stall => "stall",
             Category::Ring => "ring",
+            Category::Fault => "fault",
         }
     }
 
@@ -107,6 +117,7 @@ impl Category {
             Category::CopyH2D => 9,
             Category::Stall => 10,
             Category::Ring => 11,
+            Category::Fault => 12,
         }
     }
 
@@ -250,21 +261,21 @@ impl Tracer {
 
     fn push(&self, span: Span) {
         let shard = (span.id as usize) % self.shards.len();
-        self.shards[shard].lock().unwrap().push(span);
+        lock_clean(&self.shards[shard]).push(span);
     }
 
     /// Remove and return all recorded spans, sorted by (start, id).
     pub fn drain(&self) -> Vec<Span> {
         let mut out = Vec::new();
         for s in &self.shards {
-            out.append(&mut s.lock().unwrap());
+            out.append(&mut lock_clean(s));
         }
         out.sort_by_key(|s| (s.start_ns, s.id));
         out
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_clean(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -334,6 +345,17 @@ impl SpanGuard<'_> {
     pub fn set_arena_delta(&mut self, hits: u64, misses: u64) {
         self.arena_hits = hits;
         self.arena_misses = misses;
+    }
+
+    /// Drop without recording. A *failed* collective attempt must not
+    /// emit a `Collective` span: span multiset == ledger increments is a
+    /// pinned invariant, and failed attempts ledger nothing. The retry
+    /// itself is recorded separately on the `Fault` lane.
+    pub fn cancel(&mut self) {
+        if self.tracer.is_some() {
+            pop_span_stack(self.id);
+        }
+        self.tracer = None;
     }
 }
 
@@ -543,6 +565,24 @@ mod tests {
         assert!(!Category::CopyD2H.is_leaf());
         assert!(!Category::CopyH2D.is_leaf());
         assert!(Category::Stall.is_leaf());
+    }
+
+    #[test]
+    fn cancelled_span_is_not_recorded() {
+        let t = Tracer::new(true);
+        {
+            let outer = t.span(Category::Step, "step");
+            {
+                let mut g = t.span(Category::Collective, "failed_attempt");
+                g.set_bytes(4096);
+                g.cancel();
+                // Cancel pops the nesting stack immediately.
+                assert_eq!(current_span(), Some(outer.id()));
+            }
+        }
+        let spans = t.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].cat, Category::Step);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::obs::{Category, Tracer};
+use crate::collectives::faults::{self, lock_clean, FaultInjector, FaultSite, RetryPolicy};
+use crate::obs::{self, Category, Tracer};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::HostTensor;
 
@@ -42,6 +43,11 @@ pub struct Engine {
     /// `Duration` values the stats ledger accumulates, so span sums
     /// reconcile with `EngineStats` exactly.
     tracer: Arc<Tracer>,
+    /// Optional fault injector for chaos runs: stage executions are gated
+    /// per rank (the caller's `obs::current_rank`), with transient faults
+    /// absorbed by the retry policy before the stage runs.
+    injector: Option<Arc<FaultInjector>>,
+    retry: RetryPolicy,
 }
 
 impl Engine {
@@ -52,11 +58,25 @@ impl Engine {
             executables: HashMap::new(),
             stats: Mutex::default(),
             tracer: Tracer::off(),
+            injector: None,
+            retry: RetryPolicy::default(),
         })
     }
 
     pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
         self.tracer = tracer;
+    }
+
+    pub fn set_injector(&mut self, injector: Arc<FaultInjector>) {
+        self.injector = Some(injector);
+    }
+
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
     }
 
     pub fn tracer(&self) -> &Arc<Tracer> {
@@ -112,7 +132,7 @@ impl Engine {
             }
         };
         let marshal = t0.elapsed();
-        let mut s = self.stats.lock().unwrap();
+        let mut s = lock_clean(&self.stats);
         s.marshal_time += marshal;
         s.bytes_in += t.size_bytes() as u64;
         span.set_dur(marshal);
@@ -126,6 +146,15 @@ impl Engine {
         key: &str,
         inputs: &[&xla::PjRtBuffer],
     ) -> Result<Vec<HostTensor>> {
+        // fault gate before any device work: a lost rank leaves the
+        // stage unexecuted and the stats ledger untouched
+        faults::site_gate(
+            &self.injector,
+            FaultSite::StageExec,
+            obs::current_rank().unwrap_or(0),
+            &self.retry,
+            &self.tracer,
+        )?;
         let exe = self
             .executables
             .get(key)
@@ -144,7 +173,7 @@ impl Engine {
             .collect::<Result<_>>()?;
         let bytes_out = outputs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
 
-        let mut s = self.stats.lock().unwrap();
+        let mut s = lock_clean(&self.stats);
         s.executions += 1;
         *s.per_stage.entry(key.to_string()).or_insert(0) += 1;
         s.exec_time += exec;
@@ -157,13 +186,7 @@ impl Engine {
     /// Executions recorded for one stage key (see `Engine::stage_key`);
     /// 0 if the stage never ran since the last `reset_stats`.
     pub fn executions_for(&self, key: &str) -> u64 {
-        self.stats
-            .lock()
-            .unwrap()
-            .per_stage
-            .get(key)
-            .copied()
-            .unwrap_or(0)
+        lock_clean(&self.stats).per_stage.get(key).copied().unwrap_or(0)
     }
 
     /// Execute a loaded stage from host tensors (upload + run).
@@ -213,11 +236,11 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.lock().unwrap().clone()
+        lock_clean(&self.stats).clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = EngineStats::default();
+        *lock_clean(&self.stats) = EngineStats::default();
     }
 
     pub fn loaded_stages(&self) -> usize {

@@ -9,6 +9,8 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
+use crate::collectives::faults::lock_clean;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
     F32,
@@ -313,7 +315,7 @@ fn take_from<T: Copy + Default>(
     misses: &AtomicU64,
     len: usize,
 ) -> Vec<T> {
-    let mut pool = pool.lock().unwrap();
+    let mut pool = lock_clean(pool);
     let best = pool
         .bufs
         .iter()
@@ -347,7 +349,7 @@ fn recycle_into<T>(pool: &Mutex<Pool<T>>, byte_budget: usize, v: Vec<T>) {
         return;
     }
     let incoming = v.capacity() * std::mem::size_of::<T>();
-    let mut pool = pool.lock().unwrap();
+    let mut pool = lock_clean(pool);
     if pool.bufs.len() < MAX_POOLED && pool.bytes + incoming <= byte_budget {
         pool.bytes += incoming;
         pool.bufs.push(v);
@@ -459,12 +461,12 @@ impl ScratchArena {
 
     /// Buffers currently parked in the pool.
     pub fn pooled(&self) -> usize {
-        self.f32_free.lock().unwrap().bufs.len() + self.i32_free.lock().unwrap().bufs.len()
+        lock_clean(&self.f32_free).bufs.len() + lock_clean(&self.i32_free).bufs.len()
     }
 
     /// Bytes currently parked in the pool (both dtypes).
     pub fn pooled_bytes(&self) -> usize {
-        self.f32_free.lock().unwrap().bytes + self.i32_free.lock().unwrap().bytes
+        lock_clean(&self.f32_free).bytes + lock_clean(&self.i32_free).bytes
     }
 }
 

@@ -1,0 +1,192 @@
+//! The fault-site sweep: the recovery contract must hold no matter WHERE
+//! a fault lands, not just at hand-picked spots.
+//!
+//! For each plan (Ulysses, Ring), world (sp 2 and 4), and rank-execution
+//! mode (threaded, serial), an unfaulted 2-step chaos-harness run counts
+//! its collective ops; then one faulted run per op index injects a fault
+//! at exactly that op — alternating a lost rank (must restore from
+//! snapshot and replay) with a transient (must be absorbed in place by
+//! retry/backoff) — and every run must end with parameters bit-identical
+//! to the unfaulted reference, balanced host/device ledgers, and (sampled)
+//! a steady-state arena. Companion sweeps cover the per-rank stage-exec
+//! gates and the checksummed offload copy streams (corrupt payloads
+//! included).
+
+use alst::collectives::faults::{FaultKind, FaultPlan, FaultSite};
+use alst::config::PlanKind;
+use alst::coordinator::recover::{
+    run_resilient, ChaosConfig, ChaosHarness, Recoverable, ResilienceOptions,
+};
+
+fn snap(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("alst-chaos-sweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.alst"))
+}
+
+fn cfg(
+    plan: PlanKind,
+    sp: usize,
+    threaded: bool,
+    fault: Option<FaultPlan>,
+) -> ChaosConfig {
+    ChaosConfig {
+        sp,
+        seq: 16,
+        n_layers: 2,
+        plan,
+        threaded,
+        trace: false,
+        fault_plan: fault,
+    }
+}
+
+/// Unfaulted 2-step run: final params + the sweep bound (successful
+/// collective ops across both steps).
+fn reference(plan: PlanKind, sp: usize, threaded: bool) -> (Vec<f32>, u64) {
+    let mut h = ChaosHarness::new(cfg(plan, sp, threaded, None)).unwrap();
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap(&format!("ref-{plan:?}-{sp}-{threaded}")))
+    };
+    run_resilient(&mut h, 2, &opts).unwrap();
+    (h.params_flat(), h.collective_ops())
+}
+
+/// One faulted run at one (site, rank, op) point; asserts the full
+/// recovery contract against `want`.
+fn check_point(
+    plan: PlanKind,
+    sp: usize,
+    threaded: bool,
+    fault: FaultPlan,
+    want: &[f32],
+    steady_check: bool,
+) {
+    let tag = format!(
+        "{plan:?}-{sp}-{threaded}-{:?}-{:?}-r{}-op{}",
+        fault.site, fault.kind, fault.rank, fault.at_op
+    );
+    let kind = fault.kind;
+    let mut h = ChaosHarness::new(cfg(plan, sp, threaded, Some(fault))).unwrap();
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap(&tag))
+    };
+    let report = run_resilient(&mut h, 2, &opts)
+        .unwrap_or_else(|e| panic!("{tag}: supervisor failed: {e:#}"));
+    assert_eq!(report.fault.injected, 1, "{tag}: fault never fired");
+    match kind {
+        FaultKind::LostRank => {
+            assert_eq!(report.recoveries, 1, "{tag}: lost rank must restore once");
+        }
+        FaultKind::Transient | FaultKind::CorruptPayload => {
+            assert_eq!(report.recoveries, 0, "{tag}: retryable fault must not restore");
+            assert!(report.fault.retries >= 1, "{tag}: retryable fault never retried");
+        }
+    }
+    assert_eq!(h.params_flat(), want, "{tag}: diverged from unfaulted reference");
+    assert_eq!(h.host_bytes(), 0, "{tag}: leaked host bytes");
+    assert_eq!(h.device_bytes(), 0, "{tag}: leaked device bytes");
+    if steady_check {
+        // two further unfaulted steps take/recycle in balance: the pool
+        // footprint stops changing once recovery settled
+        h.step_once().unwrap();
+        let one = (h.arena().pooled(), h.arena().pooled_bytes());
+        h.step_once().unwrap();
+        let two = (h.arena().pooled(), h.arena().pooled_bytes());
+        assert_eq!(one, two, "{tag}: arena not steady after recovery");
+    }
+}
+
+fn sweep_collectives(plan: PlanKind) {
+    for sp in [2usize, 4] {
+        for threaded in [true, false] {
+            let (want, total_ops) = reference(plan, sp, threaded);
+            assert!(
+                total_ops >= 10,
+                "{plan:?} sp={sp}: suspicious sweep bound {total_ops}"
+            );
+            for op in 0..total_ops {
+                let kind = if op % 2 == 0 {
+                    FaultKind::LostRank
+                } else {
+                    FaultKind::Transient
+                };
+                let fault = FaultPlan {
+                    site: FaultSite::Collective,
+                    kind,
+                    rank: 0,
+                    at_op: op,
+                    seed: op ^ 0xa5,
+                };
+                check_point(plan, sp, threaded, fault, &want, op % 7 == 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_collective_op_recovers_under_ulysses() {
+    sweep_collectives(PlanKind::Ulysses);
+}
+
+#[test]
+fn every_collective_op_recovers_under_ring() {
+    sweep_collectives(PlanKind::Ring);
+}
+
+/// Per-rank stage gates: every (rank, gate index) of the 2-step run, both
+/// thread modes, lost ranks alternating with transients.
+#[test]
+fn every_stage_gate_recovers() {
+    let (plan, sp, n_layers) = (PlanKind::Ulysses, 4usize, 2u64);
+    for threaded in [true, false] {
+        let (want, _) = reference(plan, sp, threaded);
+        for rank in 0..sp {
+            for op in 0..2 * n_layers {
+                let kind = if (op + rank as u64) % 2 == 0 {
+                    FaultKind::LostRank
+                } else {
+                    FaultKind::Transient
+                };
+                let fault = FaultPlan {
+                    site: FaultSite::StageExec,
+                    kind,
+                    rank,
+                    at_op: op,
+                    seed: 31 + op,
+                };
+                check_point(plan, sp, threaded, fault, &want, op == 0);
+            }
+        }
+    }
+}
+
+/// Offload copy streams: every copy op of one rank's 2-step run — D2H
+/// stores and H2D fetches interleave, so the sweep hits both directions.
+/// Corrupt payloads are caught by the per-transfer checksums and retried
+/// from the intact source; lost ranks latch the engine and recover
+/// through abort + restore.
+#[test]
+fn every_offload_copy_op_recovers() {
+    let (plan, sp, n_layers) = (PlanKind::Ulysses, 2usize, 2u64);
+    let threaded = true;
+    let (want, _) = reference(plan, sp, threaded);
+    // per step per rank: n_layers d2h stores + n_layers h2d fetches
+    for op in 0..2 * (2 * n_layers) {
+        let kind = match op % 3 {
+            0 => FaultKind::LostRank,
+            1 => FaultKind::CorruptPayload,
+            _ => FaultKind::Transient,
+        };
+        let fault = FaultPlan {
+            site: FaultSite::OffloadCopy,
+            kind,
+            rank: 1,
+            at_op: op,
+            seed: 77 + op,
+        };
+        check_point(plan, sp, threaded, fault, &want, op % 3 == 0);
+    }
+}

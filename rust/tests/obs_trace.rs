@@ -47,7 +47,7 @@ fn traced_rank_run(sp: usize, parallel: bool) -> Vec<Span> {
             let mut s = t.span(Category::Exec, "stage_a");
             s.set_bytes((r as u64 + 1) * 64);
         }
-        g.account_all_to_all((r as u64 + 1) * 8);
+        g.account_all_to_all((r as u64 + 1) * 8)?;
         {
             let mut s = t.span(Category::Marshal, "upload");
             s.set_bytes(32);
@@ -119,8 +119,8 @@ fn relayout_and_collective_spans_reconcile_with_comm_ledger() {
         .map(|_| HostTensor::f32(vec![ssh, n_q, d], rng.normal_vec(ssh * n_q * d, 1.0)))
         .collect();
 
-    let full = a2a_seq_to_head_into(&group, &q, &arena);
-    let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+    let full = a2a_seq_to_head_into(&group, &q, &arena).unwrap();
+    let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena).unwrap();
     arena.recycle_all(full);
     arena.recycle_all(back);
 
@@ -181,8 +181,8 @@ fn synthetic_traced_step_exports_valid_chrome_trace() {
         let mut step_span = tracer.span(Category::Step, "trace_step");
         step_span.set_step(step + 1);
 
-        let full = a2a_seq_to_head_into(&group, &q, &arena);
-        let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena);
+        let full = a2a_seq_to_head_into(&group, &q, &arena).unwrap();
+        let back = a2a_head_to_seq_into(&group, &full, n_q, false, &arena).unwrap();
         arena.recycle_all(full);
         arena.recycle_all(back);
 

@@ -129,7 +129,7 @@ fn prop_flat_shard_round_trip() {
         let a = rng.below(total);
         let b = a + rng.below(total - a + 1);
         let g = Group::new(world);
-        assert_eq!(store.gather_range(&g, a..b), flat[a..b]);
+        assert_eq!(store.gather_range(&g, a..b).unwrap(), flat[a..b]);
     });
 }
 
@@ -146,7 +146,7 @@ fn prop_reduce_into_range_equals_direct_sum() {
             .collect();
         let refs: Vec<&[f32]> = contribs.iter().map(|c| c.as_slice()).collect();
         let g = Group::new(world);
-        store.reduce_into_range(&g, a..b, &refs);
+        store.reduce_into_range(&g, a..b, &refs).unwrap();
         let flat = store.to_flat();
         for i in 0..total {
             let want: f32 = if (a..b).contains(&i) {

@@ -137,7 +137,7 @@ fn zero_copy_seq_to_head_matches_reference_all_regimes() {
                 let g = Group::new(sp);
                 let arena = ScratchArena::new();
                 let want = ref_a2a_seq_to_head(&shards);
-                let got = a2a_seq_to_head_into(&g, &shards, &arena);
+                let got = a2a_seq_to_head_into(&g, &shards, &arena).unwrap();
                 assert_bit_identical(
                     &want,
                     &got,
@@ -166,7 +166,7 @@ fn zero_copy_head_to_seq_matches_reference_all_regimes() {
                     let arena = ScratchArena::new();
                     let want = ref_a2a_head_to_seq(&shards, heads, sum_replicas);
                     let got =
-                        a2a_head_to_seq_into(&g, &shards, heads, sum_replicas, &arena);
+                        a2a_head_to_seq_into(&g, &shards, heads, sum_replicas, &arena).unwrap();
                     assert_bit_identical(
                         &want,
                         &got,
@@ -194,7 +194,7 @@ fn kv_replication_backward_is_bit_identical_to_reference() {
         let want = ref_a2a_head_to_seq(&shards, n_kv, true);
         let g = Group::new(sp);
         let arena = ScratchArena::new();
-        let got = a2a_head_to_seq_into(&g, &shards, n_kv, true, &arena);
+        let got = a2a_head_to_seq_into(&g, &shards, n_kv, true, &arena).unwrap();
         assert_bit_identical(&want, &got, &format!("replica-sum sp={sp} n_kv={n_kv}"));
     }
 }
@@ -207,8 +207,8 @@ fn round_trip_through_wrappers_matches_reference_round_trip() {
     for (sp, heads) in [(2usize, 4usize), (4, 4), (8, 16)] {
         let shards = random_shards(&mut rng, sp, 4, heads, 3);
         let g_new = Group::new(sp);
-        let full_new = a2a_seq_to_head(&g_new, &shards);
-        let back_new = a2a_head_to_seq(&g_new, &full_new, heads, false);
+        let full_new = a2a_seq_to_head(&g_new, &shards).unwrap();
+        let back_new = a2a_head_to_seq(&g_new, &full_new, heads, false).unwrap();
         let full_ref = ref_a2a_seq_to_head(&shards);
         let back_ref = ref_a2a_head_to_seq(&full_ref, heads, false);
         assert_bit_identical(&full_new, &full_ref, "wrapper fwd");
@@ -267,9 +267,9 @@ fn packed_shard_adapter_inputs_relayout_identically() {
         let g = Group::new(sp);
         let arena = ScratchArena::new();
         let want = ref_a2a_seq_to_head(&qkv);
-        let got = a2a_seq_to_head_into(&g, &qkv, &arena);
+        let got = a2a_seq_to_head_into(&g, &qkv, &arena).unwrap();
         assert_bit_identical(&want, &got, &format!("packed adapter sp={sp}"));
-        let back = a2a_head_to_seq_into(&g, &got, heads, false, &arena);
+        let back = a2a_head_to_seq_into(&g, &got, heads, false, &arena).unwrap();
         assert_bit_identical(&back, &qkv, &format!("packed adapter inverse sp={sp}"));
     }
 }
@@ -380,16 +380,16 @@ fn threaded_rank_loop_commstats_match_serial_byte_for_byte() {
         for round in 0..5u64 {
             let out = run_ranks(sp, parallel, |r| {
                 let r = r as u64;
-                g.account_gather(1_000 * (r + 1) + round);
-                g.account_all_to_all(77 * (r + 1));
-                g.account_reduce_scatter(13 + r * r);
+                g.account_gather(1_000 * (r + 1) + round)?;
+                g.account_all_to_all(77 * (r + 1))?;
+                g.account_reduce_scatter(13 + r * r)?;
                 Ok(r)
             })
             .unwrap();
             assert_eq!(out, (0..sp as u64).collect::<Vec<_>>());
             // a collective between the per-rank phases, as in the step loop
             let vals: Vec<f32> = (0..sp).map(|r| r as f32).collect();
-            g.all_reduce_scalars(&vals);
+            g.all_reduce_scalars(&vals).unwrap();
         }
         g.stats()
     };
