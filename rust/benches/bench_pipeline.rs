@@ -167,7 +167,7 @@ fn main() {
             let engine = AsyncOffloadEngine::new(
                 arena_o.clone(),
                 Tracer::off(),
-                OffloadConfig { in_flight_cap: 256 << 20, overlap },
+                OffloadConfig { in_flight_cap: 256 << 20, overlap, ..OffloadConfig::default() },
             );
             let mut device = MemoryTracker::new(1 << 40);
             let mut host = HostPool::new(1 << 40);
@@ -242,6 +242,7 @@ fn main() {
             threaded: true,
             trace: false,
             fault_plan: None,
+            ..ChaosConfig::default()
         };
         let sp_c = cfg.sp;
         let mut h = ChaosHarness::new(cfg).unwrap();
@@ -300,6 +301,71 @@ fn main() {
             rec_ms / step_ms.max(1e-9),
         );
         report.push(&r_rec);
+    }
+
+    // ---- transport overhead: local queues vs socket rank processes -------
+    // The same Group collective over both transports: LocalTransport's
+    // in-process frame queues versus SocketTransport's spawned rank
+    // processes behind Unix-domain sockets (frame header + payload +
+    // digest through the kernel, twice — out and echo). The delta is the
+    // per-collective price of real process separation.
+    {
+        use alst::collectives::{SocketOptions, SocketTransport};
+
+        let sp_t = 2usize;
+        let shard = rng.normal_vec(4096, 1.0);
+        let shards: Vec<&[f32]> = (0..sp_t).map(|_| shard.as_slice()).collect();
+        let gather_bytes = (sp_t * shard.len() * 4) as u64;
+
+        let g = Group::new(sp_t);
+        g.all_gather(&shards).unwrap(); // warm
+        let r_local = bench(
+            &format!("all_gather sp={sp_t} n=4096 transport=local"),
+            1,
+            10,
+            std::time::Duration::from_millis(500),
+            || {
+                let out = g.all_gather(&shards).unwrap();
+                std::hint::black_box(out);
+            },
+        )
+        .with_bytes(gather_bytes);
+        report.push(&r_local);
+
+        let sopts = SocketOptions {
+            worker_bin: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_alst"))),
+            ..SocketOptions::default()
+        };
+        match SocketTransport::spawn(sp_t, sopts, Tracer::off()) {
+            Ok(st) => {
+                let gs = Group::with_transport(sp_t, st);
+                gs.all_gather(&shards).unwrap(); // warm
+                let r_sock = bench(
+                    &format!("all_gather sp={sp_t} n=4096 transport=socket"),
+                    1,
+                    10,
+                    std::time::Duration::from_millis(500),
+                    || {
+                        let out = gs.all_gather(&shards).unwrap();
+                        std::hint::black_box(out);
+                    },
+                )
+                .with_bytes(gather_bytes);
+                let overhead_us =
+                    (r_sock.mean.as_secs_f64() - r_local.mean.as_secs_f64()) * 1e6;
+                println!(
+                    "    -> socket {:.1}us vs local {:.1}us per collective \
+                     (+{overhead_us:.1}us for process separation)",
+                    r_sock.mean.as_secs_f64() * 1e6,
+                    r_local.mean.as_secs_f64() * 1e6,
+                );
+                let r_sock = r_sock
+                    .with_extra("local_mean_us", r_local.mean.as_secs_f64() * 1e6)
+                    .with_extra("overhead_us_vs_local", overhead_us);
+                report.push(&r_sock);
+            }
+            Err(e) => eprintln!("SKIP socket transport row: {e:#}"),
+        }
     }
 
     // ---- PJRT sections (need `make artifacts`) ---------------------------

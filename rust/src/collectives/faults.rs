@@ -53,6 +53,12 @@ pub enum FaultSite {
     OffloadCopy,
     /// One stage execution on a rank (indexed per rank).
     StageExec,
+    /// The transport itself: a framed send/recv, a deadline expiry, a
+    /// heartbeat lapse. Never produced by the `FaultInjector` — these are
+    /// real I/O failures mapped by `collectives::transport` — but they
+    /// flow through the same `AlstError` taxonomy so supervisors treat
+    /// simulated and real faults identically.
+    Wire,
 }
 
 impl FaultSite {
@@ -61,6 +67,7 @@ impl FaultSite {
             FaultSite::Collective => "collective",
             FaultSite::OffloadCopy => "offload_copy",
             FaultSite::StageExec => "stage_exec",
+            FaultSite::Wire => "wire",
         }
     }
 }
@@ -163,23 +170,62 @@ impl std::error::Error for AlstError {}
 /// Exponential backoff schedule for retryable faults. The simulated wire
 /// uses sub-millisecond delays so chaos tests stay fast; a real transport
 /// would scale `base` up, not change the shape.
+///
+/// Backoff is decorrelated-jittered by default: retry number `attempt`
+/// sleeps a deterministic point in `[base, base * mult^attempt]` drawn
+/// from SplitMix64 (`util::rng`) seeded by `(jitter_seed, salt, attempt)`
+/// — herd-safe like AWS's decorrelated jitter, but reproducible, so chaos
+/// tests replay the exact same schedule. `jitter: false` restores the
+/// plain exponential curve.
 #[derive(Debug, Clone, Copy)]
 pub struct RetryPolicy {
     pub max_retries: u32,
     pub base: Duration,
     pub multiplier: u32,
+    /// Spread each backoff over `[base, full]` instead of sleeping the
+    /// full exponential value.
+    pub jitter: bool,
+    /// Seeds the deterministic jitter stream; forked per (salt, attempt).
+    pub jitter_seed: u64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> RetryPolicy {
-        RetryPolicy { max_retries: 4, base: Duration::from_micros(200), multiplier: 2 }
+        RetryPolicy {
+            max_retries: 4,
+            base: Duration::from_micros(200),
+            multiplier: 2,
+            jitter: true,
+            jitter_seed: 0x414c_5354, // "ALST"
+        }
     }
 }
 
 impl RetryPolicy {
-    /// Backoff before retry number `attempt` (0-based): `base * mult^attempt`.
+    /// Undithered backoff ceiling before retry number `attempt` (0-based):
+    /// `base * mult^attempt`.
     pub fn backoff(&self, attempt: u32) -> Duration {
         self.base * self.multiplier.saturating_pow(attempt)
+    }
+
+    /// The sleep actually taken before retry `attempt`: the jittered point
+    /// in `[base, backoff(attempt)]` (or the ceiling itself with jitter
+    /// off). `salt` decorrelates concurrent retriers — callers pass a
+    /// stable site/rank tag so two ranks backing off from the same fault
+    /// don't re-collide, while the same (seed, salt, attempt) triple
+    /// always sleeps the same duration.
+    pub fn backoff_for(&self, attempt: u32, salt: u64) -> Duration {
+        let full = self.backoff(attempt);
+        if !self.jitter || full <= self.base {
+            return full;
+        }
+        let mut rng = crate::util::rng::Rng::new(
+            self.jitter_seed
+                ^ salt.wrapping_mul(0xA24B_AED4_963E_E407)
+                ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let span = (full - self.base).as_nanos() as u64;
+        self.base + Duration::from_nanos((rng.uniform() * span as f64) as u64)
     }
 }
 
@@ -370,18 +416,24 @@ pub fn corrupt_f32s(xs: &mut [f32], seed: u64) {
 // ---------------------------------------------------------------------------
 
 /// Record one retry on the `Fault` trace lane and sleep out the backoff.
+/// `injector: None` is the real-fault path (wire errors retried without a
+/// chaos source armed): the pause and span still happen, only the
+/// injector's retry counter has nobody to tell.
 pub fn retry_pause(
     tracer: &Tracer,
-    injector: &FaultInjector,
+    injector: Option<&FaultInjector>,
     retry: &RetryPolicy,
     rank: Option<usize>,
     attempt: u32,
 ) {
-    injector.note_retry();
-    let backoff = retry.backoff(attempt);
+    if let Some(inj) = injector {
+        inj.note_retry();
+    }
+    let rank = rank.or(injector.map(|i| i.plan().rank));
+    let backoff = retry.backoff_for(attempt, rank.unwrap_or(0) as u64);
     {
         let mut sp = tracer.span(Category::Fault, "retry_backoff");
-        if let Some(r) = rank.or(Some(injector.plan().rank)) {
+        if let Some(r) = rank {
             sp.set_rank(r);
         }
         sp.set_dur(backoff);
@@ -413,7 +465,7 @@ pub fn site_gate(
                 if attempt >= retry.max_retries {
                     return Err(AlstError::from_kind(kind, site, rank));
                 }
-                retry_pause(tracer, inj, retry, Some(rank), attempt);
+                retry_pause(tracer, Some(inj.as_ref()), retry, Some(rank), attempt);
                 attempt += 1;
             }
         }
@@ -515,10 +567,43 @@ mod tests {
 
     #[test]
     fn retry_policy_backoff_is_exponential() {
-        let r = RetryPolicy { max_retries: 3, base: Duration::from_micros(100), multiplier: 2 };
+        let r = RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_micros(100),
+            multiplier: 2,
+            ..Default::default()
+        };
         assert_eq!(r.backoff(0), Duration::from_micros(100));
         assert_eq!(r.backoff(1), Duration::from_micros(200));
         assert_eq!(r.backoff(3), Duration::from_micros(800));
+    }
+
+    #[test]
+    fn jittered_backoff_is_bounded_deterministic_and_decorrelated() {
+        let r = RetryPolicy {
+            max_retries: 4,
+            base: Duration::from_micros(100),
+            multiplier: 2,
+            jitter: true,
+            jitter_seed: 42,
+        };
+        for attempt in 0..4u32 {
+            let d = r.backoff_for(attempt, 1);
+            assert!(d >= r.base, "jitter never sleeps under base");
+            assert!(d <= r.backoff(attempt), "jitter never exceeds the ceiling");
+            // deterministic: same (seed, salt, attempt) → same sleep
+            assert_eq!(d, r.backoff_for(attempt, 1));
+        }
+        // attempt 0's range is degenerate: [base, base]
+        assert_eq!(r.backoff_for(0, 9), r.base);
+        // different salts (ranks) decorrelate the later attempts
+        assert_ne!(r.backoff_for(3, 0), r.backoff_for(3, 1));
+        // different seeds decorrelate too
+        let r2 = RetryPolicy { jitter_seed: 43, ..r };
+        assert_ne!(r.backoff_for(3, 1), r2.backoff_for(3, 1));
+        // jitter off restores the plain exponential curve
+        let plain = RetryPolicy { jitter: false, ..r };
+        assert_eq!(plain.backoff_for(3, 1), plain.backoff(3));
     }
 
     #[test]

@@ -8,6 +8,16 @@
 //! Byte counts are asserted against the closed-form volumes, and the
 //! roofline model turns them into modeled wire time.
 //!
+//! Since the transport PR the relayout is no longer a bare `memcpy`: each
+//! collective moves its payload as checksummed frames through a
+//! [`transport::Transport`] — in-process queues by default
+//! ([`transport::LocalTransport`], pinned bit-identical to the historical
+//! behavior), or real Unix-domain sockets between spawned rank processes
+//! ([`transport::SocketTransport`]), where a SIGKILLed worker, a torn
+//! frame, or an expired heartbeat surfaces through the same typed
+//! [`faults::AlstError`] taxonomy the simulated faults use (DESIGN.md
+//! §Transport has the mapping table).
+//!
 //! Buffer discipline: every collective has an `_into` variant that writes
 //! its output into `ScratchArena`-recycled buffers and accumulates in
 //! place — at steady state the simulated wire allocates nothing (the
@@ -32,6 +42,7 @@
 //! span==ledger pairing survives chaos runs bit-exactly.
 
 pub mod faults;
+pub mod transport;
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -39,6 +50,10 @@ use std::time::Duration;
 use anyhow::Result;
 
 pub use faults::{AlstError, FaultInjector, FaultKind, FaultPlan, FaultSite, RetryPolicy};
+pub use transport::{
+    Deadline, LocalTransport, SocketOptions, SocketTransport, Transport, TransportKind,
+    WorkerFailMode, WorkerFailure,
+};
 
 use faults::{checksum_chain, checksum_f32s, corrupt_f32s, lock_clean};
 
@@ -83,17 +98,36 @@ pub struct Group {
     /// checksums are never computed.
     injector: Option<Arc<FaultInjector>>,
     retry: RetryPolicy,
+    /// Frame carrier. Every payload collective moves its bytes as framed
+    /// roundtrips through this — `LocalTransport` (in-process queues,
+    /// bit-identical home of the historical behavior) by default, or
+    /// `SocketTransport` (spawned rank processes over Unix sockets). The
+    /// ledger, Collective spans, and retry gates above it are
+    /// transport-agnostic.
+    transport: Arc<dyn Transport>,
+    /// Deadline budget for one transport roundtrip; an expiry surfaces as
+    /// retryable `Transient { site: Wire }` instead of a hung step.
+    op_timeout: Duration,
 }
 
 impl Group {
     pub fn new(world: usize) -> Group {
+        Group::with_transport(world, LocalTransport::new(world))
+    }
+
+    /// A group whose frames ride a caller-provided transport (socket mode
+    /// or a test double). `transport.world()` must match.
+    pub fn with_transport(world: usize, transport: Arc<dyn Transport>) -> Group {
         assert!(world >= 1);
+        assert_eq!(transport.world(), world, "transport world mismatch");
         Group {
             world,
             stats: Mutex::default(),
             tracer: Tracer::off(),
             injector: None,
             retry: RetryPolicy::default(),
+            transport,
+            op_timeout: Duration::from_secs(30),
         }
     }
 
@@ -120,6 +154,28 @@ impl Group {
         self.retry = retry;
     }
 
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// The frame carrier under this group's collectives.
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.kind()
+    }
+
+    /// Bound every transport roundtrip (send + matching recv) by `t`.
+    pub fn set_op_timeout(&mut self, t: Duration) {
+        self.op_timeout = t;
+    }
+
+    pub fn op_timeout(&self) -> Duration {
+        self.op_timeout
+    }
+
     pub fn stats(&self) -> CommStats {
         lock_clean(&self.stats).clone()
     }
@@ -132,15 +188,14 @@ impl Group {
 
     /// Drive one collective through the retry loop: each attempt sees
     /// whether the injector fired at this op index; retryable failures
-    /// (transient, checksum mismatch) back off exponentially on the
-    /// `Fault` lane and re-run; everything else propagates typed.
+    /// (injected transients, checksum mismatches, and *real* wire faults
+    /// — recv deadline expiry, torn frames — which need no injector) back
+    /// off with jitter on the `Fault` lane and re-run; everything else
+    /// propagates typed.
     fn with_faults<T>(&self, mut attempt: impl FnMut(Option<FaultKind>) -> Result<T>) -> Result<T> {
-        let Some(inj) = &self.injector else {
-            return attempt(None);
-        };
         let mut tries = 0u32;
         loop {
-            let kind = inj.check(FaultSite::Collective, None);
+            let kind = self.injector.as_ref().and_then(|inj| inj.check(FaultSite::Collective, None));
             match attempt(kind) {
                 Ok(v) => return Ok(v),
                 Err(e) => {
@@ -150,7 +205,13 @@ impl Group {
                     if !retryable || tries >= self.retry.max_retries {
                         return Err(e);
                     }
-                    faults::retry_pause(&self.tracer, inj, &self.retry, None, tries);
+                    faults::retry_pause(
+                        &self.tracer,
+                        self.injector.as_deref(),
+                        &self.retry,
+                        None,
+                        tries,
+                    );
                     tries += 1;
                 }
             }
@@ -165,10 +226,12 @@ impl Group {
         self.injector.as_ref().map_or(0, |i| i.plan().seed)
     }
 
-    /// Faults that strike *before* any data moves. `CorruptPayload` is
-    /// not one of them — it damages the payload post-compute and is
-    /// handled by the checksum verify.
+    /// Faults that strike *before* any data moves: a dead transport peer
+    /// (real, detected via heartbeat/EOF) or an injected pre-wire fault.
+    /// `CorruptPayload` is not one of them — it damages the payload
+    /// post-compute and is handled by the checksum verify.
     fn gate(&self, fault: Option<FaultKind>) -> Result<(), AlstError> {
+        self.transport.check_peers()?;
         match fault {
             Some(FaultKind::Transient) => Err(AlstError::Transient {
                 site: FaultSite::Collective,
@@ -241,6 +304,26 @@ impl Group {
         }
     }
 
+    // -- wire ------------------------------------------------------------
+
+    /// One framed roundtrip: rank `src`'s payload crosses the transport
+    /// (through rank `src`'s process in socket mode) and lands in `out`.
+    /// Send and matching recv share one deadline, so a hung peer becomes
+    /// a typed `Transient { site: Wire }` instead of a stuck step.
+    fn wire(&self, src: usize, dst: usize, payload: &[f32], out: &mut [f32]) -> Result<(), AlstError> {
+        let deadline = Deadline::after(self.op_timeout);
+        let frame = self.transport.send(src, dst, payload, deadline)?;
+        self.transport.recv_into(src, dst, frame, out, deadline)
+    }
+
+    /// `wire` where the payload buffer is also the destination (reduce
+    /// outputs, all-reduce accumulators).
+    fn wire_inplace(&self, src: usize, dst: usize, buf: &mut [f32]) -> Result<(), AlstError> {
+        let deadline = Deadline::after(self.op_timeout);
+        let frame = self.transport.send(src, dst, buf, deadline)?;
+        self.transport.recv_into(src, dst, frame, buf, deadline)
+    }
+
     // -- silent ledger (no spans; the public surface pairs each increment
     //    with exactly one Collective span) --------------------------------
     fn ledger_gather(&self, bytes: u64) {
@@ -284,9 +367,14 @@ impl Group {
         self.with_faults(|fault| {
             self.gate(fault)?;
             let mut span = self.tracer.span(Category::Collective, "all_gather");
-            let mut out = Vec::with_capacity(total);
-            for s in shards {
-                out.extend_from_slice(s);
+            let mut out = vec![0.0f32; total];
+            let mut off = 0;
+            for (src, s) in shards.iter().enumerate() {
+                if let Err(e) = self.wire(src, src, s, &mut out[off..off + s.len()]) {
+                    span.cancel();
+                    return Err(e.into());
+                }
+                off += s.len();
             }
             if let Err(e) = self.verify_payload(fault, &mut out) {
                 span.cancel();
@@ -308,8 +396,12 @@ impl Group {
             let mut span = self.tracer.span(Category::Collective, "all_gather");
             let mut out = arena.take_f32(total);
             let mut off = 0;
-            for s in shards {
-                out[off..off + s.len()].copy_from_slice(s);
+            for (src, s) in shards.iter().enumerate() {
+                if let Err(e) = self.wire(src, src, s, &mut out[off..off + s.len()]) {
+                    span.cancel();
+                    arena.recycle_f32(out);
+                    return Err(e.into());
+                }
                 off += s.len();
             }
             if let Err(e) = self.verify_payload(fault, &mut out) {
@@ -358,6 +450,16 @@ impl Group {
                 }
                 out.push(dst);
             }
+            // Each reduced shard crosses the wire once, relayed via the
+            // rank that holds the last partial in the ring schedule.
+            for r in 0..self.world {
+                let src_rank = (r + self.world - 1) % self.world;
+                if let Err(e) = self.wire_inplace(src_rank, r, &mut out[r]) {
+                    span.cancel();
+                    Group::recycle_failed(arena, out);
+                    return Err(e.into());
+                }
+            }
             if let Err(e) = self.verify_payloads(fault, &mut out) {
                 span.cancel();
                 Group::recycle_failed(arena, out);
@@ -384,12 +486,20 @@ impl Group {
             self.gate(fault)?;
             let mut span = self.tracer.span(Category::Collective, "all_to_all");
             let mut out = Vec::with_capacity(self.world);
+            for _ in 0..self.world {
+                out.push(arena.take_f32(per_rank));
+            }
+            // world² frames: block (r → d) travels through rank r.
             for d in 0..self.world {
-                let mut dst = arena.take_f32(per_rank);
                 for (r, s) in sends.iter().enumerate() {
-                    dst[r * blk..(r + 1) * blk].copy_from_slice(&s[d * blk..(d + 1) * blk]);
+                    if let Err(e) =
+                        self.wire(r, d, &s[d * blk..(d + 1) * blk], &mut out[d][r * blk..(r + 1) * blk])
+                    {
+                        span.cancel();
+                        Group::recycle_failed(arena, out);
+                        return Err(e.into());
+                    }
                 }
-                out.push(dst);
             }
             if let Err(e) = self.verify_payloads(fault, &mut out) {
                 span.cancel();
@@ -436,13 +546,19 @@ impl Group {
             let mut bytes = 0usize;
             let mut out = Vec::with_capacity(self.world);
             for dst in 0..self.world {
-                let src = sends[(dst + self.world - shift) % self.world];
+                let src_rank = (dst + self.world - shift) % self.world;
+                let src = sends[src_rank];
                 if src.is_empty() {
                     out.push(Vec::new());
                     continue;
                 }
                 let mut buf = arena.take_f32(src.len());
-                buf.copy_from_slice(src);
+                if let Err(e) = self.wire(src_rank, dst, src, &mut buf) {
+                    arena.recycle_f32(buf);
+                    span.cancel();
+                    Group::recycle_failed(arena, out);
+                    return Err(e.into());
+                }
                 bytes += src.len() * 4;
                 out.push(buf);
             }
@@ -465,7 +581,18 @@ impl Group {
         self.with_faults(|fault| {
             self.gate(fault)?;
             let mut span = self.tracer.span(Category::Collective, "all_reduce_scalars");
-            let mut sum = [vals.iter().sum::<f32>()];
+            // Every rank's scalar crosses the wire to the root; summing in
+            // rank order keeps the result bit-identical to `iter().sum()`.
+            let mut acc = 0.0f32;
+            let mut got = [0.0f32];
+            for (r, v) in vals.iter().enumerate() {
+                if let Err(e) = self.wire(r, 0, &[*v], &mut got) {
+                    span.cancel();
+                    return Err(e.into());
+                }
+                acc += got[0];
+            }
+            let mut sum = [acc];
             if let Err(e) = self.verify_payload(fault, &mut sum) {
                 span.cancel();
                 return Err(e.into());
@@ -522,6 +649,13 @@ impl Group {
                     *d += s;
                 }
             }
+            // One roundtrip of the reduced tensor stands in for the ring's
+            // 2(w-1)/w passes; the ledger keeps the logical size below.
+            if let Err(e) = self.wire_inplace(self.world - 1, 0, &mut acc) {
+                span.cancel();
+                arena.recycle_f32(acc);
+                return Err(e.into());
+            }
             if let Err(e) = self.verify_payload(fault, &mut acc) {
                 span.cancel();
                 arena.recycle_f32(acc);
@@ -558,6 +692,9 @@ impl Group {
         ledger: fn(&Group, u64),
     ) -> Result<()> {
         self.with_faults(|fault| {
+            // No frames of their own, but a dead peer still invalidates
+            // the op the caller is accounting for.
+            self.transport.check_peers()?;
             if let Some(kind) = fault {
                 return Err(
                     AlstError::from_kind(kind, FaultSite::Collective, self.fault_rank()).into()
@@ -852,6 +989,95 @@ mod tests {
         // the injector is one-shot: the group keeps working after recovery
         assert_eq!(g.all_reduce_scalars(&[1.0, 2.0, 3.0, 4.0]).unwrap(), 10.0);
         assert_eq!(g.stats().ops, 1);
+    }
+
+    // -- transport plumbing -----------------------------------------------
+
+    #[test]
+    fn group_defaults_to_local_transport() {
+        let g = Group::new(2);
+        assert_eq!(g.transport_kind(), TransportKind::Local);
+        assert_eq!(g.transport().world(), 2);
+    }
+
+    #[test]
+    fn real_wire_corruption_is_retried_without_an_injector() {
+        use crate::obs::Tracer;
+        let lt = LocalTransport::new(2);
+        let mut g = Group::with_transport(2, lt.clone());
+        g.set_retry_policy(RetryPolicy {
+            base: std::time::Duration::from_micros(10),
+            ..Default::default()
+        });
+        let tracer = Arc::new(Tracer::new(true));
+        g.set_tracer(tracer.clone());
+        lt.corrupt_next_frames(1);
+        let out = g.all_gather(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0], "retry re-sends the clean payload");
+        let spans = tracer.drain();
+        let faults: Vec<_> = spans.iter().filter(|s| s.cat == Category::Fault).collect();
+        assert_eq!(faults.len(), 1, "one backoff for the corrupted frame");
+        assert_eq!(faults[0].name, "retry_backoff");
+        let collectives = spans.iter().filter(|s| s.cat == Category::Collective).count();
+        assert_eq!(collectives as u64, g.stats().ops, "failed attempt emits no span");
+        assert_eq!(g.stats().ops, 1, "failed attempt ledgers nothing");
+    }
+
+    #[test]
+    fn dead_peer_fails_collectives_and_accounting_with_typed_lost_rank() {
+        let lt = LocalTransport::new(2);
+        let g = Group::with_transport(2, lt.clone());
+        lt.fail_peer(1);
+        let err = g.all_gather(&[&[1.0], &[2.0]]).unwrap_err();
+        match err.downcast_ref::<AlstError>() {
+            Some(AlstError::LostRank { site: FaultSite::Wire, rank: 1 }) => {}
+            other => panic!("expected LostRank over the wire, got {other:?}"),
+        }
+        // account_* entries gate on peer liveness too, frames or not
+        let err = g.account_gather(64).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AlstError>(),
+            Some(AlstError::LostRank { site: FaultSite::Wire, rank: 1 })
+        ));
+        assert_eq!(g.stats().ops, 0, "nothing ledgers against a dead peer");
+        lt.revive_peer(1);
+        assert!(g.all_gather(&[&[1.0], &[2.0]]).is_ok(), "revived peer restores service");
+        assert_eq!(g.stats().ops, 1);
+    }
+
+    #[test]
+    fn socket_group_matches_local_group_bit_for_bit() {
+        let st = SocketTransport::spawn(
+            2,
+            SocketOptions { in_thread: true, ..Default::default() },
+            Tracer::off(),
+        )
+        .unwrap();
+        let sock = Group::with_transport(2, st);
+        let local = Group::new(2);
+        let arena_s = ScratchArena::new();
+        let arena_l = ScratchArena::new();
+        let shards: [&[f32]; 2] = [&[1.5, -0.0, f32::MIN_POSITIVE], &[2.5e-30, 7.0, -3.25]];
+        assert_eq!(
+            sock.all_gather(&shards).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            local.all_gather(&shards).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        let a = sock.all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena_s).unwrap();
+        let b = local.all_to_all(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]], &arena_l).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            sock.reduce_scatter(&[&[1.0, 2.0, 3.0, 4.0], &[0.1, 0.2, 0.3, 0.4]]).unwrap(),
+            local.reduce_scatter(&[&[1.0, 2.0, 3.0, 4.0], &[0.1, 0.2, 0.3, 0.4]]).unwrap(),
+        );
+        assert_eq!(
+            sock.all_reduce_scalars(&[0.1, 0.2]).unwrap().to_bits(),
+            local.all_reduce_scalars(&[0.1, 0.2]).unwrap().to_bits(),
+        );
+        assert_eq!(
+            sock.send_recv(&[&[9.0, 8.0], &[]], 1).unwrap(),
+            local.send_recv(&[&[9.0, 8.0], &[]], 1).unwrap(),
+        );
+        assert_eq!(sock.stats(), local.stats(), "ledger is transport-agnostic");
     }
 
     #[test]

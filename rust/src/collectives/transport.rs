@@ -1,0 +1,1421 @@
+//! The transport seam under `Group`: framed, checksummed, deadline-bounded
+//! point-to-point moves (DESIGN.md §Transport).
+//!
+//! A collective in this codebase is a deterministic relayout with a byte
+//! ledger; the [`Transport`] trait is where those bytes actually travel.
+//! Every frame is length-prefixed and carries an FNV-1a digest (the same
+//! per-transfer convention the offload engine's checked copies use), every
+//! blocking call takes an explicit [`Deadline`], and peer death is a typed
+//! signal (`AlstError::LostRank`), never a hang.
+//!
+//! Two implementations:
+//!
+//! * [`LocalTransport`] — in-process queues behind a mutex+condvar, the
+//!   refactored home of the previous behavior. Pinned bit-identical: a
+//!   frame's f32 payload round-trips untouched, so every pre-transport
+//!   equivalence test still holds over it.
+//! * [`SocketTransport`] — Unix-domain sockets to spawned rank worker
+//!   processes (`alst rank-worker`). The coordinator keeps the god view
+//!   (all ranks' buffers, as everywhere else in the crate); each frame is
+//!   relayed through its *source* rank's process and echoed back, so the
+//!   payload genuinely crosses two process boundaries and a SIGKILLed,
+//!   truncating, or hung worker produces a real socket-level failure. A
+//!   liveness heartbeat runs on an idle side-channel per rank: a peer
+//!   that stops beating past `heartbeat_timeout` is declared lost even if
+//!   its data socket never errors — a *hung* peer is distinguished from a
+//!   *slow* one (which keeps beating while ops time out as retryable
+//!   `Transient`s).
+//!
+//! Error mapping (real I/O → `AlstError`, site `Wire`):
+//! ECONNRESET/EPIPE/EOF-at-frame-boundary/heartbeat-expiry → `LostRank`;
+//! deadline or socket timeout → `Transient` (retryable); checksum
+//! mismatch or torn frame (EOF mid-payload) → `CorruptPayload`
+//! (retryable; the retry against a dead peer then surfaces `LostRank`).
+//! `run_resilient` therefore fires identically whether the fault came
+//! from a `FaultInjector` or a killed rank process.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::faults::{checksum_f32s, lock_clean, AlstError, FaultSite};
+use crate::obs::{Category, Tracer};
+
+// ---------------------------------------------------------------------------
+// Deadline
+// ---------------------------------------------------------------------------
+
+/// An absolute time bound on a blocking call. `never()` is the unbounded
+/// sentinel (used only by paths that are bounded transitively); everything
+/// on the wire should carry `after(op_timeout)` so a lost peer surfaces as
+/// a typed error instead of a deadlock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Some(Instant::now() + d) }
+    }
+
+    pub fn never() -> Deadline {
+        Deadline { at: None }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.at.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// Time left, saturating at zero. `None` means unbounded.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+
+    /// The value to hand `set_read_timeout`/`set_write_timeout`/`wait_timeout`:
+    /// `None` for unbounded, otherwise the remainder clamped up to 1ms so a
+    /// just-expiring deadline still makes one bounded syscall (passing a
+    /// zero timeout to the socket APIs is an error).
+    pub fn io_timeout(&self) -> Option<Duration> {
+        self.remaining().map(|r| r.max(Duration::from_millis(1)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    Local,
+    Socket,
+}
+
+impl TransportKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<TransportKind, String> {
+        match s {
+            "local" => Ok(TransportKind::Local),
+            "socket" => Ok(TransportKind::Socket),
+            other => Err(format!("unknown transport {other:?} (expected local|socket)")),
+        }
+    }
+}
+
+/// Framed point-to-point transport between `world` ranks. `send` frames a
+/// payload (length prefix + FNV-1a digest) addressed `src → dst` and
+/// returns the frame's sequence number; `recv_into` blocks for exactly
+/// that frame, verifying length and digest. Both are deadline-bounded.
+/// `check_peers` is the liveness gate every collective runs before moving
+/// data: a dead or heartbeat-expired peer is a typed `LostRank`.
+pub trait Transport: Send + Sync + fmt::Debug {
+    fn kind(&self) -> TransportKind;
+
+    fn world(&self) -> usize;
+
+    /// Frame and transmit `payload` from `src` to `dst`. Returns the frame
+    /// sequence number the matching `recv_into` must wait for.
+    fn send(
+        &self,
+        src: usize,
+        dst: usize,
+        payload: &[f32],
+        deadline: Deadline,
+    ) -> std::result::Result<u64, AlstError>;
+
+    /// Receive frame `frame` (from an earlier `send(src, dst, ..)`) into
+    /// `out`, which must match the payload length exactly. Frames older
+    /// than `frame` still in flight (a timed-out attempt's late echo) are
+    /// discarded; a length or digest mismatch is `CorruptPayload`.
+    fn recv_into(
+        &self,
+        src: usize,
+        dst: usize,
+        frame: u64,
+        out: &mut [f32],
+        deadline: Deadline,
+    ) -> std::result::Result<(), AlstError>;
+
+    /// Liveness gate: typed `LostRank` if any peer is dead, closed, or
+    /// heartbeat-expired. Cheap enough to run before every collective.
+    fn check_peers(&self) -> std::result::Result<(), AlstError>;
+
+    /// Frames transmitted via `rank` so far (diagnostics; chaos tests use
+    /// it to aim worker fail points at a mid-step frame index).
+    fn frames_via(&self, rank: usize) -> u64;
+
+    /// Graceful shutdown: workers are told to exit; later ops fail typed.
+    fn close(&self);
+}
+
+fn lost(rank: usize) -> AlstError {
+    AlstError::LostRank { site: FaultSite::Wire, rank }
+}
+
+fn expired(rank: usize) -> AlstError {
+    AlstError::Transient { site: FaultSite::Wire, rank, attempt: 0 }
+}
+
+fn torn(rank: usize, expect: u64, got: u64) -> AlstError {
+    AlstError::CorruptPayload { site: FaultSite::Wire, rank, expect, got }
+}
+
+// ---------------------------------------------------------------------------
+// LocalTransport
+// ---------------------------------------------------------------------------
+
+struct LocalFrame {
+    seq: u64,
+    checksum: u64,
+    payload: Vec<f32>,
+}
+
+/// In-process transport: frames queue between ranks under one mutex, a
+/// condvar wakes blocked receivers, and payload buffers recycle through a
+/// size-keyed pool so steady-state traffic allocates nothing (the caller's
+/// `ScratchArena` accounting is untouched — the pool is transport-private).
+/// Test hooks (`fail_peer`, `corrupt_next_frames`) model peer death and
+/// wire corruption without a chaos injector.
+pub struct LocalTransport {
+    world: usize,
+    queues: Mutex<HashMap<(usize, usize), std::collections::VecDeque<LocalFrame>>>,
+    cv: Condvar,
+    pool: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    seq: AtomicU64,
+    frames: Vec<AtomicU64>,
+    dead: Vec<AtomicBool>,
+    closed: AtomicBool,
+    corrupt_next: AtomicU64,
+}
+
+impl fmt::Debug for LocalTransport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LocalTransport").field("world", &self.world).finish()
+    }
+}
+
+impl LocalTransport {
+    pub fn new(world: usize) -> Arc<LocalTransport> {
+        assert!(world >= 1);
+        Arc::new(LocalTransport {
+            world,
+            queues: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            pool: Mutex::new(HashMap::new()),
+            seq: AtomicU64::new(0),
+            frames: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..world).map(|_| AtomicBool::new(false)).collect(),
+            closed: AtomicBool::new(false),
+            corrupt_next: AtomicU64::new(0),
+        })
+    }
+
+    /// Declare `rank` dead: the typed peer-death signal, locally testable.
+    pub fn fail_peer(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    pub fn revive_peer(&self, rank: usize) {
+        self.dead[rank].store(false, Ordering::SeqCst);
+    }
+
+    /// Flip one bit in each of the next `n` frames *after* the sender
+    /// digested them — wire corruption the receiver's verify must catch.
+    pub fn corrupt_next_frames(&self, n: u64) {
+        self.corrupt_next.store(n, Ordering::SeqCst);
+    }
+
+    fn take_pooled(&self, len: usize) -> Vec<f32> {
+        let mut pool = lock_clean(&self.pool);
+        pool.get_mut(&len).and_then(Vec::pop).unwrap_or_else(|| vec![0.0; len])
+    }
+
+    fn reclaim(&self, buf: Vec<f32>) {
+        if !buf.is_empty() {
+            lock_clean(&self.pool).entry(buf.len()).or_default().push(buf);
+        }
+    }
+
+    fn wait_queues<'a>(
+        &'a self,
+        guard: MutexGuard<'a, HashMap<(usize, usize), std::collections::VecDeque<LocalFrame>>>,
+        timeout: Option<Duration>,
+    ) -> (MutexGuard<'a, HashMap<(usize, usize), std::collections::VecDeque<LocalFrame>>>, bool)
+    {
+        match timeout {
+            Some(t) => {
+                let (g, r) = self
+                    .cv
+                    .wait_timeout(guard, t)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                (g, r.timed_out())
+            }
+            None => {
+                let g = self.cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner);
+                (g, false)
+            }
+        }
+    }
+
+    fn peer_gate(&self, src: usize, dst: usize) -> std::result::Result<(), AlstError> {
+        for r in [src, dst] {
+            if self.dead[r].load(Ordering::SeqCst) {
+                return Err(lost(r));
+            }
+        }
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(lost(dst));
+        }
+        Ok(())
+    }
+}
+
+impl Transport for LocalTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Local
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(
+        &self,
+        src: usize,
+        dst: usize,
+        payload: &[f32],
+        _deadline: Deadline,
+    ) -> std::result::Result<u64, AlstError> {
+        assert!(src < self.world && dst < self.world);
+        self.peer_gate(src, dst)?;
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let checksum = checksum_f32s(payload);
+        let mut buf = self.take_pooled(payload.len());
+        buf.copy_from_slice(payload);
+        if self.corrupt_next.load(Ordering::SeqCst) > 0 && !buf.is_empty() {
+            self.corrupt_next.fetch_sub(1, Ordering::SeqCst);
+            buf[0] = f32::from_bits(buf[0].to_bits() ^ 1);
+        }
+        lock_clean(&self.queues)
+            .entry((src, dst))
+            .or_default()
+            .push_back(LocalFrame { seq, checksum, payload: buf });
+        self.frames[src].fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+        Ok(seq)
+    }
+
+    fn recv_into(
+        &self,
+        src: usize,
+        dst: usize,
+        frame: u64,
+        out: &mut [f32],
+        deadline: Deadline,
+    ) -> std::result::Result<(), AlstError> {
+        // Wait: no matching frame yet. Got/Fail end the scan either way.
+        enum Scan {
+            Got(LocalFrame),
+            Fail(AlstError),
+            Wait,
+        }
+        let entry = loop {
+            self.peer_gate(src, dst)?;
+            let mut stale: Vec<Vec<f32>> = Vec::new();
+            let mut guard = lock_clean(&self.queues);
+            let verdict = {
+                let q = guard.entry((src, dst)).or_default();
+                loop {
+                    match q.front() {
+                        Some(f) if f.seq < frame => {
+                            stale.push(q.pop_front().expect("front exists").payload);
+                        }
+                        Some(f) if f.seq == frame => {
+                            break Scan::Got(q.pop_front().expect("front exists"));
+                        }
+                        // a frame from the future: ours was dropped
+                        Some(f) => break Scan::Fail(torn(src, frame, f.seq)),
+                        None => break Scan::Wait,
+                    }
+                }
+            };
+            let verdict = match verdict {
+                Scan::Wait if deadline.expired() => Scan::Fail(expired(src)),
+                Scan::Wait => {
+                    let (g, _) = self.wait_queues(guard, deadline.io_timeout());
+                    guard = g;
+                    Scan::Wait
+                }
+                v => v,
+            };
+            drop(guard);
+            for buf in stale {
+                self.reclaim(buf);
+            }
+            match verdict {
+                Scan::Got(entry) => break entry,
+                Scan::Fail(e) => return Err(e),
+                Scan::Wait => continue,
+            }
+        };
+        if entry.payload.len() != out.len() {
+            let got = entry.payload.len() as u64;
+            self.reclaim(entry.payload);
+            return Err(torn(src, out.len() as u64, got));
+        }
+        out.copy_from_slice(&entry.payload);
+        let got = checksum_f32s(out);
+        self.reclaim(entry.payload);
+        if got != entry.checksum {
+            return Err(torn(src, entry.checksum, got));
+        }
+        Ok(())
+    }
+
+    fn check_peers(&self) -> std::result::Result<(), AlstError> {
+        for (r, d) in self.dead.iter().enumerate() {
+            if d.load(Ordering::SeqCst) {
+                return Err(lost(r));
+            }
+        }
+        Ok(())
+    }
+
+    fn frames_via(&self, rank: usize) -> u64 {
+        self.frames[rank].load(Ordering::SeqCst)
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire format (shared by SocketTransport and the rank worker)
+// ---------------------------------------------------------------------------
+
+const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"ALSF");
+const HEADER_LEN: usize = 25; // magic u32 | kind u8 | src u16 | dst u16 | seq u64 | len u64
+
+const KIND_DATA: u8 = 0;
+const KIND_SHUTDOWN: u8 = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FrameHeader {
+    kind: u8,
+    src: u16,
+    dst: u16,
+    seq: u64,
+    /// Payload byte count (f32 little-endian stream; digest follows it).
+    len: u64,
+}
+
+impl FrameHeader {
+    fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        b[4] = self.kind;
+        b[5..7].copy_from_slice(&self.src.to_le_bytes());
+        b[7..9].copy_from_slice(&self.dst.to_le_bytes());
+        b[9..17].copy_from_slice(&self.seq.to_le_bytes());
+        b[17..25].copy_from_slice(&self.len.to_le_bytes());
+        b
+    }
+
+    fn decode(b: &[u8; HEADER_LEN]) -> Option<FrameHeader> {
+        if u32::from_le_bytes(b[0..4].try_into().expect("4 bytes")) != FRAME_MAGIC {
+            return None;
+        }
+        Some(FrameHeader {
+            kind: b[4],
+            src: u16::from_le_bytes(b[5..7].try_into().expect("2 bytes")),
+            dst: u16::from_le_bytes(b[7..9].try_into().expect("2 bytes")),
+            seq: u64::from_le_bytes(b[9..17].try_into().expect("8 bytes")),
+            len: u64::from_le_bytes(b[17..25].try_into().expect("8 bytes")),
+        })
+    }
+}
+
+fn encode_payload(payload: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(payload.len() * 4);
+    for x in payload {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+fn decode_payload(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len() * 4);
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes(c.try_into().expect("4 bytes"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side (runs in the spawned rank process — or a thread in tests)
+// ---------------------------------------------------------------------------
+
+/// How a worker misbehaves, for deterministic *real* fault injection: the
+/// failure happens in another process, on a real socket, at a chosen frame
+/// index — the socket-era analogue of `FaultPlan`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerFailMode {
+    /// Die without echoing (process mode: hard exit, the coordinator sees
+    /// EOF at a frame boundary → `LostRank`).
+    Kill,
+    /// Echo half the payload, then die (torn frame → `CorruptPayload`,
+    /// whose retry against the dead peer surfaces `LostRank`).
+    Truncate,
+    /// Flip one payload bit in a single echo, then behave (the digest
+    /// catches it → `CorruptPayload`, absorbed by retry in place).
+    CorruptOnce,
+    /// Keep the data socket alive but stop heartbeating: the hung-peer
+    /// case only the side-channel can detect.
+    StallHeartbeat,
+}
+
+impl std::str::FromStr for WorkerFailMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<WorkerFailMode, String> {
+        match s {
+            "kill" => Ok(WorkerFailMode::Kill),
+            "truncate" => Ok(WorkerFailMode::Truncate),
+            "corrupt-once" => Ok(WorkerFailMode::CorruptOnce),
+            "stall-heartbeat" => Ok(WorkerFailMode::StallHeartbeat),
+            other => Err(format!("unknown fail mode {other:?}")),
+        }
+    }
+}
+
+impl WorkerFailMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WorkerFailMode::Kill => "kill",
+            WorkerFailMode::Truncate => "truncate",
+            WorkerFailMode::CorruptOnce => "corrupt-once",
+            WorkerFailMode::StallHeartbeat => "stall-heartbeat",
+        }
+    }
+}
+
+/// One planned worker failure: `rank`'s worker misbehaves after echoing
+/// (or beating, for `StallHeartbeat`) `after` frames/beats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerFailure {
+    pub rank: usize,
+    pub mode: WorkerFailMode,
+    pub after: u64,
+}
+
+/// Everything a rank worker needs; built from CLI args by `alst
+/// rank-worker` (process mode) or passed directly (in-thread mode).
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub rank: usize,
+    pub main_path: PathBuf,
+    pub hb_path: PathBuf,
+    pub hb_interval: Duration,
+    pub connect_timeout: Duration,
+    /// This worker's own failure plan (already filtered to its rank).
+    pub failure: Option<WorkerFailure>,
+    /// Process mode: `Kill`/`Truncate` hard-exit the process. Thread mode
+    /// returns instead (closing the sockets models the death).
+    pub exit_hard: bool,
+}
+
+fn connect_retry(path: &Path, timeout: Duration) -> io::Result<UnixStream> {
+    let start = Instant::now();
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if start.elapsed() >= timeout {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// The worker loop: connect both channels, pump heartbeats from a side
+/// thread, and echo every data frame back — each echo is the "wire
+/// delivery" leg of a frame that already crossed one real process
+/// boundary on the way in. Returns when the coordinator shuts down the
+/// channel (or on a planned failure).
+pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
+    let mut main = connect_retry(&cfg.main_path, cfg.connect_timeout)
+        .with_context(|| format!("rank {} connect {}", cfg.rank, cfg.main_path.display()))?;
+    let hb = connect_retry(&cfg.hb_path, cfg.connect_timeout)
+        .with_context(|| format!("rank {} connect {}", cfg.rank, cfg.hb_path.display()))?;
+
+    let stall_after = match cfg.failure {
+        Some(WorkerFailure { mode: WorkerFailMode::StallHeartbeat, after, .. }) => Some(after),
+        _ => None,
+    };
+    let hb_interval = cfg.hb_interval;
+    // The heartbeat pump owns its stream; it dies with the connection.
+    std::thread::spawn(move || {
+        let mut hb = hb;
+        let mut beat = 0u64;
+        loop {
+            if stall_after.is_some_and(|n| beat >= n) {
+                // hung, not dead: the data socket stays open while the
+                // side-channel falls silent
+                std::thread::sleep(Duration::from_secs(3600));
+                continue;
+            }
+            if hb.write_all(&beat.to_le_bytes()).is_err() || hb.flush().is_err() {
+                return;
+            }
+            beat += 1;
+            std::thread::sleep(hb_interval);
+        }
+    });
+
+    let mut frames = 0u64;
+    let mut payload: Vec<u8> = Vec::new();
+    loop {
+        let mut hdr_bytes = [0u8; HEADER_LEN];
+        if main.read_exact(&mut hdr_bytes).is_err() {
+            return Ok(()); // coordinator gone
+        }
+        let Some(hdr) = FrameHeader::decode(&hdr_bytes) else {
+            anyhow::bail!("rank {}: bad frame magic", cfg.rank);
+        };
+        if hdr.kind == KIND_SHUTDOWN {
+            return Ok(());
+        }
+        payload.resize(hdr.len as usize, 0);
+        main.read_exact(&mut payload).context("payload")?;
+        let mut digest = [0u8; 8];
+        main.read_exact(&mut digest).context("digest")?;
+        frames += 1;
+        if let Some(f) = cfg.failure {
+            if frames > f.after {
+                match f.mode {
+                    WorkerFailMode::Kill => {
+                        if cfg.exit_hard {
+                            std::process::exit(9);
+                        }
+                        return Ok(());
+                    }
+                    WorkerFailMode::Truncate => {
+                        let _ = main.write_all(&hdr_bytes);
+                        let _ = main.write_all(&payload[..payload.len() / 2]);
+                        let _ = main.flush();
+                        if cfg.exit_hard {
+                            std::process::exit(9);
+                        }
+                        return Ok(());
+                    }
+                    WorkerFailMode::CorruptOnce => {
+                        if frames == f.after + 1 && !payload.is_empty() {
+                            payload[0] ^= 1;
+                        }
+                    }
+                    WorkerFailMode::StallHeartbeat => {}
+                }
+            }
+        }
+        main.write_all(&hdr_bytes).context("echo header")?;
+        main.write_all(&payload).context("echo payload")?;
+        main.write_all(&digest).context("echo digest")?;
+        main.flush().context("echo flush")?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SocketTransport (coordinator side)
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`SocketTransport::spawn`]. All timeouts are deliberately
+/// conservative defaults; chaos tests shrink them so "no test hangs past
+/// its deadline" is enforced by construction.
+#[derive(Debug, Clone)]
+pub struct SocketOptions {
+    /// Worker binary (must understand `rank-worker`). `None`: the
+    /// `ALST_WORKER_BIN` env var, else `current_exe()` — integration
+    /// tests pass `env!("CARGO_BIN_EXE_alst")` explicitly.
+    pub worker_bin: Option<PathBuf>,
+    /// Bound on worker spawn/connect/accept during `spawn` and `heal`.
+    pub connect_timeout: Duration,
+    /// Worker heartbeat period on the side-channel.
+    pub heartbeat_interval: Duration,
+    /// Silence on the side-channel past this declares the peer hung.
+    pub heartbeat_timeout: Duration,
+    /// Deterministic real-fault plan shipped to one worker.
+    pub failure: Option<WorkerFailure>,
+    /// Run workers as in-process threads over the same real sockets
+    /// (unit tests); `false` spawns rank processes.
+    pub in_thread: bool,
+}
+
+impl Default for SocketOptions {
+    fn default() -> SocketOptions {
+        SocketOptions {
+            worker_bin: None,
+            connect_timeout: Duration::from_secs(10),
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_timeout: Duration::from_secs(5),
+            failure: None,
+            in_thread: false,
+        }
+    }
+}
+
+enum WorkerHandle {
+    Process(Child),
+    Thread(std::thread::JoinHandle<()>),
+}
+
+impl fmt::Debug for WorkerHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkerHandle::Process(c) => write!(f, "Process(pid {})", c.id()),
+            WorkerHandle::Thread(_) => write!(f, "Thread"),
+        }
+    }
+}
+
+struct HbState {
+    stream: UnixStream,
+    /// Bytes of a beat received so far (beats are 8-byte frames; a
+    /// nonblocking drain can split one).
+    partial: usize,
+    last_beat: Instant,
+    beats: u64,
+}
+
+struct Peer {
+    main: Mutex<UnixStream>,
+    hb: Mutex<HbState>,
+    child: Mutex<Option<WorkerHandle>>,
+    dead: AtomicBool,
+    /// Framing lost (timeout mid-frame, bad magic, torn payload): the
+    /// channel can't be trusted even though the process may live. `heal`
+    /// respawns tainted ranks along with dead ones.
+    tainted: AtomicBool,
+    frames: AtomicU64,
+}
+
+static SOCK_DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Coordinator side of the socket transport: one spawned worker, one data
+/// socket, and one heartbeat socket per rank. See the module docs for the
+/// relay model and error mapping.
+pub struct SocketTransport {
+    world: usize,
+    opts: SocketOptions,
+    dir: PathBuf,
+    peers: Vec<Peer>,
+    /// Path generation per rank, bumped on heal so rebinds never collide.
+    gens: Vec<AtomicU64>,
+    seq: AtomicU64,
+    tracer: Arc<Tracer>,
+    closed: AtomicBool,
+}
+
+impl fmt::Debug for SocketTransport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SocketTransport")
+            .field("world", &self.world)
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+fn accept_deadline(listener: &UnixListener, deadline: Deadline) -> io::Result<UnixStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if deadline.expired() {
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "accept timed out"));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Real I/O error → the typed taxonomy. `mid_frame` distinguishes a torn
+/// frame (EOF after the header landed — retryable `CorruptPayload`) from
+/// a clean connection loss (`LostRank`).
+fn map_io(kind: io::ErrorKind, rank: usize, mid_frame: bool) -> AlstError {
+    use io::ErrorKind::*;
+    match kind {
+        TimedOut | WouldBlock => expired(rank),
+        UnexpectedEof if mid_frame => torn(rank, 0, 0),
+        UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe | NotConnected => {
+            lost(rank)
+        }
+        _ => expired(rank),
+    }
+}
+
+impl SocketTransport {
+    /// Bind sockets, launch one worker per rank, and wait (bounded) for
+    /// both channels of each to connect.
+    pub fn spawn(
+        world: usize,
+        opts: SocketOptions,
+        tracer: Arc<Tracer>,
+    ) -> Result<Arc<SocketTransport>> {
+        assert!(world >= 1);
+        let dir = std::env::temp_dir().join(format!(
+            "alst-sock-{}-{}",
+            std::process::id(),
+            SOCK_DIR_ID.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).context("create socket dir")?;
+        let mut peers = Vec::with_capacity(world);
+        for rank in 0..world {
+            peers.push(launch_rank(&dir, rank, 0, &opts, opts.failure)?);
+        }
+        Ok(Arc::new(SocketTransport {
+            world,
+            opts,
+            dir,
+            peers,
+            gens: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            seq: AtomicU64::new(0),
+            tracer,
+            closed: AtomicBool::new(false),
+        }))
+    }
+
+    pub fn heartbeat_timeout(&self) -> Duration {
+        self.opts.heartbeat_timeout
+    }
+
+    /// Heartbeats seen from `rank` (diagnostics).
+    pub fn beats_from(&self, rank: usize) -> u64 {
+        lock_clean(&self.peers[rank].hb).beats
+    }
+
+    /// SIGKILL `rank`'s worker process (no-op for in-thread workers): the
+    /// genuinely external kill the acceptance contract names. The death is
+    /// then *detected*, not assumed — EOF on the data socket or silence on
+    /// the side-channel.
+    pub fn kill_rank(&self, rank: usize) {
+        if let Some(WorkerHandle::Process(child)) = lock_clean(&self.peers[rank].child).as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Respawn every dead or tainted rank with a clean worker (no failure
+    /// plan — the replacement is healthy) on fresh socket paths. The
+    /// recovery path runs this before restoring a snapshot, so a killed
+    /// rank process heals the same way a simulated `LostRank` disarms.
+    /// Returns the number of ranks respawned.
+    pub fn heal(&self) -> Result<usize> {
+        let mut healed = 0;
+        for rank in 0..self.world {
+            let p = &self.peers[rank];
+            if !p.dead.load(Ordering::SeqCst) && !p.tainted.load(Ordering::SeqCst) {
+                continue;
+            }
+            reap(&mut *lock_clean(&p.child));
+            let gen = self.gens[rank].fetch_add(1, Ordering::SeqCst) + 1;
+            let fresh = launch_rank(&self.dir, rank, gen, &self.opts, None)?;
+            *lock_clean(&p.main) = fresh.main.into_inner().expect("fresh mutex");
+            *lock_clean(&p.hb) = fresh.hb.into_inner().expect("fresh mutex");
+            *lock_clean(&p.child) = fresh.child.into_inner().expect("fresh mutex");
+            p.frames.store(0, Ordering::SeqCst);
+            p.tainted.store(false, Ordering::SeqCst);
+            p.dead.store(false, Ordering::SeqCst);
+            healed += 1;
+        }
+        Ok(healed)
+    }
+
+    fn mark(&self, rank: usize, e: &AlstError) {
+        match e {
+            AlstError::LostRank { .. } => {
+                self.peers[rank].dead.store(true, Ordering::SeqCst);
+            }
+            _ => {
+                self.peers[rank].tainted.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Bind, spawn, accept one rank's worker (generation `gen` of its paths).
+fn launch_rank(
+    dir: &Path,
+    rank: usize,
+    gen: u64,
+    opts: &SocketOptions,
+    failure: Option<WorkerFailure>,
+) -> Result<Peer> {
+    let main_path = dir.join(format!("r{rank}-g{gen}.main"));
+    let hb_path = dir.join(format!("r{rank}-g{gen}.hb"));
+    let main_listener = UnixListener::bind(&main_path)
+        .with_context(|| format!("bind {}", main_path.display()))?;
+    let hb_listener =
+        UnixListener::bind(&hb_path).with_context(|| format!("bind {}", hb_path.display()))?;
+    let cfg = WorkerConfig {
+        rank,
+        main_path,
+        hb_path,
+        hb_interval: opts.heartbeat_interval,
+        connect_timeout: opts.connect_timeout,
+        failure: failure.filter(|f| f.rank == rank),
+        exit_hard: !opts.in_thread,
+    };
+    let child = if opts.in_thread {
+        let thread_cfg = cfg.clone();
+        WorkerHandle::Thread(std::thread::spawn(move || {
+            let _ = run_worker(&thread_cfg);
+        }))
+    } else {
+        let bin = match &opts.worker_bin {
+            Some(b) => b.clone(),
+            None => match std::env::var_os("ALST_WORKER_BIN") {
+                Some(v) => PathBuf::from(v),
+                None => std::env::current_exe().context("resolve worker bin")?,
+            },
+        };
+        let mut cmd = Command::new(&bin);
+        cmd.arg("rank-worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--main")
+            .arg(&cfg.main_path)
+            .arg("--hb")
+            .arg(&cfg.hb_path)
+            .arg("--hb-interval-us")
+            .arg(opts.heartbeat_interval.as_micros().to_string())
+            .arg("--connect-timeout-ms")
+            .arg(opts.connect_timeout.as_millis().to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null());
+        if let Some(f) = cfg.failure {
+            cmd.arg("--fail-mode")
+                .arg(f.mode.as_str())
+                .arg("--fail-after")
+                .arg(f.after.to_string());
+        }
+        WorkerHandle::Process(
+            cmd.spawn().with_context(|| format!("spawn worker {}", bin.display()))?,
+        )
+    };
+    let deadline = Deadline::after(opts.connect_timeout);
+    let main = accept_deadline(&main_listener, deadline)
+        .with_context(|| format!("rank {rank} main channel accept"))?;
+    let hb = accept_deadline(&hb_listener, deadline)
+        .with_context(|| format!("rank {rank} heartbeat channel accept"))?;
+    hb.set_nonblocking(true).context("heartbeat nonblocking")?;
+    Ok(Peer {
+        main: Mutex::new(main),
+        hb: Mutex::new(HbState { stream: hb, partial: 0, last_beat: Instant::now(), beats: 0 }),
+        child: Mutex::new(Some(child)),
+        dead: AtomicBool::new(false),
+        tainted: AtomicBool::new(false),
+        frames: AtomicU64::new(0),
+    })
+}
+
+fn reap(handle: &mut Option<WorkerHandle>) {
+    match handle.take() {
+        Some(WorkerHandle::Process(mut child)) => {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        // The thread worker exits on its own once its streams are
+        // replaced/dropped (EOF); joining here could block on a stalled
+        // heartbeat sleeper, so detach.
+        Some(WorkerHandle::Thread(_)) | None => {}
+    }
+}
+
+impl Transport for SocketTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Socket
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(
+        &self,
+        src: usize,
+        dst: usize,
+        payload: &[f32],
+        deadline: Deadline,
+    ) -> std::result::Result<u64, AlstError> {
+        assert!(src < self.world && dst < self.world);
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(lost(src));
+        }
+        let peer = &self.peers[src]; // frames travel via their source rank
+        if peer.dead.load(Ordering::SeqCst) {
+            return Err(lost(src));
+        }
+        if deadline.expired() {
+            return Err(expired(src));
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let hdr = FrameHeader {
+            kind: KIND_DATA,
+            src: src as u16,
+            dst: dst as u16,
+            seq,
+            len: (payload.len() * 4) as u64,
+        };
+        let digest = checksum_f32s(payload);
+        let bytes = encode_payload(payload);
+        let mut stream = lock_clean(&peer.main);
+        stream.set_write_timeout(deadline.io_timeout()).ok();
+        let write = stream
+            .write_all(&hdr.encode())
+            .and_then(|_| stream.write_all(&bytes))
+            .and_then(|_| stream.write_all(&digest.to_le_bytes()))
+            .and_then(|_| stream.flush());
+        if let Err(e) = write {
+            let mapped = map_io(e.kind(), src, false);
+            self.mark(src, &mapped);
+            return Err(mapped);
+        }
+        peer.frames.fetch_add(1, Ordering::SeqCst);
+        Ok(seq)
+    }
+
+    fn recv_into(
+        &self,
+        src: usize,
+        dst: usize,
+        frame: u64,
+        out: &mut [f32],
+        deadline: Deadline,
+    ) -> std::result::Result<(), AlstError> {
+        let peer = &self.peers[src];
+        if peer.dead.load(Ordering::SeqCst) {
+            return Err(lost(src));
+        }
+        let t0 = Instant::now();
+        let result = (|| {
+            let mut stream = lock_clean(&peer.main);
+            let mut scratch: Vec<u8> = Vec::new();
+            loop {
+                if deadline.expired() {
+                    return Err(expired(src));
+                }
+                stream.set_read_timeout(deadline.io_timeout()).ok();
+                let mut hdr_bytes = [0u8; HEADER_LEN];
+                read_exact_or(&mut *stream, &mut hdr_bytes, src, false)?;
+                let Some(hdr) = FrameHeader::decode(&hdr_bytes) else {
+                    return Err(torn(src, FRAME_MAGIC as u64, 0));
+                };
+                scratch.resize(hdr.len as usize, 0);
+                read_exact_or(&mut *stream, &mut scratch, src, true)?;
+                let mut digest_bytes = [0u8; 8];
+                read_exact_or(&mut *stream, &mut digest_bytes, src, true)?;
+                if hdr.seq < frame {
+                    continue; // late echo of a timed-out attempt
+                }
+                if hdr.seq > frame
+                    || hdr.src as usize != src
+                    || hdr.dst as usize != dst
+                    || hdr.len as usize != out.len() * 4
+                {
+                    return Err(torn(src, frame, hdr.seq));
+                }
+                decode_payload(&scratch, out);
+                let expect = u64::from_le_bytes(digest_bytes);
+                let got = checksum_f32s(out);
+                if got != expect {
+                    return Err(AlstError::CorruptPayload {
+                        site: FaultSite::Wire,
+                        rank: src,
+                        expect,
+                        got,
+                    });
+                }
+                return Ok(());
+            }
+        })();
+        if self.tracer.enabled() {
+            let mut sp = self.tracer.span(Category::Stall, "wire_wait");
+            sp.set_rank(src);
+            sp.set_bytes((out.len() * 4) as u64);
+            sp.set_dur(t0.elapsed());
+        }
+        if let Err(e) = &result {
+            self.mark(src, e);
+        }
+        result
+    }
+
+    fn check_peers(&self) -> std::result::Result<(), AlstError> {
+        for rank in 0..self.world {
+            let p = &self.peers[rank];
+            if p.dead.load(Ordering::SeqCst) {
+                return Err(lost(rank));
+            }
+            let mut hb = lock_clean(&p.hb);
+            let mut buf = [0u8; 256];
+            loop {
+                match hb.stream.read(&mut buf) {
+                    Ok(0) => {
+                        drop(hb);
+                        p.dead.store(true, Ordering::SeqCst);
+                        return Err(lost(rank));
+                    }
+                    Ok(n) => {
+                        hb.partial += n;
+                        hb.beats += (hb.partial / 8) as u64;
+                        hb.partial %= 8;
+                        hb.last_beat = Instant::now();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        drop(hb);
+                        p.dead.store(true, Ordering::SeqCst);
+                        return Err(lost(rank));
+                    }
+                }
+            }
+            if hb.last_beat.elapsed() > self.opts.heartbeat_timeout {
+                drop(hb);
+                p.dead.store(true, Ordering::SeqCst);
+                if self.tracer.enabled() {
+                    let mut sp = self.tracer.span(Category::Fault, "heartbeat_expired");
+                    sp.set_rank(rank);
+                    sp.set_dur(Duration::ZERO);
+                }
+                return Err(lost(rank));
+            }
+        }
+        Ok(())
+    }
+
+    fn frames_via(&self, rank: usize) -> u64 {
+        self.peers[rank].frames.load(Ordering::SeqCst)
+    }
+
+    fn close(&self) {
+        if self.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let shutdown =
+            FrameHeader { kind: KIND_SHUTDOWN, src: 0, dst: 0, seq: u64::MAX, len: 0 }.encode();
+        for p in &self.peers {
+            if !p.dead.load(Ordering::SeqCst) {
+                let mut s = lock_clean(&p.main);
+                s.set_write_timeout(Some(Duration::from_millis(100))).ok();
+                let _ = s.write_all(&shutdown);
+                let _ = s.flush();
+            }
+        }
+    }
+}
+
+fn read_exact_or(
+    stream: &mut UnixStream,
+    buf: &mut [u8],
+    rank: usize,
+    mid_frame: bool,
+) -> std::result::Result<(), AlstError> {
+    stream.read_exact(buf).map_err(|e| map_io(e.kind(), rank, mid_frame))
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.close();
+        for p in &self.peers {
+            reap(&mut *lock_clean(&p.child));
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DL: Duration = Duration::from_secs(5);
+
+    fn sock(world: usize, opts: SocketOptions) -> Arc<SocketTransport> {
+        SocketTransport::spawn(
+            world,
+            SocketOptions { in_thread: true, ..opts },
+            Tracer::off(),
+        )
+        .unwrap()
+    }
+
+    fn fast_hb(opts: SocketOptions) -> SocketOptions {
+        SocketOptions {
+            heartbeat_interval: Duration::from_millis(5),
+            heartbeat_timeout: Duration::from_millis(250),
+            ..opts
+        }
+    }
+
+    #[test]
+    fn deadline_semantics() {
+        let never = Deadline::never();
+        assert!(!never.expired());
+        assert_eq!(never.remaining(), None);
+        assert_eq!(never.io_timeout(), None);
+        let soon = Deadline::after(Duration::from_millis(50));
+        assert!(!soon.expired());
+        assert!(soon.io_timeout().unwrap() >= Duration::from_millis(1));
+        let past = Deadline::after(Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Some(Duration::ZERO));
+        // a just-expired deadline still yields a valid (1ms) io timeout
+        assert_eq!(past.io_timeout(), Some(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn frame_header_round_trips() {
+        let h = FrameHeader { kind: KIND_DATA, src: 3, dst: 1, seq: 0xdead_beef, len: 48 };
+        assert_eq!(FrameHeader::decode(&h.encode()), Some(h));
+        let mut bad = h.encode();
+        bad[0] ^= 0xff;
+        assert_eq!(FrameHeader::decode(&bad), None);
+    }
+
+    fn roundtrip_bit_exact(t: &dyn Transport) {
+        let payload = vec![1.5f32, -0.0, f32::NAN, f32::MIN_POSITIVE, -3.25e30];
+        let frame = t.send(0, 1, &payload, Deadline::after(DL)).unwrap();
+        let mut out = vec![0.0f32; payload.len()];
+        t.recv_into(0, 1, frame, &mut out, Deadline::after(DL)).unwrap();
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&payload), bits(&out), "payload must round-trip bit-exactly");
+        assert_eq!(t.frames_via(0), 1);
+        assert_eq!(t.frames_via(1), 0);
+    }
+
+    #[test]
+    fn local_roundtrip_is_bit_exact() {
+        roundtrip_bit_exact(&*LocalTransport::new(2));
+    }
+
+    #[test]
+    fn socket_roundtrip_is_bit_exact() {
+        roundtrip_bit_exact(&*sock(2, SocketOptions::default()));
+    }
+
+    #[test]
+    fn local_recv_deadline_expires_to_transient() {
+        let t = LocalTransport::new(2);
+        let mut out = [0.0f32; 1];
+        let t0 = Instant::now();
+        let err = t
+            .recv_into(0, 1, 0, &mut out, Deadline::after(Duration::from_millis(30)))
+            .unwrap_err();
+        assert!(matches!(err, AlstError::Transient { site: FaultSite::Wire, rank: 0, .. }));
+        assert!(err.is_retryable());
+        assert!(t0.elapsed() < Duration::from_secs(2), "deadline bounded the wait");
+    }
+
+    #[test]
+    fn socket_recv_deadline_expires_to_transient() {
+        let t = sock(1, SocketOptions::default());
+        let mut out = [0.0f32; 1];
+        // nothing was sent, so nothing echoes: the read must time out
+        let err = t
+            .recv_into(0, 0, 0, &mut out, Deadline::after(Duration::from_millis(50)))
+            .unwrap_err();
+        assert!(matches!(err, AlstError::Transient { site: FaultSite::Wire, .. }));
+    }
+
+    #[test]
+    fn local_peer_death_is_typed_everywhere() {
+        let t = LocalTransport::new(3);
+        t.check_peers().unwrap();
+        t.fail_peer(2);
+        assert_eq!(t.check_peers().unwrap_err(), lost(2));
+        assert_eq!(t.send(2, 0, &[1.0], Deadline::after(DL)).unwrap_err(), lost(2));
+        assert_eq!(t.send(0, 2, &[1.0], Deadline::after(DL)).unwrap_err(), lost(2));
+        // a blocked recv wakes up when the peer dies mid-wait
+        let t2 = LocalTransport::new(2);
+        let t2c = t2.clone();
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2c.fail_peer(0);
+        });
+        let mut out = [0.0f32; 1];
+        let err = t2.recv_into(0, 1, 0, &mut out, Deadline::after(DL)).unwrap_err();
+        assert_eq!(err, lost(0));
+        killer.join().unwrap();
+    }
+
+    #[test]
+    fn local_checksum_rejection_is_corrupt_payload() {
+        let t = LocalTransport::new(2);
+        t.corrupt_next_frames(1);
+        let frame = t.send(0, 1, &[1.0, 2.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 2];
+        let err = t.recv_into(0, 1, frame, &mut out, Deadline::after(DL)).unwrap_err();
+        assert!(matches!(err, AlstError::CorruptPayload { site: FaultSite::Wire, .. }));
+        assert!(err.is_retryable());
+        // the wire is clean again afterwards
+        let frame = t.send(0, 1, &[3.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 1];
+        t.recv_into(0, 1, frame, &mut out, Deadline::after(DL)).unwrap();
+        assert_eq!(out, [3.0]);
+    }
+
+    #[test]
+    fn local_stale_frames_are_discarded() {
+        let t = LocalTransport::new(2);
+        let _old = t.send(0, 1, &[9.0], Deadline::after(DL)).unwrap();
+        let fresh = t.send(0, 1, &[7.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 1];
+        t.recv_into(0, 1, fresh, &mut out, Deadline::after(DL)).unwrap();
+        assert_eq!(out, [7.0], "the stale frame was skipped, not delivered");
+    }
+
+    #[test]
+    fn socket_kill_surfaces_lost_rank_and_heal_respawns() {
+        let t = sock(
+            2,
+            SocketOptions {
+                failure: Some(WorkerFailure { rank: 1, mode: WorkerFailMode::Kill, after: 1 }),
+                ..SocketOptions::default()
+            },
+        );
+        // frame 1 echoes fine
+        let f = t.send(1, 0, &[1.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 1];
+        t.recv_into(1, 0, f, &mut out, Deadline::after(DL)).unwrap();
+        // frame 2 is swallowed: the worker dies, EOF at a frame boundary
+        let f = t.send(1, 0, &[2.0], Deadline::after(DL)).unwrap();
+        let err = t.recv_into(1, 0, f, &mut out, Deadline::after(DL)).unwrap_err();
+        assert_eq!(err, lost(1));
+        assert_eq!(t.check_peers().unwrap_err(), lost(1));
+        // heal respawns a clean worker and the wire works again
+        assert_eq!(t.heal().unwrap(), 1);
+        t.check_peers().unwrap();
+        let f = t.send(1, 0, &[5.0], Deadline::after(DL)).unwrap();
+        t.recv_into(1, 0, f, &mut out, Deadline::after(DL)).unwrap();
+        assert_eq!(out, [5.0]);
+        assert_eq!(t.frames_via(1), 1, "frame counter reset with the respawn");
+    }
+
+    #[test]
+    fn socket_truncated_frame_is_torn_then_lost() {
+        let t = sock(
+            2,
+            SocketOptions {
+                failure: Some(WorkerFailure { rank: 0, mode: WorkerFailMode::Truncate, after: 0 }),
+                ..SocketOptions::default()
+            },
+        );
+        let f = t.send(0, 1, &[1.0, 2.0, 3.0, 4.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 4];
+        let err = t.recv_into(0, 1, f, &mut out, Deadline::after(DL)).unwrap_err();
+        assert!(
+            matches!(err, AlstError::CorruptPayload { site: FaultSite::Wire, .. }),
+            "EOF mid-payload is a torn frame, got {err:?}"
+        );
+        assert!(err.is_retryable());
+        // the retry hits the dead peer: LostRank
+        let err = t.send(0, 1, &[1.0], Deadline::after(DL)).unwrap_err();
+        assert_eq!(err, lost(0));
+    }
+
+    #[test]
+    fn socket_corrupt_once_is_caught_then_clean() {
+        let t = sock(
+            2,
+            SocketOptions {
+                failure: Some(WorkerFailure {
+                    rank: 0,
+                    mode: WorkerFailMode::CorruptOnce,
+                    after: 0,
+                }),
+                ..SocketOptions::default()
+            },
+        );
+        let f = t.send(0, 1, &[1.0, 2.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 2];
+        let err = t.recv_into(0, 1, f, &mut out, Deadline::after(DL)).unwrap_err();
+        assert!(matches!(err, AlstError::CorruptPayload { site: FaultSite::Wire, .. }));
+        // retransmit succeeds: the worker only corrupted one echo
+        let f = t.send(0, 1, &[1.0, 2.0], Deadline::after(DL)).unwrap();
+        t.recv_into(0, 1, f, &mut out, Deadline::after(DL)).unwrap();
+        assert_eq!(out, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn socket_stalled_heartbeat_is_hung_not_slow() {
+        let t = sock(
+            2,
+            fast_hb(SocketOptions {
+                failure: Some(WorkerFailure {
+                    rank: 1,
+                    mode: WorkerFailMode::StallHeartbeat,
+                    after: 2,
+                }),
+                ..SocketOptions::default()
+            }),
+        );
+        // the data channel still works while the side-channel dies down
+        let f = t.send(1, 0, &[4.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 1];
+        t.recv_into(1, 0, f, &mut out, Deadline::after(DL)).unwrap();
+        // poll liveness until the beat gap crosses the timeout
+        let t0 = Instant::now();
+        let err = loop {
+            match t.check_peers() {
+                Ok(()) => {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(10),
+                        "stalled heartbeat never declared lost"
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err, lost(1));
+        // rank 0 kept beating the whole time
+        assert!(t.beats_from(0) >= 2, "healthy peer's beats were consumed");
+    }
+
+    #[test]
+    fn socket_close_shuts_workers_down() {
+        let t = sock(2, SocketOptions::default());
+        let f = t.send(0, 1, &[1.0], Deadline::after(DL)).unwrap();
+        let mut out = [0.0f32; 1];
+        t.recv_into(0, 1, f, &mut out, Deadline::after(DL)).unwrap();
+        t.close();
+        assert!(matches!(t.send(0, 1, &[1.0], Deadline::after(DL)), Err(AlstError::LostRank { .. })));
+    }
+}

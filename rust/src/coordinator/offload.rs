@@ -43,6 +43,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::collectives::faults::{
     self, lock_clean, AlstError, FaultInjector, FaultKind, FaultSite, RetryPolicy,
 };
+use crate::collectives::transport::Deadline;
 use crate::memory::{HostPool, MemoryTracker};
 use crate::obs::{Category, Tracer};
 use crate::runtime::tensor::{HostTensor, ScratchArena};
@@ -66,11 +67,20 @@ pub struct OffloadConfig {
     /// and are counted as stall — the synchronous reference the bench
     /// compares against.
     pub overlap: bool,
+    /// Ceiling on any single blocking wait against the engine (`store`
+    /// backpressure, `fetch` on an unlanded copy, `drain`). On expiry the
+    /// wait surfaces a typed error instead of hanging on a stream that
+    /// will never make progress.
+    pub wait_timeout: Duration,
 }
 
 impl Default for OffloadConfig {
     fn default() -> OffloadConfig {
-        OffloadConfig { in_flight_cap: 256 << 20, overlap: true }
+        OffloadConfig {
+            in_flight_cap: 256 << 20,
+            overlap: true,
+            wait_timeout: Duration::from_secs(60),
+        }
     }
 }
 
@@ -179,6 +189,11 @@ struct Shared {
     /// can be installed after the engine is Arc-shared with its workers.
     injector: Mutex<Option<Arc<FaultInjector>>>,
     retry: RetryPolicy,
+    /// Test hook: while set, the stream workers park before touching a
+    /// job, holding the in-flight window full deterministically so the
+    /// bounded waits can be driven to expiry.
+    #[cfg(test)]
+    pause_workers: std::sync::atomic::AtomicBool,
 }
 
 /// Poison-recovering condvar wait (see `faults::lock_clean` for why the
@@ -188,6 +203,26 @@ fn wait_clean<'a>(
     g: MutexGuard<'a, EngineState>,
 ) -> MutexGuard<'a, EngineState> {
     cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// `wait_clean` with a ceiling: sleeps until notified or `deadline`
+/// passes, returning whether the deadline has expired so the caller can
+/// surface a typed error instead of blocking forever on a stream that
+/// stopped making progress.
+fn wait_clean_deadline<'a>(
+    cv: &Condvar,
+    g: MutexGuard<'a, EngineState>,
+    deadline: Deadline,
+) -> (MutexGuard<'a, EngineState>, bool) {
+    match deadline.io_timeout() {
+        None => (wait_clean(cv, g), false),
+        Some(t) => {
+            let (g, _) = cv
+                .wait_timeout(g, t)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            (g, deadline.expired())
+        }
+    }
 }
 
 struct CopyJob {
@@ -209,6 +244,7 @@ pub struct AsyncOffloadEngine {
     workers: Vec<JoinHandle<()>>,
     cap: u64,
     overlap: bool,
+    wait_timeout: Duration,
 }
 
 /// The arena copy behind both streams, run through the fault gate: a
@@ -236,7 +272,7 @@ fn checked_copy(shared: &Shared, src: &HostTensor, rank: usize) -> Result<HostTe
                         attempt,
                     });
                 }
-                faults::retry_pause(&shared.tracer, &inj, &shared.retry, Some(rank), attempt);
+                faults::retry_pause(&shared.tracer, Some(&*inj), &shared.retry, Some(rank), attempt);
                 attempt += 1;
             }
             Some(FaultKind::CorruptPayload) => {
@@ -259,7 +295,7 @@ fn checked_copy(shared: &Shared, src: &HostTensor, rank: usize) -> Result<HostTe
                         got,
                     });
                 }
-                faults::retry_pause(&shared.tracer, &inj, &shared.retry, Some(rank), attempt);
+                faults::retry_pause(&shared.tracer, Some(&*inj), &shared.retry, Some(rank), attempt);
                 attempt += 1;
             }
         }
@@ -272,6 +308,10 @@ fn checked_copy(shared: &Shared, src: &HostTensor, rank: usize) -> Result<HostTe
 /// kept for `abort_step`), latches the engine error, and wakes every
 /// waiter — no counter is left dangling.
 fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
+    #[cfg(test)]
+    while shared.pause_workers.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
     let tensor = job.tensor.expect("d2h job carries the tensor");
     let mut stall = count_as_stall.then(|| {
         let mut s = shared.tracer.span(Category::Stall, "stall_d2h");
@@ -310,8 +350,10 @@ fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
                 st.failed.get_or_insert(e);
             }
         }
-        st.in_flight_d2h -= job.bytes;
-        st.d2h_pending -= 1;
+        // Saturating: an `abort_step` after a timed-out drain may already
+        // have zeroed the window a late-retiring copy would decrement.
+        st.in_flight_d2h = st.in_flight_d2h.saturating_sub(job.bytes);
+        st.d2h_pending = st.d2h_pending.saturating_sub(1);
         shared.cv.notify_all();
         d
     };
@@ -324,6 +366,10 @@ fn d2h_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
 /// the D2H stage to land first (the streams chain per slot), then copies
 /// outside the lock.
 fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
+    #[cfg(test)]
+    while shared.pause_workers.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
     let key = (job.li, job.rank);
     let (staged, bytes) = {
         let mut st = lock_clean(&shared.state);
@@ -332,14 +378,14 @@ fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
                 Some(SlotState::Staged { .. }) => break,
                 Some(SlotState::Failed { .. }) => {
                     // The D2H leg already died. Retire the job.
-                    st.h2d_pending -= 1;
+                    st.h2d_pending = st.h2d_pending.saturating_sub(1);
                     shared.cv.notify_all();
                     return;
                 }
                 Some(_) => st = wait_clean(&shared.cv, st),
                 None => {
                     // Slot vanished (aborted step). Retire the job.
-                    st.h2d_pending -= 1;
+                    st.h2d_pending = st.h2d_pending.saturating_sub(1);
                     shared.cv.notify_all();
                     return;
                 }
@@ -375,7 +421,7 @@ fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
             drop(stall);
             let mut st = lock_clean(&shared.state);
             st.slots.insert(key, SlotState::Ready { tensor: restored, bytes });
-            st.h2d_pending -= 1;
+            st.h2d_pending = st.h2d_pending.saturating_sub(1);
             st.stream.copies_h2d += 1;
             st.stream.copy_time_h2d += d;
             st.stream.transfer_bytes += bytes;
@@ -392,7 +438,7 @@ fn h2d_copy(shared: &Shared, job: CopyJob, count_as_stall: bool) {
             let mut st = lock_clean(&shared.state);
             st.slots.insert(key, SlotState::Failed { bytes });
             st.failed.get_or_insert(e);
-            st.h2d_pending -= 1;
+            st.h2d_pending = st.h2d_pending.saturating_sub(1);
             shared.cv.notify_all();
         }
     }
@@ -407,6 +453,8 @@ impl AsyncOffloadEngine {
             cv: Condvar::new(),
             injector: Mutex::new(None),
             retry: RetryPolicy::default(),
+            #[cfg(test)]
+            pause_workers: std::sync::atomic::AtomicBool::new(false),
         });
         let (mut d2h_tx, mut h2d_tx, mut workers) = (None, None, Vec::new());
         if cfg.overlap {
@@ -438,6 +486,7 @@ impl AsyncOffloadEngine {
             workers,
             cap: cfg.in_flight_cap.max(1),
             overlap: cfg.overlap,
+            wait_timeout: cfg.wait_timeout,
         }
     }
 
@@ -484,12 +533,33 @@ impl AsyncOffloadEngine {
                 let mut stall = self.shared.tracer.span(Category::Stall, "stall_d2h");
                 stall.set_rank(rank);
                 stall.set_bytes(bytes);
+                let deadline = Deadline::after(self.wait_timeout);
                 let t0 = Instant::now();
                 while st.failed.is_none()
                     && st.in_flight_d2h > 0
                     && st.in_flight_d2h.saturating_add(bytes) > self.cap
                 {
-                    st = wait_clean(&self.shared.cv, st);
+                    let expired;
+                    (st, expired) = wait_clean_deadline(&self.shared.cv, st, deadline);
+                    if expired
+                        && st.failed.is_none()
+                        && st.in_flight_d2h > 0
+                        && st.in_flight_d2h.saturating_add(bytes) > self.cap
+                    {
+                        // The window never drained: a stream stopped making
+                        // progress. Undo the host charge and surface typed.
+                        let d = t0.elapsed();
+                        stall.set_dur(d);
+                        st.stalls.d2h_wait += d;
+                        st.stalls.d2h_events += 1;
+                        drop(st);
+                        host.free(bytes);
+                        return Err(anyhow::Error::new(AlstError::Transient {
+                            site: FaultSite::OffloadCopy,
+                            rank,
+                            attempt: 0,
+                        }));
+                    }
                 }
                 let d = t0.elapsed();
                 stall.set_dur(d);
@@ -577,11 +647,29 @@ impl AsyncOffloadEngine {
             if !matches!(st.slots.get(&key), Some(SlotState::Ready { .. })) {
                 let mut stall = self.shared.tracer.span(Category::Stall, "stall_h2d");
                 stall.set_rank(rank);
+                let deadline = Deadline::after(self.wait_timeout);
                 let t0 = Instant::now();
                 while st.failed.is_none()
                     && !matches!(st.slots.get(&key), Some(SlotState::Ready { .. }))
                 {
-                    st = wait_clean(&self.shared.cv, st);
+                    let expired;
+                    (st, expired) = wait_clean_deadline(&self.shared.cv, st, deadline);
+                    if expired
+                        && st.failed.is_none()
+                        && !matches!(st.slots.get(&key), Some(SlotState::Ready { .. }))
+                    {
+                        // The restore never landed. The slot (and its host
+                        // charge) stays with the engine for `abort_step`.
+                        let d = t0.elapsed();
+                        stall.set_dur(d);
+                        st.stalls.h2d_wait += d;
+                        st.stalls.h2d_events += 1;
+                        return Err(anyhow::Error::new(AlstError::Transient {
+                            site: FaultSite::OffloadCopy,
+                            rank,
+                            attempt: 0,
+                        }));
+                    }
                 }
                 let d = t0.elapsed();
                 stall.set_dur(d);
@@ -617,11 +705,19 @@ impl AsyncOffloadEngine {
 
     /// Block until both streams are idle (no copy enqueued or running).
     /// Terminates even after a fault: a failed copy still retires its
-    /// pending count.
+    /// pending count. Bounded: if a stream stops retiring copies within
+    /// the wait timeout, the engine latches `WorkerDead` and returns, so
+    /// the next API call fails typed instead of deadlocking.
     pub fn drain(&self) {
+        let deadline = Deadline::after(self.wait_timeout);
         let mut st = lock_clean(&self.shared.state);
         while st.d2h_pending > 0 || st.h2d_pending > 0 {
-            st = wait_clean(&self.shared.cv, st);
+            let expired;
+            (st, expired) = wait_clean_deadline(&self.shared.cv, st, deadline);
+            if expired && (st.d2h_pending > 0 || st.h2d_pending > 0) {
+                st.failed.get_or_insert(AlstError::WorkerDead { stream: "offload" });
+                return;
+            }
         }
     }
 
@@ -641,8 +737,11 @@ impl AsyncOffloadEngine {
                 }
                 // A faulted copy recycled its buffer but kept the charge.
                 SlotState::Failed { bytes } => host.free(bytes),
-                // Unreachable after drain: no copy is queued or running.
-                SlotState::StoreQueued { .. } | SlotState::FetchQueued { .. } => {}
+                // Reachable only after a timed-out drain (dead stream): the
+                // buffer is with the worker, but the charge is ours to undo.
+                SlotState::StoreQueued { bytes } | SlotState::FetchQueued { bytes } => {
+                    host.free(bytes)
+                }
             }
         }
         st.h2d_queued.clear();
@@ -831,8 +930,22 @@ mod tests {
         AsyncOffloadEngine::new(
             Arc::new(ScratchArena::new()),
             Tracer::off(),
-            OffloadConfig { in_flight_cap: cap, overlap },
+            OffloadConfig { in_flight_cap: cap, overlap, ..OffloadConfig::default() },
         )
+    }
+
+    /// Overlap-mode engine with a short wait ceiling, for driving the
+    /// bounded waits to expiry against paused workers.
+    fn engine_with_timeout(cap: u64, wait_timeout: Duration) -> AsyncOffloadEngine {
+        AsyncOffloadEngine::new(
+            Arc::new(ScratchArena::new()),
+            Tracer::off(),
+            OffloadConfig { in_flight_cap: cap, overlap: true, wait_timeout },
+        )
+    }
+
+    fn pause_workers(eng: &AsyncOffloadEngine, on: bool) {
+        eng.shared.pause_workers.store(on, std::sync::atomic::Ordering::SeqCst);
     }
 
     #[test]
@@ -1034,6 +1147,79 @@ mod tests {
         let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
         dev.free(t.size_bytes() as u64, CKPT_TAG);
         assert_eq!((host.current(), dev.current()), (0, 0));
+    }
+
+    #[test]
+    fn full_window_store_times_out_typed_instead_of_hanging() {
+        let eng = engine_with_timeout(256, Duration::from_millis(50));
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(11);
+        pause_workers(&eng, true);
+        // First store fills the 256-byte window; the paused worker never
+        // drains it, so the second store's backpressure wait must expire.
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        let err = eng.store(1, 0, tensor(&mut rng, 64), &mut host).unwrap_err();
+        let alst = err.downcast_ref::<AlstError>().expect("typed timeout");
+        assert!(
+            matches!(alst, AlstError::Transient { site: FaultSite::OffloadCopy, .. }),
+            "window timeout surfaces as a transient offload fault, got {alst:?}"
+        );
+        assert!(alst.is_retryable());
+        assert_eq!(host.current(), 256, "timed-out store undid its host charge");
+        assert_eq!(eng.stalls().d2h_events, 1, "the bounded wait was counted as stall");
+        assert!(eng.failed().is_none(), "a timed-out wait does not latch the engine");
+        // Resume the worker: the same engine completes the step cleanly.
+        pause_workers(&eng, false);
+        eng.drain();
+        let t = eng.fetch(0, 0, &mut dev, &mut host).unwrap();
+        dev.free(t.size_bytes() as u64, CKPT_TAG);
+        assert_eq!((host.current(), dev.current()), (0, 0));
+        assert_eq!(host.underflow_events(), 0);
+    }
+
+    #[test]
+    fn fetch_on_stuck_stream_times_out_typed() {
+        let eng = engine_with_timeout(1 << 30, Duration::from_millis(50));
+        let mut dev = MemoryTracker::new(1 << 30);
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(12);
+        pause_workers(&eng, true);
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        let err = eng.fetch(0, 0, &mut dev, &mut host).unwrap_err();
+        let alst = err.downcast_ref::<AlstError>().expect("typed timeout");
+        assert!(
+            matches!(alst, AlstError::Transient { site: FaultSite::OffloadCopy, .. }),
+            "fetch timeout surfaces as a transient offload fault, got {alst:?}"
+        );
+        assert_eq!(host.current(), 256, "the slot and its charge stay with the engine");
+        assert_eq!(dev.current(), 0, "no device charge for a fetch that never landed");
+        // Recovery path: resume, tear the step down, ledgers balance.
+        pause_workers(&eng, false);
+        eng.abort_step(&mut host);
+        assert_eq!((eng.pending(), host.current()), (0, 0));
+        assert_eq!(host.underflow_events(), 0);
+    }
+
+    #[test]
+    fn timed_out_drain_latches_worker_dead() {
+        let eng = engine_with_timeout(1 << 30, Duration::from_millis(50));
+        let mut host = HostPool::new(1 << 30);
+        let mut rng = Rng::new(13);
+        pause_workers(&eng, true);
+        eng.store(0, 0, tensor(&mut rng, 64), &mut host).unwrap();
+        eng.drain(); // expires: the paused stream retires nothing
+        assert!(
+            matches!(eng.failed(), Some(AlstError::WorkerDead { stream: "offload" })),
+            "timed-out drain latches a dead-stream fault"
+        );
+        // Every later call fails fast on the latch instead of waiting again.
+        assert!(eng.store(1, 0, tensor(&mut rng, 64), &mut host).is_err());
+        pause_workers(&eng, false);
+        eng.abort_step(&mut host);
+        assert!(eng.failed().is_none(), "abort clears the latch");
+        assert_eq!((eng.pending(), host.current()), (0, 0));
+        assert_eq!(host.underflow_events(), 0);
     }
 
     #[test]

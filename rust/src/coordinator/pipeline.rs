@@ -22,7 +22,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::collectives::faults::{AlstError, FaultInjector, FaultPlan, FaultStats};
+use crate::collectives::faults::{AlstError, FaultInjector, FaultPlan, FaultStats, RetryPolicy};
+use crate::collectives::transport::{SocketOptions, SocketTransport, TransportKind};
 use crate::collectives::Group;
 use crate::config::{FeatureFlags, PlanKind};
 use crate::coordinator::dataloader::{shard_sequence, ShardedBatch, IGNORE_INDEX};
@@ -202,6 +203,24 @@ pub struct TrainerOptions {
     /// group, the engine, and the async offload copy streams. `None` (the
     /// default) adds zero overhead beyond an `Option` check per site.
     pub fault_plan: Option<FaultPlan>,
+    /// Retry/backoff policy installed into the collective group — governs
+    /// how many times a transient or corrupt wire fault is absorbed and
+    /// how the (jittered) backoff between attempts grows. Exposed on the
+    /// CLI as `--retries` / `--retry-base-us` / `--no-retry-jitter`.
+    pub retry: RetryPolicy,
+    /// Per-wire-op deadline for the group's collectives (`None` keeps the
+    /// group default). Real-transport runs size this to the expected
+    /// collective latency so a hung peer surfaces as a typed transient
+    /// instead of a stalled step.
+    pub op_timeout: Option<Duration>,
+    /// Frame carrier under the collective group: in-process queues (the
+    /// default, bit-identical and allocation-pooled) or spawned rank
+    /// processes over Unix-domain sockets, where peer death and hung
+    /// peers are detected for real (heartbeats, deadlines).
+    pub transport: TransportKind,
+    /// Socket-mode knobs (worker binary, connect/heartbeat timeouts).
+    /// Ignored under `TransportKind::Local`; `None` takes the defaults.
+    pub socket: Option<SocketOptions>,
 }
 
 impl Default for TrainerOptions {
@@ -223,6 +242,10 @@ impl Default for TrainerOptions {
             trace: false,
             plan: PlanKind::Ulysses,
             fault_plan: None,
+            retry: RetryPolicy::default(),
+            op_timeout: None,
+            transport: TransportKind::Local,
+            socket: None,
         }
     }
 }
@@ -399,8 +422,20 @@ impl Trainer {
         let grads = ShardedStore::zeros(total, shard_world);
         let opt = AdamW::new(opts.adamw, total, shard_world);
 
-        let mut group = Group::new(sp);
+        let mut group = match opts.transport {
+            TransportKind::Local => Group::new(sp),
+            TransportKind::Socket => {
+                let sopts = opts.socket.clone().unwrap_or_default();
+                let st = SocketTransport::spawn(sp, sopts, tracer.clone())
+                    .context("spawning socket-transport rank workers")?;
+                Group::with_transport(sp, st)
+            }
+        };
         group.set_tracer(tracer.clone());
+        group.set_retry_policy(opts.retry);
+        if let Some(t) = opts.op_timeout {
+            group.set_op_timeout(t);
+        }
         // One injector instance shared by every gated site, so "fire at
         // the Nth op" means the Nth across the whole run regardless of
         // which subsystem performs it.

@@ -33,13 +33,14 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::collectives::faults::{
     self, AlstError, FaultInjector, FaultPlan, FaultSite, FaultStats, RetryPolicy,
 };
+use crate::collectives::transport::{SocketOptions, SocketTransport, TransportKind};
 use crate::collectives::Group;
 use crate::config::PlanKind;
 use crate::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, CKPT_TAG};
@@ -70,6 +71,10 @@ pub struct ResilienceOptions {
     /// (compiled-artifact trainers) return `false` and recover at full
     /// world; the snapshot format is world-agnostic either way.
     pub degrade_on_lost_rank: bool,
+    /// Keep this many step-stamped snapshots beside the live file
+    /// ([`snapshot::rotate`]), GC'ing older stamps. 0 disables retention
+    /// (only the live rolling snapshot exists — the historical behavior).
+    pub keep_snapshots: usize,
 }
 
 impl ResilienceOptions {
@@ -79,6 +84,7 @@ impl ResilienceOptions {
             snapshot_path: snapshot_path.into(),
             max_recoveries: 2,
             degrade_on_lost_rank: false,
+            keep_snapshots: 0,
         }
     }
 }
@@ -127,6 +133,9 @@ fn save_snapshot_spanned<R: Recoverable + ?Sized>(
     sp.set_step(target.step_index());
     let t0 = Instant::now();
     target.save_snapshot(&opts.snapshot_path)?;
+    if opts.keep_snapshots > 0 {
+        snapshot::rotate(&opts.snapshot_path, target.step_index(), opts.keep_snapshots)?;
+    }
     sp.set_dur(t0.elapsed());
     Ok(())
 }
@@ -300,6 +309,16 @@ pub struct ChaosConfig {
     pub threaded: bool,
     pub trace: bool,
     pub fault_plan: Option<FaultPlan>,
+    /// Frame carrier under the harness group: in-process queues (the
+    /// default) or spawned rank processes over Unix-domain sockets, where
+    /// faults are *real* (SIGKILL, torn frames, stalled heartbeats).
+    pub transport: TransportKind,
+    /// Socket-mode knobs (worker binary, timeouts, a deterministic
+    /// worker-failure plan). Ignored under `TransportKind::Local`.
+    pub socket: Option<SocketOptions>,
+    /// Deadline for one collective frame roundtrip; `None` keeps the
+    /// group default. Chaos tests shrink it so nothing hangs.
+    pub op_timeout: Option<Duration>,
 }
 
 impl Default for ChaosConfig {
@@ -312,6 +331,9 @@ impl Default for ChaosConfig {
             threaded: true,
             trace: false,
             fault_plan: None,
+            transport: TransportKind::Local,
+            socket: None,
+            op_timeout: None,
         }
     }
 }
@@ -345,6 +367,13 @@ pub struct ChaosHarness {
     tracer: Arc<Tracer>,
     injector: Option<Arc<FaultInjector>>,
     retry: RetryPolicy,
+    /// Live socket transport when `ChaosConfig::transport` is `Socket`
+    /// (`None` in local mode). Kept beside the group's `Arc<dyn>` handle
+    /// for the concrete ops: `heal`, `kill_rank`, heartbeat accessors.
+    socket: Option<Arc<SocketTransport>>,
+    /// Socket knobs retained for respawning at a degraded world.
+    socket_opts: Option<SocketOptions>,
+    op_timeout: Option<Duration>,
     /// Cumulative successful collective ops (the sweep bound for
     /// `tests/chaos_recovery.rs`).
     collective_ops: u64,
@@ -372,7 +401,17 @@ impl ChaosHarness {
         plan.validate(shape.n_q, shape.n_kv, cfg.sp)?;
         let tracer = if cfg.trace { Arc::new(Tracer::new(true)) } else { Tracer::off() };
         let injector = cfg.fault_plan.map(FaultInjector::new);
-        let mut group = Group::new(cfg.sp);
+        let (mut group, socket, socket_opts) = match cfg.transport {
+            TransportKind::Local => (Group::new(cfg.sp), None, None),
+            TransportKind::Socket => {
+                let opts = cfg.socket.clone().unwrap_or_default();
+                let st = SocketTransport::spawn(cfg.sp, opts.clone(), tracer.clone())?;
+                (Group::with_transport(cfg.sp, st.clone()), Some(st), Some(opts))
+            }
+        };
+        if let Some(t) = cfg.op_timeout {
+            group.set_op_timeout(t);
+        }
         group.set_tracer(tracer.clone());
         if let Some(inj) = &injector {
             group.set_injector(inj.clone());
@@ -415,8 +454,22 @@ impl ChaosHarness {
             tracer,
             injector,
             retry: RetryPolicy::default(),
+            socket,
+            socket_opts,
+            op_timeout: cfg.op_timeout,
             collective_ops: 0,
         })
+    }
+
+    /// The live socket transport in socket mode (kill a rank, count
+    /// heartbeats); `None` under the local transport.
+    pub fn socket_transport(&self) -> Option<&Arc<SocketTransport>> {
+        self.socket.as_ref()
+    }
+
+    /// The group's frame carrier, whichever kind it is.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.group.transport_kind()
     }
 
     pub fn sp(&self) -> usize {
@@ -603,6 +656,11 @@ impl Recoverable for ChaosHarness {
     }
 
     fn restore_snapshot(&mut self, path: &Path) -> Result<()> {
+        // Real faults leave real corpses: respawn dead or tainted rank
+        // processes first so the replay sees a full, live world.
+        if let Some(st) = &self.socket {
+            st.heal()?;
+        }
         let snap = snapshot::load(path)?;
         snapshot::restore(&snap, &mut self.params, &mut self.opt)?;
         self.step = snap.step;
@@ -621,7 +679,21 @@ impl Recoverable for ChaosHarness {
             return Ok(false);
         }
         self.plan.validate(self.shape.n_q, self.shape.n_kv, new_sp)?;
-        let mut group = Group::new(new_sp);
+        let mut group = match &self.socket_opts {
+            None => Group::new(new_sp),
+            Some(opts) => {
+                // A degraded world needs a fresh worker fleet; the failure
+                // plan stays behind — replays must run clean.
+                let opts = SocketOptions { failure: None, ..opts.clone() };
+                let st = SocketTransport::spawn(new_sp, opts, self.tracer.clone())?;
+                // dropping the old handles closes and reaps the old fleet
+                self.socket = Some(st.clone());
+                Group::with_transport(new_sp, st)
+            }
+        };
+        if let Some(t) = self.op_timeout {
+            group.set_op_timeout(t);
+        }
         group.set_tracer(self.tracer.clone());
         if let Some(inj) = &self.injector {
             group.set_injector(inj.clone());
@@ -822,6 +894,56 @@ mod tests {
         );
         assert_eq!(h.host_bytes(), 0);
         assert_eq!(h.device_bytes(), 0);
+    }
+
+    #[test]
+    fn resilient_run_retains_stamped_snapshots() {
+        let dir = std::env::temp_dir().join("alst-recover-retention");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ret.alst");
+        let mut h = ChaosHarness::new(cfg(PlanKind::Ulysses, false, None)).unwrap();
+        let opts = ResilienceOptions {
+            snapshot_every: 1,
+            keep_snapshots: 2,
+            ..ResilienceOptions::new(path.clone())
+        };
+        let report = run_resilient(&mut h, 4, &opts).unwrap();
+        assert_eq!(report.recoveries, 0);
+        // snapshots at steps 0, 1, 2, 3 — retention keeps the newest two
+        let stamps: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".step"))
+            .collect();
+        assert_eq!(stamps.len(), 2, "older stamps GC'd: {stamps:?}");
+        assert!(stamps.contains(&"ret.alst.step2".to_string()), "{stamps:?}");
+        assert!(stamps.contains(&"ret.alst.step3".to_string()), "{stamps:?}");
+        let stamp = snapshot::load(&dir.join("ret.alst.step3")).unwrap();
+        assert_eq!(stamp.step, 3, "stamps are complete loadable snapshots");
+    }
+
+    #[test]
+    fn socket_transport_harness_matches_local_bit_identically() {
+        let mut a = ChaosHarness::new(cfg(PlanKind::Ulysses, false, None)).unwrap();
+        let mut b = ChaosHarness::new(ChaosConfig {
+            transport: TransportKind::Socket,
+            socket: Some(SocketOptions { in_thread: true, ..Default::default() }),
+            op_timeout: Some(Duration::from_secs(5)),
+            ..cfg(PlanKind::Ulysses, false, None)
+        })
+        .unwrap();
+        assert_eq!(b.transport_kind(), TransportKind::Socket);
+        for _ in 0..2 {
+            let (ma, mb) = (a.run_step().unwrap(), b.run_step().unwrap());
+            assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "loss crosses the wire bit-exact");
+            assert_eq!(ma.gather_bytes, mb.gather_bytes);
+            assert_eq!(ma.a2a_bytes, mb.a2a_bytes);
+            assert_eq!(ma.reduce_scatter_bytes, mb.reduce_scatter_bytes);
+        }
+        assert_eq!(a.params_flat(), b.params_flat(), "transport changes nothing");
+        assert_eq!(b.host_bytes(), 0);
+        assert_eq!(b.device_bytes(), 0);
     }
 
     #[test]

@@ -32,12 +32,13 @@
 //! are "homed" to their owner rank in one accounted exchange
 //! (`account_send_recv`). See `plan.rs` for the summation-order contract.
 
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::collectives::faults::{lock_clean, AlstError};
+use crate::collectives::faults::{lock_clean, AlstError, FaultSite};
+use crate::collectives::transport::Deadline;
 use crate::collectives::Group;
 use crate::config::PlanKind;
 use crate::obs::{Category, Tracer};
@@ -277,22 +278,50 @@ impl RingPlan {
         let bytes: u64 =
             ksends.iter().chain(&vsends).map(|s| (s.len() * 4) as u64).sum();
         if self.overlap {
+            // The join wait is bounded: the worker's two transfer legs are
+            // each deadline-bounded per wire op, so the ceiling here (a
+            // generous multiple of the group's op timeout) only expires if
+            // the worker is stuck outside the wire — and then surfaces a
+            // typed transient instead of blocking the step forever. The
+            // handle is still joined afterwards so a worker panic is
+            // consumed rather than poisoning the scope.
+            let deadline = Deadline::after(group.op_timeout().saturating_mul(4));
             let (moved, copy, stall) = std::thread::scope(|s| {
-                let worker = s.spawn(|| {
+                let (tx, rx) = mpsc::channel();
+                let worker = s.spawn(move || {
                     let t0 = Instant::now();
                     let moved = ring_leg(group, arena, &ksends, &vsends);
-                    (moved, t0.elapsed())
+                    let _ = tx.send((moved, t0.elapsed()));
                 });
                 compute();
                 let joined = Instant::now();
                 let mut sspan = tracer.span(Category::Stall, "stall_ring");
-                let (moved, copy) = worker.join().map_err(|_| {
-                    anyhow::Error::new(AlstError::WorkerDead { stream: "ring transfer" })
-                })?;
+                let timeout = deadline.io_timeout().expect("after() is bounded");
+                let received = rx.recv_timeout(timeout);
                 let stall = joined.elapsed();
                 sspan.set_dur(stall);
                 drop(sspan);
-                Ok::<_, anyhow::Error>((moved, copy, stall))
+                match received {
+                    Ok((moved, copy)) => {
+                        let _ = worker.join();
+                        Ok((moved, copy, stall))
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Leave the worker to its own deadlines; the scope
+                        // exit join below stays transitively bounded.
+                        Err(anyhow::Error::new(AlstError::Transient {
+                            site: FaultSite::Wire,
+                            rank: 0,
+                            attempt: 0,
+                        }))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        let _ = worker.join();
+                        Err(anyhow::Error::new(AlstError::WorkerDead {
+                            stream: "ring transfer",
+                        }))
+                    }
+                }
             })?;
             let (kr, vr) = moved?;
             self.note_hop(copy, stall, bytes);

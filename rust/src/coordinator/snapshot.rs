@@ -9,9 +9,16 @@
 //! temp file and land via atomic rename, so a crash mid-save can never
 //! destroy the previous good snapshot. Loads verify the checksum and
 //! reject trailing junk; v1 files (no footer) still load.
+//!
+//! Durability: the temp file is fsynced before the rename and the parent
+//! directory is fsynced after it — without the second sync, a crash after
+//! rename can roll the directory entry back to the old snapshot (or to
+//! nothing) even though the new bytes are on disk. Retention ([`rotate`])
+//! keeps the last N step-stamped snapshots beside the live one and GCs
+//! older stamps, so a corrupt latest file never strands recovery.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
@@ -134,10 +141,66 @@ pub fn save(path: &Path, step: u64, params: &ShardedStore, opt: &AdamW) -> Resul
         let crc = f.sum();
         f.inner.write_all(&crc.to_le_bytes())?;
         f.inner.flush()?;
+        // the bytes must be durable before the rename can publish them
+        f.inner.get_ref().sync_all().context("fsync snapshot temp")?;
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    // the rename itself is a directory mutation: without fsyncing the
+    // parent, a crash here can resurrect the old entry (or neither)
+    sync_parent(path)?;
     Ok(())
+}
+
+/// fsync the directory holding `path` (directory entries are metadata the
+/// file's own fsync does not cover).
+fn sync_parent(path: &Path) -> Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    std::fs::File::open(parent)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsync dir {}", parent.display()))
+}
+
+/// Retention: stamp the just-saved snapshot at `path` as a step-suffixed
+/// sibling (`<name>.step<step>`, hard link when the filesystem allows,
+/// copy otherwise) and GC stamps beyond the newest `keep`. Stamps are
+/// full v2 snapshots — `load` opens them directly when the live file is
+/// lost or corrupt. Returns the retained stamp paths, newest first.
+pub fn rotate(path: &Path, step: u64, keep: usize) -> Result<Vec<PathBuf>> {
+    assert!(keep >= 1, "retention needs keep >= 1");
+    let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+        bail!("snapshot path {} has no utf-8 file name", path.display());
+    };
+    let stamped = path.with_file_name(format!("{name}.step{step}"));
+    // re-saving the same step replaces its stamp
+    std::fs::remove_file(&stamped).ok();
+    if std::fs::hard_link(path, &stamped).is_err() {
+        std::fs::copy(path, &stamped)
+            .with_context(|| format!("stamping {}", stamped.display()))?;
+    }
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty()).unwrap_or(Path::new("."));
+    let prefix = format!("{name}.step");
+    let mut stamps: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let fname = entry.file_name();
+        let Some(fname) = fname.to_str() else { continue };
+        if let Some(tag) = fname.strip_prefix(&prefix) {
+            if let Ok(s) = tag.parse::<u64>() {
+                stamps.push((s, entry.path()));
+            }
+        }
+    }
+    stamps.sort_by(|a, b| b.0.cmp(&a.0));
+    let cut = keep.min(stamps.len());
+    for (_, old) in stamps.split_off(cut) {
+        std::fs::remove_file(&old).with_context(|| format!("GC {}", old.display()))?;
+    }
+    sync_parent(path)?;
+    Ok(stamps.into_iter().map(|(_, p)| p).collect())
 }
 
 /// Load a snapshot; caller re-shards it for the current world size (the
@@ -328,6 +391,41 @@ mod tests {
         assert_eq!(snap.step, 9);
         assert_eq!(snap.params, (0..8).map(|i| i as f32).collect::<Vec<_>>());
         assert_eq!(snap.v[0], 16.0);
+    }
+
+    #[test]
+    fn rotation_keeps_last_n_stamps_and_gcs_older() {
+        let dir = std::env::temp_dir().join("alst-snapshot-rotate");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.alst");
+        let opt = AdamW::new(AdamWConfig::default(), 8, 2);
+        for step in [10u64, 20, 30, 40] {
+            // distinct params per step so stamps provably hold old bytes
+            let params = ShardedStore::from_flat(&[step as f32; 8], 2);
+            save(&path, step, &params, &opt).unwrap();
+            let kept = rotate(&path, step, 2).unwrap();
+            assert!(kept.len() <= 2, "retention budget respected");
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(names.contains(&"ckpt.alst".to_string()));
+        assert!(names.contains(&"ckpt.alst.step40".to_string()));
+        assert!(names.contains(&"ckpt.alst.step30".to_string()));
+        assert!(!names.contains(&"ckpt.alst.step20".to_string()), "GC'd: {names:?}");
+        assert!(!names.contains(&"ckpt.alst.step10".to_string()), "GC'd: {names:?}");
+        // a stamp is a complete loadable snapshot of ITS step, not a
+        // moving alias of the live file
+        let old = load(&dir.join("ckpt.alst.step30")).unwrap();
+        assert_eq!(old.step, 30);
+        assert_eq!(old.params, vec![30.0; 8]);
+        // re-stamping the same step is idempotent
+        let kept = rotate(&path, 40, 2).unwrap();
+        assert_eq!(kept.len(), 2);
+        assert!(kept[0].to_string_lossy().ends_with("step40"));
+        assert!(kept[1].to_string_lossy().ends_with("step30"));
     }
 
     #[test]

@@ -14,7 +14,19 @@
 //!               transient fault absorbed by retry/backoff, and a lost
 //!               rank recovered from snapshot — each checked for
 //!               bit-identity against the reference; exports the traced
-//!               recovery (Fault lane) and the per-step CSV
+//!               recovery (Fault lane) and the per-step CSV. With
+//!               `--transport socket` the drill re-runs over spawned rank
+//!               processes and a REAL fault (a SIGKILLed worker), holding
+//!               the same recovery contract.
+//!
+//! Shared knobs: `--transport {local,socket}` (train/trace/chaos) selects
+//! the collective frame carrier; `--retries N --retry-base-us U
+//! --no-retry-jitter` tune the wire retry policy; `--op-timeout-ms T`
+//! bounds one collective frame roundtrip.
+//!
+//! There is also a hidden `rank-worker` subcommand: the per-rank echo
+//! process `SocketTransport::spawn` launches. Its flags are emitted by
+//! `launch_rank` and are not a public interface.
 
 use anyhow::{Context, Result};
 
@@ -38,6 +50,8 @@ fn main() -> Result<()> {
         Some("validate") => cmd_validate(&args),
         Some("trace") => cmd_trace(&args),
         Some("chaos") => cmd_chaos(&args),
+        // hidden: the per-rank echo worker SocketTransport spawns
+        Some("rank-worker") => cmd_rank_worker(&args),
         _ => {
             eprintln!(
                 "usage: alst <train|search|ablate|estimate|tables|validate|trace|chaos> [--key value ...]"
@@ -45,6 +59,64 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// The per-rank worker process behind `SocketTransport`. Parses exactly
+/// the argv `transport::launch_rank` emits — the two must stay in
+/// lockstep — then runs the framed echo loop until the coordinator shuts
+/// the channel down (or a planned failure fires).
+fn cmd_rank_worker(args: &Args) -> Result<()> {
+    use alst::collectives::transport::{
+        run_worker, WorkerConfig, WorkerFailMode, WorkerFailure,
+    };
+    let rank = args.usize("rank", 0);
+    let main_path = args.get("main").context("rank-worker: --main is required")?;
+    let hb_path = args.get("hb").context("rank-worker: --hb is required")?;
+    let failure = match args.get("fail-mode") {
+        None => None,
+        Some(m) => {
+            let mode: WorkerFailMode =
+                m.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            Some(WorkerFailure { rank, mode, after: args.u64("fail-after", 0) })
+        }
+    };
+    run_worker(&WorkerConfig {
+        rank,
+        main_path: std::path::PathBuf::from(main_path),
+        hb_path: std::path::PathBuf::from(hb_path),
+        hb_interval: std::time::Duration::from_micros(args.u64("hb-interval-us", 50_000)),
+        connect_timeout: std::time::Duration::from_millis(
+            args.u64("connect-timeout-ms", 10_000),
+        ),
+        failure,
+        exit_hard: true,
+    })
+}
+
+/// `--retries` / `--retry-base-us` / `--no-retry-jitter` over the
+/// default policy (the jitter seed stays fixed: reruns reproduce).
+fn retry_from_args(args: &Args) -> alst::collectives::faults::RetryPolicy {
+    let mut r = alst::collectives::faults::RetryPolicy::default();
+    r.max_retries = args.u64("retries", r.max_retries as u64) as u32;
+    r.base = std::time::Duration::from_micros(
+        args.u64("retry-base-us", r.base.as_micros() as u64),
+    );
+    if args.flag("no-retry-jitter") {
+        r.jitter = false;
+    }
+    r
+}
+
+fn transport_from_args(args: &Args) -> Result<alst::collectives::transport::TransportKind> {
+    args.get_or("transport", "local")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))
+}
+
+fn op_timeout_from_args(args: &Args) -> Option<std::time::Duration> {
+    args.get("op-timeout-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(std::time::Duration::from_millis)
 }
 
 fn flags_from_args(args: &Args) -> FeatureFlags {
@@ -89,6 +161,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         tiled_loss: args.flag("tiled-loss"),
         tiled_mlp: args.flag("tiled-mlp"),
         plan,
+        retry: retry_from_args(args),
+        op_timeout: op_timeout_from_args(args),
+        transport: transport_from_args(args)?,
         ..Default::default()
     };
     opts.adamw.lr = args.f64("lr", opts.adamw.lr as f64) as f32;
@@ -330,6 +405,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
             parallel_ranks: false,
             tiled_loss: args.flag("tiled-loss"),
             tiled_mlp: args.flag("tiled-mlp"),
+            retry: retry_from_args(args),
+            op_timeout: op_timeout_from_args(args),
+            transport: transport_from_args(args)?,
             ..Default::default()
         };
         let mut trainer = Trainer::new(&dir, opts)?;
@@ -356,7 +434,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
              loss sweep, marshal)",
             dir.display()
         );
-        synthetic_trace(sp, steps)?
+        synthetic_trace(sp, steps, transport_from_args(args)?)?
     };
 
     let doc = alst::obs::trace_events(&spans, &mem);
@@ -390,6 +468,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
 fn synthetic_trace(
     sp: usize,
     steps: usize,
+    transport: alst::collectives::TransportKind,
 ) -> Result<(Vec<alst::obs::Span>, Vec<alst::obs::MemEvent>)> {
     use alst::coordinator::dataloader::IGNORE_INDEX;
     use alst::coordinator::offload::{AsyncOffloadEngine, OffloadConfig, CKPT_TAG};
@@ -408,7 +487,19 @@ fn synthetic_trace(
     let tracer = Arc::new(Tracer::new(true));
     let mut engine = alst::runtime::Engine::cpu()?;
     engine.set_tracer(tracer.clone());
-    let mut group = alst::collectives::Group::new(sp);
+    let mut group = match transport {
+        alst::collectives::TransportKind::Local => alst::collectives::Group::new(sp),
+        alst::collectives::TransportKind::Socket => {
+            // real rank processes behind the synthetic step: the trace
+            // gains the wire-wait Stall spans the local queues never pay
+            let st = alst::collectives::SocketTransport::spawn(
+                sp,
+                alst::collectives::SocketOptions::default(),
+                tracer.clone(),
+            )?;
+            alst::collectives::Group::with_transport(sp, st)
+        }
+    };
     group.set_tracer(tracer.clone());
     let mut device = alst::memory::MemoryTracker::new(1 << 40);
     device.set_tracer(tracer.clone());
@@ -533,10 +624,12 @@ fn synthetic_trace(
 /// `retries`/`recoveries` columns.
 fn cmd_chaos(args: &Args) -> Result<()> {
     use alst::collectives::faults::{FaultKind, FaultPlan, FaultSite};
+    use alst::collectives::{SocketOptions, TransportKind, WorkerFailMode, WorkerFailure};
     use alst::coordinator::recover::{
         run_resilient, ChaosConfig, ChaosHarness, Recoverable, ResilienceOptions,
     };
     use alst::obs::Category;
+    use std::time::Duration;
 
     let fast = alst::util::bench::fast_mode();
     let sp = args.usize("sp", 4);
@@ -551,6 +644,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     anyhow::ensure!(steps >= 1, "--steps must be >= 1");
     let snap_dir = std::env::temp_dir().join("alst-chaos");
     std::fs::create_dir_all(&snap_dir)?;
+    let transport = transport_from_args(args)?;
     let base = ChaosConfig {
         sp,
         seq,
@@ -559,6 +653,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         threaded: true,
         trace: false,
         fault_plan: None,
+        ..ChaosConfig::default()
     };
 
     // 1. The unfaulted reference (same supervisor, same snapshot cadence,
@@ -620,7 +715,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let mut h = ChaosHarness::new(ChaosConfig {
         trace: true,
         fault_plan: Some(lost),
-        ..base
+        ..base.clone()
     })?;
     let opts = ResilienceOptions {
         snapshot_every: k,
@@ -646,6 +741,90 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         "lost rank: {} restore at step {target_step} — bit-identical, ledgers clean",
         rep.recoveries
     );
+
+    // 4. `--transport socket`: the same contract over REAL faults. A
+    //    clean run over spawned rank processes must match the local
+    //    reference bit-for-bit; then the victim's worker is SIGKILLed
+    //    mid-run (a frame-count fuse measured from the clean run) and the
+    //    supervisor must detect the death on the wire, restore once, and
+    //    land on identical parameters with balanced ledgers. The traced
+    //    export and the CSV then come from the real-fault run.
+    let (h, rep) = if transport == TransportKind::Socket {
+        let sopts = SocketOptions {
+            heartbeat_interval: Duration::from_millis(25),
+            heartbeat_timeout: Duration::from_secs(2),
+            ..Default::default()
+        };
+        let socket_base = ChaosConfig {
+            transport: TransportKind::Socket,
+            socket: Some(sopts.clone()),
+            op_timeout: Some(Duration::from_secs(5)),
+            ..base
+        };
+        let mut clean = ChaosHarness::new(socket_base.clone())?;
+        let opts = ResilienceOptions {
+            snapshot_every: k,
+            ..ResilienceOptions::new(snap_dir.join("socket-ref.alst"))
+        };
+        let clean_rep = run_resilient(&mut clean, steps, &opts)?;
+        anyhow::ensure!(
+            clean_rep.recoveries == 0,
+            "clean socket run must not restore, got {}",
+            clean_rep.recoveries
+        );
+        anyhow::ensure!(
+            clean.params_flat() == reference.params_flat(),
+            "socket transport diverged from the local reference"
+        );
+        let victim = 1 % sp;
+        let st = clean.socket_transport().expect("socket harness").clone();
+        let total = st.frames_via(victim);
+        anyhow::ensure!(total >= steps, "no frames relayed via rank {victim}");
+        // Blow the fuse halfway through the target step's frame budget:
+        // the worker dies mid-collective, not between steps.
+        let per_step = total / steps;
+        let after = per_step * (target_step - 1) + per_step / 2;
+        println!(
+            "socket: clean run bit-identical ({total} frames via rank {victim}); \
+             SIGKILL its worker after {after}"
+        );
+        let mut hk = ChaosHarness::new(ChaosConfig {
+            trace: true,
+            socket: Some(SocketOptions {
+                failure: Some(WorkerFailure {
+                    rank: victim,
+                    mode: WorkerFailMode::Kill,
+                    after,
+                }),
+                ..sopts
+            }),
+            ..socket_base
+        })?;
+        let opts = ResilienceOptions {
+            snapshot_every: k,
+            ..ResilienceOptions::new(snap_dir.join("socket-lost.alst"))
+        };
+        let rep = run_resilient(&mut hk, steps, &opts)?;
+        anyhow::ensure!(
+            rep.recoveries == 1,
+            "SIGKILLed worker must trigger exactly one restore, got {}",
+            rep.recoveries
+        );
+        anyhow::ensure!(
+            hk.params_flat() == reference.params_flat(),
+            "socket recovery diverged from the unfaulted reference"
+        );
+        anyhow::ensure!(
+            hk.host_bytes() == 0 && hk.device_bytes() == 0,
+            "ledgers must balance after socket recovery (host {}, device {})",
+            hk.host_bytes(),
+            hk.device_bytes()
+        );
+        println!("socket lost rank: 1 restore — bit-identical, ledgers clean");
+        (hk, rep)
+    } else {
+        (h, rep)
+    };
 
     let spans = h.tracer().drain();
     let fault_spans = spans.iter().filter(|s| s.cat == Category::Fault).count();

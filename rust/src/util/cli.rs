@@ -54,6 +54,10 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -73,6 +77,8 @@ mod tests {
         assert_eq!(a.positional, vec!["train", "tiny"]);
         assert_eq!(a.usize("sp", 1), 4);
         assert_eq!(a.usize("seq", 0), 1024);
+        assert_eq!(a.u64("seq", 0), 1024);
+        assert_eq!(a.u64("missing", 7), 7);
         assert!(a.flag("offload"));
         assert!(!a.flag("zero3"));
     }

@@ -13,10 +13,12 @@
 //! included).
 
 use alst::collectives::faults::{FaultKind, FaultPlan, FaultSite};
+use alst::collectives::{SocketOptions, TransportKind, WorkerFailMode, WorkerFailure};
 use alst::config::PlanKind;
 use alst::coordinator::recover::{
     run_resilient, ChaosConfig, ChaosHarness, Recoverable, ResilienceOptions,
 };
+use std::time::Duration;
 
 fn snap(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("alst-chaos-sweep");
@@ -38,6 +40,7 @@ fn cfg(
         threaded,
         trace: false,
         fault_plan: fault,
+        ..ChaosConfig::default()
     }
 }
 
@@ -161,6 +164,124 @@ fn every_stage_gate_recovers() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Real faults over SocketTransport: the same contract, nothing simulated
+// ---------------------------------------------------------------------------
+
+/// Socket-mode config: spawned rank processes (the test binary's own
+/// `alst rank-worker`), fast heartbeats, short timeouts so a failing
+/// detection shows up as a typed error, never a hung test.
+fn socket_cfg(failure: Option<WorkerFailure>) -> ChaosConfig {
+    ChaosConfig {
+        sp: 2,
+        seq: 16,
+        n_layers: 2,
+        plan: PlanKind::Ulysses,
+        threaded: false,
+        trace: false,
+        fault_plan: None,
+        transport: TransportKind::Socket,
+        socket: Some(SocketOptions {
+            worker_bin: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_alst"))),
+            heartbeat_interval: Duration::from_millis(10),
+            heartbeat_timeout: Duration::from_millis(300),
+            failure,
+            ..SocketOptions::default()
+        }),
+        op_timeout: Some(Duration::from_secs(5)),
+    }
+}
+
+/// The local-transport reference the socket runs must match bit-for-bit.
+fn local_reference(tag: &str) -> Vec<f32> {
+    let mut h = ChaosHarness::new(cfg(PlanKind::Ulysses, 2, false, None)).unwrap();
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap(&format!("real-{tag}-ref")))
+    };
+    run_resilient(&mut h, 2, &opts).unwrap();
+    h.params_flat()
+}
+
+/// One real worker-failure mode through the full supervisor loop: clean
+/// socket run pins bit-identity and measures the per-step frame budget,
+/// then the victim's worker misbehaves mid-step-2 and the run must
+/// detect it on the wire, restore exactly once, and land on the
+/// reference parameters with balanced ledgers.
+fn real_fault_roundtrip(mode: WorkerFailMode, tag: &str) {
+    let want = local_reference(tag);
+    let mut clean = ChaosHarness::new(socket_cfg(None)).unwrap();
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap(&format!("real-{tag}-clean")))
+    };
+    let clean_rep = run_resilient(&mut clean, 2, &opts).unwrap();
+    assert_eq!(clean_rep.recoveries, 0, "{tag}: clean socket run restored");
+    assert_eq!(clean.params_flat(), want, "{tag}: socket transport not bit-identical");
+    let total = clean.socket_transport().unwrap().frames_via(1);
+    assert!(total >= 4, "{tag}: rank 1 relayed only {total} frames");
+    // Fuse at 1.5x the per-step budget: the failure fires mid-collective
+    // in step 2, after the step-1 snapshot exists.
+    let after = total / 2 + total / 4;
+    let failure = WorkerFailure { rank: 1, mode, after };
+    let mut h = ChaosHarness::new(socket_cfg(Some(failure))).unwrap();
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap(&format!("real-{tag}-fault")))
+    };
+    let report = run_resilient(&mut h, 2, &opts)
+        .unwrap_or_else(|e| panic!("{tag}: supervisor failed: {e:#}"));
+    assert_eq!(report.recoveries, 1, "{tag}: must restore exactly once");
+    assert_eq!(h.params_flat(), want, "{tag}: diverged from the reference");
+    assert_eq!(h.host_bytes(), 0, "{tag}: leaked host bytes");
+    assert_eq!(h.device_bytes(), 0, "{tag}: leaked device bytes");
+}
+
+/// A rank process dying mid-collective (the worker hard-exits once its
+/// frame fuse blows; `heal` must respawn it at a bumped generation).
+#[test]
+fn killed_rank_process_recovers_bit_identically() {
+    real_fault_roundtrip(WorkerFailMode::Kill, "kill");
+}
+
+/// A frame torn mid-payload: the echo stops halfway and the process
+/// exits. The receiver sees a short read, surfaces it as a retryable
+/// corrupt payload, and the retry against the now-dead peer escalates to
+/// the typed lost rank the supervisor recovers from.
+#[test]
+fn truncated_frame_recovers_bit_identically() {
+    real_fault_roundtrip(WorkerFailMode::Truncate, "truncate");
+}
+
+/// A hung-but-not-dead peer: the data socket stays open while the
+/// heartbeat side-channel falls silent. Liveness gating must call it a
+/// lost rank once the silence outlives the timeout — distinguishing hung
+/// from merely slow — and the supervisor recovers as for a death.
+#[test]
+fn stalled_heartbeat_is_detected_and_recovered() {
+    let want = local_reference("stall");
+    let failure =
+        Some(WorkerFailure { rank: 1, mode: WorkerFailMode::StallHeartbeat, after: 2 });
+    let mut h = ChaosHarness::new(socket_cfg(failure)).unwrap();
+    let st = h.socket_transport().unwrap().clone();
+    // Wait for the two beats the victim will ever send, then let the
+    // silence outlive the 300ms heartbeat timeout before stepping.
+    let t0 = std::time::Instant::now();
+    while st.beats_from(1) < 2 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(st.beats_from(1) >= 2, "victim never started beating");
+    std::thread::sleep(Duration::from_millis(450));
+    let opts = ResilienceOptions {
+        snapshot_every: 1,
+        ..ResilienceOptions::new(snap("real-stall-fault"))
+    };
+    let report = run_resilient(&mut h, 2, &opts).unwrap();
+    assert_eq!(report.recoveries, 1, "hung peer must trigger exactly one restore");
+    assert_eq!(h.params_flat(), want, "recovered run diverged from the reference");
+    assert_eq!((h.host_bytes(), h.device_bytes()), (0, 0), "leaked bytes");
 }
 
 /// Offload copy streams: every copy op of one rank's 2-step run — D2H

@@ -44,7 +44,7 @@ fn engine(overlap: bool, cap: u64, tracer: Arc<Tracer>) -> AsyncOffloadEngine {
     AsyncOffloadEngine::new(
         Arc::new(ScratchArena::new()),
         tracer,
-        OffloadConfig { in_flight_cap: cap, overlap },
+        OffloadConfig { in_flight_cap: cap, overlap, ..OffloadConfig::default() },
     )
 }
 

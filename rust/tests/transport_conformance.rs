@@ -1,0 +1,278 @@
+//! Transport conformance suite: one set of behavioral rows run against
+//! every [`Transport`] implementation, so `LocalTransport` and
+//! `SocketTransport` cannot drift apart in the semantics `Group` relies
+//! on — frame fidelity, ordering, stale-frame discard, typed length
+//! mismatch, liveness gating, per-rank frame accounting, and typed
+//! failure after `close`.
+//!
+//! The generic rows take `&dyn Transport` exactly as `Group` holds it.
+//! Transport-specific rows cover what only one side can express: the
+//! local test hooks (`fail_peer`, `corrupt_next_frames`), socket recv
+//! deadline expiry against a silent wire, and — for spawned rank
+//! *processes* — SIGKILL detection plus `heal()` bringing the fleet back.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use alst::collectives::{
+    AlstError, Deadline, LocalTransport, SocketOptions, SocketTransport, Transport, TransportKind,
+};
+use alst::obs::Tracer;
+
+/// Generous per-op bound: conformance rows must never hang, but none of
+/// them should come anywhere near this either.
+fn op_deadline() -> Deadline {
+    Deadline::after(Duration::from_secs(5))
+}
+
+/// Deterministic payload with rank/size-dependent bit patterns.
+fn payload(n: usize, salt: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let x = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(salt);
+            ((x >> 33) as f32) * 1e-9 - 4.0
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Generic rows (everything here must hold for every Transport)
+// ---------------------------------------------------------------------------
+
+fn roundtrips_are_bit_identical(t: &dyn Transport) {
+    let world = t.world();
+    for (k, n) in [0usize, 1, 7, 1024].into_iter().enumerate() {
+        for src in 0..world {
+            let dst = (src + 1) % world;
+            let sent = payload(n, (k * world + src) as u64);
+            let frame = t.send(src, dst, &sent, op_deadline()).expect("send");
+            let mut got = vec![0.0f32; n];
+            t.recv_into(src, dst, frame, &mut got, op_deadline()).expect("recv");
+            assert_eq!(bits(&got), bits(&sent), "payload n={n} src={src} must roundtrip exactly");
+        }
+    }
+}
+
+fn frames_arrive_in_send_order(t: &dyn Transport) {
+    let a = payload(16, 100);
+    let b = payload(16, 200);
+    let fa = t.send(0, 1, &a, op_deadline()).expect("send a");
+    let fb = t.send(0, 1, &b, op_deadline()).expect("send b");
+    assert!(fa < fb, "sequence numbers must be monotonic per transport");
+    let mut out = vec![0.0f32; 16];
+    t.recv_into(0, 1, fa, &mut out, op_deadline()).expect("recv a");
+    assert_eq!(bits(&out), bits(&a));
+    t.recv_into(0, 1, fb, &mut out, op_deadline()).expect("recv b");
+    assert_eq!(bits(&out), bits(&b));
+}
+
+/// A frame older than the one requested is a late echo of a timed-out
+/// attempt: it must be silently discarded, and the requested frame must
+/// still arrive intact behind it.
+fn stale_frames_are_discarded(t: &dyn Transport) {
+    let stale = payload(8, 300);
+    let wanted = payload(8, 400);
+    let _ = t.send(0, 1, &stale, op_deadline()).expect("send stale");
+    let f = t.send(0, 1, &wanted, op_deadline()).expect("send wanted");
+    let mut out = vec![0.0f32; 8];
+    t.recv_into(0, 1, f, &mut out, op_deadline()).expect("recv past stale");
+    assert_eq!(bits(&out), bits(&wanted));
+}
+
+fn length_mismatch_is_corrupt_payload(t: &dyn Transport) {
+    let sent = payload(4, 500);
+    let f = t.send(0, 1, &sent, op_deadline()).expect("send");
+    let mut wrong = vec![0.0f32; 8];
+    let err = t.recv_into(0, 1, f, &mut wrong, op_deadline()).expect_err("length mismatch");
+    assert!(
+        matches!(err, AlstError::CorruptPayload { .. }),
+        "length mismatch must be typed CorruptPayload, got {err:?}"
+    );
+    assert!(err.is_retryable(), "a torn frame is retryable (resend), got {err:?}");
+}
+
+fn healthy_fleet_passes_check_peers(t: &dyn Transport) {
+    for _ in 0..3 {
+        t.check_peers().expect("healthy fleet must pass the liveness gate");
+    }
+}
+
+fn frames_via_counts_sends(t: &dyn Transport) {
+    let before = t.frames_via(0);
+    let p = payload(4, 600);
+    for _ in 0..3 {
+        let f = t.send(0, 1, &p, op_deadline()).expect("send");
+        let mut out = vec![0.0f32; 4];
+        t.recv_into(0, 1, f, &mut out, op_deadline()).expect("recv");
+    }
+    assert_eq!(
+        t.frames_via(0),
+        before + 3,
+        "frames_via must count frames sent via the source rank"
+    );
+}
+
+/// Destructive: run last. After `close`, further traffic must fail with
+/// the typed peer-death signal, never hang or panic.
+fn close_makes_later_sends_typed(t: &dyn Transport) {
+    t.close();
+    let p = payload(4, 700);
+    let err = t.send(0, 1, &p, op_deadline()).expect_err("send after close");
+    assert!(
+        matches!(err, AlstError::LostRank { .. }),
+        "send after close must be typed LostRank, got {err:?}"
+    );
+}
+
+/// Every row, in order; `close` last because it is terminal.
+fn conformance(t: &dyn Transport, expect_kind: TransportKind, expect_world: usize) {
+    assert_eq!(t.kind(), expect_kind);
+    assert_eq!(t.world(), expect_world);
+    roundtrips_are_bit_identical(t);
+    frames_arrive_in_send_order(t);
+    stale_frames_are_discarded(t);
+    length_mismatch_is_corrupt_payload(t);
+    healthy_fleet_passes_check_peers(t);
+    frames_via_counts_sends(t);
+    close_makes_later_sends_typed(t);
+}
+
+// ---------------------------------------------------------------------------
+// Instantiations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_transport_conforms() {
+    let t = LocalTransport::new(3);
+    conformance(&*t, TransportKind::Local, 3);
+}
+
+fn thread_socket(world: usize) -> Arc<SocketTransport> {
+    let opts = SocketOptions {
+        connect_timeout: Duration::from_secs(10),
+        in_thread: true,
+        ..SocketOptions::default()
+    };
+    SocketTransport::spawn(world, opts, Tracer::off()).expect("spawn in-thread socket transport")
+}
+
+#[test]
+fn socket_transport_conforms_in_thread() {
+    let t = thread_socket(3);
+    conformance(&*t, TransportKind::Socket, 3);
+}
+
+// ---------------------------------------------------------------------------
+// Transport-specific rows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_dead_peer_is_typed_lost_rank_everywhere() {
+    let t = LocalTransport::new(2);
+    t.fail_peer(1);
+    let p = payload(4, 800);
+    let send_err = t.send(0, 1, &p, op_deadline()).expect_err("send to dead peer");
+    assert_eq!(send_err.rank(), Some(1));
+    assert!(matches!(send_err, AlstError::LostRank { .. }));
+    let gate_err = t.check_peers().expect_err("liveness gate");
+    assert!(matches!(gate_err, AlstError::LostRank { rank: 1, .. }));
+    t.revive_peer(1);
+    t.check_peers().expect("revived fleet is healthy");
+    let f = t.send(0, 1, &p, op_deadline()).expect("send after revive");
+    let mut out = vec![0.0f32; 4];
+    t.recv_into(0, 1, f, &mut out, op_deadline()).expect("recv after revive");
+    t.close();
+}
+
+#[test]
+fn local_wire_corruption_fails_the_digest_check() {
+    let t = LocalTransport::new(2);
+    t.corrupt_next_frames(1);
+    let p = payload(16, 900);
+    let f = t.send(0, 1, &p, op_deadline()).expect("send");
+    let mut out = vec![0.0f32; 16];
+    let err = t.recv_into(0, 1, f, &mut out, op_deadline()).expect_err("digest must fail");
+    assert!(matches!(err, AlstError::CorruptPayload { .. }), "got {err:?}");
+    assert!(err.is_retryable());
+    // The corruption budget is spent: the next frame is clean.
+    let f = t.send(0, 1, &p, op_deadline()).expect("send clean");
+    t.recv_into(0, 1, f, &mut out, op_deadline()).expect("clean frame verifies");
+    assert_eq!(bits(&out), bits(&p));
+    t.close();
+}
+
+#[test]
+fn local_recv_with_no_frame_expires_typed() {
+    let t = LocalTransport::new(2);
+    let mut out = vec![0.0f32; 4];
+    let err = t
+        .recv_into(0, 1, 0, &mut out, Deadline::after(Duration::from_millis(30)))
+        .expect_err("no frame ever arrives");
+    assert!(matches!(err, AlstError::Transient { .. }), "deadline expiry is Transient, got {err:?}");
+    assert!(err.is_retryable());
+    t.close();
+}
+
+#[test]
+fn socket_recv_against_silent_wire_expires_typed() {
+    let t = thread_socket(2);
+    let mut out = vec![0.0f32; 4];
+    // Frame 0 was never sent: the data socket stays silent and the read
+    // deadline must surface as a typed Transient, not a hang.
+    let err = t
+        .recv_into(0, 1, 0, &mut out, Deadline::after(Duration::from_millis(50)))
+        .expect_err("silent wire");
+    assert!(matches!(err, AlstError::Transient { .. }), "got {err:?}");
+    assert!(err.is_retryable());
+    t.close();
+}
+
+/// The process-mode row the acceptance contract names: real rank
+/// processes spawned from the built `alst` binary, a real SIGKILL, typed
+/// detection through the side channels, and `heal()` restoring service.
+#[test]
+fn socket_process_workers_survive_kill_and_heal() {
+    let opts = SocketOptions {
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_alst"))),
+        connect_timeout: Duration::from_secs(10),
+        heartbeat_interval: Duration::from_millis(10),
+        heartbeat_timeout: Duration::from_millis(500),
+        ..SocketOptions::default()
+    };
+    let t = SocketTransport::spawn(2, opts, Tracer::off()).expect("spawn rank processes");
+
+    // Healthy fleet carries traffic.
+    roundtrips_are_bit_identical(&*t);
+    healthy_fleet_passes_check_peers(&*t);
+    let frames_before_kill = t.frames_via(1);
+    assert!(frames_before_kill > 0, "roundtrips must have moved frames via rank 1");
+
+    // Genuinely external death: SIGKILL the rank-1 worker process. The
+    // liveness gate must *detect* it (EOF or heartbeat silence on the
+    // side channel) as a typed LostRank — bounded, never hanging.
+    t.kill_rank(1);
+    let detect = Deadline::after(Duration::from_secs(5));
+    let err = loop {
+        match t.check_peers() {
+            Err(e) => break e,
+            Ok(()) => {
+                assert!(!detect.expired(), "kill of rank 1 was never detected");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    };
+    assert!(matches!(err, AlstError::LostRank { rank: 1, .. }), "got {err:?}");
+
+    // heal() respawns exactly the dead rank with a clean worker and
+    // resets its frame counter; the fleet then carries traffic again.
+    assert_eq!(t.heal().expect("heal"), 1);
+    assert_eq!(t.frames_via(1), 0, "healed rank restarts its frame count");
+    t.check_peers().expect("healed fleet is healthy");
+    roundtrips_are_bit_identical(&*t);
+    t.close();
+}
